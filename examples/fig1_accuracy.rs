@@ -1,0 +1,33 @@
+//! Regenerate the paper's Fig. 1 (a/b/c): classification accuracy vs
+//! number of reduced features, four DR algorithms, three datasets.
+//!
+//! ```text
+//! cargo run --release --example fig1_accuracy                  # all three
+//! cargo run --release --example fig1_accuracy -- mnist --points 5
+//! ```
+//!
+//! Datasets are the structural substitutes of DESIGN.md §7 (no network
+//! access); the acceptance criterion is the relative *shape* of the
+//! series, recorded in EXPERIMENTS.md.
+
+use dimred::experiments::fig1;
+use dimred::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[])?;
+    let points = args.usize_or("points", 4)?;
+    let seed = args.u64_or("seed", 2018)?;
+    let which: Vec<String> = if args.positional.is_empty() {
+        vec!["mnist".into(), "har".into(), "ads".into()]
+    } else {
+        args.positional.clone()
+    };
+    for ds in &which {
+        let baseline = fig1::baseline_accuracy(ds, seed)?;
+        let series = fig1::run(ds, points, seed)?;
+        println!("{}", fig1::render(ds, &series));
+        println!("no-DR baseline (full dimensionality): {baseline:.1}%\n");
+    }
+    println!("fig1_accuracy OK");
+    Ok(())
+}

@@ -1,0 +1,73 @@
+//! Real-time reconfigurability demo (paper §IV): one training service,
+//! datapath mode swapped mid-stream without losing state.
+//!
+//! Starts the waveform stream in PCA-whitening mode (HOS term muxed
+//! out), then switches to full ICA after 8000 samples — on the PJRT
+//! backend this literally swaps the compiled executable while the W/λ̂/U
+//! state rides through, which is the software analogue of the paper's
+//! control-signal mux.
+//!
+//! ```text
+//! cargo run --release --example reconfigure_demo [-- --backend pjrt]
+//! ```
+
+use dimred::config::{Backend, ExperimentConfig, PipelineMode};
+use dimred::coordinator::{ReconfigCommand, TrainingService};
+use dimred::datasets::waveform::WaveformConfig;
+use dimred::runtime::Runtime;
+use dimred::util::cli::Args;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[])?;
+    let backend = Backend::parse(&args.str_or("backend", "native"))?;
+    let runtime = match backend {
+        Backend::Pjrt => Some(Runtime::load(Path::new(&args.str_or(
+            "artifacts",
+            "artifacts",
+        )))?),
+        Backend::Native => None,
+    };
+
+    let mut data = WaveformConfig::paper().generate();
+    data.standardize();
+
+    let cfg = ExperimentConfig {
+        mode: PipelineMode::PcaWhiten, // start as a whitening engine
+        backend,
+        input_dim: 32,
+        intermediate_dim: 16,
+        output_dim: 16,
+        epochs: 4,
+        rot_warmup: 0,
+        train_classifier: true,
+        mlp_epochs: 20,
+        ..Default::default()
+    };
+    let mut svc = TrainingService::new(cfg, runtime.as_ref());
+    svc.schedule_reconfig(ReconfigCommand {
+        after_samples: 8000,
+        mode: PipelineMode::Easi, // flip the HOS mux on
+    });
+    let report = svc.run(&data)?;
+
+    println!("# {}", report.metrics.summary());
+    for (at, mode) in &report.metrics.reconfigurations {
+        println!("reconfigured to '{mode}' after {at} samples (state preserved)");
+    }
+    println!("convergence trace (samples, update magnitude):");
+    for (s, m) in report
+        .metrics
+        .convergence_trace
+        .iter()
+        .step_by(4.max(report.metrics.convergence_trace.len() / 10))
+    {
+        println!("  {s:>6}  {m:.4}");
+    }
+    if let Some(acc) = report.test_accuracy {
+        println!("test accuracy after mid-stream reconfiguration: {:.1}%", acc * 100.0);
+    }
+    assert_eq!(report.metrics.reconfigurations.len(), 1);
+    println!("reconfigure_demo OK");
+    Ok(())
+}

@@ -1,0 +1,96 @@
+//! Regenerate the paper's Table II (FPGA resource cost) and Fig. 3
+//! stage inventory from the calibrated Arria-10 model.
+//!
+//! ```text
+//! cargo run --release --example table2_cost             # Table II
+//! cargo run --release --example table2_cost -- --stages # Fig. 3 / Alg. 1
+//! ```
+
+use dimred::hwmodel::ops::easi_stage_ops;
+use dimred::hwmodel::{
+    paper_table_ii_configs, table_ii, Arria10Model, HwConfig, PipelineModel, PAPER_TABLE_II,
+};
+use dimred::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&["stages"])?;
+    if args.flag("stages") {
+        print_stage_inventory(32, 8);
+        return Ok(());
+    }
+
+    println!("Table II — Arria-10 resource model vs paper (m=32, n=8, fp32)");
+    println!(
+        "{:<26} {:>7} {:>8} {:>10}   {:>7} {:>8} {:>10}   {:>6}",
+        "configuration", "DSPs", "ALMs", "reg bits", "paper", "paper", "paper", "Δmax"
+    );
+    let rows = table_ii(&paper_table_ii_configs());
+    for (row, paper) in rows.iter().zip(PAPER_TABLE_II.iter()) {
+        let label = match row.intermediate {
+            Some(p) => HwConfig::rp_easi(row.input, p, row.output).label(),
+            None => HwConfig::easi(row.input, row.output).label(),
+        };
+        let rel = |got: u64, want: u64| (got as f64 - want as f64).abs() / want as f64;
+        let worst = rel(row.dsps, paper.0)
+            .max(rel(row.alms, paper.1))
+            .max(rel(row.register_bits, paper.2));
+        println!(
+            "{:<26} {:>7} {:>8} {:>10}   {:>7} {:>8} {:>10}   {:>5.1}%",
+            label,
+            row.dsps,
+            row.alms,
+            row.register_bits,
+            paper.0,
+            paper.1,
+            paper.2,
+            worst * 100.0
+        );
+    }
+    let saving = rows[0].dsps as f64 / rows[1].dsps as f64;
+    println!("\nDSP saving factor: {saving:.2}× (paper: {:.2}×, claim: ∝ m/p = 2×)",
+             PAPER_TABLE_II[0].0 as f64 / PAPER_TABLE_II[1].0 as f64);
+
+    // Timing corner (paper §V.C last paragraph).
+    let timing = PipelineModel::default();
+    for cfg in [HwConfig::easi(32, 8), HwConfig::rp_easi(32, 16, 8)] {
+        let t = timing.timing(&cfg);
+        println!(
+            "{:<26} f_clk {:.2} MHz   latency {} cycles ({:.0} ns)",
+            cfg.label(),
+            t.f_clk_hz / 1e6,
+            t.latency_cycles,
+            t.latency_ns
+        );
+    }
+    println!("table2_cost OK");
+    Ok(())
+}
+
+fn print_stage_inventory(m: usize, n: usize) {
+    println!("Fig. 3 / Alg. 1 stage inventory, EASI {m}→{n} (multipliers, adders):");
+    let names = [
+        "1: y = Bx",
+        "2: g(y) = y³",
+        "3: F = yyᵀ−I + gyᵀ−ygᵀ",
+        "4: F·B (relative gradient)",
+        "5: B ← B − μ(FB)",
+    ];
+    let mut tm = 0;
+    let mut ta = 0;
+    for (stage, name) in names.iter().enumerate() {
+        let (mults, adds) = easi_stage_ops(m, n, stage + 1);
+        tm += mults;
+        ta += adds;
+        println!("  stage {:<30} {:>6} mult {:>6} add", name, mults, adds);
+    }
+    println!("  total {:>36} mult {:>6} add  → O(m·n²) dominated by stage 4", tm, ta);
+    let model = Arria10Model::paper_calibrated();
+    let r = model.cost(&HwConfig::easi(m, n));
+    println!(
+        "  mapped: {} DSPs, {} ALMs, {} register bits ({:.0}% of Arria-10 DSPs)",
+        r.dsps,
+        r.alms,
+        r.register_bits,
+        r.dsp_utilisation * 100.0
+    );
+}

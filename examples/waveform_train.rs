@@ -1,0 +1,170 @@
+//! End-to-end driver (DESIGN.md §5, experiment T1): the full paper
+//! protocol on the Waveform dataset through ALL THREE LAYERS —
+//!
+//!   Rust coordinator (streaming batcher + reconfig + metrics)
+//!     → PJRT-executed AOT artifacts (JAX L2 + Pallas L1, compiled at
+//!       build time; Python is NOT running now)
+//!       → downstream 2×64 classifier (also via PJRT artifacts here)
+//!
+//! Regenerates Table I on the PJRT backend (falling back to native with
+//! a warning if `make artifacts` has not run) and logs the convergence
+//! trace + classifier loss curve that EXPERIMENTS.md records.
+//!
+//! ```text
+//! cargo run --release --example waveform_train [-- --backend native]
+//! ```
+
+use dimred::config::Backend;
+use dimred::runtime::{Runtime, Tensor};
+use dimred::rng::{Pcg64, RngExt};
+use dimred::util::cli::Args;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[])?;
+    let requested = Backend::parse(&args.str_or("backend", "pjrt"))?;
+    let artifact_dir = args.str_or("artifacts", "artifacts");
+    let epochs = args.usize_or("epochs", 8)?;
+    let seed = args.u64_or("seed", 2018)?;
+
+    let runtime = match requested {
+        Backend::Pjrt => match Runtime::load(Path::new(&artifact_dir)) {
+            Ok(rt) => {
+                println!("# PJRT platform: {} ({} artifacts)", rt.platform(),
+                         rt.manifest().artifacts.len());
+                Some(rt)
+            }
+            Err(e) => {
+                eprintln!("warning: {e:#}\nfalling back to the native backend");
+                None
+            }
+        },
+        Backend::Native => None,
+    };
+    let backend = if runtime.is_some() {
+        Backend::Pjrt
+    } else {
+        Backend::Native
+    };
+
+    println!("# Table I — end-to-end on the {} backend", match backend {
+        Backend::Pjrt => "PJRT (AOT artifacts)",
+        Backend::Native => "native Rust",
+    });
+    let rows = dimred::experiments::table1::run(runtime.as_ref(), backend, epochs, seed)?;
+    println!("{}", dimred::experiments::table1::render(&rows));
+    dimred::experiments::table1::check_shape(&rows, 13.0)?;
+    println!("shape criteria (DESIGN.md §5): OK\n");
+
+    // ---- classifier training THROUGH PJRT, with a logged loss curve —
+    // proves the MLP artifacts compose with the DR artifacts.
+    if let Some(rt) = &runtime {
+        println!("# classifier-on-PJRT loss curve (n=8 features, waveform)");
+        let mut data = dimred::datasets::waveform::WaveformConfig {
+            seed,
+            ..dimred::datasets::waveform::WaveformConfig::paper()
+        }
+        .generate();
+        data.standardize();
+        // Reduce with the proposed pipeline (native transform of the
+        // PJRT-trained state would be equivalent; keep it simple).
+        let cfg = dimred::config::ExperimentConfig {
+            mode: dimred::config::PipelineMode::RpEasi,
+            backend: Backend::Pjrt,
+            intermediate_dim: 16,
+            output_dim: 8,
+            epochs,
+            seed,
+            train_classifier: false,
+            ..Default::default()
+        };
+        let report = dimred::coordinator::TrainingService::new(cfg, Some(rt)).run(&data)?;
+        let mut reduced = data.map_features(&{
+            // effective pipeline = B_eff · R
+            let eff = report.separation.clone();
+            let r = report.rp.clone().unwrap();
+            eff.matmul(&r)
+        });
+        reduced.standardize();
+
+        // SGD through the mlp_train artifact, batch 32.
+        let (d, h, c, b) = (8usize, 64usize, 3usize, 32usize);
+        let name = format!("mlp_train_in{d}_h{h}_c{c}_b{b}");
+        let mut rng = Pcg64::seed_stream(seed, 0x4D4C_5057);
+        let he = |fan_in: usize| (2.0f64 / fan_in as f64).sqrt();
+        let mut params = vec![
+            Tensor::new(vec![h, d], (0..h * d).map(|_| (rng.next_gaussian() * he(d)) as f32).collect()),
+            Tensor::new(vec![h], vec![0.0; h]),
+            Tensor::new(vec![h, h], (0..h * h).map(|_| (rng.next_gaussian() * he(h)) as f32).collect()),
+            Tensor::new(vec![h], vec![0.0; h]),
+            Tensor::new(vec![c, h], (0..c * h).map(|_| (rng.next_gaussian() * he(h)) as f32).collect()),
+            Tensor::new(vec![c], vec![0.0; c]),
+        ];
+        let mut vels: Vec<Tensor> = params
+            .iter()
+            .map(|t| Tensor::new(t.shape.clone(), vec![0.0; t.data.len()]))
+            .collect();
+        let ntrain = reduced.train_x.rows_count();
+        let mut order: Vec<usize> = (0..ntrain).collect();
+        let mlp_epochs = 20usize;
+        for epoch in 0..mlp_epochs {
+            rng.shuffle(&mut order);
+            let mut loss_sum = 0.0f64;
+            let mut steps = 0usize;
+            for chunk in order.chunks(b) {
+                if chunk.len() < b {
+                    continue; // fixed-shape artifact; drop the remainder
+                }
+                let mut xs = Vec::with_capacity(b * d);
+                let mut onehot = vec![0.0f32; b * c];
+                for (i, &idx) in chunk.iter().enumerate() {
+                    xs.extend_from_slice(reduced.train_x.row(idx));
+                    onehot[i * c + reduced.train_y[idx]] = 1.0;
+                }
+                let mut inputs = params.clone();
+                inputs.extend(vels.clone());
+                inputs.push(Tensor::new(vec![b, d], xs));
+                inputs.push(Tensor::new(vec![b, c], onehot));
+                inputs.push(Tensor::scalar(0.05));
+                inputs.push(Tensor::scalar(0.9));
+                let outs = rt.execute(&name, &inputs)?;
+                for (k, slot) in [0usize, 2, 4, 6, 8, 10].iter().enumerate() {
+                    params[k] = outs[*slot].clone();
+                    vels[k] = outs[slot + 1].clone();
+                }
+                loss_sum += outs[12].data[0] as f64;
+                steps += 1;
+            }
+            if epoch % 2 == 0 || epoch + 1 == mlp_epochs {
+                println!("loss epoch {epoch:>2}: {:.4}", loss_sum / steps as f64);
+            }
+        }
+
+        // Evaluate via the mlp_predict artifact (batch 1 to cover the
+        // whole test set without padding).
+        let pred_name = format!("mlp_predict_in{d}_h{h}_c{c}_b1");
+        let mut correct = 0usize;
+        let ntest = reduced.test_x.rows_count();
+        for i in 0..ntest {
+            let mut inputs = params.clone();
+            inputs.push(Tensor::new(vec![1, d], reduced.test_x.row(i).to_vec()));
+            let logits = rt.execute1(&pred_name, &inputs)?;
+            let mut best = 0;
+            for k in 1..c {
+                if logits.data[k] > logits.data[best] {
+                    best = k;
+                }
+            }
+            if best == reduced.test_y[i] {
+                correct += 1;
+            }
+        }
+        println!(
+            "PJRT-classifier test accuracy: {:.1}%  ({} samples)",
+            100.0 * correct as f64 / ntest as f64,
+            ntest
+        );
+    }
+    println!("waveform_train OK");
+    Ok(())
+}

@@ -1,0 +1,244 @@
+"""AOT lowering: JAX (L2 + L1) -> HLO text artifacts for the Rust runtime.
+
+Run once at build time (``make artifacts``); Python never appears on the
+request path. Every experiment configuration gets its own executable
+variant (static shapes + static datapath mode — the software analogue of
+the paper's FPGA bitstream + mux settings).
+
+Interchange format is **HLO text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Output:
+    artifacts/<name>.hlo.txt   one per variant
+    artifacts/manifest.json    shapes/dtypes/arity for the Rust loader
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--quick]
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+F32 = jnp.float32
+
+# Training minibatch consumed by one EASI step executable. 256 amortises
+# PJRT dispatch overhead; a b=1 variant handles stream tails (padding is
+# NOT safe for the whitening term — a zero sample still applies -I).
+EASI_BATCHES = (256, 1)
+# Inference batches.
+TRANSFORM_BATCHES = (256, 1)
+# Classifier minibatch (matches the Rust trainer's default).
+MLP_BATCH = 32
+MLP_PREDICT_BATCHES = (256, 1)
+MLP_HIDDEN = 64
+
+# (m, n) for plain-EASI variants — Table I rows 1 and 3.
+EASI_DIMS = ((32, 16), (32, 8))
+# (m, p, n) for the proposed RP+EASI variants — Table I rows 2 and 4.
+RP_EASI_DIMS = ((32, 24, 16), (32, 16, 8))
+# Classifier input dims (the DR output dims) and classes (waveform: 3).
+MLP_DIMS = (16, 8)
+MLP_CLASSES = 3
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(fn, arg_specs):
+    return to_hlo_text(jax.jit(fn).lower(*arg_specs))
+
+
+def dims_of(s):
+    return list(s.shape)
+
+
+def build_catalog(quick=False):
+    """Yield (name, fn, arg_specs, description) for every variant."""
+    easi_batches = EASI_BATCHES if not quick else (8,)
+    transform_batches = TRANSFORM_BATCHES if not quick else (8,)
+    predict_batches = MLP_PREDICT_BATCHES if not quick else (8,)
+    easi_dims = EASI_DIMS if not quick else ((8, 4),)
+    rp_dims = RP_EASI_DIMS if not quick else ((8, 6, 4),)
+    mlp_dims = MLP_DIMS if not quick else (4,)
+
+    catalog = []
+    # Composed DR-unit steps (the production training path).
+    for m, n in easi_dims:
+        for b in easi_batches:
+            for rotate in (True, False):
+                tag = "full" if rotate else "whiten"
+                catalog.append((
+                    f"dr_{tag}_m{m}_n{n}_b{b}",
+                    model.dr_variant(rotate),
+                    [spec(n, m), spec(n), spec(n, n), spec(b, m), spec(3)],
+                    f"Composed DR unit ({'GHA+rotation' if rotate else 'GHA whitening only'}), "
+                    f"{m}->{n}, batch {b}; state (W, var, U), mus=(mu_w, beta, mu_rot)",
+                ))
+    for m, p, n in rp_dims:
+        for b in easi_batches:
+            for rotate in (True, False):
+                tag = "full" if rotate else "whiten"
+                catalog.append((
+                    f"rp_dr_{tag}_m{m}_p{p}_n{n}_b{b}",
+                    model.rp_dr_variant(rotate),
+                    [spec(n, p), spec(n), spec(n, n), spec(p, m), spec(b, m), spec(3)],
+                    f"RP front end + DR unit ({tag}), {m}->{p}->{n}, batch {b}",
+                ))
+    # Literal Eq. 6 EASI datapath variants (paper-faithful; kept for the
+    # kernel benches and the frozen-subspace ablation).
+    for m, n in easi_dims:
+        for b in easi_batches:
+            catalog.append((
+                f"easi_full_norm_m{m}_n{n}_b{b}",
+                model.easi_variant(True, True, normalized=True),
+                [spec(n, m), spec(b, m), spec(1)],
+                f"Full EASI (Eq. 6, normalised) minibatch step, {m}->{n}, batch {b}",
+            ))
+            catalog.append((
+                f"easi_whiten_m{m}_n{n}_b{b}",
+                model.easi_variant(True, False),
+                [spec(n, m), spec(b, m), spec(1)],
+                f"PCA-whitening mode (Eq. 3 — HOS term muxed out), {m}->{n}, batch {b}",
+            ))
+        for b in transform_batches:
+            catalog.append((
+                f"transform_m{m}_n{n}_b{b}",
+                model.transform_variant(),
+                [spec(n, m), spec(b, m)],
+                f"Inference Y = X B^T, {m}->{n}, batch {b}",
+            ))
+    for m, p, n in rp_dims:
+        for b in easi_batches:
+            catalog.append((
+                f"rp_easi_norm_m{m}_p{p}_n{n}_b{b}",
+                model.rp_easi_variant(normalized=True),
+                [spec(n, p), spec(p, m), spec(b, m), spec(1)],
+                f"Proposed pipeline: ternary RP {m}->{p} then rotation-only "
+                f"EASI {p}->{n} (one fused executable), batch {b}",
+            ))
+        for b in transform_batches:
+            catalog.append((
+                f"rp_transform_m{m}_p{p}_n{n}_b{b}",
+                model.rp_transform_variant(),
+                [spec(n, p), spec(p, m), spec(b, m)],
+                f"Inference through RP + B cascade, {m}->{p}->{n}, batch {b}",
+            ))
+    for d in mlp_dims:
+        h, c = MLP_HIDDEN, MLP_CLASSES
+        params = [
+            spec(h, d), spec(h),      # w1, b1
+            spec(h, h), spec(h),      # w2, b2
+            spec(c, h), spec(c),      # w3, b3
+        ]
+        velocities = [
+            spec(h, d), spec(h),
+            spec(h, h), spec(h),
+            spec(c, h), spec(c),
+        ]
+        b = MLP_BATCH if not quick else 8
+        catalog.append((
+            f"mlp_train_in{d}_h{h}_c{c}_b{b}",
+            model.mlp_train_variant(),
+            params + velocities + [spec(b, d), spec(b, c), spec(1), spec(1)],
+            f"One SGD+momentum step of the 2x{h} classifier, in={d}, batch {b}; "
+            "returns 12 updated tensors + mean loss",
+        ))
+        for pb in predict_batches:
+            catalog.append((
+                f"mlp_predict_in{d}_h{h}_c{c}_b{pb}",
+                model.mlp_predict_variant(),
+                params + [spec(pb, d)],
+                f"Classifier logits, in={d}, batch {pb}",
+            ))
+    return catalog
+
+
+def input_fingerprint():
+    """Hash of the compile-path sources — lets `make` skip rebuilds."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    digest = hashlib.sha256()
+    for root, _, files in sorted(os.walk(here)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    digest.update(fh.read())
+    return digest.hexdigest()
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny shapes only (CI smoke)")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on variant names")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    fingerprint = input_fingerprint()
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    if os.path.exists(manifest_path) and args.only is None:
+        try:
+            with open(manifest_path) as fh:
+                old = json.load(fh)
+            if old.get("fingerprint") == fingerprint and not args.quick:
+                print(f"artifacts up to date ({len(old['artifacts'])} variants); skipping")
+                return
+        except (json.JSONDecodeError, KeyError):
+            pass
+
+    catalog = build_catalog(quick=args.quick)
+    if args.only:
+        catalog = [c for c in catalog if args.only in c[0]]
+    entries = []
+    for name, fn, arg_specs, desc in catalog:
+        lowered_name = f"{name}.hlo.txt"
+        path = os.path.join(args.out_dir, lowered_name)
+        print(f"lowering {name} ...", flush=True)
+        text = lower_variant(fn, arg_specs)
+        with open(path, "w") as fh:
+            fh.write(text)
+        # Output arity: run shape inference via jax.eval_shape.
+        out_shapes = jax.eval_shape(fn, *arg_specs)
+        entries.append({
+            "name": name,
+            "file": lowered_name,
+            "description": desc,
+            "inputs": [{"shape": dims_of(s), "dtype": "f32"} for s in arg_specs],
+            "outputs": [{"shape": dims_of(s), "dtype": "f32"} for s in out_shapes],
+        })
+    manifest = {
+        "version": 1,
+        "fingerprint": fingerprint,
+        "jax_version": jax.__version__,
+        "artifacts": entries,
+    }
+    with open(manifest_path, "w") as fh:
+        json.dump(manifest, fh, indent=2)
+    print(f"wrote {len(entries)} artifacts + manifest to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,114 @@
+"""Fused DR-unit training-step Pallas kernel (Layer 1).
+
+One executable = one minibatch of the composed pipeline of
+rust/src/pipeline/unit.rs (see the module docs there and DESIGN.md for
+why the whitening half is Sanger's GHA rather than the paper's
+multiplicative Eq. 3):
+
+    per sample x:
+      GHA:      y = W x
+                dW = mu_w * (y x^T - tril(y y^T) W)      (Sanger)
+                relative clip ||dW|| <= 0.1 ||W||
+                W <- W + dW
+                var <- (1-beta) var + beta y^2            (lambda-hat)
+      rotation: z = clamp((W x)/sqrt(var), +-4)           (whitened)
+                y_r = U z ; g = y_r^3
+                dU = mu_rot/(1+mu_rot|y_r.g|) * (g u^T - y_r v^T)
+                     with u = U^T y_r, v = U^T g           (EASI HOS term)
+                relative clip ||dU|| <= 0.05 ||U||
+                U <- U - dU ;  ||U|| clamped to 4 sqrt(n)
+
+The whole minibatch recurrence runs inside one kernel (single VMEM
+residency for W, var, U), with `rotate` a compile-time flag — the
+paper's datapath mux becomes a choice of executable, which the Rust
+coordinator swaps at run time (including for the rotation warm-up).
+
+This must match rust/src/{gha,easi,pipeline/unit} step-for-step: the
+cross-backend integration test (rust/tests/) trains both on identical
+streams and compares state.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+GHA_CLIP = 0.1
+ROT_CLIP = 0.05
+Z_CLAMP = 4.0
+
+
+def _dr_kernel(w_ref, var_ref, u_ref, x_ref, mus_ref, ow_ref, ovar_ref, ou_ref, *, rotate):
+    batch = x_ref.shape[0]
+    n = w_ref.shape[0]
+    mu_w = mus_ref[0]
+    beta = mus_ref[1]
+    mu_rot = mus_ref[2]
+    max_u_norm = 4.0 * jnp.sqrt(jnp.asarray(n, dtype=w_ref.dtype))
+
+    def step(t, carry):
+        w, var, u = carry
+        x = x_ref[t, :]
+        # ---- GHA (Sanger) ----
+        y = w @ x
+        tril_yy = jnp.tril(jnp.outer(y, y))          # includes diagonal
+        dw = mu_w * (jnp.outer(y, x) - tril_yy @ w)
+        wn = jnp.sqrt(jnp.sum(w * w))
+        dn = jnp.sqrt(jnp.sum(dw * dw))
+        scale = jnp.minimum(1.0, GHA_CLIP * wn / jnp.maximum(dn, 1e-30))
+        w2 = w + scale * dw
+        var2 = (1.0 - beta) * var + beta * y * y
+        if rotate:
+            # ---- EASI rotation on the whitened output ----
+            z = (w2 @ x) / jnp.sqrt(jnp.maximum(var2, 1e-9))
+            z = jnp.clip(z, -Z_CLAMP, Z_CLAMP)
+            yr = u @ z
+            g = yr * yr * yr
+            uv = u.T @ yr
+            vv = u.T @ g
+            s4 = 1.0 / (1.0 + mu_rot * jnp.abs(jnp.dot(yr, g)))
+            du = mu_rot * s4 * (jnp.outer(g, uv) - jnp.outer(yr, vv))
+            un = jnp.sqrt(jnp.sum(u * u))
+            dn2 = jnp.sqrt(jnp.sum(du * du))
+            scale2 = jnp.minimum(1.0, ROT_CLIP * un / jnp.maximum(dn2, 1e-30))
+            u2 = u - scale2 * du
+            un2 = jnp.sqrt(jnp.sum(u2 * u2))
+            u2 = jnp.where(un2 > max_u_norm, u2 * (max_u_norm / un2), u2)
+        else:
+            u2 = u
+        return (w2, var2, u2)
+
+    w_fin, var_fin, u_fin = jax.lax.fori_loop(
+        0, batch, step, (w_ref[...], var_ref[...], u_ref[...])
+    )
+    ow_ref[...] = w_fin
+    ovar_ref[...] = var_fin
+    ou_ref[...] = u_fin
+
+
+@functools.partial(jax.jit, static_argnames=("rotate",))
+def dr_minibatch(w, var, u, xs, mus, rotate=True):
+    """Run the fused DR-unit minibatch kernel.
+
+    Args:
+      w:   (n, m) GHA subspace.
+      var: (n,) lambda-hat variance estimates.
+      u:   (n, n) rotation.
+      xs:  (batch, m) samples, consumed in order.
+      mus: (3,) = (mu_w, var beta, mu_rot).
+      rotate: datapath mux (static; one executable per setting).
+
+    Returns (w', var', u').
+    """
+    n, m = w.shape
+    kernel = functools.partial(_dr_kernel, rotate=rotate)
+    return pl.pallas_call(
+        kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((n, m), w.dtype),
+            jax.ShapeDtypeStruct((n,), var.dtype),
+            jax.ShapeDtypeStruct((n, n), u.dtype),
+        ),
+        interpret=True,  # CPU-PJRT cannot run Mosaic custom-calls
+    )(w, var, u, xs, mus)

@@ -1,0 +1,120 @@
+"""Fused EASI training-step Pallas kernel (Layer 1).
+
+The paper's compute hot-spot is the five-stage EASI datapath (Fig. 3):
+``y = Bx``, ``g = y^3``, the relative gradient
+``F = [yy^T - I] + [g y^T - y g^T]``, the product ``F @ B`` and the
+update ``B <- B - mu F B`` — all for one streamed sample, with the
+updated ``B`` fed back for the next sample.
+
+Hardware adaptation (DESIGN.md section "Hardware-Adaptation"): on the
+FPGA this is a spatial pipeline; on TPU we fuse the *whole minibatch
+recurrence* into a single Pallas program so `B` stays resident in VMEM
+for the entire batch — one HBM read of (B, X) and one HBM write of the
+new B, instead of per-sample round-trips. The sequential dependence
+(sample t+1 needs the B updated by sample t) is expressed with a
+`fori_loop` inside the kernel, mirroring the feedback path of the
+datapath. The datapath mux of the paper (EASI / PCA-whitening /
+rotation-only) becomes compile-time `whiten` / `rotate` flags: each mode
+is AOT-lowered to its own executable, and the Rust coordinator swaps
+executables at run time.
+
+The rank-2 factored form used here is algebraically identical to Eq. 6
+(see rust/src/easi/mod.rs for the derivation):
+
+    u = B^T y,  v = B^T g
+    [yy^T - I] B      = y u^T - B
+    [g y^T - y g^T] B = g u^T - y v^T
+
+which turns the O(n^2 m) matrix product into O(nm) outer products —
+exactly the shape the MXU prefers (tall-skinny outer products
+accumulating into the B tile held in VMEM).
+
+Must be lowered with ``interpret=True``: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _easi_minibatch_kernel(b_ref, x_ref, mu_ref, o_ref, *, whiten, rotate, normalized):
+    """Pallas kernel body: sequential EASI over the whole minibatch.
+
+    b_ref:  (n, m) separation matrix (input)
+    x_ref:  (batch, m) samples
+    mu_ref: (1,) learning rate
+    o_ref:  (n, m) updated separation matrix (output)
+    """
+    batch = x_ref.shape[0]
+    b0 = b_ref[...]
+    mu = mu_ref[0]
+
+    def step(t, b):
+        x = x_ref[t, :]                      # (m,)
+        y = b @ x                            # (n,)  stage 1
+        g = y * y * y                        # (n,)  stage 2
+        u = b.T @ y                          # (m,)  shared factor
+        delta = jnp.zeros_like(b)
+        if whiten:
+            dw = jnp.outer(y, u) - b         # [yy^T - I] B
+            if normalized:
+                dw = dw / (1.0 + mu * jnp.dot(y, y))
+            delta = delta + dw
+        if rotate:
+            v = b.T @ g                      # (m,)
+            dr = jnp.outer(g, u) - jnp.outer(y, v)
+            if normalized:
+                dr = dr / (1.0 + mu * jnp.abs(jnp.dot(y, g)))
+            delta = delta + dr
+        return b - mu * delta                # stage 5
+
+    o_ref[...] = jax.lax.fori_loop(0, batch, step, b0)
+
+
+@functools.partial(jax.jit, static_argnames=("whiten", "rotate", "normalized"))
+def easi_minibatch(b, xs, mu, whiten=True, rotate=True, normalized=False):
+    """Run the fused EASI minibatch kernel.
+
+    Args:
+      b: (n, m) separation matrix.
+      xs: (batch, m) samples, consumed in order.
+      mu: learning rate (scalar or shape-(1,) array, traced).
+      whiten/rotate: the paper's datapath mux (static → baked into the
+        lowered executable; one AOT artifact per mode).
+      normalized: Cardoso's stabilised recursion.
+
+    Returns the updated (n, m) separation matrix.
+    """
+    n, m = b.shape
+    mu_arr = jnp.reshape(jnp.asarray(mu, dtype=b.dtype), (1,))
+    kernel = functools.partial(
+        _easi_minibatch_kernel,
+        whiten=whiten,
+        rotate=rotate,
+        normalized=normalized,
+    )
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((n, m), b.dtype),
+        interpret=True,  # CPU-PJRT cannot run Mosaic custom-calls
+    )(b, xs, mu_arr)
+
+
+def _transform_kernel(b_ref, x_ref, o_ref):
+    """y = x @ B^T for a whole batch — the inference path (Eq. 4)."""
+    o_ref[...] = x_ref[...] @ b_ref[...].T
+
+
+@jax.jit
+def transform(b, xs):
+    """Batch inference through the separation matrix: (batch, m) -> (batch, n)."""
+    batch = xs.shape[0]
+    n = b.shape[0]
+    return pl.pallas_call(
+        _transform_kernel,
+        out_shape=jax.ShapeDtypeStruct((batch, n), xs.dtype),
+        interpret=True,
+    )(b, xs)

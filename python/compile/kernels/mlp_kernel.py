@@ -1,0 +1,33 @@
+"""Fused MLP-forward Pallas kernel (Layer 1).
+
+The downstream classifier (paper section V.B: 2 hidden layers x 64
+neurons) serves the inference path of the deployed system. All three
+layers are fused into one kernel so the activations never leave VMEM —
+for the paper's dimensions (n<=32 inputs, 64 hidden, <=10 classes) the
+whole parameter set is ~20 KiB, far below the ~16 MiB VMEM budget, so a
+single-tile program is the right shape (blocking would only add grid
+overhead).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mlp_logits_kernel(w1_ref, b1_ref, w2_ref, b2_ref, w3_ref, b3_ref, x_ref, o_ref):
+    """Fused 3-layer forward pass: relu(relu(x W1^T + b1) W2^T + b2) W3^T + b3."""
+    h1 = jnp.maximum(x_ref[...] @ w1_ref[...].T + b1_ref[...], 0.0)
+    h2 = jnp.maximum(h1 @ w2_ref[...].T + b2_ref[...], 0.0)
+    o_ref[...] = h2 @ w3_ref[...].T + b3_ref[...]
+
+
+@jax.jit
+def mlp_logits(w1, b1, w2, b2, w3, b3, xs):
+    """Batch logits: (batch, in) -> (batch, classes)."""
+    batch = xs.shape[0]
+    classes = w3.shape[0]
+    return pl.pallas_call(
+        _mlp_logits_kernel,
+        out_shape=jax.ShapeDtypeStruct((batch, classes), xs.dtype),
+        interpret=True,
+    )(w1, b1, w2, b2, w3, b3, xs)

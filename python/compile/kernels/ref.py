@@ -1,0 +1,181 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the ground truth the pytest suite checks the kernels against,
+and they double as readable specifications of the math:
+
+* EASI (paper Eq. 6):  ``B <- B - mu * F(y) @ B`` with
+  ``F = [y y^T - I]*whiten + [g(y) y^T - y g(y)^T]*rotate``, ``g = y^3``.
+* Random projection (paper Eq. 1): ``y = R x`` with ternary ``R``.
+* MLP (paper section V.B): 2x64 ReLU classifier forward pass.
+
+All functions are batch-first (rows are samples) to match the Rust
+coordinator's memory layout.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def cubic(y):
+    """The paper's HOS nonlinearity g(y) = y^3."""
+    return y * y * y
+
+
+def easi_relative_gradient(y, whiten: bool, rotate: bool):
+    """F = [yy^T - I]*whiten + [g y^T - y g^T]*rotate for one sample y (n,)."""
+    n = y.shape[0]
+    f = jnp.zeros((n, n), dtype=y.dtype)
+    if whiten:
+        f = f + jnp.outer(y, y) - jnp.eye(n, dtype=y.dtype)
+    if rotate:
+        g = cubic(y)
+        f = f + jnp.outer(g, y) - jnp.outer(y, g)
+    return f
+
+
+def easi_step_ref(b, x, mu, whiten: bool, rotate: bool, normalized: bool = False):
+    """One literal Eq. 6 update for a single sample x (m,). Returns new B."""
+    y = b @ x
+    if normalized:
+        g = cubic(y)
+        s2 = 1.0 / (1.0 + mu * jnp.dot(y, y))
+        s4 = 1.0 / (1.0 + mu * jnp.abs(jnp.dot(y, g)))
+        n = y.shape[0]
+        f = jnp.zeros((n, n), dtype=y.dtype)
+        if whiten:
+            f = f + s2 * (jnp.outer(y, y) - jnp.eye(n, dtype=y.dtype))
+        if rotate:
+            f = f + s4 * (jnp.outer(g, y) - jnp.outer(y, g))
+    else:
+        f = easi_relative_gradient(y, whiten, rotate)
+    return b - mu * f @ b
+
+
+def easi_minibatch_ref(b, xs, mu, whiten: bool, rotate: bool, normalized: bool = False):
+    """Sequential (streaming) EASI over a minibatch xs (batch, m).
+
+    The FPGA pipeline consumes one sample per clock with the update fed
+    back; semantically that is a sequential scan, which is what this
+    reference (and the kernel) implement.
+    """
+
+    def step(carry, x):
+        return easi_step_ref(carry, x, mu, whiten, rotate, normalized), None
+
+    b_final, _ = jax.lax.scan(step, b, xs)
+    return b_final
+
+
+def rp_apply_ref(r, xs):
+    """Random projection of a batch: (batch, m) @ (p, m)^T -> (batch, p)."""
+    return xs @ r.T
+
+
+def transform_ref(b, xs):
+    """y = B x for a batch of samples: (batch, m) -> (batch, n)."""
+    return xs @ b.T
+
+
+def mlp_logits_ref(w1, b1, w2, b2, w3, b3, xs):
+    """2-hidden-layer ReLU MLP forward pass.
+
+    Weight convention matches the Rust implementation: ``wK`` has shape
+    (out, in), so a layer computes ``relu(x @ wK.T + bK)``.
+    """
+    h1 = jnp.maximum(xs @ w1.T + b1, 0.0)
+    h2 = jnp.maximum(h1 @ w2.T + b2, 0.0)
+    return h2 @ w3.T + b3
+
+
+def softmax_xent_ref(logits, labels_onehot):
+    """Mean softmax cross-entropy."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.sum(labels_onehot * logp, axis=-1))
+
+
+def mlp_train_step_ref(params, xs, ys_onehot, lr, momentum):
+    """One SGD+momentum minibatch step with manual backprop.
+
+    ``params`` is a dict with w1,b1,w2,b2,w3,b3,vw1,vb1,...; returns
+    (new_params, mean_loss). Manual gradients mirror the Rust trainer
+    exactly (no reliance on AD through the kernel path).
+    """
+    w1, b1 = params["w1"], params["b1"]
+    w2, b2 = params["w2"], params["b2"]
+    w3, b3 = params["w3"], params["b3"]
+    batch = xs.shape[0]
+
+    # Forward, keeping activations.
+    a1 = xs @ w1.T + b1
+    h1 = jnp.maximum(a1, 0.0)
+    a2 = h1 @ w2.T + b2
+    h2 = jnp.maximum(a2, 0.0)
+    logits = h2 @ w3.T + b3
+    probs = jax.nn.softmax(logits, axis=-1)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    loss = -jnp.mean(jnp.sum(ys_onehot * logp, axis=-1))
+
+    # Backward (mean over batch).
+    d3 = (probs - ys_onehot) / batch          # (batch, c)
+    gw3 = d3.T @ h2                           # (c, h)
+    gb3 = jnp.sum(d3, axis=0)
+    d2 = (d3 @ w3) * (a2 > 0.0)               # (batch, h)
+    gw2 = d2.T @ h1
+    gb2 = jnp.sum(d2, axis=0)
+    d1 = (d2 @ w2) * (a1 > 0.0)               # (batch, h)
+    gw1 = d1.T @ xs
+    gb1 = jnp.sum(d1, axis=0)
+
+    new = dict(params)
+    for name, g in [
+        ("w1", gw1), ("b1", gb1),
+        ("w2", gw2), ("b2", gb2),
+        ("w3", gw3), ("b3", gb3),
+    ]:
+        v = momentum * params["v" + name] - lr * g
+        new["v" + name] = v
+        new[name] = params[name] + v
+    return new, loss
+
+
+# ------------------------------------------------------ composed DR unit
+
+
+def dr_step_ref(w, var, u, x, mu_w, beta, mu_rot, rotate,
+                gha_clip=0.1, rot_clip=0.05, z_clamp=4.0):
+    """One sample of the composed GHA + rotation unit (see dr_kernel.py
+    and rust/src/pipeline/unit.rs). Returns (w', var', u')."""
+    y = w @ x
+    tril_yy = jnp.tril(jnp.outer(y, y))
+    dw = mu_w * (jnp.outer(y, x) - tril_yy @ w)
+    wn = jnp.sqrt(jnp.sum(w * w))
+    dn = jnp.sqrt(jnp.sum(dw * dw))
+    scale = jnp.minimum(1.0, gha_clip * wn / jnp.maximum(dn, 1e-30))
+    w2 = w + scale * dw
+    var2 = (1.0 - beta) * var + beta * y * y
+    if not rotate:
+        return w2, var2, u
+    n = u.shape[0]
+    z = (w2 @ x) / jnp.sqrt(jnp.maximum(var2, 1e-9))
+    z = jnp.clip(z, -z_clamp, z_clamp)
+    yr = u @ z
+    g = yr ** 3
+    uv = u.T @ yr
+    vv = u.T @ g
+    s4 = 1.0 / (1.0 + mu_rot * jnp.abs(jnp.dot(yr, g)))
+    du = mu_rot * s4 * (jnp.outer(g, uv) - jnp.outer(yr, vv))
+    un = jnp.sqrt(jnp.sum(u * u))
+    dn2 = jnp.sqrt(jnp.sum(du * du))
+    scale2 = jnp.minimum(1.0, rot_clip * un / jnp.maximum(dn2, 1e-30))
+    u2 = u - scale2 * du
+    un2 = jnp.sqrt(jnp.sum(u2 * u2))
+    max_norm = 4.0 * jnp.sqrt(jnp.asarray(n, dtype=u.dtype))
+    u2 = jnp.where(un2 > max_norm, u2 * (max_norm / un2), u2)
+    return w2, var2, u2
+
+
+def dr_minibatch_ref(w, var, u, xs, mu_w, beta, mu_rot, rotate):
+    """Sequential scan of dr_step_ref over a minibatch."""
+    for t in range(xs.shape[0]):
+        w, var, u = dr_step_ref(w, var, u, xs[t], mu_w, beta, mu_rot, rotate)
+    return w, var, u

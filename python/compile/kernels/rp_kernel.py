@@ -1,0 +1,84 @@
+"""Random-projection Pallas kernel (Layer 1).
+
+The paper's RP front end (Eq. 1, distribution of Fox et al. FPT'16) is
+multiplication-free in hardware: the ternary matrix R gates a network of
+adders/subtractors. On TPU the hardware-honest analogue is a dense
+matmul against the (mostly zero) ternary matrix — the MXU's systolic
+array handles the zeros for free, so the "mult-free" saving translates
+to *storage* sparsity, not FLOP sparsity (see DESIGN.md
+"Hardware-Adaptation"). The kernel therefore takes R as a dense (p, m)
+f32 tile of {-1, 0, +1} values already scaled by the distribution's
+isometry factor.
+
+For large m (MNIST 784, Ads 1558) the input tile is split along m with
+a BlockSpec grid so each block fits VMEM comfortably, accumulating the
+partial products into the output tile.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rp_kernel(r_ref, x_ref, o_ref):
+    """o = x @ r^T over one (batch_block, m) x (p, m) tile pair."""
+    o_ref[...] = x_ref[...] @ r_ref[...].T
+
+
+@jax.jit
+def rp_apply(r, xs):
+    """Project a batch: (batch, m) with (p, m) -> (batch, p).
+
+    Small/medium m: single-tile kernel (the whole problem fits VMEM —
+    for the paper's m=32, p=16 the tiles are a few KiB).
+    """
+    batch = xs.shape[0]
+    p = r.shape[0]
+    return pl.pallas_call(
+        _rp_kernel,
+        out_shape=jax.ShapeDtypeStruct((batch, p), xs.dtype),
+        interpret=True,
+    )(r, xs)
+
+
+def _rp_blocked_kernel(r_ref, x_ref, o_ref):
+    """Accumulating blocked kernel: grid walks the m (contraction) axis.
+
+    Block b contributes x[:, b] @ r[:, b]^T; the first block initialises
+    the output tile, later blocks accumulate — the standard Pallas
+    reduction-grid idiom.
+    """
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += x_ref[...] @ r_ref[...].T
+
+
+def rp_apply_blocked(r, xs, block_m=256):
+    """Blocked projection for large input dimensionality.
+
+    Splits the contraction axis m into `block_m`-wide tiles so each
+    VMEM-resident block stays small; the output (batch, p) tile lives in
+    VMEM across the whole reduction (revisited by every grid step).
+    """
+    batch, m = xs.shape
+    p = r.shape[0]
+    if m % block_m != 0:
+        # Pad the contraction axis with zeros (zeros contribute nothing).
+        pad = block_m - m % block_m
+        xs = jnp.pad(xs, ((0, 0), (0, pad)))
+        r = jnp.pad(r, ((0, 0), (0, pad)))
+        m = m + pad
+    grid = (m // block_m,)
+    return pl.pallas_call(
+        _rp_blocked_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((p, block_m), lambda i: (0, i)),
+            pl.BlockSpec((batch, block_m), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((batch, p), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, p), xs.dtype),
+        interpret=True,
+    )(r, xs)

@@ -1,0 +1,212 @@
+"""Layer 2 — the JAX compute graphs that get AOT-lowered to HLO text.
+
+Each public function here is one *executable variant* loaded by the Rust
+runtime. They compose the Layer-1 Pallas kernels into the training /
+inference steps of the paper's system:
+
+* ``easi_train_step``    — one fused minibatch of EASI training
+                            (any datapath mode, static flags)
+* ``rp_easi_train_step`` — the paper's proposal: ternary RP front end
+                            then rotation-only EASI, one executable
+* ``transform``          — Eq. 4 inference ``Y = X B^T``
+* ``rp_transform``       — RP + transform inference cascade
+* ``mlp_train_step``     — one SGD+momentum minibatch of the downstream
+                            classifier (manual backprop, matches the
+                            Rust trainer bit-for-bit in structure)
+* ``mlp_logits``         — classifier inference (fused Pallas kernel)
+
+Conventions (shared with the Rust side, see rust/src/runtime):
+rows are samples; matrices are row-major; weights are (out, in);
+``mu``/``lr`` are shape-(1,) f32 inputs so the coordinator can anneal
+them at run time without recompiling.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import dr_kernel, easi_kernel, mlp_kernel, rp_kernel
+
+
+# ---------------------------------------------------------------- EASI
+
+
+def easi_train_step(b, xs, mu, *, whiten=True, rotate=True, normalized=False):
+    """One minibatch of streaming EASI training; returns the new B.
+
+    The whole sequential recurrence runs inside a single fused Pallas
+    kernel (one VMEM residency for B — see easi_kernel.py).
+    """
+    return easi_kernel.easi_minibatch(
+        b, xs, mu, whiten=whiten, rotate=rotate, normalized=normalized
+    )
+
+
+def rp_easi_train_step(b, r, xs, mu, *, normalized=False):
+    """The paper's proposed pipeline as one executable: project the batch
+    through the ternary R (m -> p), then rotation-only EASI (p -> n).
+
+    XLA fuses the projection into the scan's operand; R is a run-time
+    input so re-drawing the projection does not require recompilation.
+    """
+    projected = rp_kernel.rp_apply(r, xs)
+    return easi_kernel.easi_minibatch(
+        b, projected, mu, whiten=False, rotate=True, normalized=normalized
+    )
+
+
+def transform(b, xs):
+    """Inference: Y = X @ B^T (Eq. 4)."""
+    return easi_kernel.transform(b, xs)
+
+
+def rp_transform(b, r, xs):
+    """Inference through the full proposed cascade: RP then B."""
+    return easi_kernel.transform(b, rp_kernel.rp_apply(r, xs))
+
+
+# ----------------------------------------------------------------- MLP
+
+
+def mlp_logits(w1, b1, w2, b2, w3, b3, xs):
+    """Classifier inference (fused Pallas kernel)."""
+    return mlp_kernel.mlp_logits(w1, b1, w2, b2, w3, b3, xs)
+
+
+def mlp_train_step(w1, b1, w2, b2, w3, b3,
+                   vw1, vb1, vw2, vb2, vw3, vb3,
+                   xs, ys_onehot, lr, momentum):
+    """One SGD+momentum minibatch step of the 2x64 classifier.
+
+    Flat-argument form (12 params + batch + hyper-params) because the
+    PJRT boundary passes positional buffers; returns the 12 updated
+    tensors plus the scalar mean loss. Manual backprop — identical
+    structure to rust/src/mlp (and to ref.mlp_train_step_ref, which the
+    tests check against).
+    """
+    batch = xs.shape[0]
+    lr = jnp.reshape(lr, ())
+    momentum = jnp.reshape(momentum, ())
+
+    a1 = xs @ w1.T + b1
+    h1 = jnp.maximum(a1, 0.0)
+    a2 = h1 @ w2.T + b2
+    h2 = jnp.maximum(a2, 0.0)
+    logits = h2 @ w3.T + b3
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    loss = -jnp.mean(jnp.sum(ys_onehot * logp, axis=-1))
+    probs = jnp.exp(logp)
+
+    d3 = (probs - ys_onehot) / batch
+    gw3 = d3.T @ h2
+    gb3 = jnp.sum(d3, axis=0)
+    d2 = (d3 @ w3) * (a2 > 0.0)
+    gw2 = d2.T @ h1
+    gb2 = jnp.sum(d2, axis=0)
+    d1 = (d2 @ w2) * (a1 > 0.0)
+    gw1 = d1.T @ xs
+    gb1 = jnp.sum(d1, axis=0)
+
+    outs = []
+    for p, v, g in [
+        (w1, vw1, gw1), (b1, vb1, gb1),
+        (w2, vw2, gw2), (b2, vb2, gb2),
+        (w3, vw3, gw3), (b3, vb3, gb3),
+    ]:
+        v_new = momentum * v - lr * g
+        outs.append(p + v_new)
+        outs.append(v_new)
+    # Order: w1, vw1, b1, vb1, w2, vw2, ... then loss.
+    return tuple(outs) + (loss,)
+
+
+# -------------------------------------------------- composed DR unit
+
+
+def dr_train_step(w, var, u, xs, mus, *, rotate=True):
+    """One minibatch of the composed GHA + rotation unit (the production
+    training step; see dr_kernel.py)."""
+    return dr_kernel.dr_minibatch(w, var, u, xs, mus, rotate=rotate)
+
+
+def rp_dr_train_step(w, var, u, r, xs, mus, *, rotate=True):
+    """The paper's proposed pipeline as one executable: ternary RP
+    projection fused in front of the DR unit."""
+    projected = rp_kernel.rp_apply(r, xs)
+    return dr_kernel.dr_minibatch(w, var, u, projected, mus, rotate=rotate)
+
+
+def dr_variant(rotate):
+    def fn(w, var, u, xs, mus):
+        return dr_train_step(w, var, u, xs, mus, rotate=rotate)
+
+    fn.__name__ = "dr_step_" + ("full" if rotate else "whiten")
+    return fn
+
+
+def rp_dr_variant(rotate):
+    def fn(w, var, u, r, xs, mus):
+        return rp_dr_train_step(w, var, u, r, xs, mus, rotate=rotate)
+
+    fn.__name__ = "rp_dr_step_" + ("full" if rotate else "whiten")
+    return fn
+
+
+# ------------------------------------------------- variant registry
+
+
+def easi_variant(whiten, rotate, normalized=False):
+    """Return a positional-args function for AOT lowering of one EASI
+    datapath mode (static flags baked in)."""
+
+    def fn(b, xs, mu):
+        return (easi_train_step(
+            b, xs, mu, whiten=whiten, rotate=rotate, normalized=normalized
+        ),)
+
+    mode = {
+        (True, True): "full",
+        (True, False): "whiten",
+        (False, True): "rot",
+    }[(whiten, rotate)]
+    fn.__name__ = f"easi_step_{mode}" + ("_norm" if normalized else "")
+    return fn
+
+
+def rp_easi_variant(normalized=False):
+    def fn(b, r, xs, mu):
+        return (rp_easi_train_step(b, r, xs, mu, normalized=normalized),)
+
+    fn.__name__ = "rp_easi_step" + ("_norm" if normalized else "")
+    return fn
+
+
+def transform_variant():
+    def fn(b, xs):
+        return (transform(b, xs),)
+
+    fn.__name__ = "transform"
+    return fn
+
+
+def rp_transform_variant():
+    def fn(b, r, xs):
+        return (rp_transform(b, r, xs),)
+
+    fn.__name__ = "rp_transform"
+    return fn
+
+
+def mlp_predict_variant():
+    def fn(w1, b1, w2, b2, w3, b3, xs):
+        return (mlp_logits(w1, b1, w2, b2, w3, b3, xs),)
+
+    fn.__name__ = "mlp_predict"
+    return fn
+
+
+def mlp_train_variant():
+    def fn(*args):
+        return mlp_train_step(*args)
+
+    fn.__name__ = "mlp_train_step"
+    return fn

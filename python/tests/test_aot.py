@@ -1,0 +1,81 @@
+"""AOT pipeline: lowering, manifest integrity, fingerprint skipping."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot
+
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+PKG_ROOT = os.path.dirname(HERE)
+
+
+def test_catalog_names_unique():
+    names = [name for name, *_ in aot.build_catalog()]
+    assert len(names) == len(set(names))
+
+
+def test_catalog_covers_table_i_configs():
+    """Every Table I configuration must have a training executable."""
+    names = {name for name, *_ in aot.build_catalog()}
+    for want in [
+        "easi_full_norm_m32_n16_b256",
+        "easi_full_norm_m32_n8_b256",
+        "rp_easi_norm_m32_p24_n16_b256",
+        "rp_easi_norm_m32_p16_n8_b256",
+    ]:
+        assert want in names, f"missing {want}"
+
+
+def test_catalog_has_tail_variants():
+    """b=1 variants exist so stream tails never require zero-padding
+    (padding corrupts the whitening term)."""
+    names = {name for name, *_ in aot.build_catalog()}
+    assert "easi_full_norm_m32_n16_b1" in names
+    assert "rp_easi_norm_m32_p16_n8_b1" in names
+
+
+def test_quick_lowering_roundtrip(tmp_path):
+    """--quick catalogue lowers to parseable HLO text + valid manifest."""
+    out = tmp_path / "artifacts"
+    env = dict(os.environ, PYTHONPATH=PKG_ROOT)
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out), "--quick"],
+        check=True, cwd=PKG_ROOT, env=env, capture_output=True,
+    )
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert manifest["version"] == 1
+    assert len(manifest["artifacts"]) >= 5
+    for entry in manifest["artifacts"]:
+        path = out / entry["file"]
+        text = path.read_text()
+        assert text.startswith("HloModule"), entry["name"]
+        assert entry["inputs"], entry["name"]
+        assert entry["outputs"], entry["name"]
+        # The Rust loader needs concrete dims.
+        for spec in entry["inputs"] + entry["outputs"]:
+            assert all(isinstance(d, int) and d >= 1 for d in spec["shape"])
+            assert spec["dtype"] == "f32"
+
+
+def test_lower_variant_produces_hlo_text():
+    import jax
+    import jax.numpy as jnp
+    from compile import model
+
+    spec = jax.ShapeDtypeStruct((2, 4), jnp.float32)
+    mu = jax.ShapeDtypeStruct((1,), jnp.float32)
+    text = aot.lower_variant(model.easi_variant(True, True), [spec,
+                                                              jax.ShapeDtypeStruct((3, 4), jnp.float32),
+                                                              mu])
+    assert "HloModule" in text
+    # Sequential semantics lower to a while loop, not an unrolled chain.
+    assert "while" in text
+
+
+def test_fingerprint_stable():
+    assert aot.input_fingerprint() == aot.input_fingerprint()

@@ -1,0 +1,291 @@
+"""Layer-1 correctness: every Pallas kernel against its pure-jnp oracle.
+
+Hypothesis sweeps the shape/batch space; numpy.testing.assert_allclose
+is the acceptance criterion. This is the CORE correctness signal for
+the compile path — if these pass, the HLO artifacts the Rust runtime
+executes encode exactly the math of ref.py (which in turn is what the
+Rust-native implementation computes; see rust/tests/).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+import jax.numpy as jnp
+
+from compile.kernels import easi_kernel, mlp_kernel, ref, rp_kernel
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rand(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape) * scale, dtype=jnp.float32)
+
+
+def stable_b(rng, n, m):
+    """Near-identity init — the regime the streaming algorithm runs in."""
+    return jnp.asarray(np.eye(n, m) + 0.02 * rng.normal(size=(n, m)),
+                       dtype=jnp.float32)
+
+
+# ------------------------------------------------------------- EASI
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(2, 12),
+    extra=st.integers(0, 12),
+    batch=st.integers(1, 32),
+    whiten=st.booleans(),
+    rotate=st.booleans(),
+    normalized=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_easi_minibatch_matches_ref(n, extra, batch, whiten, rotate, normalized, seed):
+    if not whiten and not rotate:
+        return  # empty datapath — not a valid mux setting
+    m = n + extra
+    rng = np.random.default_rng(seed)
+    b = stable_b(rng, n, m)
+    xs = rand(rng, batch, m)
+    got = easi_kernel.easi_minibatch(
+        b, xs, 1e-3, whiten=whiten, rotate=rotate, normalized=normalized)
+    want = ref.easi_minibatch_ref(b, xs, 1e-3, whiten, rotate, normalized)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_easi_single_sample_matches_naive_eq6():
+    """batch=1 kernel == the literal Eq. 6 with explicit F and F@B."""
+    rng = np.random.default_rng(7)
+    b = stable_b(rng, 4, 9)
+    x = rand(rng, 9)
+    got = easi_kernel.easi_minibatch(b, x[None, :], 2e-3, whiten=True, rotate=True)
+    want = ref.easi_step_ref(b, x, 2e-3, True, True)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_easi_sequential_semantics():
+    """One batch of 2 == two consecutive batches of 1 (the FPGA feedback
+    path: sample t+1 sees the B updated by sample t)."""
+    rng = np.random.default_rng(8)
+    b = stable_b(rng, 3, 5)
+    xs = rand(rng, 2, 5)
+    fused = easi_kernel.easi_minibatch(b, xs, 1e-3)
+    b1 = easi_kernel.easi_minibatch(b, xs[0:1], 1e-3)
+    b2 = easi_kernel.easi_minibatch(b1, xs[1:2], 1e-3)
+    assert_allclose(np.asarray(fused), np.asarray(b2), rtol=1e-5, atol=1e-6)
+
+
+def test_easi_mode_mux_decomposition():
+    """For one sample the full update is whiten-delta + rotate-delta
+    (the paper's datapath mux adds the two terms)."""
+    rng = np.random.default_rng(9)
+    b = stable_b(rng, 4, 6)
+    x = rand(rng, 1, 6)
+    full = np.asarray(easi_kernel.easi_minibatch(b, x, 1e-3, whiten=True, rotate=True))
+    wh = np.asarray(easi_kernel.easi_minibatch(b, x, 1e-3, whiten=True, rotate=False))
+    ro = np.asarray(easi_kernel.easi_minibatch(b, x, 1e-3, whiten=False, rotate=True))
+    b_np = np.asarray(b)
+    assert_allclose(full, wh + ro - b_np, rtol=1e-5, atol=1e-6)
+
+
+def test_easi_whitening_converges():
+    """Training on correlated data drives output covariance toward I."""
+    rng = np.random.default_rng(10)
+    n_samples, dim = 4000, 4
+    a = rng.normal(size=(dim, dim))
+    xs = jnp.asarray(rng.normal(size=(n_samples, dim)) @ a.T, dtype=jnp.float32)
+    b = jnp.asarray(0.3 * np.eye(dim), dtype=jnp.float32)
+    for _ in range(6):
+        b = easi_kernel.easi_minibatch(b, xs, 2e-3, whiten=True, rotate=False)
+    z = np.asarray(xs @ b.T)
+    cov = z.T @ z / n_samples
+    assert np.max(np.abs(cov - np.eye(dim))) < 0.15, f"cov:\n{cov}"
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 8),
+    extra=st.integers(0, 16),
+    batch=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_transform_matches_ref(n, extra, batch, seed):
+    m = n + extra
+    rng = np.random.default_rng(seed)
+    b = rand(rng, n, m)
+    xs = rand(rng, batch, m)
+    assert_allclose(
+        np.asarray(easi_kernel.transform(b, xs)),
+        np.asarray(ref.transform_ref(b, xs)),
+        rtol=1e-5, atol=1e-6,
+    )
+
+
+# --------------------------------------------------------------- RP
+
+@settings(**SETTINGS)
+@given(
+    p=st.integers(1, 16),
+    extra=st.integers(0, 48),
+    batch=st.integers(1, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rp_apply_matches_ref(p, extra, batch, seed):
+    m = p + extra
+    rng = np.random.default_rng(seed)
+    r = jnp.asarray(rng.choice([-1.0, 0.0, 1.0], size=(p, m), p=[.1, .8, .1]),
+                    dtype=jnp.float32)
+    xs = rand(rng, batch, m)
+    assert_allclose(
+        np.asarray(rp_kernel.rp_apply(r, xs)),
+        np.asarray(ref.rp_apply_ref(r, xs)),
+        rtol=1e-5, atol=1e-6,
+    )
+
+
+@settings(**SETTINGS)
+@given(
+    p=st.integers(1, 8),
+    m=st.integers(9, 512),
+    batch=st.integers(1, 16),
+    block=st.sampled_from([16, 64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rp_blocked_matches_ref(p, m, batch, block, seed):
+    """The BlockSpec reduction grid must agree with the dense oracle for
+    every (m, block) combination, including non-divisible padding."""
+    rng = np.random.default_rng(seed)
+    r = jnp.asarray(rng.choice([-1.0, 0.0, 1.0], size=(p, m), p=[.1, .8, .1]),
+                    dtype=jnp.float32)
+    xs = rand(rng, batch, m)
+    assert_allclose(
+        np.asarray(rp_kernel.rp_apply_blocked(r, xs, block_m=block)),
+        np.asarray(ref.rp_apply_ref(r, xs)),
+        rtol=1e-4, atol=1e-5,
+    )
+
+
+def test_rp_ternary_preserves_norms_in_expectation():
+    """E||Rx||^2 = ||x||^2 for the Fox et al. distribution — the paper's
+    second-order-statistics argument."""
+    rng = np.random.default_rng(11)
+    m, p, trials = 256, 32, 200
+    x = rng.normal(size=m).astype(np.float32)
+    ratios = []
+    prob = 1.0 / (2 * p)
+    for _ in range(trials):
+        u = rng.random(size=(p, m))
+        r = np.where(u < prob, 1.0, np.where(u < 2 * prob, -1.0, 0.0)).astype(np.float32)
+        y = np.asarray(rp_kernel.rp_apply(jnp.asarray(r), jnp.asarray(x[None, :])))[0]
+        ratios.append(np.sum(y * y) / np.sum(x * x))
+    assert abs(np.mean(ratios) - 1.0) < 0.15, np.mean(ratios)
+
+
+# -------------------------------------------------------------- MLP
+
+@settings(**SETTINGS)
+@given(
+    d=st.integers(1, 16),
+    h=st.sampled_from([8, 64]),
+    c=st.integers(2, 10),
+    batch=st.integers(1, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mlp_logits_matches_ref(d, h, c, batch, seed):
+    rng = np.random.default_rng(seed)
+    w1, b1 = rand(rng, h, d, scale=0.5), rand(rng, h, scale=0.1)
+    w2, b2 = rand(rng, h, h, scale=0.5), rand(rng, h, scale=0.1)
+    w3, b3 = rand(rng, c, h, scale=0.5), rand(rng, c, scale=0.1)
+    xs = rand(rng, batch, d)
+    assert_allclose(
+        np.asarray(mlp_kernel.mlp_logits(w1, b1, w2, b2, w3, b3, xs)),
+        np.asarray(ref.mlp_logits_ref(w1, b1, w2, b2, w3, b3, xs)),
+        rtol=1e-4, atol=1e-5,
+    )
+
+
+def test_mlp_relu_actually_clips():
+    """Negative pre-activations must be zeroed (catches a max/min swap)."""
+    d = 2
+    w1 = jnp.asarray(-np.eye(8, d), dtype=jnp.float32)
+    b1 = jnp.zeros(8, jnp.float32)
+    w2 = jnp.asarray(np.eye(8), dtype=jnp.float32)
+    b2 = jnp.zeros(8, jnp.float32)
+    w3 = jnp.asarray(np.ones((3, 8)), dtype=jnp.float32)
+    b3 = jnp.zeros(3, jnp.float32)
+    xs = jnp.asarray([[1.0, 1.0]], dtype=jnp.float32)  # all h1 pre-acts negative
+    out = np.asarray(mlp_kernel.mlp_logits(w1, b1, w2, b2, w3, b3, xs))
+    assert_allclose(out, np.zeros((1, 3)), atol=1e-7)
+
+
+# ------------------------------------------------------ composed DR unit
+
+from compile.kernels import dr_kernel
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(2, 10),
+    extra=st.integers(0, 12),
+    batch=st.integers(1, 16),
+    rotate=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dr_minibatch_matches_ref(n, extra, batch, rotate, seed):
+    m = n + extra
+    rng = np.random.default_rng(seed)
+    w = stable_b(rng, n, m)
+    var = jnp.ones(n, jnp.float32)
+    u = jnp.eye(n, dtype=jnp.float32)
+    xs = rand(rng, batch, m)
+    mus = jnp.asarray([5e-3, 5e-3, 1e-3], jnp.float32)
+    got = dr_kernel.dr_minibatch(w, var, u, xs, mus, rotate=rotate)
+    want = ref.dr_minibatch_ref(w, var, u, xs, 5e-3, 5e-3, 1e-3, rotate)
+    for g, r_ in zip(got, want):
+        assert_allclose(np.asarray(g), np.asarray(r_), rtol=2e-5, atol=1e-6)
+
+
+def test_dr_whiten_mode_leaves_u_untouched():
+    rng = np.random.default_rng(31)
+    w = stable_b(rng, 4, 8)
+    var = jnp.ones(4, jnp.float32)
+    u = rand(rng, 4, 4)
+    xs = rand(rng, 16, 8)
+    mus = jnp.asarray([5e-3, 5e-3, 1e-3], jnp.float32)
+    _, _, u2 = dr_kernel.dr_minibatch(w, var, u, xs, mus, rotate=False)
+    assert_allclose(np.asarray(u2), np.asarray(u))
+
+
+def test_dr_gha_half_learns_principal_direction():
+    # One dominant direction; W must align with it after a few batches.
+    rng = np.random.default_rng(32)
+    m, n = 6, 2
+    direction = rng.normal(size=m).astype(np.float32)
+    direction /= np.linalg.norm(direction)
+    xs = np.outer(rng.normal(size=2000).astype(np.float32) * 3.0, direction)
+    xs += 0.2 * rng.normal(size=xs.shape).astype(np.float32)
+    w = stable_b(rng, n, m)
+    var = jnp.ones(n, jnp.float32)
+    u = jnp.eye(n, dtype=jnp.float32)
+    mus = jnp.asarray([5e-3, 5e-3, 1e-3], jnp.float32)
+    for start in range(0, 2000, 250):
+        w, var, u = dr_kernel.dr_minibatch(
+            w, var, u, jnp.asarray(xs[start:start + 250]), mus, rotate=False)
+    w0 = np.asarray(w)[0]
+    alignment = abs(float(np.dot(w0, direction))) / np.linalg.norm(w0)
+    assert alignment > 0.95, alignment
+
+
+def test_dr_sequential_semantics():
+    rng = np.random.default_rng(33)
+    w = stable_b(rng, 3, 5)
+    var = jnp.ones(3, jnp.float32)
+    u = jnp.eye(3, dtype=jnp.float32)
+    xs = rand(rng, 2, 5)
+    mus = jnp.asarray([5e-3, 5e-3, 1e-3], jnp.float32)
+    fused = dr_kernel.dr_minibatch(w, var, u, xs, mus, rotate=True)
+    s1 = dr_kernel.dr_minibatch(w, var, u, xs[0:1], mus, rotate=True)
+    s2 = dr_kernel.dr_minibatch(*s1, xs[1:2], mus, rotate=True)
+    for f, s in zip(fused, s2):
+        assert_allclose(np.asarray(f), np.asarray(s), rtol=1e-5, atol=1e-6)

@@ -1,0 +1,124 @@
+"""Layer-2 correctness: the composed training-step graphs."""
+
+import numpy as np
+import jax.numpy as jnp
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels import ref
+
+
+def rand(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape) * scale, dtype=jnp.float32)
+
+
+def test_rp_easi_step_equals_project_then_rotate():
+    """The fused proposed-pipeline executable must equal RP followed by
+    rotation-only EASI run separately."""
+    rng = np.random.default_rng(21)
+    m, p, n, batch = 12, 8, 4, 16
+    b = jnp.asarray(np.eye(n, p) + 0.02 * rng.normal(size=(n, p)), dtype=jnp.float32)
+    r = jnp.asarray(rng.choice([-1.0, 0.0, 1.0], size=(p, m), p=[.1, .8, .1]),
+                    dtype=jnp.float32)
+    xs = rand(rng, batch, m)
+    fused = model.rp_easi_train_step(b, r, xs, 1e-3, normalized=True)
+    staged = ref.easi_minibatch_ref(b, ref.rp_apply_ref(r, xs), 1e-3,
+                                    whiten=False, rotate=True, normalized=True)
+    assert_allclose(np.asarray(fused), np.asarray(staged), rtol=1e-5, atol=1e-6)
+
+
+def test_rp_transform_cascade():
+    rng = np.random.default_rng(22)
+    m, p, n, batch = 10, 6, 3, 8
+    b = rand(rng, n, p)
+    r = jnp.asarray(rng.choice([-1.0, 0.0, 1.0], size=(p, m)), dtype=jnp.float32)
+    xs = rand(rng, batch, m)
+    got = model.rp_transform(b, r, xs)
+    want = ref.transform_ref(b, ref.rp_apply_ref(r, xs))
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def _mlp_params(rng, d, h, c):
+    names = ["w1", "b1", "w2", "b2", "w3", "b3"]
+    shapes = [(h, d), (h,), (h, h), (h,), (c, h), (c,)]
+    params = {}
+    for name, shape in zip(names, shapes):
+        scale = 0.5 if name.startswith("w") else 0.0
+        params[name] = rand(rng, *shape, scale=scale)
+        params["v" + name] = jnp.zeros(shape, jnp.float32)
+    return params
+
+
+def test_mlp_train_step_matches_ref():
+    """The flat-argument PJRT variant must equal the dict-based oracle."""
+    rng = np.random.default_rng(23)
+    d, h, c, batch = 5, 8, 3, 16
+    params = _mlp_params(rng, d, h, c)
+    xs = rand(rng, batch, d)
+    labels = rng.integers(0, c, size=batch)
+    onehot = jnp.asarray(np.eye(c)[labels], dtype=jnp.float32)
+
+    flat_in = [params[k] for k in
+               ["w1", "b1", "w2", "b2", "w3", "b3",
+                "vw1", "vb1", "vw2", "vb2", "vw3", "vb3"]]
+    outs = model.mlp_train_step(*flat_in, xs, onehot,
+                                jnp.asarray([0.05], jnp.float32),
+                                jnp.asarray([0.9], jnp.float32))
+    new_ref, loss_ref = ref.mlp_train_step_ref(params, xs, onehot, 0.05, 0.9)
+
+    # Output order: w1, vw1, b1, vb1, w2, vw2, b2, vb2, w3, vw3, b3, vb3, loss
+    order = ["w1", "vw1", "b1", "vb1", "w2", "vw2", "b2", "vb2",
+             "w3", "vw3", "b3", "vb3"]
+    for got, key in zip(outs[:-1], order):
+        assert_allclose(np.asarray(got), np.asarray(new_ref[key]),
+                        rtol=1e-5, atol=1e-6, err_msg=key)
+    assert_allclose(float(outs[-1]), float(loss_ref), rtol=1e-5)
+
+
+def test_mlp_training_reduces_loss():
+    """A few steps on separable blobs must reduce the loss."""
+    rng = np.random.default_rng(24)
+    d, h, c, batch = 2, 64, 2, 32
+    params = _mlp_params(rng, d, h, c)
+    flat = [params[k] for k in
+            ["w1", "b1", "w2", "b2", "w3", "b3",
+             "vw1", "vb1", "vw2", "vb2", "vw3", "vb3"]]
+    lr = jnp.asarray([0.1], jnp.float32)
+    mom = jnp.asarray([0.9], jnp.float32)
+    losses = []
+    for step in range(30):
+        labels = rng.integers(0, 2, size=batch)
+        centers = np.where(labels[:, None] == 0, -2.0, 2.0)
+        xs = jnp.asarray(centers + 0.3 * rng.normal(size=(batch, 2)),
+                         dtype=jnp.float32)
+        onehot = jnp.asarray(np.eye(2)[labels], dtype=jnp.float32)
+        outs = model.mlp_train_step(*flat, xs, onehot, lr, mom)
+        flat = list(outs[:-1])
+        # Reorder: outputs come as w1, vw1, b1, vb1, ... but inputs are
+        # w1..b3 then vw1..vb3.
+        by_name = dict(zip(
+            ["w1", "vw1", "b1", "vb1", "w2", "vw2", "b2", "vb2",
+             "w3", "vw3", "b3", "vb3"], outs[:-1]))
+        flat = [by_name[k] for k in
+                ["w1", "b1", "w2", "b2", "w3", "b3",
+                 "vw1", "vb1", "vw2", "vb2", "vw3", "vb3"]]
+        losses.append(float(outs[-1]))
+    assert losses[-1] < 0.3 * losses[0], losses[::10]
+
+
+def test_easi_variant_names():
+    assert model.easi_variant(True, True).__name__ == "easi_step_full"
+    assert model.easi_variant(True, False).__name__ == "easi_step_whiten"
+    assert model.easi_variant(False, True, normalized=True).__name__ == "easi_step_rot_norm"
+
+
+def test_variant_functions_return_tuples():
+    """AOT lowering requires tuple outputs (return_tuple=True unwrap on
+    the Rust side)."""
+    rng = np.random.default_rng(25)
+    b = rand(rng, 3, 6, scale=0.1)
+    xs = rand(rng, 4, 6)
+    out = model.easi_variant(True, True)(b, xs, jnp.asarray([1e-3], jnp.float32))
+    assert isinstance(out, tuple) and len(out) == 1
+    out = model.transform_variant()(b, xs)
+    assert isinstance(out, tuple) and len(out) == 1

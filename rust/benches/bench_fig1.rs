@@ -1,0 +1,71 @@
+//! Bench F1 (DESIGN.md §5): regenerates a compact Fig. 1 (two points
+//! per dataset so the full bench stays in CI budget; the example
+//! regenerates denser series) and times the fit+transform of each DR
+//! algorithm at the figure's scale — the cost axis the paper's
+//! hardware argument is about.
+
+use dimred::datasets::mnist_like::MnistLikeConfig;
+use dimred::pipeline::{DrPipeline, PipelineSpec, StageSpec};
+use dimred::rp::{RandomProjection, RpDistribution};
+use dimred::util::bench::Bench;
+
+fn main() {
+    let quick = std::env::var("DIMRED_BENCH_QUICK").is_ok();
+    let points = if quick { 2 } else { 3 };
+
+    // ------- compact accuracy series (once) ---------------------------
+    for ds in ["mnist", "har", "ads"] {
+        match dimred::experiments::fig1::run(ds, points, 2018) {
+            Ok(series) => println!("{}", dimred::experiments::fig1::render(ds, &series)),
+            Err(e) => println!("fig1 {ds}: ERROR {e}"),
+        }
+    }
+
+    // ------- per-algorithm fit/apply cost at MNIST scale ---------------
+    let mut data = MnistLikeConfig {
+        train: if quick { 300 } else { 1000 },
+        test: 100,
+        ..Default::default()
+    }
+    .generate();
+    data.standardize();
+    let m = data.input_dim();
+    let n = 64;
+
+    let mut bench = Bench::new("fig1-dr-algorithms");
+    bench.run("rp-ternary fit(784→64)", || {
+        RandomProjection::new(m, n, RpDistribution::Ternary, 7).nnz()
+    });
+    let rp = RandomProjection::new(m, n, RpDistribution::Ternary, 7);
+    bench.run("rp-ternary apply(1 sample)", || rp.apply(data.train_x.row(0)));
+    let pca_spec = PipelineSpec {
+        input_dim: m,
+        rp: None,
+        stage: StageSpec::Pca,
+        output_dim: n,
+        seed: 7,
+    };
+    bench.run("pca fit(784→64, subspace-iter)", || {
+        DrPipeline::fit(pca_spec.clone(), &data.train_x).spec.output_dim
+    });
+    let ica_spec = PipelineSpec {
+        input_dim: m,
+        rp: Some(dimred::pipeline::RpStage {
+            intermediate_dim: 4 * n,
+            distribution: RpDistribution::Ternary,
+        }),
+        stage: StageSpec::Ica {
+            mu_w: 5e-3,
+            mu_rot: 1e-3,
+            epochs: 1,
+        },
+        output_dim: n,
+        seed: 7,
+    };
+    bench.run("ica fit(784→256→64, 1 epoch)", || {
+        DrPipeline::fit(ica_spec.clone(), &data.train_x).spec.output_dim
+    });
+    let fitted = DrPipeline::fit(ica_spec, &data.train_x);
+    bench.run("ica transform(1 sample)", || fitted.transform(data.train_x.row(0)));
+    bench.finish();
+}

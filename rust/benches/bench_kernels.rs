@@ -1,0 +1,85 @@
+//! Kernel-level benchmarks: the PJRT-executed AOT step artifacts vs
+//! their native-Rust equivalents, per batch size — isolates the XLA
+//! dispatch overhead from the algorithmic cost, which drives the
+//! batch-size policy in §Perf of EXPERIMENTS.md.
+//!
+//! Also times the literal Eq. 6 EASI step (the paper's datapath) vs the
+//! factored O(nm) update — the software image of the paper's O(m·n²)
+//! hardware-complexity argument.
+
+use dimred::config::{Backend, ExperimentConfig, PipelineMode};
+use dimred::coordinator::{Batch, Trainer};
+use dimred::easi::{naive_step, EasiConfig, EasiMode, EasiTrainer};
+use dimred::linalg::Mat;
+use dimred::runtime::{Runtime, Tensor};
+use dimred::util::bench::Bench;
+use std::path::Path;
+
+fn main() {
+    let mut bench = Bench::new("kernels");
+
+    // ------- native: factored vs naive EASI update ---------------------
+    let (m, n) = (32usize, 8usize);
+    let x: Vec<f32> = (0..m).map(|i| ((i * 37) % 17) as f32 / 17.0 - 0.5).collect();
+    let mut trainer = EasiTrainer::new(EasiConfig {
+        input_dim: m,
+        output_dim: n,
+        ..Default::default()
+    });
+    bench.run("native easi step factored O(nm) 32→8", || trainer.step(&x));
+    let b0 = Mat::eye(n, m);
+    bench.run("native easi step naive O(n²m) 32→8 (paper datapath)", || {
+        naive_step(&b0, &x, 1e-3, EasiMode::Full)
+    });
+
+    // ------- native composed DR unit -----------------------------------
+    let cfg = ExperimentConfig {
+        mode: PipelineMode::RpEasi,
+        intermediate_dim: 16,
+        output_dim: 8,
+        rot_warmup: 0,
+        ..Default::default()
+    };
+    let batch256 = Batch::Full(Mat::from_fn(256, 32, |i, j| {
+        ((i * 31 + j * 7) % 23) as f32 / 23.0 - 0.5
+    }));
+    let mut native = Trainer::from_config(&cfg, None).unwrap();
+    bench.run("native rp16+dr8 batch=256", || native.step(&batch256));
+
+    // ------- PJRT step executables -------------------------------------
+    let Ok(rt) = Runtime::load(Path::new("artifacts")) else {
+        println!("(PJRT benches skipped: run `make artifacts`)");
+        bench.finish();
+        return;
+    };
+    let mut pjrt = Trainer::from_config(
+        &ExperimentConfig {
+            backend: Backend::Pjrt,
+            ..cfg.clone()
+        },
+        Some(&rt),
+    )
+    .unwrap();
+    bench.run("pjrt rp16+dr8 batch=256 (fused artifact)", || {
+        pjrt.step(&batch256).unwrap()
+    });
+    let batch1 = Batch::Tail(Mat::from_fn(1, 32, |_, j| j as f32 / 32.0));
+    bench.run("pjrt rp16+dr8 batch=1 (tail artifact)", || {
+        pjrt.step(&batch1).unwrap()
+    });
+
+    // Inference artifacts.
+    let b = Mat::eye(16, 32);
+    let x256 = Mat::from_fn(256, 32, |i, j| ((i + j) % 13) as f32 / 13.0);
+    let tb = Tensor::from_mat(&b);
+    let tx = Tensor::from_mat(&x256);
+    rt.warm(&["transform_m32_n16_b256"]).unwrap();
+    bench.run("pjrt transform 32→16 batch=256", || {
+        rt.execute1("transform_m32_n16_b256", &[tb.clone(), tx.clone()])
+            .unwrap()
+    });
+    // Native equivalent for the dispatch-overhead comparison.
+    bench.run("native transform 32→16 batch=256", || b.apply_rows(&x256));
+
+    bench.finish();
+}

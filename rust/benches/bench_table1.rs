@@ -1,0 +1,55 @@
+//! Bench T1 (DESIGN.md §5): regenerates the paper's Table I — the four
+//! waveform accuracy configurations — and measures the DR-stage
+//! training cost of each (per-sample latency of the streaming trainer,
+//! native backend; the PJRT path is timed in bench_kernels /
+//! bench_throughput).
+//!
+//! Run: `cargo bench --bench bench_table1` (DIMRED_BENCH_QUICK=1 for a
+//! fast pass).
+
+use dimred::config::{Backend, ExperimentConfig, PipelineMode};
+use dimred::coordinator::{Batch, Trainer};
+use dimred::datasets::waveform::WaveformConfig;
+use dimred::util::bench::Bench;
+
+fn main() {
+    // ------- the accuracy table itself (once; not timed) -------------
+    let quick = std::env::var("DIMRED_BENCH_QUICK").is_ok();
+    let epochs = if quick { 2 } else { 8 };
+    let rows = dimred::experiments::table1::run(None, Backend::Native, epochs, 2018)
+        .expect("table 1 run");
+    println!("{}", dimred::experiments::table1::render(&rows));
+    if let Err(e) = dimred::experiments::table1::check_shape(&rows, 13.0) {
+        println!("shape check: FAILED — {e}");
+    } else {
+        println!("shape check: OK");
+    }
+    println!();
+
+    // ------- per-configuration training cost --------------------------
+    let mut data = WaveformConfig::paper().generate();
+    data.standardize();
+    let mut bench = Bench::new("table1-dr-training");
+    for &(mode, p, n, _) in &dimred::experiments::table1::CONFIGS {
+        let cfg = ExperimentConfig {
+            input_dim: 32,
+            intermediate_dim: if p == 0 { n } else { p },
+            output_dim: n,
+            mode,
+            rot_warmup: 0,
+            ..Default::default()
+        };
+        let label = match mode {
+            PipelineMode::RpEasi => format!("rp{p}+easi{n} step(batch=256)"),
+            _ => format!("easi{n} step(batch=256)"),
+        };
+        let batch = Batch::Full(dimred::linalg::Mat::from_fn(256, 32, |i, j| {
+            data.train_x.get(i % data.train_x.rows_count(), j)
+        }));
+        let mut trainer = Trainer::from_config(&cfg, None).unwrap();
+        bench.run(&label, || {
+            trainer.step(&batch).unwrap();
+        });
+    }
+    bench.finish();
+}

@@ -1,0 +1,56 @@
+//! Bench T2 (DESIGN.md §5): regenerates the paper's Table II from the
+//! calibrated Arria-10 model, checks every cell against the published
+//! numbers, and times the cost-model evaluation itself (it sits on the
+//! design-space-exploration path of the scalability sweep, so its own
+//! throughput matters).
+
+use dimred::hwmodel::{
+    paper_table_ii_configs, table_ii, Arria10Model, HwConfig, PAPER_TABLE_II,
+};
+use dimred::util::bench::Bench;
+
+fn main() {
+    // ------- the table itself + paper deltas (once) -------------------
+    let rows = table_ii(&paper_table_ii_configs());
+    println!("Table II (model vs paper):");
+    let mut worst: f64 = 0.0;
+    for (row, paper) in rows.iter().zip(PAPER_TABLE_II.iter()) {
+        let rel = |got: u64, want: u64| (got as f64 - want as f64).abs() / want as f64;
+        let w = rel(row.dsps, paper.0)
+            .max(rel(row.alms, paper.1))
+            .max(rel(row.register_bits, paper.2));
+        worst = worst.max(w);
+        println!(
+            "  m={} p={:?} n={}: {} DSPs / {} ALMs / {} reg bits  (paper {} / {} / {})  Δmax {:.1}%",
+            row.input, row.intermediate, row.output,
+            row.dsps, row.alms, row.register_bits,
+            paper.0, paper.1, paper.2, w * 100.0
+        );
+    }
+    println!(
+        "DSP saving {:.2}× (paper {:.2}×); worst cell error {:.1}%\n",
+        rows[0].dsps as f64 / rows[1].dsps as f64,
+        PAPER_TABLE_II[0].0 as f64 / PAPER_TABLE_II[1].0 as f64,
+        worst * 100.0
+    );
+
+    // ------- model evaluation cost -------------------------------------
+    let model = Arria10Model::paper_calibrated();
+    let mut bench = Bench::new("table2-cost-model");
+    bench.run("cost(EASI 32→8)", || model.cost(&HwConfig::easi(32, 8)).dsps);
+    bench.run("cost(RP 32→16 + EASI 16→8)", || {
+        model.cost(&HwConfig::rp_easi(32, 16, 8)).dsps
+    });
+    bench.run("sweep 64 configs", || {
+        let mut acc = 0u64;
+        for m in (32..=512).step_by(32) {
+            for p in [m / 2, m / 4] {
+                if p >= 8 {
+                    acc += model.cost(&HwConfig::rp_easi(m, p, 8)).dsps;
+                }
+            }
+        }
+        acc
+    });
+    bench.finish();
+}

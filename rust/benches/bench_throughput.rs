@@ -1,0 +1,75 @@
+//! Bench P1 (DESIGN.md §5): end-to-end training-service throughput —
+//! the coordinator's samples/second through the full producer → bounded
+//! queue → trainer path, native vs PJRT backends, across batch sizes.
+//! The §Perf section of EXPERIMENTS.md tracks these numbers; the FPGA
+//! reference point is 106.64 Msamples/s (one sample per clock).
+
+use dimred::config::{Backend, ExperimentConfig, PipelineMode};
+use dimred::coordinator::TrainingService;
+use dimred::datasets::waveform::WaveformConfig;
+use dimred::runtime::Runtime;
+use std::path::Path;
+
+fn run_once(cfg: ExperimentConfig, runtime: Option<&Runtime>) -> (f64, u64) {
+    let mut data = WaveformConfig::paper().generate();
+    data.standardize();
+    let report = TrainingService::new(cfg, runtime).run(&data).expect("run");
+    (
+        report.metrics.throughput(),
+        report.metrics.backpressure_waits,
+    )
+}
+
+fn main() {
+    let quick = std::env::var("DIMRED_BENCH_QUICK").is_ok();
+    let epochs = if quick { 1 } else { 4 };
+    let base = ExperimentConfig {
+        mode: PipelineMode::RpEasi,
+        intermediate_dim: 16,
+        output_dim: 8,
+        epochs,
+        rot_warmup: 512,
+        train_classifier: false,
+        ..Default::default()
+    };
+
+    println!("end-to-end coordinator throughput (waveform, rp16+easi8, {epochs} epochs)");
+    println!("FPGA reference (paper, modelled): 106.64 Msamples/s\n");
+
+    for batch in [64usize, 256, 1024] {
+        let cfg = ExperimentConfig {
+            batch,
+            backend: Backend::Native,
+            ..base.clone()
+        };
+        let (tput, bp) = run_once(cfg, None);
+        println!("native  batch={batch:<5} {tput:>12.0} samples/s   backpressure {bp}");
+    }
+
+    match Runtime::load(Path::new("artifacts")) {
+        Ok(rt) => {
+            for batch in [256usize] {
+                let cfg = ExperimentConfig {
+                    batch,
+                    backend: Backend::Pjrt,
+                    ..base.clone()
+                };
+                let (tput, bp) = run_once(cfg, Some(&rt));
+                println!("pjrt    batch={batch:<5} {tput:>12.0} samples/s   backpressure {bp}");
+            }
+            // Queue-depth sensitivity (backpressure behaviour).
+            for depth in [1usize, 4, 16] {
+                let cfg = ExperimentConfig {
+                    batch: 256,
+                    queue_depth: depth,
+                    backend: Backend::Pjrt,
+                    ..base.clone()
+                };
+                let (tput, bp) = run_once(cfg, Some(&rt));
+                println!("pjrt    queue={depth:<5} {tput:>12.0} samples/s   backpressure {bp}");
+            }
+        }
+        Err(e) => println!("pjrt    skipped ({e:#})"),
+    }
+    println!("--- bench_throughput done ---");
+}

@@ -1,0 +1,353 @@
+//! Experiment configuration: JSON files + CLI overrides.
+//!
+//! One [`ExperimentConfig`] fully determines a training run — dataset,
+//! pipeline dimensions, datapath mode, backend (native Rust vs PJRT
+//! artifacts), optimisation hyper-parameters and seeds. The CLI
+//! (`dimred train --config cfg.json --mu 2e-3 ...`) loads the file
+//! first, then applies flag overrides, so configs are reproducible and
+//! tweakable.
+
+use crate::easi::EasiMode;
+use crate::rp::RpDistribution;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Which execution engine drives training.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure-Rust reference implementation (baseline / oracle).
+    Native,
+    /// AOT-compiled XLA executables via PJRT (the production path).
+    Pjrt,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "native" => Ok(Backend::Native),
+            "pjrt" => Ok(Backend::Pjrt),
+            other => bail!("unknown backend '{other}' (native|pjrt)"),
+        }
+    }
+}
+
+/// Datapath configuration (mirrors the paper's reconfigurable mux plus
+/// the RP front end).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PipelineMode {
+    /// Full EASI, m → n.
+    Easi,
+    /// PCA whitening (HOS term bypassed), m → n.
+    PcaWhiten,
+    /// RP only, m → n (no trained stage).
+    RpOnly,
+    /// The paper's proposal: RP m → p, rotation-only EASI p → n.
+    RpEasi,
+}
+
+impl PipelineMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "easi" => Ok(Self::Easi),
+            "pca-whiten" | "whiten" => Ok(Self::PcaWhiten),
+            "rp" => Ok(Self::RpOnly),
+            "rp-easi" | "proposed" => Ok(Self::RpEasi),
+            other => bail!("unknown mode '{other}' (easi|pca-whiten|rp|rp-easi)"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Easi => "easi",
+            Self::PcaWhiten => "pca-whiten",
+            Self::RpOnly => "rp",
+            Self::RpEasi => "rp-easi",
+        }
+    }
+
+    /// The EASI datapath mode used by the trained stage, if any.
+    pub fn easi_mode(&self) -> Option<EasiMode> {
+        match self {
+            Self::Easi => Some(EasiMode::Full),
+            Self::PcaWhiten => Some(EasiMode::WhitenOnly),
+            Self::RpEasi => Some(EasiMode::RotationOnly),
+            Self::RpOnly => None,
+        }
+    }
+
+    /// Whether the RP front end is active.
+    pub fn uses_rp(&self) -> bool {
+        matches!(self, Self::RpOnly | Self::RpEasi)
+    }
+}
+
+/// A full experiment description.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// Dataset name: waveform | mnist | har | ads | csv:<path>.
+    pub dataset: String,
+    /// Input dimensionality m (checked against the dataset).
+    pub input_dim: usize,
+    /// Intermediate dimensionality p (used by RP modes).
+    pub intermediate_dim: usize,
+    /// Output dimensionality n.
+    pub output_dim: usize,
+    pub mode: PipelineMode,
+    pub backend: Backend,
+    pub rp_distribution: RpDistribution,
+    /// EASI rotation learning rate μ.
+    pub mu: f32,
+    /// GHA (whitening) learning rate.
+    pub mu_w: f32,
+    /// Samples of whitener-only warm-up before the rotation engages.
+    pub rot_warmup: usize,
+    /// Passes over the training set for the DR stage.
+    pub epochs: usize,
+    /// Minibatch fed to one PJRT step executable.
+    pub batch: usize,
+    /// Bounded-queue depth between the streaming source and the trainer
+    /// (backpressure window, in batches).
+    pub queue_depth: usize,
+    pub seed: u64,
+    pub artifact_dir: PathBuf,
+    /// Train the downstream classifier and report accuracy.
+    pub train_classifier: bool,
+    /// Classifier epochs.
+    pub mlp_epochs: usize,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            dataset: "waveform".into(),
+            input_dim: 32,
+            intermediate_dim: 16,
+            output_dim: 8,
+            mode: PipelineMode::RpEasi,
+            backend: Backend::Native,
+            rp_distribution: RpDistribution::Ternary,
+            mu: 1e-3,
+            mu_w: 5e-3,
+            rot_warmup: 2000,
+            epochs: 4,
+            batch: 256,
+            queue_depth: 4,
+            seed: 2018,
+            artifact_dir: PathBuf::from("artifacts"),
+            train_classifier: true,
+            mlp_epochs: 30,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Load from a JSON file.
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    /// Build from parsed JSON (all fields optional; defaults apply).
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let mut c = Self::default();
+        if let Some(x) = v.get("dataset") {
+            c.dataset = x.as_str()?.to_string();
+        }
+        if let Some(x) = v.get("input_dim") {
+            c.input_dim = x.as_usize()?;
+        }
+        if let Some(x) = v.get("intermediate_dim") {
+            c.intermediate_dim = x.as_usize()?;
+        }
+        if let Some(x) = v.get("output_dim") {
+            c.output_dim = x.as_usize()?;
+        }
+        if let Some(x) = v.get("mode") {
+            c.mode = PipelineMode::parse(x.as_str()?)?;
+        }
+        if let Some(x) = v.get("backend") {
+            c.backend = Backend::parse(x.as_str()?)?;
+        }
+        if let Some(x) = v.get("rp_distribution") {
+            c.rp_distribution = match x.as_str()? {
+                "ternary" => RpDistribution::Ternary,
+                "achlioptas" => RpDistribution::Achlioptas,
+                "gaussian" => RpDistribution::Gaussian,
+                other => bail!("unknown rp_distribution '{other}'"),
+            };
+        }
+        if let Some(x) = v.get("mu") {
+            c.mu = x.as_f64()? as f32;
+        }
+        if let Some(x) = v.get("mu_w") {
+            c.mu_w = x.as_f64()? as f32;
+        }
+        if let Some(x) = v.get("rot_warmup") {
+            c.rot_warmup = x.as_usize()?;
+        }
+        if let Some(x) = v.get("epochs") {
+            c.epochs = x.as_usize()?;
+        }
+        if let Some(x) = v.get("batch") {
+            c.batch = x.as_usize()?;
+        }
+        if let Some(x) = v.get("queue_depth") {
+            c.queue_depth = x.as_usize()?;
+        }
+        if let Some(x) = v.get("seed") {
+            c.seed = x.as_u64()?;
+        }
+        if let Some(x) = v.get("artifact_dir") {
+            c.artifact_dir = PathBuf::from(x.as_str()?);
+        }
+        if let Some(x) = v.get("train_classifier") {
+            c.train_classifier = x.as_bool()?;
+        }
+        if let Some(x) = v.get("mlp_epochs") {
+            c.mlp_epochs = x.as_usize()?;
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    /// Apply CLI overrides on top of the loaded config.
+    pub fn apply_args(&mut self, args: &Args) -> Result<()> {
+        if let Some(d) = args.opt_str("dataset") {
+            self.dataset = d.to_string();
+        }
+        if let Some(m) = args.opt_str("mode") {
+            self.mode = PipelineMode::parse(m)?;
+        }
+        if let Some(b) = args.opt_str("backend") {
+            self.backend = Backend::parse(b)?;
+        }
+        self.input_dim = args.usize_or("input-dim", self.input_dim)?;
+        self.intermediate_dim = args.usize_or("intermediate-dim", self.intermediate_dim)?;
+        self.output_dim = args.usize_or("output-dim", self.output_dim)?;
+        self.mu = args.f32_or("mu", self.mu)?;
+        self.mu_w = args.f32_or("mu-w", self.mu_w)?;
+        self.rot_warmup = args.usize_or("rot-warmup", self.rot_warmup)?;
+        self.epochs = args.usize_or("epochs", self.epochs)?;
+        self.batch = args.usize_or("batch", self.batch)?;
+        self.queue_depth = args.usize_or("queue-depth", self.queue_depth)?;
+        self.seed = args.u64_or("seed", self.seed)?;
+        self.mlp_epochs = args.usize_or("mlp-epochs", self.mlp_epochs)?;
+        if let Some(dir) = args.opt_str("artifacts") {
+            self.artifact_dir = PathBuf::from(dir);
+        }
+        if args.flag("no-classifier") {
+            self.train_classifier = false;
+        }
+        self.validate()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.output_dim >= 1 && self.output_dim <= self.input_dim,
+            "need 1 <= n <= m"
+        );
+        if self.mode.uses_rp() {
+            anyhow::ensure!(
+                self.intermediate_dim >= self.output_dim
+                    && self.intermediate_dim <= self.input_dim,
+                "need n <= p <= m for RP modes"
+            );
+        }
+        anyhow::ensure!(self.mu > 0.0, "mu must be positive");
+        anyhow::ensure!(self.batch >= 1, "batch must be >= 1");
+        anyhow::ensure!(self.queue_depth >= 1, "queue_depth must be >= 1");
+        Ok(())
+    }
+
+    /// Serialise (reports, checkpoints).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dataset", Json::str(self.dataset.clone())),
+            ("input_dim", Json::num(self.input_dim as f64)),
+            ("intermediate_dim", Json::num(self.intermediate_dim as f64)),
+            ("output_dim", Json::num(self.output_dim as f64)),
+            ("mode", Json::str(self.mode.label())),
+            (
+                "backend",
+                Json::str(match self.backend {
+                    Backend::Native => "native",
+                    Backend::Pjrt => "pjrt",
+                }),
+            ),
+            ("mu", Json::num(self.mu as f64)),
+            ("epochs", Json::num(self.epochs as f64)),
+            ("batch", Json::num(self.batch as f64)),
+            ("seed", Json::num(self.seed as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip_fields() {
+        let c = ExperimentConfig::from_json(
+            &Json::parse(
+                r#"{"dataset": "waveform", "mode": "easi", "output_dim": 16,
+                    "mu": 0.001, "backend": "pjrt", "epochs": 2}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.mode, PipelineMode::Easi);
+        assert_eq!(c.backend, Backend::Pjrt);
+        assert_eq!(c.output_dim, 16);
+        assert!((c.mu - 0.001).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejects_bad_dims() {
+        let r = ExperimentConfig::from_json(
+            &Json::parse(r#"{"output_dim": 64, "input_dim": 32}"#).unwrap(),
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn rejects_bad_mode() {
+        assert!(PipelineMode::parse("bogus").is_err());
+        assert_eq!(PipelineMode::parse("proposed").unwrap(), PipelineMode::RpEasi);
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let mut c = ExperimentConfig::default();
+        let args = Args::parse(
+            ["--mu", "0.005", "--mode", "easi", "--epochs", "9"]
+                .iter()
+                .map(|s| s.to_string()),
+            &[],
+        )
+        .unwrap();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.mode, PipelineMode::Easi);
+        assert_eq!(c.epochs, 9);
+        assert!((c.mu - 0.005).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mode_easi_mapping() {
+        assert_eq!(
+            PipelineMode::RpEasi.easi_mode(),
+            Some(crate::easi::EasiMode::RotationOnly)
+        );
+        assert_eq!(PipelineMode::RpOnly.easi_mode(), None);
+        assert!(PipelineMode::RpEasi.uses_rp());
+        assert!(!PipelineMode::Easi.uses_rp());
+    }
+}

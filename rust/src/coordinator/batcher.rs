@@ -1,0 +1,218 @@
+//! Streaming source → bounded batcher with backpressure.
+//!
+//! The FPGA consumes one sample per clock from a streaming front end;
+//! the software coordinator's analogue is a producer thread pushing
+//! fixed-size minibatches through a bounded channel
+//! (`std::sync::mpsc::sync_channel`). A full queue blocks the producer —
+//! that is the backpressure contract, and the number of waits is
+//! surfaced in the metrics.
+
+use crate::linalg::Mat;
+use anyhow::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// A minibatch travelling through the pipeline. The final partial batch
+/// of a stream is sent as `Tail` (its rows count < the nominal batch) —
+/// the trainer routes it through the b=1 executable rather than
+/// zero-padding, because padding corrupts the whitening term.
+#[derive(Debug, Clone)]
+pub enum Batch {
+    Full(Mat),
+    Tail(Mat),
+}
+
+impl Batch {
+    pub fn rows(&self) -> &Mat {
+        match self {
+            Batch::Full(m) | Batch::Tail(m) => m,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows().rows_count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Anything that yields samples in order. Implemented for dataset
+/// epochs and for synthetic infinite streams.
+pub trait SampleSource: Send {
+    /// Feature dimensionality of every sample.
+    fn dim(&self) -> usize;
+    /// Next sample, or `None` at end of stream.
+    fn next_sample(&mut self) -> Option<Vec<f32>>;
+}
+
+/// Replays the rows of a matrix for a fixed number of epochs.
+pub struct EpochSource {
+    data: Arc<Mat>,
+    epochs: usize,
+    cursor: usize,
+}
+
+impl EpochSource {
+    pub fn new(data: Arc<Mat>, epochs: usize) -> Self {
+        Self {
+            data,
+            epochs,
+            cursor: 0,
+        }
+    }
+}
+
+impl SampleSource for EpochSource {
+    fn dim(&self) -> usize {
+        self.data.cols_count()
+    }
+
+    fn next_sample(&mut self) -> Option<Vec<f32>> {
+        let total = self.data.rows_count() * self.epochs;
+        if self.cursor >= total {
+            return None;
+        }
+        let row = self.cursor % self.data.rows_count();
+        self.cursor += 1;
+        Some(self.data.row(row).to_vec())
+    }
+}
+
+/// Handle to the producer thread.
+pub struct Producer {
+    pub handle: JoinHandle<Result<()>>,
+    pub backpressure_waits: Arc<AtomicU64>,
+}
+
+/// Spawn a producer thread that chops `source` into `batch`-sized
+/// minibatches and pushes them through a bounded channel of depth
+/// `queue_depth`. Returns the consumer end plus the producer handle.
+pub fn spawn_producer(
+    mut source: Box<dyn SampleSource>,
+    batch: usize,
+    queue_depth: usize,
+) -> (Receiver<Batch>, Producer) {
+    assert!(batch >= 1 && queue_depth >= 1);
+    let (tx, rx): (SyncSender<Batch>, Receiver<Batch>) =
+        std::sync::mpsc::sync_channel(queue_depth);
+    let waits = Arc::new(AtomicU64::new(0));
+    let waits_clone = waits.clone();
+    let handle = std::thread::Builder::new()
+        .name("dimred-producer".into())
+        .spawn(move || -> Result<()> {
+            let dim = source.dim();
+            let mut buf: Vec<f32> = Vec::with_capacity(batch * dim);
+            let mut rows = 0usize;
+            let send = |tx: &SyncSender<Batch>, b: Batch, waits: &AtomicU64| {
+                // try_send first so we can count backpressure events,
+                // then fall back to the blocking send.
+                match tx.try_send(b) {
+                    Ok(()) => Ok(()),
+                    Err(TrySendError::Full(b)) => {
+                        waits.fetch_add(1, Ordering::Relaxed);
+                        tx.send(b).map_err(|_| anyhow::anyhow!("consumer hung up"))
+                    }
+                    Err(TrySendError::Disconnected(_)) => {
+                        Err(anyhow::anyhow!("consumer hung up"))
+                    }
+                }
+            };
+            while let Some(sample) = source.next_sample() {
+                debug_assert_eq!(sample.len(), dim);
+                buf.extend_from_slice(&sample);
+                rows += 1;
+                if rows == batch {
+                    let m = Mat::from_vec(rows, dim, std::mem::take(&mut buf));
+                    send(&tx, Batch::Full(m), &waits_clone)?;
+                    rows = 0;
+                    buf = Vec::with_capacity(batch * dim);
+                }
+            }
+            if rows > 0 {
+                let m = Mat::from_vec(rows, dim, buf);
+                send(&tx, Batch::Tail(m), &waits_clone)?;
+            }
+            Ok(())
+        })
+        .expect("spawning producer thread");
+    (
+        rx,
+        Producer {
+            handle,
+            backpressure_waits: waits,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mat(rows: usize, dim: usize) -> Arc<Mat> {
+        Arc::new(Mat::from_fn(rows, dim, |i, j| (i * dim + j) as f32))
+    }
+
+    #[test]
+    fn epoch_source_replays() {
+        let mut s = EpochSource::new(mat(3, 2), 2);
+        let mut n = 0;
+        while s.next_sample().is_some() {
+            n += 1;
+        }
+        assert_eq!(n, 6);
+    }
+
+    #[test]
+    fn batches_cover_stream_in_order() {
+        let src = EpochSource::new(mat(10, 3), 1);
+        let (rx, prod) = spawn_producer(Box::new(src), 4, 2);
+        let batches: Vec<Batch> = rx.iter().collect();
+        prod.handle.join().unwrap().unwrap();
+        assert_eq!(batches.len(), 3); // 4 + 4 + 2
+        assert!(matches!(batches[0], Batch::Full(_)));
+        assert!(matches!(batches[2], Batch::Tail(_)));
+        assert_eq!(batches[2].len(), 2);
+        // Order preserved: first element of second batch is row 4.
+        assert_eq!(batches[1].rows().get(0, 0), 12.0);
+    }
+
+    #[test]
+    fn exact_multiple_has_no_tail() {
+        let src = EpochSource::new(mat(8, 2), 1);
+        let (rx, prod) = spawn_producer(Box::new(src), 4, 2);
+        let batches: Vec<Batch> = rx.iter().collect();
+        prod.handle.join().unwrap().unwrap();
+        assert_eq!(batches.len(), 2);
+        assert!(batches.iter().all(|b| matches!(b, Batch::Full(_))));
+    }
+
+    #[test]
+    fn backpressure_counted_when_consumer_slow() {
+        let src = EpochSource::new(mat(64, 2), 4);
+        let (rx, prod) = spawn_producer(Box::new(src), 8, 1);
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let mut n = 0;
+        for b in rx.iter() {
+            n += b.len();
+        }
+        prod.handle.join().unwrap().unwrap();
+        assert_eq!(n, 256);
+        assert!(
+            prod.backpressure_waits.load(Ordering::Relaxed) > 0,
+            "expected backpressure with a stalled consumer"
+        );
+    }
+
+    #[test]
+    fn dropped_consumer_stops_producer() {
+        let src = EpochSource::new(mat(1000, 2), 100);
+        let (rx, prod) = spawn_producer(Box::new(src), 8, 1);
+        drop(rx);
+        let result = prod.handle.join().unwrap();
+        assert!(result.is_err(), "producer should report the hangup");
+    }
+}

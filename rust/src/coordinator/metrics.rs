@@ -1,0 +1,169 @@
+//! Run-time metrics for the training service: counters, throughput and
+//! latency percentiles over a sliding reservoir.
+
+use std::time::{Duration, Instant};
+
+/// Latency reservoir with percentile queries (sorted copy on demand —
+/// fine at coordinator rates).
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    samples: Vec<Duration>,
+    capacity: usize,
+    /// Total observations ever (reservoir keeps the most recent
+    /// `capacity`).
+    pub count: u64,
+}
+
+impl LatencyHistogram {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            samples: Vec::with_capacity(capacity),
+            capacity: capacity.max(1),
+            count: 0,
+        }
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        if self.samples.len() == self.capacity {
+            // Ring behaviour: overwrite the oldest slot.
+            let idx = (self.count % self.capacity as u64) as usize;
+            self.samples[idx] = d;
+        } else {
+            self.samples.push(d);
+        }
+        self.count += 1;
+    }
+
+    pub fn percentile(&self, p: f64) -> Option<Duration> {
+        if self.samples.is_empty() {
+            return None;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_unstable();
+        let idx = ((sorted.len() as f64 - 1.0) * p / 100.0).round() as usize;
+        Some(sorted[idx])
+    }
+
+    pub fn mean(&self) -> Option<Duration> {
+        if self.samples.is_empty() {
+            return None;
+        }
+        Some(self.samples.iter().sum::<Duration>() / self.samples.len() as u32)
+    }
+}
+
+/// Aggregated metrics for one training run.
+#[derive(Debug)]
+pub struct Metrics {
+    started: Instant,
+    pub samples_in: u64,
+    pub batches: u64,
+    /// Batches the producer had to wait to enqueue (backpressure events).
+    pub backpressure_waits: u64,
+    /// Stream-tail samples processed through the b=1 executable.
+    pub tail_samples: u64,
+    pub step_latency: LatencyHistogram,
+    /// Convergence signal snapshots: (samples_seen, update_magnitude).
+    pub convergence_trace: Vec<(u64, f64)>,
+    /// Reconfiguration events: (samples_seen, new mode label).
+    pub reconfigurations: Vec<(u64, String)>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self {
+            started: Instant::now(),
+            samples_in: 0,
+            batches: 0,
+            backpressure_waits: 0,
+            tail_samples: 0,
+            step_latency: LatencyHistogram::new(4096),
+            convergence_trace: Vec::new(),
+            reconfigurations: Vec::new(),
+        }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.started.elapsed()
+    }
+
+    /// Steady-state training throughput, samples/s.
+    pub fn throughput(&self) -> f64 {
+        self.samples_in as f64 / self.elapsed().as_secs_f64().max(1e-9)
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        let p50 = self
+            .step_latency
+            .percentile(50.0)
+            .map(crate::util::bench::fmt_duration)
+            .unwrap_or_else(|| "-".into());
+        let p99 = self
+            .step_latency
+            .percentile(99.0)
+            .map(crate::util::bench::fmt_duration)
+            .unwrap_or_else(|| "-".into());
+        format!(
+            "samples={} batches={} throughput={:.0}/s step_p50={} step_p99={} backpressure={} reconfigs={}",
+            self.samples_in,
+            self.batches,
+            self.throughput(),
+            p50,
+            p99,
+            self.backpressure_waits,
+            self.reconfigurations.len()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut h = LatencyHistogram::new(100);
+        for i in 1..=100u64 {
+            h.record(Duration::from_micros(i));
+        }
+        let p50 = h.percentile(50.0).unwrap();
+        let p99 = h.percentile(99.0).unwrap();
+        assert!(p50 < p99);
+        assert_eq!(h.count, 100);
+    }
+
+    #[test]
+    fn reservoir_wraps() {
+        let mut h = LatencyHistogram::new(4);
+        for i in 0..10u64 {
+            h.record(Duration::from_micros(i));
+        }
+        assert_eq!(h.count, 10);
+        // Only the last 4 samples are retained; min is >= 6µs.
+        assert!(h.percentile(0.0).unwrap() >= Duration::from_micros(6));
+    }
+
+    #[test]
+    fn empty_histogram_is_none() {
+        let h = LatencyHistogram::new(8);
+        assert!(h.percentile(50.0).is_none());
+        assert!(h.mean().is_none());
+    }
+
+    #[test]
+    fn metrics_summary_smoke() {
+        let mut m = Metrics::new();
+        m.samples_in = 512;
+        m.batches = 2;
+        m.step_latency.record(Duration::from_millis(1));
+        let s = m.summary();
+        assert!(s.contains("samples=512"), "{s}");
+    }
+}

@@ -1,0 +1,311 @@
+//! The L3 coordinator: a streaming training service.
+//!
+//! Topology (one training run):
+//!
+//! ```text
+//!   dataset/stream ──► producer thread ──► bounded queue ──► trainer
+//!        (source)        (batcher.rs)      (backpressure)   (PJRT or
+//!                                                            native)
+//!                                               │
+//!                          convergence monitor ◄┘──► metrics
+//! ```
+//!
+//! The service also owns the *reconfiguration controller*: a command
+//! queue that can swap the datapath mode mid-stream (the paper's
+//! real-time reconfigurability), and the downstream-classifier stage
+//! used by the accuracy experiments (paper §V.B protocol: fit DR
+//! unsupervised → transform → train MLP → evaluate).
+
+pub mod batcher;
+pub mod metrics;
+pub mod trainer;
+
+pub use batcher::{Batch, EpochSource, SampleSource};
+pub use metrics::Metrics;
+pub use trainer::{ArtifactNames, Trainer};
+
+use crate::config::ExperimentConfig;
+use crate::datasets::Dataset;
+use crate::linalg::Mat;
+use crate::mlp::{Mlp, MlpConfig};
+use crate::runtime::Runtime;
+use anyhow::{Context, Result};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// A scheduled reconfiguration: after `after_samples` samples, switch
+/// the datapath to `mode`.
+#[derive(Debug, Clone)]
+pub struct ReconfigCommand {
+    pub after_samples: u64,
+    pub mode: crate::config::PipelineMode,
+}
+
+/// Early-stop rule: stop when the convergence EMA drops below
+/// `threshold` (0 disables).
+#[derive(Debug, Clone, Copy)]
+pub struct StopRule {
+    pub threshold: f64,
+    /// Check only after this many samples.
+    pub min_samples: u64,
+}
+
+impl Default for StopRule {
+    fn default() -> Self {
+        Self {
+            threshold: 0.0,
+            min_samples: 0,
+        }
+    }
+}
+
+/// Outcome of a training run.
+pub struct TrainReport {
+    pub metrics: Metrics,
+    /// Final separation matrix.
+    pub separation: Mat,
+    /// Dense RP matrix, if the mode used one.
+    pub rp: Option<Mat>,
+    /// Test-set classification accuracy, if a classifier was trained.
+    pub test_accuracy: Option<f64>,
+    /// Final convergence EMA.
+    pub final_update_magnitude: f64,
+}
+
+/// The training service.
+pub struct TrainingService<'rt> {
+    cfg: ExperimentConfig,
+    runtime: Option<&'rt Runtime>,
+    reconfigs: Vec<ReconfigCommand>,
+    stop: StopRule,
+}
+
+impl<'rt> TrainingService<'rt> {
+    pub fn new(cfg: ExperimentConfig, runtime: Option<&'rt Runtime>) -> Self {
+        Self {
+            cfg,
+            runtime,
+            reconfigs: Vec::new(),
+            stop: StopRule::default(),
+        }
+    }
+
+    /// Schedule a mid-stream datapath reconfiguration.
+    pub fn schedule_reconfig(&mut self, cmd: ReconfigCommand) -> &mut Self {
+        self.reconfigs.push(cmd);
+        self.reconfigs.sort_by_key(|c| c.after_samples);
+        self
+    }
+
+    /// Set an early-stopping rule on the convergence EMA.
+    pub fn stop_when(&mut self, rule: StopRule) -> &mut Self {
+        self.stop = rule;
+        self
+    }
+
+    /// Run the full paper protocol on a dataset: stream-train the DR
+    /// stage, then (optionally) train the classifier on transformed
+    /// features and evaluate on the transformed test set.
+    pub fn run(&mut self, data: &Dataset) -> Result<TrainReport> {
+        anyhow::ensure!(
+            data.input_dim() == self.cfg.input_dim,
+            "dataset dim {} != config input_dim {}",
+            data.input_dim(),
+            self.cfg.input_dim
+        );
+        let mut trainer = Trainer::from_config(&self.cfg, self.runtime)?;
+        let mut m = Metrics::new();
+
+        // Producer: epochs over the training matrix.
+        let shared = Arc::new(data.train_x.clone());
+        let source = EpochSource::new(shared, self.cfg.epochs);
+        let (rx, producer) =
+            batcher::spawn_producer(Box::new(source), self.cfg.batch, self.cfg.queue_depth);
+
+        let mut pending = self.reconfigs.clone();
+        'consume: for batch in rx.iter() {
+            // Reconfiguration controller.
+            while let Some(cmd) = pending.first() {
+                if m.samples_in >= cmd.after_samples {
+                    trainer
+                        .reconfigure(cmd.mode)
+                        .context("applying scheduled reconfiguration")?;
+                    m.reconfigurations
+                        .push((m.samples_in, cmd.mode.label().to_string()));
+                    pending.remove(0);
+                } else {
+                    break;
+                }
+            }
+
+            let t0 = Instant::now();
+            trainer.step(&batch)?;
+            m.step_latency.record(t0.elapsed());
+            m.samples_in += batch.len() as u64;
+            m.batches += 1;
+            if matches!(batch, Batch::Tail(_)) {
+                m.tail_samples += batch.len() as u64;
+            }
+            if m.batches % 8 == 0 {
+                m.convergence_trace
+                    .push((m.samples_in, trainer.update_magnitude()));
+            }
+            if self.stop.threshold > 0.0
+                && m.samples_in >= self.stop.min_samples
+                && trainer.update_magnitude() < self.stop.threshold
+            {
+                // Drain: drop the receiver so the producer unblocks.
+                break 'consume;
+            }
+        }
+        drop(rx);
+        // The producer errors with "consumer hung up" only on early
+        // stop — that is expected; real panics still propagate.
+        match producer.handle.join() {
+            Ok(_) => {}
+            Err(p) => std::panic::resume_unwind(p),
+        }
+        m.backpressure_waits = producer.backpressure_waits.load(Ordering::Relaxed);
+
+        // Classifier stage (paper §V.B): train on transformed features.
+        let test_accuracy = if self.cfg.train_classifier {
+            // Standardise the reduced features on training statistics
+            // (the paper normalises classifier inputs; also insulates
+            // the MLP from the DR stage's output scale).
+            let mut reduced = Dataset {
+                name: format!("{}-reduced", data.name),
+                train_x: trainer.transform_rows(&data.train_x),
+                train_y: data.train_y.clone(),
+                test_x: trainer.transform_rows(&data.test_x),
+                test_y: data.test_y.clone(),
+                num_classes: data.num_classes,
+            };
+            reduced.standardize();
+            let (train_t, test_t) = (reduced.train_x, reduced.test_x);
+            let mut mlp = Mlp::new(MlpConfig {
+                epochs: self.cfg.mlp_epochs,
+                seed: self.cfg.seed,
+                ..MlpConfig::paper(self.cfg.output_dim, data.num_classes)
+            });
+            mlp.train(&train_t, &data.train_y);
+            Some(mlp.accuracy(&test_t, &data.test_y))
+        } else {
+            None
+        };
+
+        Ok(TrainReport {
+            final_update_magnitude: trainer.update_magnitude(),
+            separation: trainer.separation_matrix(),
+            rp: trainer.rp_matrix().cloned(),
+            test_accuracy,
+            metrics: m,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PipelineMode;
+    use crate::datasets::waveform::WaveformConfig;
+
+    fn small_waveform() -> Dataset {
+        WaveformConfig {
+            samples: 600,
+            train: 500,
+            ..WaveformConfig::paper()
+        }
+        .generate()
+    }
+
+    fn base_cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            epochs: 2,
+            batch: 64,
+            mlp_epochs: 5,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn native_end_to_end_runs() {
+        let data = small_waveform();
+        let mut svc = TrainingService::new(base_cfg(), None);
+        let report = svc.run(&data).unwrap();
+        assert_eq!(report.metrics.samples_in, 1000); // 500 × 2 epochs
+        assert_eq!(report.separation.shape(), (8, 16));
+        assert!(report.rp.is_some());
+        let acc = report.test_accuracy.unwrap();
+        assert!(acc > 0.4, "accuracy {acc} should beat chance (1/3)");
+    }
+
+    #[test]
+    fn tail_batches_processed() {
+        let data = small_waveform(); // 500 training rows
+        let mut cfg = base_cfg();
+        cfg.batch = 64; // 500*2 = 1000 → 15 full + tail of 40
+        let mut svc = TrainingService::new(cfg, None);
+        let report = svc.run(&data).unwrap();
+        assert_eq!(report.metrics.samples_in, 1000);
+        assert!(report.metrics.tail_samples > 0);
+    }
+
+    #[test]
+    fn reconfiguration_fires_mid_stream() {
+        let data = small_waveform();
+        let mut cfg = base_cfg();
+        cfg.mode = PipelineMode::Easi;
+        cfg.train_classifier = false;
+        let mut svc = TrainingService::new(cfg, None);
+        svc.schedule_reconfig(ReconfigCommand {
+            after_samples: 300,
+            mode: PipelineMode::PcaWhiten,
+        });
+        let report = svc.run(&data).unwrap();
+        assert_eq!(report.metrics.reconfigurations.len(), 1);
+        assert_eq!(report.metrics.reconfigurations[0].1, "pca-whiten");
+        assert!(report.metrics.reconfigurations[0].0 >= 300);
+    }
+
+    #[test]
+    fn early_stop_cuts_stream_short() {
+        let data = small_waveform();
+        let mut cfg = base_cfg();
+        cfg.epochs = 50; // would be 25k samples without the stop rule
+        cfg.train_classifier = false;
+        let mut svc = TrainingService::new(cfg, None);
+        svc.stop_when(StopRule {
+            threshold: 0.5, // generous: fires quickly
+            min_samples: 200,
+        });
+        let report = svc.run(&data).unwrap();
+        assert!(
+            report.metrics.samples_in < 25_000,
+            "stopped early at {}",
+            report.metrics.samples_in
+        );
+    }
+
+    #[test]
+    fn convergence_trace_recorded() {
+        let data = small_waveform();
+        let mut cfg = base_cfg();
+        cfg.train_classifier = false;
+        let report = TrainingService::new(cfg, None).run(&data).unwrap();
+        assert!(!report.metrics.convergence_trace.is_empty());
+        // Signal decreases over the run.
+        let first = report.metrics.convergence_trace.first().unwrap().1;
+        let last = report.metrics.convergence_trace.last().unwrap().1;
+        assert!(last <= first);
+    }
+
+    #[test]
+    fn dim_mismatch_rejected() {
+        let data = small_waveform();
+        let mut cfg = base_cfg();
+        cfg.input_dim = 40;
+        let mut svc = TrainingService::new(cfg, None);
+        assert!(svc.run(&data).is_err());
+    }
+}

@@ -1,0 +1,491 @@
+//! Training backends: the same streaming-trainer interface served
+//! either by the native Rust implementation (baseline/oracle) or by the
+//! AOT-compiled XLA executables through PJRT (the production path).
+//!
+//! Both backends drive the composed DR unit of
+//! [`crate::pipeline::unit`]: optional ternary RP front end → GHA
+//! whitening (+λ̂ scaling) → EASI rotation, with the rotation stage
+//! muxed per the paper's §IV. The PJRT backend realises the paper's
+//! reconfigurability story: each datapath mode is a separate compiled
+//! executable (bitstream analogue) and [`Trainer::reconfigure`] swaps
+//! executables at run time while carrying all state across — the mux of
+//! §IV, without re-synthesis.
+//!
+//! The rotation warm-up is itself expressed through the mux: the first
+//! `rot_warmup` samples run the whiten-only executable, then the
+//! trainer hot-swaps to the full one.
+
+use crate::config::{Backend, ExperimentConfig, PipelineMode};
+use crate::linalg::Mat;
+use crate::pipeline::unit::{DrUnit, DrUnitConfig, RETRACT_INTERVAL};
+use crate::rp::RandomProjection;
+use crate::runtime::{Runtime, Tensor};
+use anyhow::{bail, ensure, Context, Result};
+
+use super::batcher::Batch;
+
+/// Artifact names for one (mode, dims, batch) configuration.
+#[derive(Debug, Clone)]
+pub struct ArtifactNames {
+    /// Full-batch training step (whiten + rotate).
+    pub step: String,
+    /// Whiten-only variant (rotation muxed out) — used for PCA mode and
+    /// for the rotation warm-up phase.
+    pub step_whiten: String,
+    /// batch=1 variants for stream tails.
+    pub step_tail: String,
+    pub step_whiten_tail: String,
+}
+
+impl ArtifactNames {
+    /// Derive the artifact naming scheme used by `python/compile/aot.py`.
+    pub fn derive(uses_rp: bool, m: usize, p: usize, n: usize, batch: usize) -> Self {
+        if uses_rp {
+            Self {
+                step: format!("rp_dr_full_m{m}_p{p}_n{n}_b{batch}"),
+                step_whiten: format!("rp_dr_whiten_m{m}_p{p}_n{n}_b{batch}"),
+                step_tail: format!("rp_dr_full_m{m}_p{p}_n{n}_b1"),
+                step_whiten_tail: format!("rp_dr_whiten_m{m}_p{p}_n{n}_b1"),
+            }
+        } else {
+            Self {
+                step: format!("dr_full_m{m}_n{n}_b{batch}"),
+                step_whiten: format!("dr_whiten_m{m}_n{n}_b{batch}"),
+                step_tail: format!("dr_full_m{m}_n{n}_b1"),
+                step_whiten_tail: format!("dr_whiten_m{m}_n{n}_b1"),
+            }
+        }
+    }
+
+    fn all(&self) -> [&str; 4] {
+        [
+            &self.step,
+            &self.step_whiten,
+            &self.step_tail,
+            &self.step_whiten_tail,
+        ]
+    }
+}
+
+/// The unified streaming trainer.
+pub enum Trainer<'rt> {
+    Native(NativeTrainer),
+    Pjrt(PjrtTrainer<'rt>),
+}
+
+impl<'rt> Trainer<'rt> {
+    /// Build from an experiment config. For the PJRT backend, `runtime`
+    /// must outlive the trainer and contain the required artifacts.
+    pub fn from_config(cfg: &ExperimentConfig, runtime: Option<&'rt Runtime>) -> Result<Self> {
+        match cfg.backend {
+            Backend::Native => Ok(Trainer::Native(NativeTrainer::new(cfg)?)),
+            Backend::Pjrt => {
+                let rt = runtime.context("PJRT backend needs a loaded Runtime")?;
+                Ok(Trainer::Pjrt(PjrtTrainer::new(cfg, rt)?))
+            }
+        }
+    }
+
+    /// Consume one minibatch (Full → fused batch executable; Tail →
+    /// per-sample executable).
+    pub fn step(&mut self, batch: &Batch) -> Result<()> {
+        match self {
+            Trainer::Native(t) => t.step(batch),
+            Trainer::Pjrt(t) => t.step(batch),
+        }
+    }
+
+    /// The fitted DR stage as one dense matrix (n × stage_input_dim):
+    /// `U·diag(λ̂^{-1/2})·W` (U omitted in whiten-only modes).
+    pub fn separation_matrix(&self) -> Mat {
+        match self {
+            Trainer::Native(t) => t.unit.effective_matrix(),
+            Trainer::Pjrt(t) => t.effective_matrix(),
+        }
+    }
+
+    /// The RP front-end matrix (dense, scaled), if the mode uses one.
+    pub fn rp_matrix(&self) -> Option<&Mat> {
+        match self {
+            Trainer::Native(t) => t.rp_dense.as_ref(),
+            Trainer::Pjrt(t) => t.r.as_ref(),
+        }
+    }
+
+    /// Convergence signal (whitener orthonormality ∨ rotation EMA).
+    pub fn update_magnitude(&self) -> f64 {
+        match self {
+            Trainer::Native(t) => t.unit.update_magnitude(),
+            Trainer::Pjrt(t) => t.update_ema,
+        }
+    }
+
+    /// Transform a sample matrix through the fitted pipeline (RP then
+    /// the DR unit). Native matvec; artifact-based inference is
+    /// exercised by examples/benches.
+    pub fn transform_rows(&self, x: &Mat) -> Mat {
+        let eff = self.separation_matrix();
+        let staged = match self.rp_matrix() {
+            Some(r) => r.apply_rows(x),
+            None => x.clone(),
+        };
+        eff.apply_rows(&staged)
+    }
+
+    /// Swap the datapath mode at run time (the paper's reconfigurable
+    /// mux): EASI ↔ PCA-whitening toggles the rotation stage; changing
+    /// the RP front end is rejected (state shapes would change).
+    pub fn reconfigure(&mut self, mode: PipelineMode) -> Result<()> {
+        match self {
+            Trainer::Native(t) => t.reconfigure(mode),
+            Trainer::Pjrt(t) => t.reconfigure(mode),
+        }
+    }
+
+    pub fn mode(&self) -> PipelineMode {
+        match self {
+            Trainer::Native(t) => t.mode,
+            Trainer::Pjrt(t) => t.mode,
+        }
+    }
+
+    pub fn backend_label(&self) -> &'static str {
+        match self {
+            Trainer::Native(_) => "native",
+            Trainer::Pjrt(_) => "pjrt",
+        }
+    }
+}
+
+fn rotation_active(mode: PipelineMode) -> Result<bool> {
+    match mode {
+        PipelineMode::Easi | PipelineMode::RpEasi => Ok(true),
+        PipelineMode::PcaWhiten => Ok(false),
+        PipelineMode::RpOnly => bail!("RP-only mode has no trained stage"),
+    }
+}
+
+fn build_rp(cfg: &ExperimentConfig) -> Option<RandomProjection> {
+    cfg.mode.uses_rp().then(|| {
+        RandomProjection::new(
+            cfg.input_dim,
+            cfg.intermediate_dim,
+            cfg.rp_distribution,
+            cfg.seed,
+        )
+        // The adaptive stage assumes unit-variance inputs.
+        .unit_variance()
+    })
+}
+
+// ------------------------------------------------------------- native
+
+/// Pure-Rust backend.
+pub struct NativeTrainer {
+    mode: PipelineMode,
+    unit: DrUnit,
+    rp: Option<RandomProjection>,
+    rp_dense: Option<Mat>,
+}
+
+impl NativeTrainer {
+    pub fn new(cfg: &ExperimentConfig) -> Result<Self> {
+        let rotate = rotation_active(cfg.mode)?;
+        let stage_in = if cfg.mode.uses_rp() {
+            cfg.intermediate_dim
+        } else {
+            cfg.input_dim
+        };
+        let unit = DrUnit::new(DrUnitConfig {
+            input_dim: stage_in,
+            output_dim: cfg.output_dim,
+            mu_w: cfg.mu_w,
+            mu_rot: cfg.mu,
+            rotate,
+            rot_warmup: cfg.rot_warmup as u64,
+            seed: cfg.seed,
+        });
+        let rp = build_rp(cfg);
+        let rp_dense = rp.as_ref().map(RandomProjection::to_dense);
+        Ok(Self {
+            mode: cfg.mode,
+            unit,
+            rp,
+            rp_dense,
+        })
+    }
+
+    fn step(&mut self, batch: &Batch) -> Result<()> {
+        let rows = batch.rows();
+        match &self.rp {
+            Some(rp) => {
+                let projected = rp.apply_rows(rows);
+                self.unit.step_rows(&projected);
+            }
+            None => self.unit.step_rows(rows),
+        }
+        Ok(())
+    }
+
+    fn reconfigure(&mut self, mode: PipelineMode) -> Result<()> {
+        let rotate = rotation_active(mode)?;
+        ensure!(
+            mode.uses_rp() == self.mode.uses_rp(),
+            "reconfigure cannot change the RP front end (state shapes would change)"
+        );
+        self.unit.set_rotation(rotate);
+        self.mode = mode;
+        Ok(())
+    }
+}
+
+// -------------------------------------------------------------- PJRT
+
+/// PJRT backend: state lives in Rust, steps execute compiled artifacts.
+pub struct PjrtTrainer<'rt> {
+    runtime: &'rt Runtime,
+    mode: PipelineMode,
+    names: ArtifactNames,
+    batch: usize,
+    /// (μ_w, var β, μ_rot) fed as a 3-vector input.
+    mus: [f32; 3],
+    rot_warmup: u64,
+    samples_seen: u64,
+    /// GHA subspace W (n × stage_in).
+    w: Mat,
+    /// λ̂ variance estimates (n).
+    var: Vec<f32>,
+    /// Rotation U (n × n).
+    u: Mat,
+    /// Dense scaled RP matrix (p × m), if the mode uses one.
+    r: Option<Mat>,
+    update_ema: f64,
+    last_retract: u64,
+}
+
+impl<'rt> PjrtTrainer<'rt> {
+    pub fn new(cfg: &ExperimentConfig, runtime: &'rt Runtime) -> Result<Self> {
+        rotation_active(cfg.mode)?; // validate the mode
+        let names = ArtifactNames::derive(
+            cfg.mode.uses_rp(),
+            cfg.input_dim,
+            cfg.intermediate_dim,
+            cfg.output_dim,
+            cfg.batch,
+        );
+        for n in names.all() {
+            runtime.manifest().get(n)?;
+        }
+        runtime.warm(&names.all())?;
+
+        let stage_in = if cfg.mode.uses_rp() {
+            cfg.intermediate_dim
+        } else {
+            cfg.input_dim
+        };
+        let n = cfg.output_dim;
+        Ok(Self {
+            runtime,
+            mode: cfg.mode,
+            names,
+            batch: cfg.batch,
+            mus: [cfg.mu_w, 5e-3, cfg.mu],
+            rot_warmup: cfg.rot_warmup as u64,
+            samples_seen: 0,
+            w: crate::easi::random_orthonormal(n, stage_in, cfg.seed),
+            var: vec![1.0; n],
+            u: Mat::eye(n, n),
+            r: build_rp(cfg).map(|p| p.to_dense()),
+            update_ema: 1.0,
+            last_retract: 0,
+        })
+    }
+
+    /// Whether the rotation stage should be updating right now (mode mux
+    /// + warm-up schedule).
+    fn rotation_live(&self) -> bool {
+        matches!(self.mode, PipelineMode::Easi | PipelineMode::RpEasi)
+            && self.samples_seen >= self.rot_warmup
+    }
+
+    fn artifact_for(&self, tail: bool) -> &str {
+        match (self.rotation_live(), tail) {
+            (true, false) => &self.names.step,
+            (true, true) => &self.names.step_tail,
+            (false, false) => &self.names.step_whiten,
+            (false, true) => &self.names.step_whiten_tail,
+        }
+    }
+
+    fn exec_step(&mut self, artifact: &str, rows: &Mat) -> Result<()> {
+        let mut inputs = vec![
+            Tensor::from_mat(&self.w),
+            Tensor::new(vec![self.var.len()], self.var.clone()),
+            Tensor::from_mat(&self.u),
+        ];
+        if let Some(r) = &self.r {
+            inputs.push(Tensor::from_mat(r));
+        }
+        inputs.push(Tensor::from_mat(rows));
+        inputs.push(Tensor::new(vec![3], self.mus.to_vec()));
+        let outs = self.runtime.execute(artifact, &inputs)?;
+        ensure!(outs.len() == 3, "{artifact}: expected 3 state outputs");
+        let mut it = outs.into_iter();
+        let new_w = it.next().unwrap().into_mat()?;
+        let new_var = it.next().unwrap().data;
+        let new_u = it.next().unwrap().into_mat()?;
+
+        // Convergence signal from consecutive W's.
+        let mut delta2 = 0.0f64;
+        let mut norm2 = 0.0f64;
+        for (a, b) in new_w.as_slice().iter().zip(self.w.as_slice()) {
+            delta2 += ((a - b) as f64).powi(2);
+            norm2 += (*a as f64).powi(2);
+        }
+        let rel = delta2.sqrt() / (norm2.sqrt() + 1e-30);
+        self.update_ema = 0.9 * self.update_ema + 0.1 * rel;
+
+        self.w = new_w;
+        self.var = new_var;
+        self.u = new_u;
+        self.samples_seen += rows.rows_count() as u64;
+
+        // Host-side retraction of U at the same cadence the native unit
+        // uses (between executable calls — cheap: O(n³)).
+        if self.rotation_live() && self.samples_seen - self.last_retract >= RETRACT_INTERVAL {
+            orthonormalize_rows(&mut self.u);
+            self.last_retract = self.samples_seen;
+        }
+        Ok(())
+    }
+
+    fn step(&mut self, batch: &Batch) -> Result<()> {
+        match batch {
+            Batch::Full(m) => {
+                ensure!(
+                    m.rows_count() == self.batch,
+                    "full batch size {} != configured {}",
+                    m.rows_count(),
+                    self.batch
+                );
+                let name = self.artifact_for(false).to_string();
+                self.exec_step(&name, m)
+            }
+            Batch::Tail(m) => {
+                for i in 0..m.rows_count() {
+                    let row = Mat::from_vec(1, m.cols_count(), m.row(i).to_vec());
+                    let name = self.artifact_for(true).to_string();
+                    self.exec_step(&name, &row)?;
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// `U·diag(λ̂^{-1/2})·W`, with U skipped in whiten-only mode.
+    fn effective_matrix(&self) -> Mat {
+        let (n, m) = self.w.shape();
+        let wm = Mat::from_fn(n, m, |i, j| {
+            self.w.get(i, j) / self.var[i].max(1e-9).sqrt()
+        });
+        if matches!(self.mode, PipelineMode::Easi | PipelineMode::RpEasi) {
+            self.u.matmul(&wm)
+        } else {
+            wm
+        }
+    }
+
+    fn reconfigure(&mut self, mode: PipelineMode) -> Result<()> {
+        rotation_active(mode)?;
+        ensure!(
+            mode.uses_rp() == self.mode.uses_rp(),
+            "reconfigure cannot change the RP front end (state shapes would change)"
+        );
+        // Same state tensors, different executable — nothing else moves.
+        self.mode = mode;
+        Ok(())
+    }
+}
+
+/// Modified Gram–Schmidt on the rows of a square matrix.
+fn orthonormalize_rows(u: &mut Mat) {
+    let (n, m) = u.shape();
+    for i in 0..n {
+        for j in 0..i {
+            let proj = crate::linalg::dot(u.row(i), u.row(j));
+            for k in 0..m {
+                let v = u.get(i, k) - proj * u.get(j, k);
+                u.set(i, k, v);
+            }
+        }
+        let norm = crate::linalg::norm2(u.row(i)).max(1e-12);
+        for k in 0..m {
+            let v = u.get(i, k) / norm;
+            u.set(i, k, v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_name_derivation() {
+        let n = ArtifactNames::derive(true, 32, 16, 8, 256);
+        assert_eq!(n.step, "rp_dr_full_m32_p16_n8_b256");
+        assert_eq!(n.step_whiten, "rp_dr_whiten_m32_p16_n8_b256");
+        assert_eq!(n.step_tail, "rp_dr_full_m32_p16_n8_b1");
+        let n = ArtifactNames::derive(false, 32, 0, 16, 256);
+        assert_eq!(n.step, "dr_full_m32_n16_b256");
+        assert_eq!(n.step_whiten_tail, "dr_whiten_m32_n16_b1");
+    }
+
+    #[test]
+    fn native_trainer_trains_and_transforms() {
+        let cfg = ExperimentConfig {
+            mode: PipelineMode::RpEasi,
+            ..Default::default()
+        };
+        let mut t = Trainer::from_config(&cfg, None).unwrap();
+        let data = Mat::from_fn(256, 32, |i, j| ((i * 31 + j * 7) % 17) as f32 / 17.0 - 0.5);
+        t.step(&Batch::Full(data.clone())).unwrap();
+        let y = t.transform_rows(&data);
+        assert_eq!(y.shape(), (256, 8));
+        assert!(t.rp_matrix().is_some());
+    }
+
+    #[test]
+    fn native_reconfigure_mode_swap() {
+        let cfg = ExperimentConfig {
+            mode: PipelineMode::Easi,
+            ..Default::default()
+        };
+        let mut t = Trainer::from_config(&cfg, None).unwrap();
+        t.reconfigure(PipelineMode::PcaWhiten).unwrap();
+        assert_eq!(t.mode(), PipelineMode::PcaWhiten);
+        // Changing the RP front end is rejected.
+        assert!(t.reconfigure(PipelineMode::RpEasi).is_err());
+    }
+
+    #[test]
+    fn pjrt_backend_requires_runtime() {
+        let cfg = ExperimentConfig {
+            backend: Backend::Pjrt,
+            ..Default::default()
+        };
+        assert!(Trainer::from_config(&cfg, None).is_err());
+    }
+
+    #[test]
+    fn orthonormalize_rows_works() {
+        let mut u = Mat::from_vec(2, 2, vec![3.0, 0.0, 1.0, 1.0]);
+        orthonormalize_rows(&mut u);
+        let d00 = crate::linalg::dot(u.row(0), u.row(0));
+        let d01 = crate::linalg::dot(u.row(0), u.row(1));
+        let d11 = crate::linalg::dot(u.row(1), u.row(1));
+        assert!((d00 - 1.0).abs() < 1e-5);
+        assert!(d01.abs() < 1e-5);
+        assert!((d11 - 1.0).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,126 @@
+//! Minimal CSV loader so users can feed *real* MNIST/HAR/Ads exports (or
+//! any numeric dataset) through the same pipelines the synthetic
+//! generators drive. Format: one sample per line, comma-separated
+//! features, label as the **last** column (integer). Lines starting with
+//! `#` and blank lines are skipped.
+
+use super::Dataset;
+use crate::linalg::Mat;
+use crate::Result;
+use anyhow::{ensure, anyhow, Context};
+use std::path::Path;
+
+/// Parse CSV text into `(features, labels)` rows.
+pub fn parse_csv(text: &str) -> Result<(Vec<Vec<f32>>, Vec<usize>)> {
+    let mut rows = Vec::new();
+    let mut labels = Vec::new();
+    let mut width: Option<usize> = None;
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').map(str::trim).collect();
+        ensure!(fields.len() >= 2, "line {}: need >=2 columns", lineno + 1);
+        let label: usize = fields
+            .last()
+            .unwrap()
+            .parse()
+            .map_err(|e| anyhow!("line {}: bad label: {e}", lineno + 1))?;
+        let feats: Vec<f32> = fields[..fields.len() - 1]
+            .iter()
+            .map(|f| {
+                f.parse::<f32>()
+                    .map_err(|e| anyhow!("line {}: bad feature '{f}': {e}", lineno + 1))
+            })
+            .collect::<Result<_>>()?;
+        if let Some(w) = width {
+            ensure!(feats.len() == w, "line {}: ragged row", lineno + 1);
+        } else {
+            width = Some(feats.len());
+        }
+        rows.push(feats);
+        labels.push(label);
+    }
+    ensure!(!rows.is_empty(), "empty CSV");
+    Ok((rows, labels))
+}
+
+/// Load a dataset from a CSV file, splitting the first `train_fraction`
+/// of rows into the training partition (file order is preserved — shuffle
+/// upstream if needed).
+pub fn load_csv(path: &Path, name: &str, train_fraction: f64) -> Result<Dataset> {
+    ensure!(
+        (0.0..1.0).contains(&train_fraction) && train_fraction > 0.0,
+        "train_fraction must be in (0,1)"
+    );
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let (rows, labels) = parse_csv(&text)?;
+    let dim = rows[0].len();
+    let n_train = ((rows.len() as f64) * train_fraction).round() as usize;
+    ensure!(
+        n_train >= 1 && n_train < rows.len(),
+        "split leaves an empty partition"
+    );
+    let num_classes = labels.iter().copied().max().unwrap() + 1;
+    let flat = |rs: &[Vec<f32>]| -> Vec<f32> { rs.iter().flatten().copied().collect() };
+    let ds = Dataset {
+        name: name.to_string(),
+        train_x: Mat::from_vec(n_train, dim, flat(&rows[..n_train])),
+        train_y: labels[..n_train].to_vec(),
+        test_x: Mat::from_vec(rows.len() - n_train, dim, flat(&rows[n_train..])),
+        test_y: labels[n_train..].to_vec(),
+        num_classes,
+    };
+    ds.validate()?;
+    Ok(ds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# toy data
+1.0, 2.0, 0
+3.0, 4.0, 1
+
+5.0, 6.0, 0
+7.0, 8.0, 1
+";
+
+    #[test]
+    fn parse_basic() {
+        let (rows, labels) = parse_csv(SAMPLE).unwrap();
+        assert_eq!(rows.len(), 4);
+        assert_eq!(labels, vec![0, 1, 0, 1]);
+        assert_eq!(rows[1], vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn parse_rejects_ragged() {
+        assert!(parse_csv("1,2,0\n1,0\n").is_err());
+    }
+
+    #[test]
+    fn parse_rejects_bad_label() {
+        assert!(parse_csv("1,2,zebra\n").is_err());
+    }
+
+    #[test]
+    fn parse_rejects_empty() {
+        assert!(parse_csv("# nothing\n").is_err());
+    }
+
+    #[test]
+    fn load_roundtrip() {
+        let path = std::env::temp_dir().join(format!("dimred-csv-test-{}.csv", std::process::id()));
+        std::fs::write(&path, SAMPLE).unwrap();
+        let ds = load_csv(&path, "toy", 0.5).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(ds.train_x.shape(), (2, 2));
+        assert_eq!(ds.test_x.shape(), (2, 2));
+        assert_eq!(ds.num_classes, 2);
+    }
+}

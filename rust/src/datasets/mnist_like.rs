@@ -1,0 +1,296 @@
+//! MNIST-like synthetic digits (substitution for Fig. 1a — see
+//! DESIGN.md §7).
+//!
+//! No network access means no real MNIST. Fig. 1a's message is about the
+//! *structure* of natural images — strong local pixel correlation and an
+//! intrinsic dimensionality far below 784 — which is what lets
+//! PCA/ICA/RP compress 784 → ~50–100 features without hurting a
+//! classifier. This generator reproduces those structural properties:
+//!
+//! * 10 classes, each a 28×28 prototype digit drawn with line strokes;
+//! * per-sample elastic deformation (random affine: shift, scale,
+//!   shear) — creates a low-dimensional class manifold;
+//! * per-sample stroke-thickness / intensity variation;
+//! * smoothing kernel — produces the local correlation PCA exploits;
+//! * pixel noise.
+
+use super::Dataset;
+use crate::linalg::Mat;
+use crate::rng::{Pcg64, RngExt};
+
+/// Image side; features = SIDE².
+pub const SIDE: usize = 28;
+/// Feature dimensionality (28×28 = 784, as MNIST).
+pub const DIM: usize = SIDE * SIDE;
+
+/// Stroke segments (in a nominal 20×20 box, origin top-left) per digit.
+/// Crude 7-segment-ish renderings are enough: classes only need to be
+/// mutually distinguishable, not beautiful.
+fn digit_strokes(d: usize) -> &'static [((f32, f32), (f32, f32))] {
+    // Segment endpoints (x, y) in [0, 20]².
+    const S: [&[((f32, f32), (f32, f32))]; 10] = [
+        // 0: rounded box
+        &[
+            ((5.0, 2.0), (15.0, 2.0)),
+            ((15.0, 2.0), (15.0, 18.0)),
+            ((15.0, 18.0), (5.0, 18.0)),
+            ((5.0, 18.0), (5.0, 2.0)),
+        ],
+        // 1: vertical bar + flag
+        &[((10.0, 2.0), (10.0, 18.0)), ((7.0, 5.0), (10.0, 2.0))],
+        // 2
+        &[
+            ((5.0, 4.0), (15.0, 2.0)),
+            ((15.0, 2.0), (15.0, 9.0)),
+            ((15.0, 9.0), (5.0, 18.0)),
+            ((5.0, 18.0), (15.0, 18.0)),
+        ],
+        // 3
+        &[
+            ((5.0, 2.0), (15.0, 2.0)),
+            ((15.0, 2.0), (8.0, 10.0)),
+            ((8.0, 10.0), (15.0, 14.0)),
+            ((15.0, 14.0), (5.0, 18.0)),
+        ],
+        // 4
+        &[
+            ((13.0, 2.0), (5.0, 12.0)),
+            ((5.0, 12.0), (16.0, 12.0)),
+            ((13.0, 2.0), (13.0, 18.0)),
+        ],
+        // 5
+        &[
+            ((15.0, 2.0), (5.0, 2.0)),
+            ((5.0, 2.0), (5.0, 10.0)),
+            ((5.0, 10.0), (15.0, 12.0)),
+            ((15.0, 12.0), (13.0, 18.0)),
+            ((13.0, 18.0), (5.0, 17.0)),
+        ],
+        // 6
+        &[
+            ((14.0, 2.0), (6.0, 8.0)),
+            ((6.0, 8.0), (5.0, 15.0)),
+            ((5.0, 15.0), (10.0, 18.0)),
+            ((10.0, 18.0), (15.0, 14.0)),
+            ((15.0, 14.0), (6.0, 11.0)),
+        ],
+        // 7
+        &[((5.0, 2.0), (15.0, 2.0)), ((15.0, 2.0), (8.0, 18.0))],
+        // 8
+        &[
+            ((10.0, 2.0), (5.0, 6.0)),
+            ((5.0, 6.0), (15.0, 13.0)),
+            ((15.0, 13.0), (10.0, 18.0)),
+            ((10.0, 18.0), (5.0, 13.0)),
+            ((5.0, 13.0), (15.0, 6.0)),
+            ((15.0, 6.0), (10.0, 2.0)),
+        ],
+        // 9
+        &[
+            ((14.0, 9.0), (6.0, 7.0)),
+            ((6.0, 7.0), (8.0, 2.0)),
+            ((8.0, 2.0), (14.0, 4.0)),
+            ((14.0, 4.0), (14.0, 9.0)),
+            ((14.0, 9.0), (12.0, 18.0)),
+        ],
+    ];
+    S[d]
+}
+
+/// Generator configuration.
+#[derive(Debug, Clone)]
+pub struct MnistLikeConfig {
+    pub train: usize,
+    pub test: usize,
+    pub seed: u64,
+    /// Gaussian pixel-noise standard deviation (on [0,1] intensities).
+    pub noise: f32,
+}
+
+impl Default for MnistLikeConfig {
+    fn default() -> Self {
+        Self {
+            train: 4000,
+            test: 1000,
+            seed: 2018,
+            noise: 0.08,
+        }
+    }
+}
+
+impl MnistLikeConfig {
+    pub fn generate(&self) -> Dataset {
+        let mut rng = Pcg64::seed_stream(self.seed, 0x4D4E_4953); // "MNIS"
+        let total = self.train + self.test;
+        let mut xs = Vec::with_capacity(total * DIM);
+        let mut ys = Vec::with_capacity(total);
+        for _ in 0..total {
+            let class = rng.next_below(10) as usize;
+            let img = render_digit(class, &mut rng, self.noise);
+            xs.extend_from_slice(&img);
+            ys.push(class);
+        }
+        let split = self.train * DIM;
+        let (tr, te) = xs.split_at(split);
+        Dataset {
+            name: "mnist-like".into(),
+            train_x: Mat::from_vec(self.train, DIM, tr.to_vec()),
+            train_y: ys[..self.train].to_vec(),
+            test_x: Mat::from_vec(self.test, DIM, te.to_vec()),
+            test_y: ys[self.train..].to_vec(),
+            num_classes: 10,
+        }
+    }
+}
+
+/// Render one jittered digit into a 784-vector of [0,1] intensities.
+fn render_digit(class: usize, rng: &mut Pcg64, noise: f32) -> Vec<f32> {
+    // Random affine jitter: shift ±2px, scale 0.85–1.15, shear ±0.15.
+    let dx = rng.next_gaussian_with(4.0, 1.0) as f32; // nominal offset into 28 box
+    let dy = rng.next_gaussian_with(4.0, 1.0) as f32;
+    let scale = 0.85 + 0.3 * rng.next_f32();
+    let shear = (rng.next_f32() - 0.5) * 0.3;
+    let thickness = 1.0 + 0.6 * rng.next_f32();
+    let intensity = 0.75 + 0.25 * rng.next_f32();
+
+    let mut img = vec![0.0f32; DIM];
+    for &((x0, y0), (x1, y1)) in digit_strokes(class) {
+        // Transform endpoints.
+        let tx = |x: f32, y: f32| scale * (x + shear * y) + dx;
+        let ty = |y: f32| scale * y + dy;
+        let (ax, ay) = (tx(x0, y0), ty(y0));
+        let (bx, by) = (tx(x1, y1), ty(y1));
+        // Rasterise the segment with a soft (Gaussian-profile) pen.
+        let len = ((bx - ax).powi(2) + (by - ay).powi(2)).sqrt().max(1e-3);
+        let steps = (len * 2.0).ceil() as usize + 1;
+        for s in 0..=steps {
+            let t = s as f32 / steps as f32;
+            let px = ax + t * (bx - ax);
+            let py = ay + t * (by - ay);
+            let r = thickness.ceil() as i32 + 1;
+            let (cx, cy) = (px.round() as i32, py.round() as i32);
+            for oy in -r..=r {
+                for ox in -r..=r {
+                    let (ix, iy) = (cx + ox, cy + oy);
+                    if ix < 0 || iy < 0 || ix >= SIDE as i32 || iy >= SIDE as i32 {
+                        continue;
+                    }
+                    let d2 = (ix as f32 - px).powi(2) + (iy as f32 - py).powi(2);
+                    let v = intensity * (-d2 / (thickness * thickness)).exp();
+                    let idx = iy as usize * SIDE + ix as usize;
+                    img[idx] = img[idx].max(v);
+                }
+            }
+        }
+    }
+    // Pixel noise, clipped to [0,1].
+    for p in &mut img {
+        *p = (*p + noise * rng.next_gaussian() as f32).clamp(0.0, 1.0);
+    }
+    img
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::class_histogram;
+
+    fn small() -> Dataset {
+        MnistLikeConfig {
+            train: 300,
+            test: 100,
+            ..Default::default()
+        }
+        .generate()
+    }
+
+    #[test]
+    fn shapes_and_validity() {
+        let d = small();
+        d.validate().unwrap();
+        assert_eq!(d.input_dim(), 784);
+        assert_eq!(d.num_classes, 10);
+    }
+
+    #[test]
+    fn intensities_in_unit_interval() {
+        let d = small();
+        for &v in d.train_x.as_slice() {
+            assert!((0.0..=1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn all_classes_present() {
+        let d = small();
+        let h = class_histogram(&d.train_y, 10);
+        assert!(h.iter().all(|&c| c > 0), "histogram {h:?}");
+    }
+
+    #[test]
+    fn images_have_ink() {
+        let d = small();
+        for r in d.train_x.rows().take(50) {
+            let ink: f32 = r.iter().sum();
+            assert!(ink > 5.0, "blank image (ink {ink})");
+        }
+    }
+
+    #[test]
+    fn classes_are_distinguishable_by_mean_image() {
+        // Mean images of different classes should differ substantially.
+        let d = MnistLikeConfig {
+            train: 1000,
+            test: 10,
+            ..Default::default()
+        }
+        .generate();
+        let mut means = vec![vec![0.0f32; DIM]; 10];
+        let mut counts = [0usize; 10];
+        for (i, &y) in d.train_y.iter().enumerate() {
+            for (m, &x) in means[y].iter_mut().zip(d.train_x.row(i)) {
+                *m += x;
+            }
+            counts[y] += 1;
+        }
+        for (m, &c) in means.iter_mut().zip(&counts) {
+            for v in m.iter_mut() {
+                *v /= c.max(1) as f32;
+            }
+        }
+        let dist = |a: &[f32], b: &[f32]| -> f32 {
+            a.iter().zip(b).map(|(x, y)| (x - y).powi(2)).sum::<f32>().sqrt()
+        };
+        for i in 0..10 {
+            for j in (i + 1)..10 {
+                assert!(
+                    dist(&means[i], &means[j]) > 1.0,
+                    "classes {i}/{j} too similar"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn neighbouring_pixels_correlated() {
+        // The property Fig. 1a exploits: local pixel correlation.
+        let d = small();
+        let a = d.train_x.col(14 * SIDE + 13);
+        let b = d.train_x.col(14 * SIDE + 14);
+        let n = a.len() as f64;
+        let (ma, mb) = (
+            a.iter().map(|&x| x as f64).sum::<f64>() / n,
+            b.iter().map(|&x| x as f64).sum::<f64>() / n,
+        );
+        let mut cov = 0.0;
+        let mut va = 0.0;
+        let mut vb = 0.0;
+        for (&x, &y) in a.iter().zip(&b) {
+            cov += (x as f64 - ma) * (y as f64 - mb);
+            va += (x as f64 - ma).powi(2);
+            vb += (y as f64 - mb).powi(2);
+        }
+        let corr = cov / (va.sqrt() * vb.sqrt() + 1e-12);
+        assert!(corr > 0.5, "neighbour correlation {corr}");
+    }
+}

@@ -1,0 +1,502 @@
+//! EASI — Equivariant Adaptive Separation via Independence (Cardoso &
+//! Laheld '96), the paper's training algorithm, in all three datapath
+//! configurations of §IV:
+//!
+//! * [`EasiMode::Full`] — Eq. 6: `B ← B − μ[yyᵀ − I + g(y)yᵀ − y g(y)ᵀ]B`
+//! * [`EasiMode::WhitenOnly`] — Eq. 3 (PCA whitening): HOS term bypassed
+//! * [`EasiMode::RotationOnly`] — the paper's *modified datapath*: the
+//!   `yyᵀ − I` term is bypassed because a random-projection front end
+//!   already handled second-order statistics
+//!
+//! The three modes are the software image of the paper's datapath mux —
+//! same state, same update skeleton, terms enabled per configuration.
+//!
+//! Two computational paths are provided:
+//! * [`EasiTrainer::step`] — factored rank-2 update, O(nm) per sample
+//!   (the software-optimal form; see `update.rs`);
+//! * [`naive_step`] — literal Eq. 6 with explicit n×n `F` and `F·B`
+//!   product, O(n²m) per sample — the arithmetic the FPGA datapath
+//!   implements and the oracle our property tests compare against.
+
+mod update;
+
+pub use update::{naive_step, relative_gradient};
+
+use crate::linalg::{Mat, whiteness_error};
+
+/// Datapath configuration (the paper's reconfigurable mux).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EasiMode {
+    /// Full EASI (Eq. 6): whitening + rotation in one update.
+    Full,
+    /// Second-order only (Eq. 3): adaptive PCA whitening.
+    WhitenOnly,
+    /// Higher-order only: rotation of already-white(ish) inputs — used
+    /// after the random-projection front end in the proposed pipeline.
+    RotationOnly,
+}
+
+impl EasiMode {
+    /// Whether the `yyᵀ − I` (second-order) term is active.
+    pub fn has_whitening(self) -> bool {
+        !matches!(self, EasiMode::RotationOnly)
+    }
+
+    /// Whether the `g(y)yᵀ − y g(y)ᵀ` (HOS) term is active.
+    pub fn has_rotation(self) -> bool {
+        !matches!(self, EasiMode::WhitenOnly)
+    }
+}
+
+/// Cubic nonlinearity `g(y) = y³` — the paper's choice (Alg. 1 step 3);
+/// introduces the higher-order statistics.
+#[inline]
+pub fn cubic(y: &[f32], out: &mut [f32]) {
+    for (o, &v) in out.iter_mut().zip(y) {
+        *o = v * v * v;
+    }
+}
+
+/// Trainer configuration.
+#[derive(Debug, Clone)]
+pub struct EasiConfig {
+    /// Input dimensionality (paper's `m`, or `p` after the RP front end).
+    pub input_dim: usize,
+    /// Output dimensionality (paper's `n`).
+    pub output_dim: usize,
+    /// Learning rate μ (constant across iterations, §III.D).
+    pub mu: f32,
+    /// Which datapath terms are active.
+    pub mode: EasiMode,
+    /// Use Cardoso's normalised update (divides each term by a
+    /// data-dependent factor) — keeps the fixed-μ recursion stable for
+    /// heavy-tailed inputs. Off by default to match the paper's Eq. 6.
+    pub normalized: bool,
+    /// Clamp on ‖B‖_F as a divergence guard (0 disables).
+    pub max_norm: f32,
+    /// Per-sample relative step clip: rescale the update so that
+    /// ‖ΔB‖ ≤ clip·‖B‖ (0 disables). The multiplicative recursion
+    /// `B ← (I − μF)B` is only contraction-safe while μ‖F‖ ≪ 1; the
+    /// cubic nonlinearity makes ‖F‖ ∝ |y|⁴, so a single heavy-tailed
+    /// sample can otherwise apply an O(1) rotation+scaling and destroy
+    /// the fit (classic robust-EASI guard; see DESIGN.md §8).
+    pub clip: f32,
+    /// Initialise `B` with seeded random orthonormal rows instead of
+    /// the identity embedding `[I 0]`. The multiplicative update can
+    /// never leave the row space of the initial `B`, so for n < m the
+    /// identity init pins training to the first n input coordinates
+    /// forever; a random orthonormal subspace generically overlaps the
+    /// informative latent directions.
+    pub random_init: Option<u64>,
+}
+
+impl Default for EasiConfig {
+    fn default() -> Self {
+        Self {
+            input_dim: 32,
+            output_dim: 8,
+            mu: 1e-3,
+            mode: EasiMode::Full,
+            normalized: false,
+            max_norm: 1e4,
+            clip: 0.0,
+            random_init: None,
+        }
+    }
+}
+
+/// Seeded random-orthonormal `n×m` matrix (Gaussian rows + modified
+/// Gram–Schmidt) — the recommended EASI init for n < m, shared by the
+/// native trainer and the PJRT backend so both backends start from the
+/// same point.
+pub fn random_orthonormal(n: usize, m: usize, seed: u64) -> Mat {
+    use crate::rng::{Pcg64, RngExt};
+    assert!(n <= m);
+    let mut rng = Pcg64::seed_stream(seed, 0x4249_4E49); // "BINI"
+    let mut rows: Vec<Vec<f32>> = (0..n)
+        .map(|_| (0..m).map(|_| rng.next_gaussian() as f32).collect())
+        .collect();
+    for i in 0..n {
+        for j in 0..i {
+            let (head, tail) = rows.split_at_mut(i);
+            let proj = crate::linalg::dot(&tail[0], &head[j]);
+            for (t, &h) in tail[0].iter_mut().zip(&head[j]) {
+                *t -= proj * h;
+            }
+        }
+        let norm = crate::linalg::norm2(&rows[i]).max(1e-12);
+        for v in &mut rows[i] {
+            *v /= norm;
+        }
+    }
+    Mat::from_vec(n, m, rows.into_iter().flatten().collect())
+}
+
+/// Streaming EASI trainer: owns the separation matrix `B (n×m)` and
+/// applies one update per sample, exactly like the FPGA pipeline
+/// consumes one sample per clock.
+#[derive(Debug, Clone)]
+pub struct EasiTrainer {
+    pub config: EasiConfig,
+    /// Separation matrix `B`, row-major `n×m`. Initialised to `[I 0]`
+    /// (the identity embedding), the customary EASI start.
+    b: Mat,
+    /// Samples consumed.
+    steps: u64,
+    /// EMA of the relative update magnitude ‖ΔB‖/‖B‖ — convergence
+    /// signal surfaced to the coordinator.
+    update_ema: f64,
+    // Scratch buffers (avoid per-sample allocation on the hot path).
+    scratch_y: Vec<f32>,
+    scratch_g: Vec<f32>,
+    scratch_u: Vec<f32>,
+    scratch_v: Vec<f32>,
+    scratch_delta: Vec<f32>,
+}
+
+impl EasiTrainer {
+    pub fn new(config: EasiConfig) -> Self {
+        assert!(config.input_dim >= config.output_dim, "need m >= n");
+        assert!(config.mu > 0.0, "mu must be positive");
+        let b = match config.random_init {
+            Some(seed) => random_orthonormal(config.output_dim, config.input_dim, seed),
+            None => Mat::eye(config.output_dim, config.input_dim),
+        };
+        let (n, m) = (config.output_dim, config.input_dim);
+        Self {
+            config,
+            b,
+            steps: 0,
+            update_ema: 1.0,
+            scratch_y: vec![0.0; n],
+            scratch_g: vec![0.0; n],
+            scratch_u: vec![0.0; m],
+            scratch_v: vec![0.0; m],
+            scratch_delta: vec![0.0; n * m],
+        }
+    }
+
+    /// Current separation matrix.
+    pub fn separation_matrix(&self) -> &Mat {
+        &self.b
+    }
+
+    /// Replace the separation matrix (checkpoint restore / PJRT
+    /// round-trip). Panics on shape mismatch.
+    pub fn set_separation_matrix(&mut self, b: Mat) {
+        assert_eq!(b.shape(), self.b.shape(), "separation matrix shape");
+        self.b = b;
+    }
+
+    /// Samples consumed so far.
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// EMA of ‖ΔB‖_F/‖B‖_F — approaches 0 as training converges.
+    pub fn update_magnitude(&self) -> f64 {
+        self.update_ema
+    }
+
+    /// Transform one sample into the output space: `y = Bx`.
+    pub fn transform(&self, x: &[f32]) -> Vec<f32> {
+        self.b.matvec(x)
+    }
+
+    /// Transform a whole sample matrix (rows are samples).
+    pub fn transform_rows(&self, x: &Mat) -> Mat {
+        self.b.apply_rows(x)
+    }
+
+    /// One EASI update for a single sample — the factored O(nm) form.
+    ///
+    /// Derivation: with `u = Bᵀy` and `v = Bᵀg(y)`,
+    /// `[yyᵀ − I]B = y uᵀ − B` and `[g yᵀ − y gᵀ]B = g uᵀ − y vᵀ`, so the
+    /// full Eq. 6 update is the rank-2 correction
+    /// `B ← B − μ(y uᵀ + g uᵀ − y vᵀ − B)` with terms gated by mode.
+    pub fn step(&mut self, x: &[f32]) {
+        assert_eq!(x.len(), self.config.input_dim, "easi step shape mismatch");
+        let n = self.config.output_dim;
+        let m = self.config.input_dim;
+        let mu = self.config.mu;
+        let mode = self.config.mode;
+
+        // y = Bx
+        for i in 0..n {
+            self.scratch_y[i] = crate::linalg::dot(self.b.row(i), x);
+        }
+        let (y, g) = (&mut self.scratch_y, &mut self.scratch_g);
+        cubic(y, g);
+
+        // u = Bᵀ y ; v = Bᵀ g
+        self.scratch_u.iter_mut().for_each(|u| *u = 0.0);
+        self.scratch_v.iter_mut().for_each(|v| *v = 0.0);
+        for i in 0..n {
+            let (yi, gi) = (y[i], g[i]);
+            let row = self.b.row(i);
+            for j in 0..m {
+                self.scratch_u[j] += yi * row[j];
+                self.scratch_v[j] += gi * row[j];
+            }
+        }
+
+        // Normalisation factors (Cardoso's stabilised recursion).
+        let (s2, s4) = if self.config.normalized {
+            let yty: f32 = y.iter().map(|v| v * v).sum();
+            let ytg: f32 = y.iter().zip(g.iter()).map(|(a, b)| a * b).sum();
+            (1.0 / (1.0 + mu * yty), 1.0 / (1.0 + mu * ytg.abs()))
+        } else {
+            (1.0, 1.0)
+        };
+
+        // Assemble per-row: ΔB_i = μ[ s2·(y_i·u − B_i) + s4·(g_i·u − y_i·v) ]
+        // (two passes when clipping: norms first, then apply — the step
+        // may need rescaling before it touches B).
+        let mut delta2 = 0.0f64; // ‖ΔB‖² accumulator
+        let mut b_norm2_pre = 0.0f64;
+        for i in 0..n {
+            let (yi, gi) = (y[i], g[i]);
+            let row = self.b.row(i);
+            for j in 0..m {
+                let mut d = 0.0f32;
+                if mode.has_whitening() {
+                    d += s2 * (yi * self.scratch_u[j] - row[j]);
+                }
+                if mode.has_rotation() {
+                    d += s4 * (gi * self.scratch_u[j] - yi * self.scratch_v[j]);
+                }
+                self.scratch_delta[i * m + j] = mu * d;
+                delta2 += (mu * d) as f64 * (mu * d) as f64;
+                b_norm2_pre += (row[j] as f64) * (row[j] as f64);
+            }
+        }
+
+        // Per-sample step clip: ‖ΔB‖ ≤ clip·‖B‖.
+        let mut scale = 1.0f32;
+        if self.config.clip > 0.0 {
+            let limit = self.config.clip as f64 * b_norm2_pre.sqrt();
+            let dn = delta2.sqrt();
+            if dn > limit {
+                scale = (limit / dn) as f32;
+                delta2 = limit * limit;
+            }
+        }
+
+        let mut b_norm2 = 0.0f64;
+        for (bij, &dij) in self
+            .b
+            .as_mut_slice()
+            .iter_mut()
+            .zip(self.scratch_delta.iter())
+        {
+            *bij -= scale * dij;
+            b_norm2 += (*bij as f64) * (*bij as f64);
+        }
+
+        // Divergence guard: rescale B if its norm exploded.
+        if self.config.max_norm > 0.0 {
+            let norm = (b_norm2 as f32).sqrt();
+            if norm > self.config.max_norm {
+                self.b.scale(self.config.max_norm / norm);
+            }
+        }
+
+        let rel = (delta2.sqrt()) / (b_norm2.sqrt() + 1e-30);
+        self.update_ema = 0.99 * self.update_ema + 0.01 * rel;
+        self.steps += 1;
+    }
+
+    /// Consume every row of a sample matrix in order (one epoch of
+    /// streaming training).
+    pub fn step_rows(&mut self, x: &Mat) {
+        let rows = x.rows_count();
+        for i in 0..rows {
+            self.step(x.row(i));
+        }
+    }
+
+    /// Project `B`'s rows back to an orthonormal set (modified
+    /// Gram–Schmidt). Used by the rotation-only datapath: each update
+    /// `(I − μF)B` with skew `F` has singular values ≥ 1, so numerical
+    /// drift off the rotation manifold compounds multiplicatively;
+    /// periodic retraction keeps `U` a genuine rotation. O(n²m).
+    pub fn reorthonormalize(&mut self) {
+        let (n, m) = self.b.shape();
+        debug_assert!(n <= m);
+        for i in 0..n {
+            for j in 0..i {
+                let proj = {
+                    let ri = self.b.row(i);
+                    let rj = self.b.row(j);
+                    crate::linalg::dot(ri, rj)
+                };
+                for k in 0..m {
+                    let v = self.b.get(i, k) - proj * self.b.get(j, k);
+                    self.b.set(i, k, v);
+                }
+            }
+            let norm = crate::linalg::norm2(self.b.row(i)).max(1e-12);
+            for k in 0..m {
+                let v = self.b.get(i, k) / norm;
+                self.b.set(i, k, v);
+            }
+        }
+    }
+
+    /// Whiteness of the trainer's outputs on the given samples — the
+    /// convergence criterion for the second-order part.
+    pub fn output_whiteness(&self, x: &Mat) -> f64 {
+        whiteness_error(&self.transform_rows(x))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::amari_index;
+    use crate::rng::{Pcg64, RngExt};
+
+    /// Mix independent non-Gaussian sources through a random matrix.
+    fn mixed_sources(n_src: usize, m: usize, samples: usize, seed: u64) -> (Mat, Mat) {
+        let mut rng = Pcg64::seed(seed);
+        // Sources: uniform on [-√3, √3] (unit variance, negative
+        // kurtosis — cubic-g EASI separates sub-Gaussian sources).
+        let s = Mat::from_fn(samples, n_src, |_, _| {
+            (rng.next_f32() * 2.0 - 1.0) * 3f32.sqrt()
+        });
+        let a = Mat::from_fn(m, n_src, |_, _| rng.next_gaussian() as f32);
+        // x = A s  (rows are samples) → X = S Aᵀ
+        let x = a.apply_rows(&s);
+        (x, a)
+    }
+
+    #[test]
+    fn whiten_only_whitens() {
+        let (x, _) = mixed_sources(4, 4, 6000, 31);
+        let mut t = EasiTrainer::new(EasiConfig {
+            input_dim: 4,
+            output_dim: 4,
+            mu: 2e-3,
+            mode: EasiMode::WhitenOnly,
+            ..Default::default()
+        });
+        for _ in 0..3 {
+            t.step_rows(&x);
+        }
+        let w = t.output_whiteness(&x);
+        assert!(w < 0.1, "whiteness error {w}");
+    }
+
+    #[test]
+    fn full_easi_separates_sources() {
+        let (x, a) = mixed_sources(3, 3, 8000, 33);
+        let mut t = EasiTrainer::new(EasiConfig {
+            input_dim: 3,
+            output_dim: 3,
+            mu: 1.5e-3,
+            mode: EasiMode::Full,
+            normalized: true,
+            ..Default::default()
+        });
+        for _ in 0..4 {
+            t.step_rows(&x);
+        }
+        // Global system P = B·A must approach a scaled permutation.
+        let p = t.separation_matrix().matmul(&a);
+        let idx = amari_index(&p);
+        assert!(idx < 0.12, "amari index {idx}");
+    }
+
+    #[test]
+    fn update_magnitude_decreases() {
+        // The relative update EMA must settle well below its start value
+        // (1.0) and stay bounded as training converges.
+        let (x, _) = mixed_sources(3, 3, 4000, 35);
+        let mut t = EasiTrainer::new(EasiConfig {
+            input_dim: 3,
+            output_dim: 3,
+            mu: 1e-3,
+            normalized: true,
+            ..Default::default()
+        });
+        for i in 0..200 {
+            t.step(x.row(i));
+        }
+        let early = t.update_magnitude();
+        for _ in 0..6 {
+            t.step_rows(&x);
+        }
+        let late = t.update_magnitude();
+        assert!(late < early, "EMA did not settle: early {early}, late {late}");
+        assert!(late < 0.05, "steady-state update magnitude too large: {late}");
+    }
+
+    #[test]
+    fn rotation_only_keeps_white_inputs_white() {
+        // RotationOnly assumes whitened inputs; after training, outputs
+        // should still be (approximately) white — the rotation term is
+        // skew-symmetric so it cannot destroy whiteness.
+        let mut rng = Pcg64::seed(37);
+        let x = Mat::from_fn(6000, 4, |_, _| (rng.next_f32() * 2.0 - 1.0) * 3f32.sqrt());
+        let mut t = EasiTrainer::new(EasiConfig {
+            input_dim: 4,
+            output_dim: 4,
+            mu: 1e-3,
+            mode: EasiMode::RotationOnly,
+            ..Default::default()
+        });
+        for _ in 0..2 {
+            t.step_rows(&x);
+        }
+        let w = t.output_whiteness(&x);
+        assert!(w < 0.15, "rotation destroyed whiteness: {w}");
+    }
+
+    #[test]
+    fn dimensionality_reduction_shape() {
+        let mut t = EasiTrainer::new(EasiConfig {
+            input_dim: 32,
+            output_dim: 8,
+            ..Default::default()
+        });
+        let x = vec![0.5; 32];
+        t.step(&x);
+        assert_eq!(t.transform(&x).len(), 8);
+    }
+
+    #[test]
+    fn divergence_guard_caps_norm() {
+        let mut t = EasiTrainer::new(EasiConfig {
+            input_dim: 2,
+            output_dim: 2,
+            mu: 0.5, // absurdly large on purpose
+            max_norm: 10.0,
+            ..Default::default()
+        });
+        let mut rng = Pcg64::seed(39);
+        for _ in 0..500 {
+            let x = [
+                rng.next_gaussian() as f32 * 5.0,
+                rng.next_gaussian() as f32 * 5.0,
+            ];
+            t.step(&x);
+        }
+        assert!(t.separation_matrix().fro_norm() <= 10.0 + 1e-3);
+        assert!(t.separation_matrix().as_slice().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn deterministic_training() {
+        let (x, _) = mixed_sources(3, 4, 500, 41);
+        let run = || {
+            let mut t = EasiTrainer::new(EasiConfig {
+                input_dim: 4,
+                output_dim: 3,
+                ..Default::default()
+            });
+            t.step_rows(&x);
+            t.separation_matrix().clone()
+        };
+        assert_eq!(run().as_slice(), run().as_slice());
+    }
+}

@@ -1,0 +1,135 @@
+//! The literal (naive) EASI arithmetic — the exact operation sequence of
+//! the paper's Fig. 3 datapath and Alg. 1, with the explicit `n×n`
+//! relative-gradient matrix `F` and full `F·B` product.
+//!
+//! The streaming trainer in `mod.rs` uses an algebraically identical
+//! factored form that is O(nm) instead of O(n²m); this module is the
+//! oracle the property tests compare it against, and its operation
+//! counts are what `hwmodel` charges for the FPGA datapath.
+
+use super::{cubic, EasiMode};
+use crate::linalg::Mat;
+
+/// Build the relative gradient
+/// `F = [yyᵀ − I]·1{whiten} + [g(y)yᵀ − y g(y)ᵀ]·1{rotate}`
+/// exactly as the datapath's stage 4 computes it (Alg. 1, step 4).
+pub fn relative_gradient(y: &[f32], mode: EasiMode) -> Mat {
+    let n = y.len();
+    let mut g = vec![0.0f32; n];
+    cubic(y, &mut g);
+    Mat::from_fn(n, n, |i, j| {
+        let mut f = 0.0;
+        if mode.has_whitening() {
+            f += y[i] * y[j] - if i == j { 1.0 } else { 0.0 };
+        }
+        if mode.has_rotation() {
+            f += g[i] * y[j] - y[i] * g[j];
+        }
+        f
+    })
+}
+
+/// One literal Eq. 6 update: `B ← B − μ F B` with `y = Bx` computed
+/// first (Alg. 1 steps 2–6). Returns the new matrix.
+pub fn naive_step(b: &Mat, x: &[f32], mu: f32, mode: EasiMode) -> Mat {
+    let y = b.matvec(x);
+    let f = relative_gradient(&y, mode);
+    let fb = f.matmul(b);
+    let mut out = b.clone();
+    out.add_scaled(-mu, &fb);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::easi::{EasiConfig, EasiTrainer};
+    use crate::linalg::max_abs_diff;
+    use crate::rng::{Pcg64, RngExt};
+
+    fn check_factored_matches_naive(mode: EasiMode, seed: u64) {
+        let (n, m, mu) = (4usize, 7usize, 1e-3f32);
+        let mut rng = Pcg64::seed(seed);
+        let mut trainer = EasiTrainer::new(EasiConfig {
+            input_dim: m,
+            output_dim: n,
+            mu,
+            mode,
+            normalized: false,
+            max_norm: 0.0,
+            clip: 0.0,
+            random_init: None,
+        });
+        let mut b = trainer.separation_matrix().clone();
+        for _ in 0..200 {
+            let x: Vec<f32> = (0..m).map(|_| rng.next_gaussian() as f32).collect();
+            trainer.step(&x);
+            b = naive_step(&b, &x, mu, mode);
+        }
+        let d = max_abs_diff(trainer.separation_matrix(), &b);
+        assert!(d < 1e-4, "mode {mode:?}: factored vs naive diff {d}");
+    }
+
+    #[test]
+    fn factored_matches_naive_full() {
+        check_factored_matches_naive(EasiMode::Full, 101);
+    }
+
+    #[test]
+    fn factored_matches_naive_whiten() {
+        check_factored_matches_naive(EasiMode::WhitenOnly, 102);
+    }
+
+    #[test]
+    fn factored_matches_naive_rotation() {
+        check_factored_matches_naive(EasiMode::RotationOnly, 103);
+    }
+
+    #[test]
+    fn hos_term_is_skew_symmetric() {
+        let y = [0.3f32, -1.2, 0.7];
+        let f = relative_gradient(&y, EasiMode::RotationOnly);
+        for i in 0..3 {
+            for j in 0..3 {
+                assert!(
+                    (f.get(i, j) + f.get(j, i)).abs() < 1e-6,
+                    "F not skew at ({i},{j})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn whitening_term_is_symmetric() {
+        let y = [0.3f32, -1.2, 0.7];
+        let f = relative_gradient(&y, EasiMode::WhitenOnly);
+        for i in 0..3 {
+            for j in 0..3 {
+                assert!((f.get(i, j) - f.get(j, i)).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn full_is_sum_of_parts() {
+        let y = [0.5f32, 1.5, -0.25, 2.0];
+        let w = relative_gradient(&y, EasiMode::WhitenOnly);
+        let r = relative_gradient(&y, EasiMode::RotationOnly);
+        let f = relative_gradient(&y, EasiMode::Full);
+        for i in 0..4 {
+            for j in 0..4 {
+                assert!((f.get(i, j) - w.get(i, j) - r.get(i, j)).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_gradient_at_white_uncorrelated_fixpoint() {
+        // If y has unit "instantaneous variance" pattern e_i, F for
+        // whitening is e_i e_iᵀ − I which is nonzero — fixpoints hold in
+        // expectation, not per-sample. Instead verify: μ = 0 ⇒ no change.
+        let b = Mat::eye(2, 3);
+        let after = naive_step(&b, &[1.0, 2.0, 3.0], 0.0, EasiMode::Full);
+        assert_eq!(b.as_slice(), after.as_slice());
+    }
+}

@@ -1,0 +1,7 @@
+//! Shared experiment drivers — the single source of truth for the
+//! paper's tables and figures, used by the CLI (`dimred table1`, ...),
+//! the runnable examples and the bench harnesses, so every entry point
+//! reports the same numbers.
+
+pub mod fig1;
+pub mod table1;

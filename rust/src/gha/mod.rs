@@ -1,0 +1,347 @@
+//! GHA — Sanger's Generalized Hebbian Algorithm: streaming principal-
+//! subspace learning, the missing piece of the paper's whitening stage.
+//!
+//! # Why this module exists (see EXPERIMENTS.md §Discrepancies)
+//!
+//! The paper realises dimensionality reduction with the multiplicative
+//! recursions Eq. 3 (`W ← W − μ[zzᵀ−I]W`) and Eq. 6. Both have the form
+//! `B ← (I − μF)B`, whose row space can only *shrink*: a rectangular
+//! (n < m) EASI/whitening stage is pinned to the subspace its
+//! initialisation happened to span and can never rotate toward the
+//! informative directions of the data. On the waveform task that caps
+//! accuracy far below the paper's Table I (the first 8 coordinates
+//! cannot even distinguish classes 0 and 1). The paper does not address
+//! this; we complete the design with Sanger's rule, whose Hebbian term
+//! `y xᵀ` injects the input directly and therefore converges to the
+//! *principal* n-subspace — exactly the "whitening" half of the paper's
+//! Fig. 2, in the same hardware operation class (adds + multiplies,
+//! O(n·m) per sample, pipelineable one sample per clock).
+//!
+//! Update rule (row-sequential form):
+//!
+//! ```text
+//! y = W x
+//! W_i ← W_i + μ y_i (x − Σ_{j ≤ i} y_j W_j)
+//! ```
+//!
+//! At convergence rows of `W` are the leading eigenvectors of the input
+//! covariance (orthonormal), `Var(y_i) = λ_i`; dividing by a running
+//! variance estimate yields whitened outputs.
+
+use crate::linalg::Mat;
+
+/// Configuration for the GHA whitener.
+#[derive(Debug, Clone)]
+pub struct GhaConfig {
+    pub input_dim: usize,
+    pub output_dim: usize,
+    /// Hebbian learning rate.
+    pub mu: f32,
+    /// EMA coefficient for the per-component variance estimate.
+    pub var_beta: f32,
+    /// Per-sample relative step clip (like the EASI trainer's).
+    pub clip: f32,
+    /// Seed for the random orthonormal init.
+    pub seed: u64,
+}
+
+impl Default for GhaConfig {
+    fn default() -> Self {
+        Self {
+            input_dim: 32,
+            output_dim: 8,
+            mu: 5e-3,
+            var_beta: 5e-3,
+            clip: 0.1,
+            seed: 2018,
+        }
+    }
+}
+
+/// Streaming principal-subspace whitener.
+#[derive(Debug, Clone)]
+pub struct GhaWhitener {
+    pub config: GhaConfig,
+    /// Weight matrix `W (n×m)`; rows converge to leading eigenvectors.
+    w: Mat,
+    /// Running estimate of `E[y_i²]` (the eigenvalue λ_i at
+    /// convergence), used for the whitening division.
+    var: Vec<f32>,
+    steps: u64,
+    // scratch
+    y: Vec<f32>,
+    cum: Vec<f32>,
+    delta: Vec<f32>,
+}
+
+impl GhaWhitener {
+    pub fn new(config: GhaConfig) -> Self {
+        assert!(config.input_dim >= config.output_dim && config.output_dim >= 1);
+        assert!(config.mu > 0.0 && config.var_beta > 0.0);
+        let w = crate::easi::random_orthonormal(config.output_dim, config.input_dim, config.seed);
+        let (n, m) = (config.output_dim, config.input_dim);
+        Self {
+            config,
+            w,
+            var: vec![1.0; n],
+            steps: 0,
+            y: vec![0.0; n],
+            cum: vec![0.0; m],
+            delta: vec![0.0; n * m],
+        }
+    }
+
+    /// The subspace matrix `W (n×m)`.
+    pub fn subspace(&self) -> &Mat {
+        &self.w
+    }
+
+    /// Current per-component variance estimates (λ̂).
+    pub fn variances(&self) -> &[f32] {
+        &self.var
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// One streaming update; returns nothing (use [`Self::project`] /
+    /// [`Self::whiten`] for outputs).
+    pub fn step(&mut self, x: &[f32]) {
+        let (n, m) = self.w.shape();
+        assert_eq!(x.len(), m, "gha step shape mismatch");
+        let mu = self.config.mu;
+
+        // y = Wx
+        for i in 0..n {
+            self.y[i] = crate::linalg::dot(self.w.row(i), x);
+        }
+        // Row-sequential Sanger deltas with the cumulative reconstruction
+        // c_i = Σ_{j<=i} y_j W_j built incrementally.
+        self.cum.iter_mut().for_each(|c| *c = 0.0);
+        let mut delta2 = 0.0f64;
+        let mut w_norm2 = 0.0f64;
+        for i in 0..n {
+            let yi = self.y[i];
+            let row = self.w.row(i);
+            for j in 0..m {
+                self.cum[j] += yi * row[j];
+                let d = mu * yi * (x[j] - self.cum[j]);
+                self.delta[i * m + j] = d;
+                delta2 += (d as f64) * (d as f64);
+                w_norm2 += (row[j] as f64) * (row[j] as f64);
+            }
+        }
+        // Relative clip, as in the EASI trainer.
+        let mut scale = 1.0f32;
+        if self.config.clip > 0.0 {
+            let limit = self.config.clip as f64 * w_norm2.sqrt();
+            let dn = delta2.sqrt();
+            if dn > limit {
+                scale = (limit / dn) as f32;
+            }
+        }
+        for (wij, &dij) in self.w.as_mut_slice().iter_mut().zip(self.delta.iter()) {
+            *wij += scale * dij;
+        }
+        // Variance EMA.
+        let beta = self.config.var_beta;
+        for (v, &yi) in self.var.iter_mut().zip(&self.y) {
+            *v = (1.0 - beta) * *v + beta * yi * yi;
+        }
+        self.steps += 1;
+    }
+
+    /// Consume every row of a sample matrix.
+    pub fn step_rows(&mut self, x: &Mat) {
+        for i in 0..x.rows_count() {
+            self.step(x.row(i));
+        }
+    }
+
+    /// Project (no variance normalisation): `y = Wx`.
+    pub fn project(&self, x: &[f32]) -> Vec<f32> {
+        self.w.matvec(x)
+    }
+
+    /// Whiten: `z_i = (Wx)_i / √λ̂_i`.
+    pub fn whiten(&self, x: &[f32]) -> Vec<f32> {
+        let mut y = self.project(x);
+        for (yi, &v) in y.iter_mut().zip(&self.var) {
+            *yi /= v.max(1e-9).sqrt();
+        }
+        y
+    }
+
+    /// The whitening transform as a dense matrix `diag(λ̂^{-1/2}) W`.
+    pub fn whitening_matrix(&self) -> Mat {
+        let (n, m) = self.w.shape();
+        Mat::from_fn(n, m, |i, j| self.w.get(i, j) / self.var[i].max(1e-9).sqrt())
+    }
+
+    /// Restore state (checkpoint / PJRT round-trip).
+    pub fn set_state(&mut self, w: Mat, var: Vec<f32>) {
+        assert_eq!(w.shape(), self.w.shape(), "gha W shape");
+        assert_eq!(var.len(), self.var.len(), "gha var length");
+        self.w = w;
+        self.var = var;
+    }
+
+    /// Mean absolute row-orthonormality error of `W` (→ 0 at
+    /// convergence).
+    pub fn orthonormality_error(&self) -> f64 {
+        let (n, _) = self.w.shape();
+        let mut err = 0.0f64;
+        for i in 0..n {
+            for j in 0..n {
+                let d = crate::linalg::dot(self.w.row(i), self.w.row(j)) as f64;
+                let want = if i == j { 1.0 } else { 0.0 };
+                err += (d - want).abs();
+            }
+        }
+        err / (n * n) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{dot, whiteness_error};
+    use crate::pca::BatchPca;
+    use crate::rng::{Pcg64, RngExt};
+
+    /// Data with a dominant 2-D structure embedded in 6-D noise.
+    fn structured(samples: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::seed(seed);
+        let mut data = Vec::with_capacity(samples * 6);
+        for _ in 0..samples {
+            let a = rng.next_gaussian() as f32 * 3.0;
+            let b = rng.next_gaussian() as f32 * 2.0;
+            for j in 0..6 {
+                let signal = match j {
+                    0 | 1 => a * if j == 0 { 0.8 } else { 0.6 },
+                    2 | 3 => b * if j == 2 { 0.7 } else { -0.7 },
+                    _ => 0.0,
+                };
+                data.push(signal + 0.3 * rng.next_gaussian() as f32);
+            }
+        }
+        Mat::from_vec(samples, 6, data)
+    }
+
+    #[test]
+    fn converges_to_principal_subspace() {
+        let x = structured(6000, 71);
+        let mut gha = GhaWhitener::new(GhaConfig {
+            input_dim: 6,
+            output_dim: 2,
+            ..Default::default()
+        });
+        for _ in 0..6 {
+            gha.step_rows(&x);
+        }
+        // Compare against batch PCA: the learned rows must lie in the
+        // top-2 eigenvector span.
+        let pca = BatchPca::fit(&x, 2);
+        for i in 0..2 {
+            let wi = gha.subspace().row(i);
+            let proj: f32 = (0..2)
+                .map(|k| dot(wi, pca.components.row(k)).powi(2))
+                .sum();
+            let total = dot(wi, wi);
+            assert!(
+                proj / total > 0.95,
+                "row {i}: only {:.2} of its mass in the principal plane",
+                proj / total
+            );
+        }
+        assert!(gha.orthonormality_error() < 0.05);
+    }
+
+    #[test]
+    fn whitened_outputs_are_white() {
+        let x = structured(8000, 72);
+        let mut gha = GhaWhitener::new(GhaConfig {
+            input_dim: 6,
+            output_dim: 2,
+            ..Default::default()
+        });
+        for _ in 0..8 {
+            gha.step_rows(&x);
+        }
+        let z = Mat::from_fn(x.rows_count(), 2, |i, j| gha.whiten(x.row(i))[j]);
+        let w = whiteness_error(&z);
+        assert!(w < 0.15, "whiteness {w}");
+    }
+
+    #[test]
+    fn variance_estimates_track_eigenvalues() {
+        let x = structured(8000, 73);
+        let mut gha = GhaWhitener::new(GhaConfig {
+            input_dim: 6,
+            output_dim: 2,
+            ..Default::default()
+        });
+        for _ in 0..8 {
+            gha.step_rows(&x);
+        }
+        let pca = BatchPca::fit(&x, 2);
+        for i in 0..2 {
+            let rel = (gha.variances()[i] as f64 - pca.eigenvalues[i]).abs()
+                / pca.eigenvalues[i];
+            assert!(
+                rel < 0.3,
+                "λ̂_{i} = {} vs λ_{i} = {}",
+                gha.variances()[i],
+                pca.eigenvalues[i]
+            );
+        }
+    }
+
+    #[test]
+    fn escapes_bad_initial_subspace() {
+        // The whole point vs multiplicative whitening: start from a
+        // subspace orthogonal to the signal, verify it still finds it.
+        let x = structured(6000, 74);
+        let mut gha = GhaWhitener::new(GhaConfig {
+            input_dim: 6,
+            output_dim: 2,
+            seed: 99, // random init; signal lives in dims 0-3
+            ..Default::default()
+        });
+        // Force the degenerate init: rows on the pure-noise axes 4, 5.
+        gha.w = Mat::from_fn(2, 6, |i, j| if j == i + 4 { 1.0 } else { 0.0 });
+        for _ in 0..8 {
+            gha.step_rows(&x);
+        }
+        let pca = BatchPca::fit(&x, 2);
+        let w0 = gha.subspace().row(0);
+        let proj: f32 = (0..2).map(|k| dot(w0, pca.components.row(k)).powi(2)).sum();
+        assert!(
+            proj / dot(w0, w0) > 0.9,
+            "GHA failed to escape the noise subspace"
+        );
+    }
+
+    #[test]
+    fn deterministic() {
+        let x = structured(500, 75);
+        let run = || {
+            let mut g = GhaWhitener::new(GhaConfig::default_for(6, 2));
+            g.step_rows(&x);
+            g.subspace().clone()
+        };
+        assert_eq!(run().as_slice(), run().as_slice());
+    }
+}
+
+impl GhaConfig {
+    /// Convenience constructor used in tests/examples.
+    pub fn default_for(input_dim: usize, output_dim: usize) -> Self {
+        Self {
+            input_dim,
+            output_dim,
+            ..Default::default()
+        }
+    }
+}

@@ -1,0 +1,188 @@
+//! FPGA hardware cost model — the substitution for the paper's Quartus
+//! synthesis flow (DESIGN.md §7).
+//!
+//! The paper's Table II reports post-synthesis resource consumption on
+//! an Arria 10 (427,200 ALMs / 1518 DSPs / 55,562,240 BRAM bits) for the
+//! EASI datapath of Nazemi et al. (ASAP'17) with and without the
+//! random-projection front end. We cannot run Quartus, but the paper's
+//! *claim* is about operation-count scaling — hardware complexity
+//! O(m·n²) in adders and multipliers, hence cost ∝ m/p once RP shrinks
+//! m to p. An inventory-based model preserves exactly that structure:
+//!
+//! 1. [`ops`] counts every fp32 multiplier, adder and register in the
+//!    five-stage datapath of the paper's Fig. 3 / Alg. 1 (and the
+//!    add/sub network of the RP module);
+//! 2. [`arria10`] maps operation counts to Arria-10 DSPs / ALMs /
+//!    register bits with constants calibrated once against the paper's
+//!    own Table II anchor row (documented there);
+//! 3. [`pipeline`] models the pipelined timing: one new sample per
+//!    clock at the paper's post-place-and-route 106.64 MHz, plus
+//!    latency in cycles for each configuration.
+
+pub mod arria10;
+pub mod ops;
+pub mod pipeline;
+
+pub use arria10::{Arria10Model, ResourceReport, ARRIA10_CAPACITY};
+pub use ops::{easi_ops, rp_ops, OpCounts};
+pub use pipeline::{PipelineModel, TimingReport};
+
+
+/// One hardware configuration to cost — either plain EASI or the
+/// paper's RP → EASI cascade.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HwConfig {
+    /// Input dimensionality `m`.
+    pub input_dim: usize,
+    /// Intermediate dimensionality `p` (None ⇒ no RP front end).
+    pub intermediate_dim: Option<usize>,
+    /// Output dimensionality `n`.
+    pub output_dim: usize,
+}
+
+impl HwConfig {
+    /// Plain EASI, `m → n` (Table II row 1).
+    pub fn easi(m: usize, n: usize) -> Self {
+        Self {
+            input_dim: m,
+            intermediate_dim: None,
+            output_dim: n,
+        }
+    }
+
+    /// RP front end then EASI, `m → p → n` (Table II row 2).
+    pub fn rp_easi(m: usize, p: usize, n: usize) -> Self {
+        assert!(m >= p && p >= n, "need m >= p >= n");
+        Self {
+            input_dim: m,
+            intermediate_dim: Some(p),
+            output_dim: n,
+        }
+    }
+
+    /// The EASI stage's effective input dimensionality.
+    pub fn easi_input(&self) -> usize {
+        self.intermediate_dim.unwrap_or(self.input_dim)
+    }
+
+    /// Total operation counts (EASI stage + optional RP stage).
+    pub fn op_counts(&self) -> OpCounts {
+        let mut total = easi_ops(self.easi_input(), self.output_dim);
+        if let Some(p) = self.intermediate_dim {
+            total = total.merge(&rp_ops(self.input_dim, p));
+        }
+        total
+    }
+
+    /// Human-readable label used in reports.
+    pub fn label(&self) -> String {
+        match self.intermediate_dim {
+            Some(p) => format!("RP({}→{p}) + EASI({p}→{})", self.input_dim, self.output_dim),
+            None => format!("EASI({}→{})", self.input_dim, self.output_dim),
+        }
+    }
+}
+
+/// A row of the regenerated Table II.
+#[derive(Debug, Clone)]
+pub struct TableIiRow {
+    pub input: usize,
+    pub intermediate: Option<usize>,
+    pub output: usize,
+    pub dsps: u64,
+    pub alms: u64,
+    pub register_bits: u64,
+}
+
+/// Regenerate the paper's Table II for a set of configurations.
+pub fn table_ii(configs: &[HwConfig]) -> Vec<TableIiRow> {
+    let model = Arria10Model::paper_calibrated();
+    configs
+        .iter()
+        .map(|cfg| {
+            let r = model.cost(cfg);
+            TableIiRow {
+                input: cfg.input_dim,
+                intermediate: cfg.intermediate_dim,
+                output: cfg.output_dim,
+                dsps: r.dsps,
+                alms: r.alms,
+                register_bits: r.register_bits,
+            }
+        })
+        .collect()
+}
+
+/// The paper's exact Table II configurations.
+pub fn paper_table_ii_configs() -> Vec<HwConfig> {
+    vec![HwConfig::easi(32, 8), HwConfig::rp_easi(32, 16, 8)]
+}
+
+/// Published Table II reference values, for paper-vs-model reporting.
+pub const PAPER_TABLE_II: [(u64, u64, u64); 2] = [
+    (4052, 38122, 138368), // EASI 32→8: DSPs, ALMs, register bits
+    (2212, 70031, 75392),  // RP 32→16 + EASI 16→8
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn label_formatting() {
+        assert_eq!(HwConfig::easi(32, 8).label(), "EASI(32→8)");
+        assert_eq!(
+            HwConfig::rp_easi(32, 16, 8).label(),
+            "RP(32→16) + EASI(16→8)"
+        );
+    }
+
+    #[test]
+    fn easi_input_respects_rp() {
+        assert_eq!(HwConfig::easi(32, 8).easi_input(), 32);
+        assert_eq!(HwConfig::rp_easi(32, 16, 8).easi_input(), 16);
+    }
+
+    #[test]
+    fn table_ii_reproduces_paper_within_tolerance() {
+        // Shape criterion from DESIGN.md §5: every cell within 10% of
+        // the paper's value (the model is calibrated on row 1, so row 1
+        // is tight; row 2 is a genuine prediction).
+        let rows = table_ii(&paper_table_ii_configs());
+        for (row, &(dsps, alms, regs)) in rows.iter().zip(&PAPER_TABLE_II) {
+            let close = |got: u64, want: u64, tol: f64| {
+                (got as f64 - want as f64).abs() <= want as f64 * tol
+            };
+            assert!(close(row.dsps, dsps, 0.10), "DSPs {} vs {dsps}", row.dsps);
+            assert!(close(row.alms, alms, 0.10), "ALMs {} vs {alms}", row.alms);
+            assert!(
+                close(row.register_bits, regs, 0.10),
+                "regs {} vs {regs}",
+                row.register_bits
+            );
+        }
+    }
+
+    #[test]
+    fn savings_proportional_to_m_over_p() {
+        // §V.C: "the amount of savings will be proportional to m/p".
+        // DSP ratio between plain EASI(m→n) and RP+EASI(m→p→n) should
+        // track m/p across a sweep.
+        let n = 8;
+        for (m, p) in [(32, 16), (64, 16), (64, 32), (128, 32)] {
+            let rows = table_ii(&[HwConfig::easi(m, n), HwConfig::rp_easi(m, p, n)]);
+            let ratio = rows[0].dsps as f64 / rows[1].dsps as f64;
+            let expect = m as f64 / p as f64;
+            assert!(
+                (ratio - expect).abs() < expect * 0.25,
+                "m={m} p={p}: DSP ratio {ratio:.2} vs m/p {expect:.2}"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "need m >= p >= n")]
+    fn rp_easi_rejects_bad_dims() {
+        HwConfig::rp_easi(16, 32, 8);
+    }
+}

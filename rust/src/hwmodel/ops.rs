@@ -1,0 +1,170 @@
+//! Operation inventory of the EASI datapath (paper Fig. 3 / Alg. 1) and
+//! the random-projection module.
+//!
+//! Counts are *spatial*: each multiplier/adder is a physical pipelined
+//! fp32 unit processing one new sample per clock, exactly as in the
+//! ASAP'17 implementation the paper builds on. This is where the
+//! O(m·n²) complexity the paper fights lives — stage 4's `F·B` product.
+
+
+/// Fp32 operator and storage inventory for one datapath.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OpCounts {
+    /// fp32 multipliers (DSP candidates).
+    pub mults: u64,
+    /// fp32 adders/subtractors realised in hard-FP DSPs alongside the
+    /// multipliers (the matrix-product accumulations).
+    pub adds: u64,
+    /// fp32 add/sub units realised in soft logic (ALMs) — the RP
+    /// module's conditional add/sub network.
+    pub soft_addsubs: u64,
+    /// 32-bit storage words: state matrices and inter-stage buffers.
+    pub storage_words: u64,
+}
+
+impl OpCounts {
+    /// Total pipelined fp operator count (hard + soft).
+    pub fn total_ops(&self) -> u64 {
+        self.mults + self.adds + self.soft_addsubs
+    }
+
+    /// Elementwise sum — cascade two modules.
+    pub fn merge(&self, other: &OpCounts) -> OpCounts {
+        OpCounts {
+            mults: self.mults + other.mults,
+            adds: self.adds + other.adds,
+            soft_addsubs: self.soft_addsubs + other.soft_addsubs,
+            storage_words: self.storage_words + other.storage_words,
+        }
+    }
+}
+
+/// Per-stage inventory of the five-stage EASI datapath for input
+/// dimensionality `m` and output dimensionality `n` (paper Alg. 1).
+///
+/// | stage | computation                         | mults | adds        |
+/// |-------|-------------------------------------|-------|-------------|
+/// | 1     | `y = Bx`                            | nm    | n(m−1)      |
+/// | 2     | `g(y) = y³`                         | 2n    | —           |
+/// | 3     | `F = yyᵀ − I + gyᵀ − ygᵀ`           | 2n²   | 2n²         |
+/// | 4     | `F·B` (relative gradient update)    | n²m   | n(n−1)m     |
+/// | 5     | `B ← B − μ(FB)`                     | nm    | nm          |
+///
+/// Stage 3 computes `yyᵀ` and `g yᵀ` (2n² mults); `y gᵀ` is the
+/// transpose of `g yᵀ` and is wired, not recomputed. Combining the three
+/// terms and the `−I` costs ≈ 2n² adds. Stage 4 dominates: **O(m·n²)**.
+pub fn easi_stage_ops(m: usize, n: usize, stage: usize) -> (u64, u64) {
+    let (m, n) = (m as u64, n as u64);
+    match stage {
+        1 => (n * m, n * (m - 1)),
+        2 => (2 * n, 0),
+        3 => (2 * n * n, 2 * n * n),
+        4 => (n * n * m, n * (n - 1) * m),
+        5 => (n * m, n * m),
+        _ => panic!("EASI has stages 1..=5"),
+    }
+}
+
+/// Full EASI datapath inventory: operator totals plus storage —
+/// the `B` register file (n·m), the inter-stage buffers (`x`, `y`, `g`,
+/// `F`, `F·B`).
+pub fn easi_ops(m: usize, n: usize) -> OpCounts {
+    assert!(m >= n && n >= 1, "need m >= n >= 1");
+    let (mut mults, mut adds) = (0u64, 0u64);
+    for stage in 1..=5 {
+        let (mu, ad) = easi_stage_ops(m, n, stage);
+        mults += mu;
+        adds += ad;
+    }
+    let (m64, n64) = (m as u64, n as u64);
+    let storage_words = n64 * m64      // B register file
+        + n64 * m64                    // F·B buffer
+        + n64 * n64                    // F buffer
+        + m64                          // x input regs
+        + 2 * n64; // y and g buffers
+    OpCounts {
+        mults,
+        adds,
+        soft_addsubs: 0,
+        storage_words,
+    }
+}
+
+/// Random-projection module inventory, `m → p`, Fox et al. FPT'16
+/// style: a fully-spatial conditional add/subtract network — `p` output
+/// accumulation trees, each fed by all `m` inputs gated by the ternary
+/// sign of `R` (the generic reconfigurable fabric provisions the full
+/// m×p network so any `R` can be loaded at run time). Zero multipliers,
+/// zero DSPs.
+pub fn rp_ops(m: usize, p: usize) -> OpCounts {
+    assert!(m >= p && p >= 1, "need m >= p >= 1");
+    let (m64, p64) = (m as u64, p as u64);
+    OpCounts {
+        mults: 0,
+        adds: 0,
+        soft_addsubs: m64 * p64,
+        storage_words: m64       // input taps
+            + p64                // output accumulators
+            + (m64 * p64).div_euclid(16), // 2-bit ternary sign store, in words
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage4_dominates() {
+        let (m, n) = (32, 8);
+        let (s4m, s4a) = easi_stage_ops(m, n, 4);
+        let total = easi_ops(m, n);
+        assert!(s4m * 2 > total.mults, "stage 4 is the mult hot-spot");
+        assert!(s4a * 2 > total.adds, "stage 4 is the add hot-spot");
+    }
+
+    #[test]
+    fn easi_totals_match_formula() {
+        let (m, n) = (32u64, 8u64);
+        let c = easi_ops(32, 8);
+        assert_eq!(c.mults, n * n * m + 2 * n * m + 2 * n * n + 2 * n);
+        assert_eq!(c.adds, n * (m - 1) + 2 * n * n + n * (n - 1) * m + n * m);
+    }
+
+    #[test]
+    fn easi_complexity_is_o_mn2() {
+        // Doubling m doubles the dominant term; doubling n quadruples it.
+        let base = easi_ops(64, 8).mults as f64;
+        let double_m = easi_ops(128, 8).mults as f64;
+        let double_n = easi_ops(64, 16).mults as f64;
+        assert!((double_m / base - 2.0).abs() < 0.2);
+        assert!((double_n / base - 4.0).abs() < 0.6);
+    }
+
+    #[test]
+    fn rp_has_no_multipliers() {
+        let c = rp_ops(32, 16);
+        assert_eq!(c.mults, 0);
+        assert_eq!(c.adds, 0);
+        assert_eq!(c.soft_addsubs, 512);
+    }
+
+    #[test]
+    fn merge_adds_fields() {
+        let a = easi_ops(16, 8);
+        let b = rp_ops(32, 16);
+        let m = a.merge(&b);
+        assert_eq!(m.mults, a.mults);
+        assert_eq!(m.soft_addsubs, b.soft_addsubs);
+        assert_eq!(m.storage_words, a.storage_words + b.storage_words);
+    }
+
+    #[test]
+    fn linear_saving_in_easi_stage() {
+        // The paper's core claim: halving the EASI input dimensionality
+        // halves its (dominant) hardware complexity.
+        let full = easi_ops(32, 8);
+        let half = easi_ops(16, 8);
+        let ratio = full.mults as f64 / half.mults as f64;
+        assert!((ratio - 1.9).abs() < 0.15, "mult ratio {ratio}");
+    }
+}

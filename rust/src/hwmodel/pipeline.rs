@@ -1,0 +1,144 @@
+//! Pipelined timing model.
+//!
+//! The paper's implementation (following Nazemi et al., ASAP'17) is
+//! fully pipelined: one new sample enters the datapath per clock, and
+//! the post-place-and-route clock frequency on the Arria 10 target is
+//! **106.64 MHz**, *independent of dimensionality* (that independence is
+//! the ASAP'17 contribution the paper inherits; Meyer-Baese et al.'s
+//! earlier design lost frequency as dimensions grew).
+//!
+//! Consequently:
+//! * throughput = f_clk samples/s for every configuration;
+//! * adding the RP front end does not change f_clk, it only adds
+//!   pipeline *latency* — the paper's §V.C remark — because whitening
+//!   and rotation now happen sequentially instead of in one fused
+//!   update.
+
+use super::HwConfig;
+
+/// Pipeline depth (cycles) of each fp32 operator class at f_clk ≈ 107
+/// MHz on Arria 10 hard-FP DSPs (typical latencies for the hardened
+/// single-precision blocks).
+const FP_MULT_LATENCY: u64 = 3;
+const FP_ADD_LATENCY: u64 = 3;
+/// Soft-logic add/sub latency (deeper: carry chains in ALMs).
+const SOFT_ADD_LATENCY: u64 = 4;
+
+/// Timing summary for one configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct TimingReport {
+    /// Clock frequency (Hz) — dimension-independent by design.
+    pub f_clk_hz: f64,
+    /// Steady-state training throughput (samples/s) = f_clk.
+    pub throughput_samples_per_s: f64,
+    /// End-to-end latency of one sample through the datapath, cycles.
+    pub latency_cycles: u64,
+    /// Latency in nanoseconds.
+    pub latency_ns: f64,
+}
+
+/// The timing model.
+#[derive(Debug, Clone, Copy)]
+pub struct PipelineModel {
+    /// Post-P&R clock, Hz. Paper: 106.64 MHz.
+    pub f_clk_hz: f64,
+}
+
+impl Default for PipelineModel {
+    fn default() -> Self {
+        Self {
+            f_clk_hz: 106.64e6,
+        }
+    }
+}
+
+impl PipelineModel {
+    /// Latency in cycles of the EASI datapath for output dim `n`:
+    /// stage 1 (dot-product tree: 1 mult + ⌈log₂ m⌉ add levels),
+    /// stage 2 (two mult levels for y³), stage 3 (mult + combine),
+    /// stage 4 (mult + ⌈log₂ n⌉ add levels), stage 5 (mult + add).
+    pub fn easi_latency_cycles(&self, m: usize, n: usize) -> u64 {
+        let log2 = |x: usize| (usize::BITS - x.next_power_of_two().leading_zeros() - 1) as u64;
+        let s1 = FP_MULT_LATENCY + log2(m.max(2)) * FP_ADD_LATENCY;
+        let s2 = 2 * FP_MULT_LATENCY;
+        let s3 = FP_MULT_LATENCY + 2 * FP_ADD_LATENCY;
+        let s4 = FP_MULT_LATENCY + log2(n.max(2)) * FP_ADD_LATENCY;
+        let s5 = FP_MULT_LATENCY + FP_ADD_LATENCY;
+        s1 + s2 + s3 + s4 + s5
+    }
+
+    /// Latency in cycles of the RP module: a conditional add/sub
+    /// reduction tree over `m` inputs.
+    pub fn rp_latency_cycles(&self, m: usize) -> u64 {
+        let log2 = |x: usize| (usize::BITS - x.next_power_of_two().leading_zeros() - 1) as u64;
+        log2(m.max(2)) * SOFT_ADD_LATENCY
+    }
+
+    /// Full timing report for a configuration.
+    pub fn timing(&self, cfg: &HwConfig) -> TimingReport {
+        let mut latency = self.easi_latency_cycles(cfg.easi_input(), cfg.output_dim);
+        if cfg.intermediate_dim.is_some() {
+            latency += self.rp_latency_cycles(cfg.input_dim);
+        }
+        TimingReport {
+            f_clk_hz: self.f_clk_hz,
+            throughput_samples_per_s: self.f_clk_hz,
+            latency_cycles: latency,
+            latency_ns: latency as f64 / self.f_clk_hz * 1e9,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frequency_is_dimension_independent() {
+        let model = PipelineModel::default();
+        let a = model.timing(&HwConfig::easi(32, 8));
+        let b = model.timing(&HwConfig::easi(1024, 64));
+        assert_eq!(a.f_clk_hz, b.f_clk_hz);
+        assert_eq!(a.throughput_samples_per_s, b.throughput_samples_per_s);
+    }
+
+    #[test]
+    fn rp_adds_latency_not_throughput() {
+        // §V.C: same clock, slightly higher latency.
+        let model = PipelineModel::default();
+        let plain = model.timing(&HwConfig::easi(32, 8));
+        let cascade = model.timing(&HwConfig::rp_easi(32, 16, 8));
+        assert_eq!(
+            plain.throughput_samples_per_s,
+            cascade.throughput_samples_per_s
+        );
+        assert!(cascade.latency_cycles > plain.latency_cycles);
+        // "asymptotic latency of random projection is negligible" — the
+        // added cycles are a small fraction.
+        let added = cascade.latency_cycles - plain.latency_cycles;
+        assert!(
+            (added as f64) < 0.75 * plain.latency_cycles as f64,
+            "RP latency {added} vs EASI {}",
+            plain.latency_cycles
+        );
+    }
+
+    #[test]
+    fn latency_grows_logarithmically_with_m() {
+        let model = PipelineModel::default();
+        let l32 = model.easi_latency_cycles(32, 8);
+        let l64 = model.easi_latency_cycles(64, 8);
+        let l128 = model.easi_latency_cycles(128, 8);
+        // Constant increments in log2(m).
+        assert_eq!(l64 - l32, l128 - l64);
+        assert!(l64 > l32);
+    }
+
+    #[test]
+    fn paper_clock_frequency() {
+        let t = PipelineModel::default().timing(&HwConfig::easi(32, 8));
+        assert!((t.f_clk_hz - 106.64e6).abs() < 1.0);
+        // ~9.4 ns per cycle; latency tens of cycles → hundreds of ns.
+        assert!(t.latency_ns > 100.0 && t.latency_ns < 1000.0);
+    }
+}

@@ -1,0 +1,38 @@
+//! # dimred — hardware-friendly dimensionality reduction
+//!
+//! Reproduction of Nazemi, Eshratifar & Pedram, *"A Hardware-Friendly
+//! Algorithm for Scalable Training and Deployment of Dimensionality
+//! Reduction Models on FPGA"* (2018), as a three-layer Rust + JAX +
+//! Pallas stack (see `DESIGN.md`).
+//!
+//! The crate is organised bottom-up:
+//!
+//! * Substrates: [`rng`], [`linalg`], [`datasets`]
+//! * Dimensionality-reduction algorithms: [`rp`] (random projection),
+//!   [`easi`] (EASI / ICA, including the paper's modified rotation-only
+//!   datapath), [`pca`] (adaptive whitening, batch PCA, bilinear/DCT)
+//! * Downstream model: [`mlp`] (2×64 ReLU classifier)
+//! * Hardware co-design: [`hwmodel`] (Arria-10 resource + pipeline model,
+//!   regenerates the paper's Table II)
+//! * System: [`runtime`] (PJRT artifact loader), [`coordinator`]
+//!   (streaming training service), [`pipeline`] (composed DR pipelines),
+//!   [`config`]
+
+pub mod config;
+pub mod coordinator;
+pub mod datasets;
+pub mod easi;
+pub mod experiments;
+pub mod gha;
+pub mod hwmodel;
+pub mod linalg;
+pub mod mlp;
+pub mod pca;
+pub mod pipeline;
+pub mod rng;
+pub mod rp;
+pub mod runtime;
+pub mod util;
+
+/// Crate-wide result alias (eyre-based, matches the binary's error style).
+pub type Result<T> = anyhow::Result<T>;

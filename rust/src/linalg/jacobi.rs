@@ -1,0 +1,178 @@
+//! Cyclic Jacobi eigendecomposition for symmetric matrices.
+//!
+//! Used as the *batch* PCA oracle (Fig. 1's "PCA" series and the
+//! whitening-correctness tests). Internally `f64` for robustness; the
+//! public API converts from/to the crate's `f32` [`Mat`].
+
+use super::Mat;
+
+/// Eigendecomposition of a symmetric matrix: `A = V diag(λ) Vᵀ`.
+#[derive(Debug, Clone)]
+pub struct Eigen {
+    /// Eigenvalues, sorted descending.
+    pub values: Vec<f64>,
+    /// Eigenvectors as *rows* (row `i` pairs with `values[i]`).
+    pub vectors: Mat,
+}
+
+/// Compute all eigenpairs of a symmetric matrix via cyclic Jacobi
+/// rotations. Panics if `a` is not square; symmetry is assumed (the
+/// strictly-lower triangle is ignored).
+pub fn symmetric_eigen(a: &Mat) -> Eigen {
+    let (n, m) = a.shape();
+    assert_eq!(n, m, "symmetric_eigen needs a square matrix");
+    // Work in f64.
+    let mut s: Vec<f64> = a.as_slice().iter().map(|&x| x as f64).collect();
+    let mut v = vec![0.0f64; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+
+    let idx = |i: usize, j: usize| i * n + j;
+    let max_sweeps = 64;
+    for _sweep in 0..max_sweeps {
+        // Off-diagonal Frobenius mass; stop when negligible relative to
+        // the diagonal.
+        let mut off = 0.0f64;
+        let mut diag = 0.0f64;
+        for i in 0..n {
+            diag += s[idx(i, i)].abs();
+            for j in (i + 1)..n {
+                off += s[idx(i, j)] * s[idx(i, j)];
+            }
+        }
+        if off.sqrt() <= 1e-14 * (diag + 1e-300) {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = s[idx(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = s[idx(p, p)];
+                let aqq = s[idx(q, q)];
+                // Classic stable rotation computation (Golub & Van Loan).
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let sn = t * c;
+
+                // Update rows/cols p and q of S (full symmetric update).
+                for k in 0..n {
+                    let skp = s[idx(k, p)];
+                    let skq = s[idx(k, q)];
+                    s[idx(k, p)] = c * skp - sn * skq;
+                    s[idx(k, q)] = sn * skp + c * skq;
+                }
+                for k in 0..n {
+                    let spk = s[idx(p, k)];
+                    let sqk = s[idx(q, k)];
+                    s[idx(p, k)] = c * spk - sn * sqk;
+                    s[idx(q, k)] = sn * spk + c * sqk;
+                }
+                // Accumulate the rotation into V (V rows are eigvecs^T
+                // accumulation; we store V as column accumulation then
+                // transpose on exit — here accumulate columns).
+                for k in 0..n {
+                    let vkp = v[idx(k, p)];
+                    let vkq = v[idx(k, q)];
+                    v[idx(k, p)] = c * vkp - sn * vkq;
+                    v[idx(k, q)] = sn * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    // Extract eigenvalues and sort descending.
+    let mut pairs: Vec<(f64, usize)> = (0..n).map(|i| (s[idx(i, i)], i)).collect();
+    pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+
+    let values: Vec<f64> = pairs.iter().map(|&(l, _)| l).collect();
+    // Row i of `vectors` = eigenvector for values[i] = column pairs[i].1
+    // of V.
+    let vectors = Mat::from_fn(n, n, |i, j| v[idx(j, pairs[i].1)] as f32);
+    Eigen { values, vectors }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dot;
+
+    fn reconstruct(e: &Eigen, n: usize) -> Mat {
+        // A = sum_i λ_i v_i v_iᵀ
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            let vi = e.vectors.row(i).to_vec();
+            let li = e.values[i] as f32;
+            for r in 0..n {
+                for c in 0..n {
+                    let v = a.get(r, c) + li * vi[r] * vi[c];
+                    a.set(r, c, v);
+                }
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn diagonal_matrix_is_its_own_decomposition() {
+        let a = Mat::from_vec(3, 3, vec![3.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 2.0]);
+        let e = symmetric_eigen(&a);
+        assert!((e.values[0] - 3.0).abs() < 1e-9);
+        assert!((e.values[1] - 2.0).abs() < 1e-9);
+        assert!((e.values[2] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] → λ = 3, 1 ; v = (1,1)/√2, (1,-1)/√2
+        let a = Mat::from_vec(2, 2, vec![2.0, 1.0, 1.0, 2.0]);
+        let e = symmetric_eigen(&a);
+        assert!((e.values[0] - 3.0).abs() < 1e-9);
+        assert!((e.values[1] - 1.0).abs() < 1e-9);
+        let v0 = e.vectors.row(0);
+        assert!((v0[0].abs() - std::f32::consts::FRAC_1_SQRT_2).abs() < 1e-5);
+        assert!((v0[0] - v0[1]).abs() < 1e-5, "components equal up to sign");
+    }
+
+    #[test]
+    fn reconstruction_and_orthonormality() {
+        // Symmetric random-ish matrix.
+        let base = Mat::from_fn(6, 6, |i, j| ((i * 31 + j * 17) % 13) as f32 / 13.0);
+        let a = Mat::from_fn(6, 6, |i, j| base.get(i, j) + base.get(j, i));
+        let e = symmetric_eigen(&a);
+        let r = reconstruct(&e, 6);
+        for (x, y) in r.as_slice().iter().zip(a.as_slice()) {
+            assert!((x - y).abs() < 1e-4, "reconstruction {x} vs {y}");
+        }
+        // Orthonormal rows.
+        for i in 0..6 {
+            for j in 0..6 {
+                let d = dot(e.vectors.row(i), e.vectors.row(j));
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((d - expect).abs() < 1e-4, "v{i}·v{j} = {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn eigenvalues_sorted_descending() {
+        let a = Mat::from_fn(5, 5, |i, j| if i == j { (5 - i) as f32 } else { 0.1 });
+        let e = symmetric_eigen(&a);
+        for w in e.values.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12);
+        }
+    }
+
+    #[test]
+    fn trace_preserved() {
+        let base = Mat::from_fn(8, 8, |i, j| ((i + 2 * j) % 7) as f32 * 0.3);
+        let a = Mat::from_fn(8, 8, |i, j| base.get(i, j) + base.get(j, i));
+        let e = symmetric_eigen(&a);
+        let trace: f32 = (0..8).map(|i| a.get(i, i)).sum();
+        let sum: f64 = e.values.iter().sum();
+        assert!((trace as f64 - sum).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,358 @@
+//! Row-major dense `f32` matrix.
+
+use super::dot;
+
+/// Row-major dense matrix of `f32`.
+///
+/// Row-major matches both the C ABI the PJRT literals use and the
+/// streaming access pattern of the coordinator (samples are rows).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Mat {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    /// Identity-like matrix: ones on the main diagonal, zero elsewhere.
+    /// Works for rectangular shapes (used to initialise B = [I 0]).
+    pub fn eye(rows: usize, cols: usize) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        for i in 0..rows.min(cols) {
+            m.data[i * cols + i] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a row-major vector.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Self { rows, cols, data }
+    }
+
+    /// Build from a function of (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    pub fn rows_count(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols_count(&self) -> usize {
+        self.cols
+    }
+
+    /// `(rows, cols)`.
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Borrow the backing row-major slice.
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutably borrow the backing row-major slice.
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Consume into the backing vector.
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Borrow row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutably borrow row `i`.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Iterator over rows.
+    pub fn rows(&self) -> impl Iterator<Item = &[f32]> {
+        self.data.chunks_exact(self.cols)
+    }
+
+    /// Copy column `j` out.
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        (0..self.rows).map(|i| self.get(i, j)).collect()
+    }
+
+    /// Matrix–vector product `self * x`.
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols, "matvec shape mismatch");
+        self.rows().map(|r| dot(r, x)).collect()
+    }
+
+    /// Transposed matrix–vector product `selfᵀ * x`.
+    pub fn matvec_t(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.rows, "matvec_t shape mismatch");
+        let mut out = vec![0.0; self.cols];
+        for (i, r) in self.rows().enumerate() {
+            let xi = x[i];
+            for (o, &rij) in out.iter_mut().zip(r) {
+                *o += xi * rij;
+            }
+        }
+        out
+    }
+
+    /// Matrix product `self * other`, ikj loop order (streams the rhs
+    /// row-wise — cache-friendly for row-major storage).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let aik = self.get(i, k);
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = other.row(k);
+                let orow = out.row_mut(i);
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += aik * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Transpose.
+    pub fn transpose(&self) -> Mat {
+        Mat::from_fn(self.cols, self.rows, |i, j| self.get(j, i))
+    }
+
+    /// `self * otherᵀ`.
+    pub fn matmul_nt(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols, "matmul_nt shape mismatch");
+        Mat::from_fn(self.rows, other.rows, |i, j| dot(self.row(i), other.row(j)))
+    }
+
+    /// Outer product of two vectors.
+    pub fn outer(a: &[f32], b: &[f32]) -> Mat {
+        Mat::from_fn(a.len(), b.len(), |i, j| a[i] * b[j])
+    }
+
+    /// In-place scaled add: `self += alpha * other`.
+    pub fn add_scaled(&mut self, alpha: f32, other: &Mat) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Scale all entries.
+    pub fn scale(&mut self, alpha: f32) {
+        for a in &mut self.data {
+            *a *= alpha;
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// Sample covariance of the rows: `Xᵀ X / N` (or `/(N-1)` if
+    /// `unbiased`), after removing the column means if `center`.
+    pub fn covariance(&self, center: bool, unbiased: bool) -> Mat {
+        let n = self.rows as f32;
+        assert!(self.rows >= 2, "need at least two samples");
+        let mut means = vec![0.0f32; self.cols];
+        if center {
+            for r in self.rows() {
+                for (m, &x) in means.iter_mut().zip(r) {
+                    *m += x;
+                }
+            }
+            for m in &mut means {
+                *m /= n;
+            }
+        }
+        let mut cov = Mat::zeros(self.cols, self.cols);
+        let mut centered = vec![0.0f32; self.cols];
+        for r in self.rows() {
+            for ((c, &x), &m) in centered.iter_mut().zip(r).zip(&means) {
+                *c = x - m;
+            }
+            // rank-1 update of the upper triangle
+            for i in 0..self.cols {
+                let ci = centered[i];
+                let row = cov.row_mut(i);
+                for j in i..self.cols {
+                    row[j] += ci * centered[j];
+                }
+            }
+        }
+        let denom = if unbiased { n - 1.0 } else { n };
+        for i in 0..self.cols {
+            for j in i..self.cols {
+                let v = cov.get(i, j) / denom;
+                cov.set(i, j, v);
+                cov.set(j, i, v);
+            }
+        }
+        cov
+    }
+
+    /// Column means of the rows.
+    pub fn col_means(&self) -> Vec<f32> {
+        let mut means = vec![0.0f32; self.cols];
+        for r in self.rows() {
+            for (m, &x) in means.iter_mut().zip(r) {
+                *m += x;
+            }
+        }
+        let n = self.rows as f32;
+        for m in &mut means {
+            *m /= n;
+        }
+        means
+    }
+
+    /// Apply `self` (as a linear map) to every row of `x`, producing a
+    /// new sample matrix: `out[i] = self * x[i]` — i.e. `X * selfᵀ`.
+    pub fn apply_rows(&self, x: &Mat) -> Mat {
+        assert_eq!(self.cols, x.cols, "apply_rows shape mismatch");
+        Mat::from_fn(x.rows, self.rows, |i, j| dot(self.row(j), x.row(i)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eye_rectangular() {
+        let e = Mat::eye(2, 4);
+        assert_eq!(e.row(0), &[1.0, 0.0, 0.0, 0.0]);
+        assert_eq!(e.row(1), &[0.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn matvec_known() {
+        let m = Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(m.matvec(&[1.0, 0.0, -1.0]), vec![-2.0, -2.0]);
+    }
+
+    #[test]
+    fn matvec_t_is_transpose_matvec() {
+        let m = Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let x = [2.0, -1.0];
+        assert_eq!(m.matvec_t(&x), m.transpose().matvec(&x));
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![5.0, 6.0, 7.0, 8.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.as_slice(), &[19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matmul_nt_matches_explicit_transpose() {
+        let a = Mat::from_fn(3, 4, |i, j| (i * 4 + j) as f32 * 0.5);
+        let b = Mat::from_fn(5, 4, |i, j| (i + j) as f32 - 2.0);
+        let c1 = a.matmul_nt(&b);
+        let c2 = a.matmul(&b.transpose());
+        for (x, y) in c1.as_slice().iter().zip(c2.as_slice()) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = Mat::from_fn(3, 5, |i, j| (i * 7 + j) as f32);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn outer_shape_and_values() {
+        let o = Mat::outer(&[1.0, 2.0], &[3.0, 4.0, 5.0]);
+        assert_eq!(o.shape(), (2, 3));
+        assert_eq!(o.get(1, 2), 10.0);
+    }
+
+    #[test]
+    fn covariance_of_whitened_identity() {
+        // Construct samples with exactly identity covariance: orthonormal
+        // pattern scaled by sqrt(N/2).
+        let n = 1000;
+        let mut data = Vec::new();
+        for i in 0..n {
+            let phase = i as f32 * std::f32::consts::TAU / n as f32;
+            data.push(2f32.sqrt() * phase.cos());
+            data.push(2f32.sqrt() * phase.sin());
+        }
+        let x = Mat::from_vec(n, 2, data);
+        let cov = x.covariance(true, false);
+        assert!((cov.get(0, 0) - 1.0).abs() < 1e-2);
+        assert!((cov.get(1, 1) - 1.0).abs() < 1e-2);
+        assert!(cov.get(0, 1).abs() < 1e-2);
+    }
+
+    #[test]
+    fn covariance_is_symmetric_psd_diag() {
+        let x = Mat::from_fn(50, 4, |i, j| ((i * 13 + j * 7) % 11) as f32 - 5.0);
+        let cov = x.covariance(true, true);
+        for i in 0..4 {
+            assert!(cov.get(i, i) >= 0.0);
+            for j in 0..4 {
+                assert!((cov.get(i, j) - cov.get(j, i)).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn apply_rows_matches_per_row_matvec() {
+        let w = Mat::from_fn(2, 3, |i, j| (i + j) as f32);
+        let x = Mat::from_fn(4, 3, |i, j| (i * 3 + j) as f32);
+        let y = w.apply_rows(&x);
+        assert_eq!(y.shape(), (4, 2));
+        for i in 0..4 {
+            assert_eq!(y.row(i), w.matvec(x.row(i)).as_slice());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "matvec shape mismatch")]
+    fn matvec_bad_shape_panics() {
+        Mat::zeros(2, 3).matvec(&[1.0, 2.0]);
+    }
+}

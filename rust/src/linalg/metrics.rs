@@ -1,0 +1,142 @@
+//! Quality metrics for dimensionality-reduction / source-separation
+//! outputs: whiteness, off-diagonality, and the Amari separation index.
+
+use super::Mat;
+
+/// Whiteness error `‖E[zzᵀ] − I‖_F / n` of a sample matrix (rows are
+/// samples). Zero iff the samples are perfectly spatially white — the
+/// criterion Eq. 3 of the paper drives to zero.
+pub fn whiteness_error(z: &Mat) -> f64 {
+    let cov = z.covariance(false, false);
+    let n = cov.rows_count();
+    let mut err = 0.0f64;
+    for i in 0..n {
+        for j in 0..n {
+            let target = if i == j { 1.0 } else { 0.0 };
+            let d = cov.get(i, j) as f64 - target;
+            err += d * d;
+        }
+    }
+    err.sqrt() / n as f64
+}
+
+/// Relative off-diagonal mass of a square matrix:
+/// `‖offdiag(A)‖_F / ‖diag(A)‖_F`. Zero for diagonal matrices.
+pub fn off_diagonality(a: &Mat) -> f64 {
+    let (n, m) = a.shape();
+    assert_eq!(n, m, "off_diagonality needs a square matrix");
+    let mut off = 0.0f64;
+    let mut diag = 0.0f64;
+    for i in 0..n {
+        for j in 0..n {
+            let v = a.get(i, j) as f64;
+            if i == j {
+                diag += v * v;
+            } else {
+                off += v * v;
+            }
+        }
+    }
+    (off.sqrt()) / (diag.sqrt() + 1e-30)
+}
+
+/// Amari separation index of the global system `P = B·A` (separation ×
+/// mixing). Zero iff `P` is a scaled permutation — i.e. the sources are
+/// perfectly separated up to order/scale, the invariance class of ICA.
+///
+/// Standard form (Amari et al., NIPS'96), normalised to `[0, 1]`-ish:
+/// the sum of row-wise and column-wise "how far from a one-hot" scores.
+pub fn amari_index(p: &Mat) -> f64 {
+    let (n, m) = p.shape();
+    assert_eq!(n, m, "amari_index needs a square global matrix");
+    let nf = n as f64;
+    let mut total = 0.0f64;
+    // Row term.
+    for i in 0..n {
+        let row_max = (0..n).map(|j| p.get(i, j).abs() as f64).fold(0.0, f64::max);
+        let row_sum: f64 = (0..n).map(|j| p.get(i, j).abs() as f64).sum();
+        total += row_sum / (row_max + 1e-30) - 1.0;
+    }
+    // Column term.
+    for j in 0..n {
+        let col_max = (0..n).map(|i| p.get(i, j).abs() as f64).fold(0.0, f64::max);
+        let col_sum: f64 = (0..n).map(|i| p.get(i, j).abs() as f64).sum();
+        total += col_sum / (col_max + 1e-30) - 1.0;
+    }
+    total / (2.0 * nf * (nf - 1.0))
+}
+
+/// Maximum absolute elementwise difference between two equal-shape
+/// matrices — the tolerance metric used to cross-check the native Rust
+/// implementations against the PJRT-executed artifacts.
+pub fn max_abs_diff(a: &Mat, b: &Mat) -> f32 {
+    assert_eq!(a.shape(), b.shape(), "max_abs_diff shape mismatch");
+    a.as_slice()
+        .iter()
+        .zip(b.as_slice())
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Pcg64, RngExt};
+
+    #[test]
+    fn whiteness_of_gaussian_iid_is_small() {
+        let mut rng = Pcg64::seed(10);
+        let x = Mat::from_fn(20_000, 4, |_, _| rng.next_gaussian() as f32);
+        assert!(whiteness_error(&x) < 0.02);
+    }
+
+    #[test]
+    fn whiteness_detects_correlation() {
+        let mut rng = Pcg64::seed(11);
+        let x = Mat::from_fn(5_000, 2, |_, _| rng.next_gaussian() as f32);
+        // Correlate the columns strongly.
+        let y = Mat::from_fn(5_000, 2, |i, j| {
+            if j == 0 {
+                x.get(i, 0)
+            } else {
+                0.9 * x.get(i, 0) + 0.1 * x.get(i, 1)
+            }
+        });
+        assert!(whiteness_error(&y) > 0.3);
+    }
+
+    #[test]
+    fn amari_zero_for_scaled_permutation() {
+        // P = permutation with scales — perfect separation.
+        let p = Mat::from_vec(3, 3, vec![0.0, 2.0, 0.0, -3.0, 0.0, 0.0, 0.0, 0.0, 0.5]);
+        assert!(amari_index(&p) < 1e-9);
+    }
+
+    #[test]
+    fn amari_positive_for_mixing() {
+        let p = Mat::from_vec(2, 2, vec![1.0, 0.5, 0.5, 1.0]);
+        assert!(amari_index(&p) > 0.2);
+    }
+
+    #[test]
+    fn amari_max_for_uniform() {
+        // All-equal |entries| is the worst case; index → (n-1)·2n/(2n(n-1)) = 1.
+        let p = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        assert!((amari_index(&p) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn off_diagonality_basics() {
+        let d = Mat::from_vec(2, 2, vec![2.0, 0.0, 0.0, 3.0]);
+        assert!(off_diagonality(&d) < 1e-12);
+        let m = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        assert!(off_diagonality(&m) > 0.9);
+    }
+
+    #[test]
+    fn max_abs_diff_basics() {
+        let a = Mat::from_vec(1, 3, vec![1.0, 2.0, 3.0]);
+        let b = Mat::from_vec(1, 3, vec![1.5, 2.0, 2.0]);
+        assert_eq!(max_abs_diff(&a, &b), 1.0);
+    }
+}

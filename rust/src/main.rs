@@ -1,0 +1,259 @@
+//! `dimred` — CLI for the hardware-friendly dimensionality-reduction
+//! training service (Nazemi et al. 2018 reproduction).
+//!
+//! Subcommands:
+//!   train        stream-train a DR pipeline (+ downstream classifier)
+//!   table1       regenerate the paper's Table I (accuracy)
+//!   table2       regenerate the paper's Table II (FPGA cost model)
+//!   fig1 <set>   regenerate a Fig. 1 accuracy-vs-dimensions series
+//!   artifacts    list the AOT artifacts the runtime can execute
+//!   timing       pipeline timing model (frequency / latency)
+//!
+//! Examples:
+//!   dimred train --dataset waveform --mode rp-easi --backend pjrt \
+//!       --intermediate-dim 16 --output-dim 8
+//!   dimred table2
+//!   dimred fig1 mnist --points 4
+
+use anyhow::{bail, Context, Result};
+use dimred::config::{Backend, ExperimentConfig};
+use dimred::coordinator::TrainingService;
+use dimred::datasets::{
+    ads_like::AdsLikeConfig, har_like::HarLikeConfig, mnist_like::MnistLikeConfig,
+    waveform::WaveformConfig, Dataset,
+};
+use dimred::hwmodel::{paper_table_ii_configs, table_ii, HwConfig, PipelineModel, PAPER_TABLE_II};
+use dimred::runtime::Runtime;
+use dimred::util::cli::Args;
+use std::path::Path;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const FLAGS: &[&str] = &["no-classifier", "help", "verbose"];
+
+fn run() -> Result<()> {
+    let args = Args::from_env(FLAGS)?;
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "train" => cmd_train(&args),
+        "table1" => cmd_table1(&args),
+        "table2" => cmd_table2(&args),
+        "fig1" => cmd_fig1(&args),
+        "artifacts" => cmd_artifacts(&args),
+        "timing" => cmd_timing(&args),
+        "help" | "--help" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try `dimred help`)"),
+    }
+}
+
+const HELP: &str = "\
+dimred — hardware-friendly dimensionality reduction (paper reproduction)
+
+USAGE: dimred <command> [options]
+
+COMMANDS:
+  train       stream-train a DR pipeline, then train + evaluate the
+              2x64 classifier on the reduced features
+  table1      regenerate Table I (waveform accuracy, 4 configurations)
+  table2      regenerate Table II (Arria-10 resource model)
+  fig1 <ds>   regenerate Fig. 1 (accuracy vs output dims; ds = mnist|har|ads)
+  artifacts   list AOT executables from the manifest
+  timing      clock/latency model for EASI vs RP+EASI
+
+TRAIN OPTIONS:
+  --dataset waveform|mnist|har|ads   (default waveform)
+  --mode easi|pca-whiten|rp|rp-easi  (default rp-easi)
+  --backend native|pjrt              (default native)
+  --input-dim M --intermediate-dim P --output-dim N
+  --mu F --epochs E --batch B --seed S --queue-depth Q
+  --artifacts DIR                    (default artifacts/)
+  --config FILE.json                 (load config, flags override)
+  --no-classifier                    (skip the MLP stage)
+";
+
+/// Load a dataset by CLI name, standardised (zero mean / unit variance
+/// on training statistics), matching the paper's preprocessing.
+pub fn load_dataset(name: &str, seed: u64) -> Result<Dataset> {
+    let mut d = match name {
+        "waveform" => WaveformConfig {
+            seed,
+            ..WaveformConfig::paper()
+        }
+        .generate(),
+        "mnist" => MnistLikeConfig {
+            train: 3000,
+            test: 800,
+            seed,
+            ..Default::default()
+        }
+        .generate(),
+        "har" => HarLikeConfig {
+            train: 2000,
+            test: 500,
+            seed,
+        }
+        .generate(),
+        "ads" => AdsLikeConfig {
+            train: 2000,
+            test: 500,
+            seed,
+            ..Default::default()
+        }
+        .generate(),
+        other => {
+            if let Some(path) = other.strip_prefix("csv:") {
+                dimred::datasets::csv::load_csv(Path::new(path), "csv", 0.8)?
+            } else {
+                bail!("unknown dataset '{other}' (waveform|mnist|har|ads|csv:<path>)")
+            }
+        }
+    };
+    d.standardize();
+    Ok(d)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut cfg = match args.opt_str("config") {
+        Some(path) => ExperimentConfig::from_file(Path::new(path))?,
+        None => ExperimentConfig::default(),
+    };
+    cfg.apply_args(args)?;
+    let data = load_dataset(&cfg.dataset, cfg.seed)?;
+    anyhow::ensure!(
+        data.input_dim() == cfg.input_dim,
+        "dataset '{}' has m={}, but config says {} (pass --input-dim {})",
+        cfg.dataset,
+        data.input_dim(),
+        cfg.input_dim,
+        data.input_dim()
+    );
+
+    let runtime = match cfg.backend {
+        Backend::Pjrt => Some(
+            Runtime::load(&cfg.artifact_dir)
+                .context("loading artifacts (run `make artifacts`)")?,
+        ),
+        Backend::Native => None,
+    };
+    if let Some(rt) = &runtime {
+        println!("# PJRT platform: {}", rt.platform());
+    }
+    println!(
+        "# train: dataset={} mode={} backend={:?} m={} p={} n={} mu={} epochs={} batch={}",
+        cfg.dataset,
+        cfg.mode.label(),
+        cfg.backend,
+        cfg.input_dim,
+        cfg.intermediate_dim,
+        cfg.output_dim,
+        cfg.mu,
+        cfg.epochs,
+        cfg.batch
+    );
+
+    let mut svc = TrainingService::new(cfg.clone(), runtime.as_ref());
+    let report = svc.run(&data)?;
+    println!("# {}", report.metrics.summary());
+    println!(
+        "# final update magnitude: {:.3e}",
+        report.final_update_magnitude
+    );
+    for (samples, mag) in &report.metrics.convergence_trace {
+        println!("trace {samples} {mag:.6}");
+    }
+    if let Some(acc) = report.test_accuracy {
+        println!("test_accuracy {:.4}", acc);
+    }
+    Ok(())
+}
+
+fn cmd_table1(args: &Args) -> Result<()> {
+    let backend = Backend::parse(&args.str_or("backend", "native"))?;
+    let epochs = args.usize_or("epochs", 8)?;
+    let seed = args.u64_or("seed", 2018)?;
+    let artifact_dir = args.str_or("artifacts", "artifacts");
+    let runtime = match backend {
+        Backend::Pjrt => Some(Runtime::load(Path::new(&artifact_dir))?),
+        Backend::Native => None,
+    };
+    let rows = dimred::experiments::table1::run(runtime.as_ref(), backend, epochs, seed)?;
+    println!("{}", dimred::experiments::table1::render(&rows));
+    Ok(())
+}
+
+fn cmd_table2(_args: &Args) -> Result<()> {
+    let rows = table_ii(&paper_table_ii_configs());
+    println!("Table II — hardware cost (model) vs paper");
+    println!(
+        "{:<28} {:>8} {:>10} {:>12}   {:>8} {:>10} {:>12}",
+        "configuration", "DSPs", "ALMs", "reg bits", "paper", "paper", "paper"
+    );
+    for (row, paper) in rows.iter().zip(PAPER_TABLE_II.iter()) {
+        let cfg = match row.intermediate {
+            Some(p) => HwConfig::rp_easi(row.input, p, row.output),
+            None => HwConfig::easi(row.input, row.output),
+        };
+        println!(
+            "{:<28} {:>8} {:>10} {:>12}   {:>8} {:>10} {:>12}",
+            cfg.label(),
+            row.dsps,
+            row.alms,
+            row.register_bits,
+            paper.0,
+            paper.1,
+            paper.2
+        );
+    }
+    Ok(())
+}
+
+fn cmd_fig1(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .unwrap_or("mnist");
+    let points = args.usize_or("points", 5)?;
+    let seed = args.u64_or("seed", 2018)?;
+    let series = dimred::experiments::fig1::run(which, points, seed)?;
+    println!("{}", dimred::experiments::fig1::render(which, &series));
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    let dir = args.str_or("artifacts", "artifacts");
+    let manifest = dimred::runtime::Manifest::load(Path::new(&dir))?;
+    println!("{} artifacts in {}", manifest.artifacts.len(), dir);
+    for (name, spec) in &manifest.artifacts {
+        let ins: Vec<String> = spec.inputs.iter().map(|t| format!("{:?}", t.shape)).collect();
+        println!("  {:<36} inputs {} — {}", name, ins.join(" "), spec.description);
+    }
+    Ok(())
+}
+
+fn cmd_timing(args: &Args) -> Result<()> {
+    let m = args.usize_or("input-dim", 32)?;
+    let p = args.usize_or("intermediate-dim", 16)?;
+    let n = args.usize_or("output-dim", 8)?;
+    let model = PipelineModel::default();
+    for cfg in [HwConfig::easi(m, n), HwConfig::rp_easi(m, p, n)] {
+        let t = model.timing(&cfg);
+        println!(
+            "{:<28} f_clk {:.2} MHz  throughput {:.2} Msamples/s  latency {} cycles ({:.1} ns)",
+            cfg.label(),
+            t.f_clk_hz / 1e6,
+            t.throughput_samples_per_s / 1e6,
+            t.latency_cycles,
+            t.latency_ns
+        );
+    }
+    Ok(())
+}

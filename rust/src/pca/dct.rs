@@ -1,0 +1,216 @@
+//! The "bilinear transform" baseline of Fig. 1: a fixed (data-free)
+//! orthogonal transform followed by coefficient truncation. For images
+//! we use the separable 2-D DCT-II and keep the top-left (low-frequency)
+//! zig-zag block; for generic vectors, the 1-D DCT-II truncated to the
+//! first `k` coefficients.
+//!
+//! This is the classic "transform coding" baseline: excellent when the
+//! signal energy is concentrated in low frequencies (natural images —
+//! Fig. 1a), poor when class information lives elsewhere (HAR — the
+//! paper's Fig. 1b shows it below 60%).
+
+use crate::linalg::Mat;
+
+/// Orthonormal DCT-II basis matrix of size `n×n` (rows are basis
+/// functions).
+pub fn dct_matrix(n: usize) -> Mat {
+    assert!(n >= 1);
+    let scale0 = (1.0 / n as f64).sqrt();
+    let scale = (2.0 / n as f64).sqrt();
+    Mat::from_fn(n, n, |k, i| {
+        let s = if k == 0 { scale0 } else { scale };
+        (s * ((std::f64::consts::PI / n as f64) * (i as f64 + 0.5) * k as f64).cos()) as f32
+    })
+}
+
+/// 1-D DCT-II truncation: keep the first `k` coefficients of each row.
+#[derive(Debug, Clone)]
+pub struct Dct1d {
+    basis: Mat, // k×n
+}
+
+impl Dct1d {
+    pub fn new(input_dim: usize, k: usize) -> Self {
+        assert!(k >= 1 && k <= input_dim);
+        let full = dct_matrix(input_dim);
+        let basis = Mat::from_fn(k, input_dim, |i, j| full.get(i, j));
+        Self { basis }
+    }
+
+    pub fn transform(&self, x: &[f32]) -> Vec<f32> {
+        self.basis.matvec(x)
+    }
+
+    pub fn transform_rows(&self, x: &Mat) -> Mat {
+        self.basis.apply_rows(x)
+    }
+
+    /// The transform as a dense matrix (for cost accounting / export).
+    pub fn matrix(&self) -> &Mat {
+        &self.basis
+    }
+}
+
+/// 2-D separable DCT-II truncation for `side×side` images flattened
+/// row-major: keeps coefficients in zig-zag (low-frequency-first) order.
+#[derive(Debug, Clone)]
+pub struct Dct2d {
+    side: usize,
+    k: usize,
+    basis: Mat, // side×side 1-D basis
+    /// Zig-zag order of (u, v) coefficient indices.
+    order: Vec<(usize, usize)>,
+}
+
+impl Dct2d {
+    pub fn new(side: usize, k: usize) -> Self {
+        assert!(k >= 1 && k <= side * side);
+        let basis = dct_matrix(side);
+        let order = zigzag(side);
+        Self {
+            side,
+            k,
+            basis,
+            order,
+        }
+    }
+
+    /// Transform one flattened image → `k` low-frequency coefficients.
+    pub fn transform(&self, x: &[f32]) -> Vec<f32> {
+        let s = self.side;
+        assert_eq!(x.len(), s * s, "dct2d input size");
+        // C · X · Cᵀ via two passes of the 1-D basis.
+        // tmp[u][j] = Σ_i basis[u][i] x[i][j]
+        let mut tmp = vec![0.0f32; s * s];
+        for u in 0..s {
+            let brow = self.basis.row(u);
+            for j in 0..s {
+                let mut acc = 0.0;
+                for i in 0..s {
+                    acc += brow[i] * x[i * s + j];
+                }
+                tmp[u * s + j] = acc;
+            }
+        }
+        // coef[u][v] = Σ_j tmp[u][j] basis[v][j]
+        self.order
+            .iter()
+            .take(self.k)
+            .map(|&(u, v)| {
+                let brow = self.basis.row(v);
+                let trow = &tmp[u * s..(u + 1) * s];
+                crate::linalg::dot(trow, brow)
+            })
+            .collect()
+    }
+
+    pub fn transform_rows(&self, x: &Mat) -> Mat {
+        let rows = x.rows_count();
+        let mut out = Vec::with_capacity(rows * self.k);
+        for r in x.rows() {
+            out.extend(self.transform(r));
+        }
+        Mat::from_vec(rows, self.k, out)
+    }
+}
+
+/// Zig-zag traversal order of an `n×n` coefficient grid (JPEG-style):
+/// anti-diagonals of increasing `u+v`.
+fn zigzag(n: usize) -> Vec<(usize, usize)> {
+    let mut order = Vec::with_capacity(n * n);
+    for s in 0..(2 * n - 1) {
+        let mut diag: Vec<(usize, usize)> = (0..n)
+            .filter_map(|u| {
+                let v = s.checked_sub(u)?;
+                (v < n).then_some((u, v))
+            })
+            .collect();
+        if s % 2 == 1 {
+            diag.reverse();
+        }
+        order.extend(diag);
+    }
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dot;
+
+    #[test]
+    fn dct_matrix_is_orthonormal() {
+        let c = dct_matrix(8);
+        for i in 0..8 {
+            for j in 0..8 {
+                let d = dot(c.row(i), c.row(j));
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((d - expect).abs() < 1e-5, "({i},{j}) = {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn dc_coefficient_is_mean_scaled() {
+        let d = Dct1d::new(4, 1);
+        let y = d.transform(&[1.0, 1.0, 1.0, 1.0]);
+        // DC basis = 1/√4 each ⇒ coefficient = 4·(1/2) = 2.
+        assert!((y[0] - 2.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn constant_image_energy_in_dc_only() {
+        let d = Dct2d::new(4, 16);
+        let y = d.transform(&[3.0; 16]);
+        assert!(y[0].abs() > 1.0, "DC coefficient holds the energy");
+        for &c in &y[1..] {
+            assert!(c.abs() < 1e-4, "AC leak: {c}");
+        }
+    }
+
+    #[test]
+    fn zigzag_covers_grid() {
+        let z = zigzag(5);
+        assert_eq!(z.len(), 25);
+        let mut seen = vec![false; 25];
+        for (u, v) in z {
+            seen[u * 5 + v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn zigzag_low_freq_first() {
+        let z = zigzag(8);
+        assert_eq!(z[0], (0, 0));
+        // The first few entries all have small u+v.
+        assert!(z[1..3].iter().all(|&(u, v)| u + v == 1));
+        assert!(z[3..6].iter().all(|&(u, v)| u + v == 2));
+    }
+
+    #[test]
+    fn energy_preserved_full_transform() {
+        // Full DCT (k = n) is orthonormal ⇒ ‖y‖ = ‖x‖.
+        let d = Dct1d::new(16, 16);
+        let x: Vec<f32> = (0..16).map(|i| (i as f32 * 0.37).sin()).collect();
+        let y = d.transform(&x);
+        let ex: f32 = x.iter().map(|v| v * v).sum();
+        let ey: f32 = y.iter().map(|v| v * v).sum();
+        assert!((ex - ey).abs() < 1e-3);
+    }
+
+    #[test]
+    fn smooth_signal_compacts_into_few_coeffs() {
+        // Low-frequency signal: truncation to 4 coefficients keeps most
+        // of the energy — the property that makes this baseline strong
+        // on images.
+        let x: Vec<f32> = (0..32)
+            .map(|i| (std::f32::consts::PI * i as f32 / 32.0).sin())
+            .collect();
+        let full = Dct1d::new(32, 32).transform(&x);
+        let trunc = Dct1d::new(32, 4).transform(&x);
+        let e_full: f32 = full.iter().map(|v| v * v).sum();
+        let e_trunc: f32 = trunc.iter().map(|v| v * v).sum();
+        assert!(e_trunc / e_full > 0.95, "ratio {}", e_trunc / e_full);
+    }
+}

@@ -1,0 +1,220 @@
+//! PCA whitening (adaptive and batch) and the bilinear-transform
+//! baseline.
+//!
+//! * [`AdaptiveWhitener`] — Eq. 3 of the paper, i.e. the EASI datapath
+//!   with the HOS term muxed out ([`crate::easi::EasiMode::WhitenOnly`]).
+//! * [`BatchPca`] — covariance + Jacobi eigendecomposition oracle; also
+//!   the "PCA" series of Fig. 1.
+//! * [`dct`] — the separable DCT-II "bilinear transform" baseline of
+//!   Fig. 1.
+
+pub mod dct;
+
+use crate::easi::{EasiConfig, EasiMode, EasiTrainer};
+use crate::linalg::{symmetric_eigen, Mat};
+
+/// Streaming PCA whitening via the Kullback–Leibler gradient recursion
+/// `W ← W − μ[zzᵀ − I]W` (paper Eq. 3) — a thin configuration of the
+/// EASI trainer, mirroring how the paper reuses one datapath for both
+/// algorithms.
+#[derive(Debug, Clone)]
+pub struct AdaptiveWhitener {
+    inner: EasiTrainer,
+}
+
+impl AdaptiveWhitener {
+    pub fn new(input_dim: usize, output_dim: usize, mu: f32) -> Self {
+        Self {
+            inner: EasiTrainer::new(EasiConfig {
+                input_dim,
+                output_dim,
+                mu,
+                mode: EasiMode::WhitenOnly,
+                normalized: false,
+                max_norm: 1e4,
+                clip: 0.0,
+                random_init: None,
+            }),
+        }
+    }
+
+    /// One streaming update.
+    pub fn step(&mut self, x: &[f32]) {
+        self.inner.step(x);
+    }
+
+    /// Consume all rows.
+    pub fn step_rows(&mut self, x: &Mat) {
+        self.inner.step_rows(x);
+    }
+
+    /// The whitening matrix `W (n×m)`.
+    pub fn whitening_matrix(&self) -> &Mat {
+        self.inner.separation_matrix()
+    }
+
+    /// `z = Wx`.
+    pub fn transform(&self, x: &[f32]) -> Vec<f32> {
+        self.inner.transform(x)
+    }
+
+    /// Whiteness of outputs on given samples (→ 0 at convergence).
+    pub fn output_whiteness(&self, x: &Mat) -> f64 {
+        self.inner.output_whiteness(x)
+    }
+}
+
+/// Batch PCA fitted by eigendecomposition of the sample covariance.
+#[derive(Debug, Clone)]
+pub struct BatchPca {
+    /// Column means of the training data (subtracted before projecting).
+    pub means: Vec<f32>,
+    /// Eigenvalues of the covariance, descending.
+    pub eigenvalues: Vec<f64>,
+    /// Principal axes as rows (descending eigenvalue order), `k×m`.
+    pub components: Mat,
+    /// Whitening rows `λ_i^{-1/2} v_iᵀ`, `k×m`.
+    pub whitening: Mat,
+}
+
+impl BatchPca {
+    /// Fit from data rows, keeping `k` components.
+    ///
+    /// Small covariances use cyclic Jacobi (all pairs, exact); beyond
+    /// 96 dimensions Jacobi's O(m³)-per-sweep cost dominates and we
+    /// switch to subspace iteration for the leading k pairs — PCA only
+    /// needs those.
+    pub fn fit(x: &Mat, k: usize) -> Self {
+        let m = x.cols_count();
+        assert!(k >= 1 && k <= m, "component count out of range");
+        let means = x.col_means();
+        let cov = x.covariance(true, false);
+        let eig = if m <= 96 {
+            symmetric_eigen(&cov)
+        } else {
+            crate::linalg::subspace_eigen(&cov, k, 60, 17)
+        };
+        let components = Mat::from_fn(k, m, |i, j| eig.vectors.get(i, j));
+        let whitening = Mat::from_fn(k, m, |i, j| {
+            let lam = eig.values[i].max(1e-12);
+            (eig.vectors.get(i, j) as f64 / lam.sqrt()) as f32
+        });
+        Self {
+            means,
+            eigenvalues: eig.values[..k].to_vec(),
+            components,
+            whitening,
+        }
+    }
+
+    /// Project (no variance normalisation): `y = V(x − μ)`.
+    pub fn transform(&self, x: &[f32]) -> Vec<f32> {
+        let centered: Vec<f32> = x.iter().zip(&self.means).map(|(a, m)| a - m).collect();
+        self.components.matvec(&centered)
+    }
+
+    /// Whiten: `z = Λ^{-1/2} V (x − μ)`.
+    pub fn whiten(&self, x: &[f32]) -> Vec<f32> {
+        let centered: Vec<f32> = x.iter().zip(&self.means).map(|(a, m)| a - m).collect();
+        self.whitening.matvec(&centered)
+    }
+
+    /// Apply [`Self::transform`] to all rows.
+    pub fn transform_rows(&self, x: &Mat) -> Mat {
+        let rows = x.rows_count();
+        let mut out = Vec::with_capacity(rows * self.components.rows_count());
+        for r in x.rows() {
+            out.extend(self.transform(r));
+        }
+        Mat::from_vec(rows, self.components.rows_count(), out)
+    }
+
+    /// Apply [`Self::whiten`] to all rows.
+    pub fn whiten_rows(&self, x: &Mat) -> Mat {
+        let rows = x.rows_count();
+        let mut out = Vec::with_capacity(rows * self.whitening.rows_count());
+        for r in x.rows() {
+            out.extend(self.whiten(r));
+        }
+        Mat::from_vec(rows, self.whitening.rows_count(), out)
+    }
+
+    /// Fraction of total variance captured by the kept components.
+    pub fn explained_variance_ratio(&self, x: &Mat) -> f64 {
+        let cov = x.covariance(true, false);
+        let total: f64 = (0..cov.rows_count()).map(|i| cov.get(i, i) as f64).sum();
+        self.eigenvalues.iter().sum::<f64>() / total.max(1e-12)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::whiteness_error;
+    use crate::rng::{Pcg64, RngExt};
+
+    /// Correlated 2-D Gaussian data with known principal axis (1,1)/√2.
+    fn correlated(samples: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::seed(seed);
+        let mut data = Vec::with_capacity(samples * 2);
+        for _ in 0..samples {
+            let a = rng.next_gaussian() as f32 * 3.0;
+            let b = rng.next_gaussian() as f32 * 0.5;
+            data.push((a + b) * std::f32::consts::FRAC_1_SQRT_2);
+            data.push((a - b) * std::f32::consts::FRAC_1_SQRT_2);
+        }
+        Mat::from_vec(samples, 2, data)
+    }
+
+    #[test]
+    fn batch_pca_finds_principal_axis() {
+        let x = correlated(5000, 51);
+        let pca = BatchPca::fit(&x, 2);
+        // First component ≈ ±(1,1)/√2.
+        let c = pca.components.row(0);
+        let alignment = (c[0] * std::f32::consts::FRAC_1_SQRT_2
+            + c[1] * std::f32::consts::FRAC_1_SQRT_2)
+            .abs();
+        assert!(alignment > 0.99, "alignment {alignment}");
+        // Eigenvalues ≈ 9 and 0.25.
+        assert!((pca.eigenvalues[0] - 9.0).abs() < 0.5);
+        assert!((pca.eigenvalues[1] - 0.25).abs() < 0.1);
+    }
+
+    #[test]
+    fn batch_whitening_whitens() {
+        let x = correlated(5000, 52);
+        let pca = BatchPca::fit(&x, 2);
+        let z = pca.whiten_rows(&x);
+        let w = whiteness_error(&z);
+        assert!(w < 0.05, "whiteness {w}");
+    }
+
+    #[test]
+    fn adaptive_matches_batch_asymptotically() {
+        let x = correlated(8000, 53);
+        let mut aw = AdaptiveWhitener::new(2, 2, 2e-3);
+        for _ in 0..4 {
+            aw.step_rows(&x);
+        }
+        let w = aw.output_whiteness(&x);
+        assert!(w < 0.1, "adaptive whiteness {w}");
+    }
+
+    #[test]
+    fn explained_variance_monotone() {
+        let x = correlated(2000, 54);
+        let r1 = BatchPca::fit(&x, 1).explained_variance_ratio(&x);
+        let r2 = BatchPca::fit(&x, 2).explained_variance_ratio(&x);
+        assert!(r1 <= r2 + 1e-9);
+        assert!((r2 - 1.0).abs() < 1e-6, "full rank must explain all: {r2}");
+        assert!(r1 > 0.9, "dominant axis explains most: {r1}");
+    }
+
+    #[test]
+    fn transform_reduces_dim() {
+        let x = correlated(100, 55);
+        let pca = BatchPca::fit(&x, 1);
+        assert_eq!(pca.transform_rows(&x).shape(), (100, 1));
+    }
+}

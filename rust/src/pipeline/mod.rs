@@ -1,0 +1,342 @@
+//! Composed dimensionality-reduction pipelines — the paper's §IV
+//! proposal as a first-class API.
+//!
+//! A [`DrPipeline`] is an optional random-projection front end followed
+//! by an optional trained stage (EASI in one of its modes, or batch
+//! PCA, or a fixed DCT). The paper's proposed configuration is
+//! `Rp → Easi(RotationOnly)`; the baselines of Table I and Fig. 1 are
+//! other points in the same space, which is exactly the
+//! reconfigurability story of §IV.
+
+pub mod unit;
+
+pub use unit::{DrUnit, DrUnitConfig};
+
+use crate::datasets::Dataset;
+use crate::easi::{EasiConfig, EasiMode, EasiTrainer};
+use crate::linalg::Mat;
+use crate::pca::dct::Dct1d;
+use crate::pca::BatchPca;
+use crate::rp::{RandomProjection, RpDistribution};
+
+/// Declarative pipeline specification (maps 1:1 onto the CLI / TOML
+/// config and onto AOT artifact variants).
+#[derive(Debug, Clone)]
+pub struct PipelineSpec {
+    /// Input dimensionality `m`.
+    pub input_dim: usize,
+    /// Optional RP front end: `(intermediate_dim, distribution)`.
+    pub rp: Option<RpStage>,
+    /// The trained / fixed second stage.
+    pub stage: StageSpec,
+    /// Output dimensionality `n`.
+    pub output_dim: usize,
+    /// Seed for all randomness (R matrix, init).
+    pub seed: u64,
+}
+
+/// RP front-end declaration.
+#[derive(Debug, Clone, Copy)]
+pub struct RpStage {
+    pub intermediate_dim: usize,
+    pub distribution: RpDistribution,
+}
+
+/// Second-stage declaration.
+#[derive(Debug, Clone, Copy)]
+pub enum StageSpec {
+    /// Adaptive EASI with the given mode and learning rate — the
+    /// paper-literal rectangular Eq. 6 datapath. NOTE: its row space is
+    /// frozen at init (see crate::gha docs); prefer [`StageSpec::Ica`]
+    /// for an actually-learning reduction stage.
+    Easi { mode: EasiMode, mu: f32, epochs: usize },
+    /// The composed GHA-whitening + EASI-rotation unit (production
+    /// pipeline; see pipeline::unit).
+    Ica { mu_w: f32, mu_rot: f32, epochs: usize },
+    /// Batch PCA projection (no whitening).
+    Pca,
+    /// Batch PCA whitening.
+    PcaWhiten,
+    /// Fixed 1-D DCT truncation ("bilinear transform" baseline).
+    Dct,
+    /// No second stage: RP only (requires `rp` so dims still reduce).
+    Identity,
+}
+
+impl PipelineSpec {
+    /// The paper's proposed configuration: ternary RP to `p`, then
+    /// rotation-only EASI to `n`.
+    pub fn proposed(m: usize, p: usize, n: usize, mu: f32, epochs: usize, seed: u64) -> Self {
+        Self {
+            input_dim: m,
+            rp: Some(RpStage {
+                intermediate_dim: p,
+                distribution: RpDistribution::Ternary,
+            }),
+            stage: StageSpec::Easi {
+                mode: EasiMode::RotationOnly,
+                mu,
+                epochs,
+            },
+            output_dim: n,
+            seed,
+        }
+    }
+
+    /// Baseline: full EASI straight from `m` to `n` (Table I rows 1, 3).
+    pub fn easi_only(m: usize, n: usize, mu: f32, epochs: usize, seed: u64) -> Self {
+        Self {
+            input_dim: m,
+            rp: None,
+            stage: StageSpec::Easi {
+                mode: EasiMode::Full,
+                mu,
+                epochs,
+            },
+            output_dim: n,
+            seed,
+        }
+    }
+
+    /// The dimensionality the trained stage consumes.
+    pub fn stage_input_dim(&self) -> usize {
+        self.rp.map_or(self.input_dim, |r| r.intermediate_dim)
+    }
+}
+
+/// A fitted pipeline, ready to transform samples.
+pub struct DrPipeline {
+    pub spec: PipelineSpec,
+    rp: Option<RandomProjection>,
+    stage: FittedStage,
+}
+
+enum FittedStage {
+    Easi(EasiTrainer),
+    Unit(unit::DrUnit),
+    Pca(BatchPca, /*whiten=*/ bool),
+    Dct(Dct1d),
+    Identity,
+}
+
+impl DrPipeline {
+    /// Fit the pipeline on training data (rows are samples). The DR
+    /// model trains unsupervised, as in the paper's §V.B protocol.
+    pub fn fit(spec: PipelineSpec, train_x: &Mat) -> Self {
+        assert_eq!(train_x.cols_count(), spec.input_dim, "input dim mismatch");
+        let rp = spec.rp.map(|r| {
+            let proj = RandomProjection::new(
+                spec.input_dim,
+                r.intermediate_dim,
+                r.distribution,
+                spec.seed,
+            );
+            // Adaptive stages assume unit-variance inputs; fixed stages
+            // get the raw distance-preserving projection.
+            if matches!(spec.stage, StageSpec::Easi { .. } | StageSpec::Ica { .. }) {
+                proj.unit_variance()
+            } else {
+                proj
+            }
+        });
+        // Materialise the (possibly projected) training view for the
+        // second stage.
+        let staged: Mat = match &rp {
+            Some(proj) => proj.apply_rows(train_x),
+            None => train_x.clone(),
+        };
+        let stage = match spec.stage {
+            StageSpec::Easi { mode, mu, epochs } => {
+                let mut t = EasiTrainer::new(EasiConfig {
+                    input_dim: spec.stage_input_dim(),
+                    output_dim: spec.output_dim,
+                    mu,
+                    mode,
+                    normalized: true,
+                    max_norm: if mode == EasiMode::RotationOnly {
+                        4.0 * (spec.output_dim as f32).sqrt()
+                    } else {
+                        1e4
+                    },
+                    clip: 0.05,
+                    random_init: Some(spec.seed),
+                });
+                for _ in 0..epochs.max(1) {
+                    t.step_rows(&staged);
+                }
+                FittedStage::Easi(t)
+            }
+            StageSpec::Ica { mu_w, mu_rot, epochs } => {
+                let mut u = unit::DrUnit::new(unit::DrUnitConfig {
+                    input_dim: spec.stage_input_dim(),
+                    output_dim: spec.output_dim,
+                    mu_w,
+                    mu_rot,
+                    rotate: true,
+                    rot_warmup: (staged.rows_count() / 2).min(2000) as u64,
+                    seed: spec.seed,
+                });
+                for _ in 0..epochs.max(1) {
+                    u.step_rows(&staged);
+                }
+                FittedStage::Unit(u)
+            }
+            StageSpec::Pca => FittedStage::Pca(BatchPca::fit(&staged, spec.output_dim), false),
+            StageSpec::PcaWhiten => {
+                FittedStage::Pca(BatchPca::fit(&staged, spec.output_dim), true)
+            }
+            StageSpec::Dct => FittedStage::Dct(Dct1d::new(spec.stage_input_dim(), spec.output_dim)),
+            StageSpec::Identity => {
+                assert_eq!(
+                    spec.stage_input_dim(),
+                    spec.output_dim,
+                    "Identity stage requires RP to land on output_dim"
+                );
+                FittedStage::Identity
+            }
+        };
+        Self { spec, rp, stage }
+    }
+
+    /// Transform one sample `m → n`.
+    pub fn transform(&self, x: &[f32]) -> Vec<f32> {
+        let staged: Vec<f32> = match &self.rp {
+            Some(proj) => proj.apply(x),
+            None => x.to_vec(),
+        };
+        match &self.stage {
+            FittedStage::Easi(t) => t.transform(&staged),
+            FittedStage::Unit(u) => u.transform(&staged),
+            FittedStage::Pca(p, false) => p.transform(&staged),
+            FittedStage::Pca(p, true) => p.whiten(&staged),
+            FittedStage::Dct(d) => d.transform(&staged),
+            FittedStage::Identity => staged,
+        }
+    }
+
+    /// Transform every row of a sample matrix.
+    pub fn transform_rows(&self, x: &Mat) -> Mat {
+        let rows = x.rows_count();
+        let mut out = Vec::with_capacity(rows * self.spec.output_dim);
+        for r in x.rows() {
+            out.extend(self.transform(r));
+        }
+        Mat::from_vec(rows, self.spec.output_dim, out)
+    }
+
+    /// Map an entire dataset through the pipeline (used before training
+    /// the downstream classifier).
+    pub fn transform_dataset(&self, d: &Dataset) -> Dataset {
+        Dataset {
+            name: format!("{}+dr{}", d.name, self.spec.output_dim),
+            train_x: self.transform_rows(&d.train_x),
+            train_y: d.train_y.clone(),
+            test_x: self.transform_rows(&d.test_x),
+            test_y: d.test_y.clone(),
+            num_classes: d.num_classes,
+        }
+    }
+
+    /// Access the fitted EASI trainer (None for non-EASI stages) — used
+    /// by the coordinator for checkpointing and by tests.
+    pub fn easi(&self) -> Option<&EasiTrainer> {
+        match &self.stage {
+            FittedStage::Easi(t) => Some(t),
+            _ => None,
+        }
+    }
+
+    /// The RP front end, if any.
+    pub fn rp(&self) -> Option<&RandomProjection> {
+        self.rp.as_ref()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Pcg64, RngExt};
+
+    fn gaussian_data(n: usize, d: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::seed(seed);
+        Mat::from_fn(n, d, |_, _| rng.next_gaussian() as f32)
+    }
+
+    #[test]
+    fn proposed_pipeline_shapes() {
+        let x = gaussian_data(500, 32, 71);
+        let spec = PipelineSpec::proposed(32, 16, 8, 1e-3, 1, 7);
+        let p = DrPipeline::fit(spec, &x);
+        assert_eq!(p.transform(x.row(0)).len(), 8);
+        assert_eq!(p.transform_rows(&x).shape(), (500, 8));
+    }
+
+    #[test]
+    fn easi_only_pipeline_shapes() {
+        let x = gaussian_data(500, 32, 72);
+        let p = DrPipeline::fit(PipelineSpec::easi_only(32, 16, 1e-3, 1, 7), &x);
+        assert_eq!(p.transform_rows(&x).shape(), (500, 16));
+    }
+
+    #[test]
+    fn pca_stage_matches_direct_batch_pca() {
+        let x = gaussian_data(300, 10, 73);
+        let spec = PipelineSpec {
+            input_dim: 10,
+            rp: None,
+            stage: StageSpec::Pca,
+            output_dim: 3,
+            seed: 1,
+        };
+        let p = DrPipeline::fit(spec, &x);
+        let direct = BatchPca::fit(&x, 3);
+        let a = p.transform(x.row(0));
+        let b = direct.transform(x.row(0));
+        for (u, v) in a.iter().zip(&b) {
+            assert!((u - v).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn identity_requires_matching_dims() {
+        let x = gaussian_data(50, 16, 74);
+        let spec = PipelineSpec {
+            input_dim: 16,
+            rp: Some(RpStage {
+                intermediate_dim: 8,
+                distribution: RpDistribution::Ternary,
+            }),
+            stage: StageSpec::Identity,
+            output_dim: 8,
+            seed: 1,
+        };
+        let p = DrPipeline::fit(spec, &x);
+        assert_eq!(p.transform_rows(&x).shape(), (50, 8));
+    }
+
+    #[test]
+    fn transform_dataset_preserves_labels() {
+        use crate::datasets::waveform::WaveformConfig;
+        let d = WaveformConfig {
+            samples: 300,
+            train: 200,
+            ..WaveformConfig::paper()
+        }
+        .generate();
+        let p = DrPipeline::fit(PipelineSpec::proposed(32, 16, 8, 1e-3, 1, 7), &d.train_x);
+        let t = p.transform_dataset(&d);
+        assert_eq!(t.train_y, d.train_y);
+        assert_eq!(t.input_dim(), 8);
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn deterministic_fit() {
+        let x = gaussian_data(200, 32, 75);
+        let run = || {
+            let p = DrPipeline::fit(PipelineSpec::proposed(32, 16, 8, 1e-3, 1, 7), &x);
+            p.transform(x.row(0))
+        };
+        assert_eq!(run(), run());
+    }
+}

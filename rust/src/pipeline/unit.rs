@@ -1,0 +1,326 @@
+//! The composed streaming DR unit: the paper's Fig. 2 decomposition
+//! (whitening → rotation) realised so that every stage can actually
+//! learn:
+//!
+//! ```text
+//!  x (m) ──[RP, fixed ±1]──► (p) ──[GHA subspace + λ̂ scaling]──► z (n)
+//!                                         └──[EASI rotation n×n]──► y
+//! ```
+//!
+//! * the RP front end is the paper's §IV multiplication-free reducer;
+//! * the whitening half is Sanger's GHA (see [`crate::gha`] for why
+//!   Eq. 3's multiplicative recursion cannot serve as a *rectangular*
+//!   whitener — its row space is frozen at init);
+//! * the rotation half is the paper's modified EASI datapath
+//!   (`yyᵀ − I` muxed out) on the whitened square: exactly Eq. 6's HOS
+//!   term, where the multiplicative update is sound because n = n.
+//!
+//! The datapath mux of the paper maps to [`DrUnit::set_rotation`]:
+//! rotation off ⇒ PCA whitening; rotation on ⇒ ICA.
+
+use crate::easi::{EasiConfig, EasiMode, EasiTrainer};
+
+/// Rotation steps between retractions to the orthogonal manifold (also
+/// the cadence the PJRT backend applies host-side between batches).
+pub const RETRACT_INTERVAL: u64 = 256;
+use crate::gha::{GhaConfig, GhaWhitener};
+use crate::linalg::Mat;
+
+/// Configuration for one composed unit (excluding any RP front end,
+/// which the callers own because it is shared across modes).
+#[derive(Debug, Clone)]
+pub struct DrUnitConfig {
+    /// Stage input dimensionality (the paper's m, or p behind RP).
+    pub input_dim: usize,
+    /// Output dimensionality n.
+    pub output_dim: usize,
+    /// GHA (whitening) learning rate.
+    pub mu_w: f32,
+    /// EASI rotation learning rate.
+    pub mu_rot: f32,
+    /// Whether the HOS rotation stage is active (the paper's mux).
+    pub rotate: bool,
+    /// Samples to train the whitener alone before the rotation starts
+    /// learning (the rotation's inputs are meaningless until λ̂ has
+    /// settled; the paper's own Fig. 2 presents whitening and rotation
+    /// as sequential stages).
+    pub rot_warmup: u64,
+    pub seed: u64,
+}
+
+impl Default for DrUnitConfig {
+    fn default() -> Self {
+        Self {
+            input_dim: 32,
+            output_dim: 8,
+            mu_w: 5e-3,
+            mu_rot: 1e-3,
+            rotate: true,
+            rot_warmup: 2000,
+            seed: 2018,
+        }
+    }
+}
+
+/// Streaming whiten(+rotate) unit.
+#[derive(Debug, Clone)]
+pub struct DrUnit {
+    pub config: DrUnitConfig,
+    gha: GhaWhitener,
+    /// Square rotation on the whitened outputs (always allocated so the
+    /// mux can toggle mid-stream; skipped when `rotate` is false).
+    rot: EasiTrainer,
+    scratch_z: Vec<f32>,
+}
+
+impl DrUnit {
+    pub fn new(config: DrUnitConfig) -> Self {
+        let gha = GhaWhitener::new(GhaConfig {
+            input_dim: config.input_dim,
+            output_dim: config.output_dim,
+            mu: config.mu_w,
+            seed: config.seed,
+            ..Default::default()
+        });
+        let rot = EasiTrainer::new(EasiConfig {
+            input_dim: config.output_dim,
+            output_dim: config.output_dim,
+            mu: config.mu_rot,
+            mode: EasiMode::RotationOnly,
+            normalized: true,
+            max_norm: 4.0 * (config.output_dim as f32).sqrt(),
+            clip: 0.05,
+            random_init: None, // identity: a rotation starts at I
+        });
+        let n = config.output_dim;
+        Self {
+            config,
+            gha,
+            rot,
+            scratch_z: vec![0.0; n],
+        }
+    }
+
+    /// One streaming sample: update the whitener, then (if enabled) the
+    /// rotation on the whitened output — the two halves of Fig. 2
+    /// training simultaneously, as the paper's pipelined datapath does.
+    pub fn step(&mut self, x: &[f32]) {
+        self.gha.step(x);
+        if self.config.rotate && self.gha.steps() > self.config.rot_warmup {
+            let z = self.gha.whiten(x);
+            self.scratch_z.copy_from_slice(&z);
+            // Robustness clamp: a whitened coordinate should be O(1);
+            // outliers (heavy tails or a still-settling λ̂) are limited
+            // so the cubic nonlinearity cannot blow up the rotation.
+            for v in &mut self.scratch_z {
+                *v = v.clamp(-4.0, 4.0);
+            }
+            self.rot.step(&self.scratch_z);
+            // Retract U to the rotation manifold periodically: the
+            // multiplicative update drifts off it (singular values of
+            // I − μF are >= 1) and conditioning would otherwise degrade
+            // multiplicatively over long streams.
+            if self.rot.steps() % RETRACT_INTERVAL == 0 {
+                self.rot.reorthonormalize();
+            }
+        }
+    }
+
+    /// Consume every row of a sample matrix.
+    pub fn step_rows(&mut self, x: &Mat) {
+        for i in 0..x.rows_count() {
+            self.step(x.row(i));
+        }
+    }
+
+    /// Toggle the rotation stage (the paper's reconfiguration mux).
+    /// State of both stages is preserved.
+    pub fn set_rotation(&mut self, on: bool) {
+        self.config.rotate = on;
+    }
+
+    pub fn rotation_enabled(&self) -> bool {
+        self.config.rotate
+    }
+
+    /// Transform one sample.
+    pub fn transform(&self, x: &[f32]) -> Vec<f32> {
+        let z = self.gha.whiten(x);
+        if self.config.rotate {
+            self.rot.transform(&z)
+        } else {
+            z
+        }
+    }
+
+    /// The unit as one dense matrix: `U · diag(λ̂^{-1/2}) · W` (or just
+    /// the whitening part with rotation off). Used for bulk transforms,
+    /// checkpointing, and as the `B` fed to inference artifacts.
+    pub fn effective_matrix(&self) -> Mat {
+        let wm = self.gha.whitening_matrix();
+        if self.config.rotate {
+            self.rot.separation_matrix().matmul(&wm)
+        } else {
+            wm
+        }
+    }
+
+    /// Convergence signal: the larger of the two stages' update EMAs
+    /// (the whitener dominates early, the rotation late).
+    pub fn update_magnitude(&self) -> f64 {
+        let gha_like = self.gha_orthonormality();
+        if self.config.rotate {
+            gha_like.max(self.rot.update_magnitude())
+        } else {
+            gha_like
+        }
+    }
+
+    fn gha_orthonormality(&self) -> f64 {
+        self.gha.orthonormality_error()
+    }
+
+    /// Access the whitener (tests, diagnostics).
+    pub fn whitener(&self) -> &GhaWhitener {
+        &self.gha
+    }
+
+    /// Access the rotation stage.
+    pub fn rotation(&self) -> &EasiTrainer {
+        &self.rot
+    }
+
+    /// Restore state (checkpoint / PJRT round-trip).
+    pub fn set_state(&mut self, w: Mat, var: Vec<f32>, u: Mat) {
+        assert_eq!(w.shape(), self.gha.subspace().shape());
+        assert_eq!(var.len(), self.config.output_dim);
+        assert_eq!(u.shape(), self.rot.separation_matrix().shape());
+        self.gha.set_state(w, var);
+        self.rot.set_separation_matrix(u);
+    }
+
+    /// Manually retract the rotation to the orthogonal manifold (the
+    /// PJRT backend calls this between batches at [`RETRACT_INTERVAL`]).
+    pub fn retract(&mut self) {
+        self.rot.reorthonormalize();
+    }
+
+    /// Expose state tensors (W, λ̂, U) for the PJRT backend.
+    pub fn state(&self) -> (&Mat, &[f32], &Mat) {
+        (
+            self.gha.subspace(),
+            self.gha.variances(),
+            self.rot.separation_matrix(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::whiteness_error;
+    use crate::rng::{Pcg64, RngExt};
+
+    fn correlated(samples: usize, dim: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::seed(seed);
+        // Low-rank structure + noise.
+        let mut data = Vec::with_capacity(samples * dim);
+        for _ in 0..samples {
+            let a = rng.next_gaussian() as f32 * 2.0;
+            let b = (rng.next_f32() * 2.0 - 1.0) * 3.0; // sub-Gaussian
+            for j in 0..dim {
+                let s = a * ((j as f32 * 0.7).sin()) + b * ((j as f32 * 0.3).cos());
+                data.push(s + 0.2 * rng.next_gaussian() as f32);
+            }
+        }
+        Mat::from_vec(samples, dim, data)
+    }
+
+    #[test]
+    fn outputs_whiten_and_rotate() {
+        let x = correlated(5000, 10, 81);
+        let mut unit = DrUnit::new(DrUnitConfig {
+            input_dim: 10,
+            output_dim: 3,
+            ..Default::default()
+        });
+        for _ in 0..6 {
+            unit.step_rows(&x);
+        }
+        let y = Mat::from_fn(x.rows_count(), 3, |i, j| unit.transform(x.row(i))[j]);
+        let w = whiteness_error(&y);
+        assert!(w < 0.25, "whiteness after whiten+rotate: {w}");
+    }
+
+    #[test]
+    fn effective_matrix_matches_transform() {
+        let x = correlated(2000, 8, 82);
+        let mut unit = DrUnit::new(DrUnitConfig {
+            input_dim: 8,
+            output_dim: 4,
+            ..Default::default()
+        });
+        unit.step_rows(&x);
+        let eff = unit.effective_matrix();
+        for i in 0..10 {
+            let direct = unit.transform(x.row(i));
+            let via = eff.matvec(x.row(i));
+            for (a, b) in direct.iter().zip(&via) {
+                assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn mux_toggle_preserves_state() {
+        let x = correlated(1000, 8, 83);
+        let mut unit = DrUnit::new(DrUnitConfig {
+            input_dim: 8,
+            output_dim: 4,
+            ..Default::default()
+        });
+        unit.step_rows(&x);
+        let w_before = unit.whitener().subspace().clone();
+        unit.set_rotation(false);
+        assert!(!unit.rotation_enabled());
+        // Whitening-only transform now ignores U but W is untouched.
+        assert_eq!(unit.whitener().subspace().as_slice(), w_before.as_slice());
+        let z = unit.transform(x.row(0));
+        assert_eq!(z.len(), 4);
+        unit.set_rotation(true);
+        assert!(unit.rotation_enabled());
+    }
+
+    #[test]
+    fn whiten_only_mode_skips_rotation_updates() {
+        let x = correlated(1000, 8, 84);
+        let mut unit = DrUnit::new(DrUnitConfig {
+            input_dim: 8,
+            output_dim: 4,
+            rotate: false,
+            ..Default::default()
+        });
+        let u_before = unit.rotation().separation_matrix().clone();
+        unit.step_rows(&x);
+        assert_eq!(
+            unit.rotation().separation_matrix().as_slice(),
+            u_before.as_slice(),
+            "rotation must stay frozen with the mux off"
+        );
+    }
+
+    #[test]
+    fn deterministic() {
+        let x = correlated(500, 8, 85);
+        let run = || {
+            let mut u = DrUnit::new(DrUnitConfig {
+                input_dim: 8,
+                output_dim: 4,
+                ..Default::default()
+            });
+            u.step_rows(&x);
+            u.effective_matrix()
+        };
+        assert_eq!(run().as_slice(), run().as_slice());
+    }
+}

@@ -1,0 +1,243 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The paper's experiments depend on reproducible random draws (the
+//! ternary projection matrix R, dataset generators, weight inits). We
+//! implement SplitMix64 (seeding / stream splitting) and PCG64 (the
+//! workhorse generator) from scratch so results are bit-reproducible
+//! across platforms and independent of external crate versions — the
+//! same reasoning that makes an FPGA LFSR preferable to a software RNG
+//! in the original hardware.
+
+mod pcg;
+mod splitmix;
+
+pub use pcg::Pcg64;
+pub use splitmix::SplitMix64;
+
+/// A uniform source of random `u64`s.
+///
+/// Implemented by [`Pcg64`] and [`SplitMix64`]; all higher-level samplers
+/// ([`RngExt`]) are provided generically on top of it.
+pub trait Rng {
+    /// Next raw 64-bit output.
+    fn next_u64(&mut self) -> u64;
+}
+
+/// Derived samplers over any [`Rng`].
+pub trait RngExt: Rng {
+    /// Uniform `f64` in `[0, 1)` using the top 53 bits.
+    fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform `f32` in `[0, 1)` using the top 24 bits.
+    fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in `[0, bound)` via Lemire's multiply-shift with
+    /// rejection (unbiased).
+    fn next_below(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0, "bound must be positive");
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(bound as u128);
+            let low = m as u64;
+            if low >= bound {
+                return (m >> 64) as u64;
+            }
+            // rejection zone: low < bound — only reject within the biased
+            // remainder band
+            let threshold = bound.wrapping_neg() % bound;
+            if low >= threshold {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Standard normal via Box–Muller (polar form would need caching; the
+    /// trig form keeps the generator stateless w.r.t. sampling).
+    fn next_gaussian(&mut self) -> f64 {
+        // Avoid ln(0): nudge u1 away from zero.
+        let u1 = self.next_f64().max(f64::MIN_POSITIVE);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// Gaussian with the given mean / standard deviation.
+    fn next_gaussian_with(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.next_gaussian()
+    }
+
+    /// The ternary random-projection distribution of Fox et al. (FPT'16),
+    /// used by the paper's RP front end:
+    /// `+1` w.p. `1/(2n)`, `-1` w.p. `1/(2n)`, `0` w.p. `1 - 1/n`.
+    ///
+    /// Multiplication-free in hardware: each nonzero becomes one
+    /// adder/subtractor input.
+    fn next_ternary(&mut self, n: usize) -> i8 {
+        debug_assert!(n >= 1);
+        let u = self.next_f64();
+        let p = 1.0 / (2.0 * n as f64);
+        if u < p {
+            1
+        } else if u < 2.0 * p {
+            -1
+        } else {
+            0
+        }
+    }
+
+    /// Achlioptas's database-friendly distribution:
+    /// `±√3` w.p. 1/6 each, `0` w.p. 2/3. Returned as the ternary sign;
+    /// callers scale by √3.
+    fn next_achlioptas(&mut self) -> i8 {
+        match self.next_below(6) {
+            0 => 1,
+            1 => -1,
+            _ => 0,
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from `0..len` (partial Fisher–Yates).
+    fn sample_indices(&mut self, len: usize, k: usize) -> Vec<usize> {
+        assert!(k <= len);
+        let mut idx: Vec<usize> = (0..len).collect();
+        for i in 0..k {
+            let j = i + self.next_below((len - i) as u64) as usize;
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+impl<T: Rng + ?Sized> RngExt for T {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut rng = Pcg64::seed(1);
+        for _ in 0..10_000 {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn next_below_is_in_range_and_covers() {
+        let mut rng = Pcg64::seed(2);
+        let mut seen = [false; 7];
+        for _ in 0..1_000 {
+            let x = rng.next_below(7) as usize;
+            assert!(x < 7);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all residues hit");
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut rng = Pcg64::seed(3);
+        let n = 200_000;
+        let (mut sum, mut sum2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = rng.next_gaussian();
+            sum += x;
+            sum2 += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sum2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+    }
+
+    #[test]
+    fn ternary_distribution_matches_fox() {
+        let mut rng = Pcg64::seed(4);
+        let n = 8;
+        let trials = 400_000;
+        let mut counts = [0usize; 3]; // -1, 0, +1
+        for _ in 0..trials {
+            match rng.next_ternary(n) {
+                -1 => counts[0] += 1,
+                0 => counts[1] += 1,
+                1 => counts[2] += 1,
+                _ => unreachable!(),
+            }
+        }
+        let p = 1.0 / (2.0 * n as f64);
+        let f = |c: usize| c as f64 / trials as f64;
+        assert!((f(counts[0]) - p).abs() < 0.003);
+        assert!((f(counts[2]) - p).abs() < 0.003);
+        assert!((f(counts[1]) - (1.0 - 2.0 * p)).abs() < 0.005);
+    }
+
+    #[test]
+    fn ternary_has_zero_mean_unit_like_scaling() {
+        // E[r] = 0, E[r^2] = 1/n — the JL scaling factor is sqrt(n).
+        let mut rng = Pcg64::seed(5);
+        let n = 4;
+        let trials = 400_000;
+        let mut sum = 0.0;
+        let mut sum2 = 0.0;
+        for _ in 0..trials {
+            let r = rng.next_ternary(n) as f64;
+            sum += r;
+            sum2 += r * r;
+        }
+        assert!((sum / trials as f64).abs() < 0.005);
+        assert!((sum2 / trials as f64 - 1.0 / n as f64).abs() < 0.005);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::seed(6);
+        let mut xs: Vec<usize> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>(), "shuffle moved something");
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut rng = Pcg64::seed(7);
+        let idx = rng.sample_indices(50, 20);
+        assert_eq!(idx.len(), 20);
+        let mut s = idx.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 20);
+    }
+
+    #[test]
+    fn streams_are_reproducible() {
+        let a: Vec<u64> = {
+            let mut r = Pcg64::seed(42);
+            (0..16).map(|_| r.next_u64()).collect()
+        };
+        let b: Vec<u64> = {
+            let mut r = Pcg64::seed(42);
+            (0..16).map(|_| r.next_u64()).collect()
+        };
+        assert_eq!(a, b);
+        let c: Vec<u64> = {
+            let mut r = Pcg64::seed(43);
+            (0..16).map(|_| r.next_u64()).collect()
+        };
+        assert_ne!(a, c);
+    }
+}

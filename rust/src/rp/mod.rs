@@ -1,0 +1,296 @@
+//! Random projection — the paper's multiplication-free front end.
+//!
+//! Implements the ternary distribution of Fox et al. (FPT'16) used by
+//! the paper (§III.B), plus Achlioptas (√3-sparse) and dense Gaussian
+//! variants for the Fig. 1 comparisons. The ternary/Achlioptas
+//! projections are stored in a sparse sign representation so `apply`
+//! uses only additions and subtractions — exactly the hardware-cost
+//! argument the paper makes (DSP-free datapath).
+
+mod sparse;
+
+pub use sparse::SparseSignMatrix;
+
+use crate::linalg::Mat;
+use crate::rng::{Pcg64, RngExt};
+
+/// The element distribution used to build the projection matrix `R`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RpDistribution {
+    /// Fox et al. FPT'16 (the paper's choice): ±1 w.p. 1/(2n) each,
+    /// 0 otherwise. Scale factor √n on apply keeps E[‖Rx‖²] = ‖x‖².
+    Ternary,
+    /// Achlioptas 2001: ±√3 w.p. 1/6 each, 0 w.p. 2/3 (scale √(3)⁻¹·√? —
+    /// folded into `scale`).
+    Achlioptas,
+    /// Dense `N(0, 1/p)` entries — the JL baseline.
+    Gaussian,
+}
+
+/// A random projection `x ↦ scale · R x` from `in_dim` to `out_dim`.
+#[derive(Debug, Clone)]
+pub struct RandomProjection {
+    pub in_dim: usize,
+    pub out_dim: usize,
+    pub distribution: RpDistribution,
+    /// Sparse ±1 pattern (ternary / Achlioptas); `None` for Gaussian.
+    sparse: Option<SparseSignMatrix>,
+    /// Dense matrix for the Gaussian variant; also materialised for the
+    /// sparse variants on demand (artifact export).
+    dense: Option<Mat>,
+    /// Output scaling applied after the matrix; restores isometry in
+    /// expectation.
+    pub scale: f32,
+}
+
+impl RandomProjection {
+    /// Draw a projection matrix. `seed` fully determines `R` — the
+    /// paper's point that `R` is computed offline with no knowledge of
+    /// the data.
+    pub fn new(in_dim: usize, out_dim: usize, distribution: RpDistribution, seed: u64) -> Self {
+        assert!(out_dim >= 1 && in_dim >= out_dim, "need m >= n >= 1");
+        let mut rng = Pcg64::seed_stream(seed, 0x5250_4D41); // "RPMA"
+        match distribution {
+            RpDistribution::Ternary => {
+                // With r ∈ {0,±1} and P(±1) = 1/(2n) each, E[r²] = 1/n,
+                // so E[(Rx)_i²] = ‖x‖²/n and E[‖Rx‖²] = ‖x‖² already:
+                // the distribution is self-normalising, no scale needed
+                // (and none is cheap in hardware — the paper's point).
+                let sparse = SparseSignMatrix::sample_ternary(&mut rng, out_dim, in_dim);
+                Self {
+                    in_dim,
+                    out_dim,
+                    distribution,
+                    sparse: Some(sparse),
+                    dense: None,
+                    scale: 1.0,
+                }
+            }
+            RpDistribution::Achlioptas => {
+                // r ∈ {0, ±√3} w.p. {2/3, 1/6, 1/6} ⇒ E[r²] = 1, so
+                // E[‖Rx‖²] = k‖x‖² and the isometry scale is 1/√k
+                // (k = out_dim). We store only the ±1 signs, folding the
+                // √3 magnitude into the scale: s = √(3/out_dim).
+                let sparse = SparseSignMatrix::sample_achlioptas(&mut rng, out_dim, in_dim);
+                Self {
+                    in_dim,
+                    out_dim,
+                    distribution,
+                    sparse: Some(sparse),
+                    dense: None,
+                    scale: (3.0 / out_dim as f32).sqrt(),
+                }
+            }
+            RpDistribution::Gaussian => {
+                let dense = Mat::from_fn(out_dim, in_dim, |_, _| {
+                    rng.next_gaussian() as f32 / (out_dim as f32).sqrt()
+                });
+                Self {
+                    in_dim,
+                    out_dim,
+                    distribution,
+                    sparse: None,
+                    dense: Some(dense),
+                    scale: 1.0,
+                }
+            }
+        }
+    }
+
+    /// Apply to a single sample: `y = scale · R x`. For sparse variants
+    /// this is pure add/sub — the hardware-friendly path.
+    pub fn apply(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.in_dim, "rp apply shape mismatch");
+        let mut y = match &self.sparse {
+            Some(s) => s.apply(x),
+            None => self.dense.as_ref().unwrap().matvec(x),
+        };
+        if self.scale != 1.0 {
+            for v in &mut y {
+                *v *= self.scale;
+            }
+        }
+        y
+    }
+
+    /// Apply to every row of a sample matrix.
+    pub fn apply_rows(&self, x: &Mat) -> Mat {
+        let rows = x.rows_count();
+        let mut out = Vec::with_capacity(rows * self.out_dim);
+        for r in x.rows() {
+            out.extend(self.apply(r));
+        }
+        Mat::from_vec(rows, self.out_dim, out)
+    }
+
+    /// Materialise `scale·R` as a dense matrix (artifact export, cascade
+    /// composition, and the JAX-side kernel input).
+    pub fn to_dense(&self) -> Mat {
+        let mut m = match &self.sparse {
+            Some(s) => s.to_dense(),
+            None => self.dense.clone().unwrap(),
+        };
+        m.scale(self.scale);
+        m
+    }
+
+    /// Number of nonzero entries (adder inputs in hardware).
+    pub fn nnz(&self) -> usize {
+        match &self.sparse {
+            Some(s) => s.nnz(),
+            None => self.in_dim * self.out_dim,
+        }
+    }
+
+    /// Rescale the projection so that *standardised* inputs (unit
+    /// per-feature variance) produce unit-variance outputs.
+    ///
+    /// All three distributions preserve ‖x‖² in expectation, which puts
+    /// per-coordinate output variance at m/p; the adaptive EASI stage
+    /// behind the projection assumes unit-variance inputs (its cubic
+    /// nonlinearity amplifies excess variance into divergence), so the
+    /// trainers apply `s = √(p/m)`. One constant multiplier per output
+    /// — in hardware it folds into the learning rate μ, keeping the RP
+    /// module itself multiplication-free.
+    pub fn unit_variance(mut self) -> Self {
+        self.scale *= (self.out_dim as f32 / self.in_dim as f32).sqrt();
+        self
+    }
+}
+
+/// Empirical Johnson–Lindenstrauss distortion diagnostics: the
+/// min / mean / max of `‖f(x_i)−f(x_j)‖² / ‖x_i−x_j‖²` over sampled
+/// pairs. Values concentrated near 1 mean the projection preserves
+/// pairwise distances (the property the paper leans on for second-order
+/// statistics).
+#[derive(Debug, Clone, Copy)]
+pub struct Distortion {
+    pub min: f64,
+    pub mean: f64,
+    pub max: f64,
+    pub pairs: usize,
+}
+
+/// Measure distortion of `rp` on up to `max_pairs` random pairs of rows.
+pub fn measure_distortion(rp: &RandomProjection, x: &Mat, max_pairs: usize, seed: u64) -> Distortion {
+    let n = x.rows_count();
+    assert!(n >= 2, "need at least two samples");
+    let mut rng = Pcg64::seed_stream(seed, 0x4A4C_4449); // "JLDI"
+    let y = rp.apply_rows(x);
+    let mut min = f64::INFINITY;
+    let mut max = 0.0f64;
+    let mut sum = 0.0f64;
+    let mut count = 0usize;
+    for _ in 0..max_pairs {
+        let i = rng.next_below(n as u64) as usize;
+        let mut j = rng.next_below(n as u64) as usize;
+        if i == j {
+            j = (j + 1) % n;
+        }
+        let dx: f64 = x
+            .row(i)
+            .iter()
+            .zip(x.row(j))
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum();
+        if dx < 1e-12 {
+            continue;
+        }
+        let dy: f64 = y
+            .row(i)
+            .iter()
+            .zip(y.row(j))
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum();
+        let ratio = dy / dx;
+        min = min.min(ratio);
+        max = max.max(ratio);
+        sum += ratio;
+        count += 1;
+    }
+    Distortion {
+        min,
+        mean: sum / count.max(1) as f64,
+        max,
+        pairs: count,
+    }
+}
+
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes() {
+        for dist in [
+            RpDistribution::Ternary,
+            RpDistribution::Achlioptas,
+            RpDistribution::Gaussian,
+        ] {
+            let rp = RandomProjection::new(32, 16, dist, 1);
+            assert_eq!(rp.apply(&vec![1.0; 32]).len(), 16);
+            let dense = rp.to_dense();
+            assert_eq!(dense.shape(), (16, 32));
+        }
+    }
+
+    #[test]
+    fn sparse_apply_matches_dense() {
+        let rp = RandomProjection::new(40, 12, RpDistribution::Ternary, 3);
+        let x: Vec<f32> = (0..40).map(|i| (i as f32 * 0.7).sin()).collect();
+        let sparse_y = rp.apply(&x);
+        let dense_y = rp.to_dense().matvec(&x);
+        for (a, b) in sparse_y.iter().zip(&dense_y) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = RandomProjection::new(32, 8, RpDistribution::Ternary, 9).to_dense();
+        let b = RandomProjection::new(32, 8, RpDistribution::Ternary, 9).to_dense();
+        assert_eq!(a.as_slice(), b.as_slice());
+        let c = RandomProjection::new(32, 8, RpDistribution::Ternary, 10).to_dense();
+        assert_ne!(a.as_slice(), c.as_slice());
+    }
+
+    #[test]
+    fn ternary_nnz_matches_distribution() {
+        // Expected density 1/n ⇒ nnz ≈ rows·cols/n = cols.
+        let (m, n) = (512, 16);
+        let rp = RandomProjection::new(m, n, RpDistribution::Ternary, 5);
+        let expected = (m * n) as f64 / n as f64;
+        assert!(
+            (rp.nnz() as f64 - expected).abs() < expected * 0.5,
+            "nnz {} expected ~{expected}",
+            rp.nnz()
+        );
+    }
+
+    #[test]
+    fn distortion_near_one_for_gaussian() {
+        use crate::rng::Pcg64;
+        let mut rng = Pcg64::seed(17);
+        let x = Mat::from_fn(200, 128, |_, _| rng.next_gaussian() as f32);
+        let rp = RandomProjection::new(128, 64, RpDistribution::Gaussian, 2);
+        let d = measure_distortion(&rp, &x, 500, 1);
+        assert!((d.mean - 1.0).abs() < 0.15, "mean distortion {}", d.mean);
+    }
+
+    #[test]
+    fn distortion_near_one_for_ternary() {
+        use crate::rng::Pcg64;
+        let mut rng = Pcg64::seed(18);
+        let x = Mat::from_fn(200, 256, |_, _| rng.next_gaussian() as f32);
+        let rp = RandomProjection::new(256, 64, RpDistribution::Ternary, 2);
+        let d = measure_distortion(&rp, &x, 500, 1);
+        assert!((d.mean - 1.0).abs() < 0.3, "mean distortion {}", d.mean);
+    }
+
+    #[test]
+    #[should_panic(expected = "rp apply shape mismatch")]
+    fn apply_wrong_dim_panics() {
+        RandomProjection::new(8, 4, RpDistribution::Ternary, 1).apply(&[0.0; 7]);
+    }
+}

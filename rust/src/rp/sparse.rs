@@ -1,0 +1,148 @@
+//! Sparse ±1 matrix — the storage format of the hardware-friendly
+//! projection. Each row keeps two index lists (plus / minus); applying
+//! the matrix is then a chain of additions and subtractions, the exact
+//! operation count the FPGA datapath of Fox et al. uses (no DSPs).
+
+use crate::linalg::Mat;
+use crate::rng::{Pcg64, RngExt};
+
+/// Row-compressed ±1 sparse matrix.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SparseSignMatrix {
+    rows: usize,
+    cols: usize,
+    /// Per row: column indices with +1.
+    plus: Vec<Vec<u32>>,
+    /// Per row: column indices with −1.
+    minus: Vec<Vec<u32>>,
+}
+
+impl SparseSignMatrix {
+    /// Sample with the Fox et al. ternary distribution
+    /// (±1 w.p. 1/(2·rows) each — `rows` is the output dimensionality
+    /// `n` in the paper's notation).
+    pub fn sample_ternary(rng: &mut Pcg64, rows: usize, cols: usize) -> Self {
+        Self::sample_with(rng, rows, cols, |rng| rng.next_ternary(rows))
+    }
+
+    /// Sample with the Achlioptas sign pattern (±1 w.p. 1/6 each).
+    pub fn sample_achlioptas(rng: &mut Pcg64, rows: usize, cols: usize) -> Self {
+        Self::sample_with(rng, rows, cols, |rng| rng.next_achlioptas())
+    }
+
+    fn sample_with(
+        rng: &mut Pcg64,
+        rows: usize,
+        cols: usize,
+        mut draw: impl FnMut(&mut Pcg64) -> i8,
+    ) -> Self {
+        let mut plus = vec![Vec::new(); rows];
+        let mut minus = vec![Vec::new(); rows];
+        for (r, (p, m)) in plus.iter_mut().zip(minus.iter_mut()).enumerate() {
+            let _ = r;
+            for c in 0..cols {
+                match draw(rng) {
+                    1 => p.push(c as u32),
+                    -1 => m.push(c as u32),
+                    _ => {}
+                }
+            }
+        }
+        Self {
+            rows,
+            cols,
+            plus,
+            minus,
+        }
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Total nonzeros — the number of adder inputs in hardware.
+    pub fn nnz(&self) -> usize {
+        self.plus.iter().map(Vec::len).sum::<usize>() + self.minus.iter().map(Vec::len).sum::<usize>()
+    }
+
+    /// `y = R x` using only additions and subtractions.
+    pub fn apply(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols, "sparse apply shape mismatch");
+        let mut y = Vec::with_capacity(self.rows);
+        for (p, m) in self.plus.iter().zip(&self.minus) {
+            let mut acc = 0.0f32;
+            for &c in p {
+                acc += x[c as usize];
+            }
+            for &c in m {
+                acc -= x[c as usize];
+            }
+            y.push(acc);
+        }
+        y
+    }
+
+    /// Densify (for artifact export and cross-checks).
+    pub fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for (i, (p, mi)) in self.plus.iter().zip(&self.minus).enumerate() {
+            for &c in p {
+                m.set(i, c as usize, 1.0);
+            }
+            for &c in mi {
+                m.set(i, c as usize, -1.0);
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn apply_matches_dense() {
+        let mut rng = Pcg64::seed(21);
+        let s = SparseSignMatrix::sample_ternary(&mut rng, 8, 64);
+        let x: Vec<f32> = (0..64).map(|i| (i as f32).cos()).collect();
+        let y1 = s.apply(&x);
+        let y2 = s.to_dense().matvec(&x);
+        for (a, b) in y1.iter().zip(&y2) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn plus_minus_disjoint() {
+        let mut rng = Pcg64::seed(22);
+        let s = SparseSignMatrix::sample_ternary(&mut rng, 4, 128);
+        for (p, m) in s.plus.iter().zip(&s.minus) {
+            for c in p {
+                assert!(!m.contains(c));
+            }
+        }
+    }
+
+    #[test]
+    fn achlioptas_density() {
+        let mut rng = Pcg64::seed(23);
+        let s = SparseSignMatrix::sample_achlioptas(&mut rng, 16, 512);
+        // Expected nonzero fraction 1/3.
+        let density = s.nnz() as f64 / (16.0 * 512.0);
+        assert!((density - 1.0 / 3.0).abs() < 0.05, "density {density}");
+    }
+
+    #[test]
+    fn empty_rows_allowed() {
+        // With high sparsity some rows may be all-zero; apply must not
+        // panic and must return zeros there.
+        let s = SparseSignMatrix {
+            rows: 2,
+            cols: 3,
+            plus: vec![vec![], vec![0]],
+            minus: vec![vec![], vec![2]],
+        };
+        assert_eq!(s.apply(&[5.0, 6.0, 7.0]), vec![0.0, -2.0]);
+    }
+}

@@ -1,0 +1,206 @@
+//! The artifact manifest written by `python/compile/aot.py`.
+//!
+//! `manifest.json` is the contract between the build-time Python layers
+//! and the run-time Rust layer: per executable variant it records the
+//! HLO text file, the positional input shapes/dtypes and the output
+//! arity. The loader validates every execution against it, so shape
+//! drift between the layers fails loudly instead of corrupting state.
+
+use crate::util::json::Json;
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Shape + dtype of one tensor crossing the PJRT boundary.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    /// Only "f32" today (matching the paper's 32-bit floating point
+    /// implementation); kept as a string for forward compatibility.
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        let shape = v
+            .field("shape")?
+            .as_arr()?
+            .iter()
+            .map(|d| d.as_usize())
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = v.field("dtype")?.as_str()?.to_string();
+        ensure!(dtype == "f32", "unsupported dtype {dtype}");
+        ensure!(!shape.is_empty() || dtype == "f32", "scalar outputs allowed");
+        Ok(Self { shape, dtype })
+    }
+}
+
+/// One executable variant.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// HLO text file, relative to the manifest directory.
+    pub file: String,
+    pub description: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub fingerprint: String,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (separated from I/O for testability).
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let root = Json::parse(text).context("parsing manifest.json")?;
+        let version = root.field("version")?.as_usize()?;
+        ensure!(version == 1, "unsupported manifest version {version}");
+        let fingerprint = root
+            .get("fingerprint")
+            .and_then(|f| f.as_str().ok())
+            .unwrap_or("")
+            .to_string();
+        let mut artifacts = BTreeMap::new();
+        for entry in root.field("artifacts")?.as_arr()? {
+            let name = entry.field("name")?.as_str()?.to_string();
+            let spec = ArtifactSpec {
+                name: name.clone(),
+                file: entry.field("file")?.as_str()?.to_string(),
+                description: entry
+                    .get("description")
+                    .and_then(|d| d.as_str().ok())
+                    .unwrap_or("")
+                    .to_string(),
+                inputs: entry
+                    .field("inputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<_>>()?,
+                outputs: entry
+                    .field("outputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<_>>()?,
+            };
+            ensure!(!spec.inputs.is_empty(), "artifact {name} has no inputs");
+            ensure!(!spec.outputs.is_empty(), "artifact {name} has no outputs");
+            if artifacts.insert(name.clone(), spec).is_some() {
+                bail!("duplicate artifact name {name}");
+            }
+        }
+        ensure!(!artifacts.is_empty(), "manifest lists no artifacts");
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            fingerprint,
+            artifacts,
+        })
+    }
+
+    /// Look up an artifact by exact name.
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts.get(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "artifact '{name}' not in manifest (have: {})",
+                self.artifacts.keys().cloned().collect::<Vec<_>>().join(", ")
+            )
+        })
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn path_of(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+
+    /// All names, sorted (BTreeMap order).
+    pub fn names(&self) -> Vec<&str> {
+        self.artifacts.keys().map(String::as_str).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "fingerprint": "abc",
+      "artifacts": [
+        {"name": "easi", "file": "easi.hlo.txt", "description": "d",
+         "inputs": [{"shape": [8, 32], "dtype": "f32"},
+                    {"shape": [256, 32], "dtype": "f32"},
+                    {"shape": [1], "dtype": "f32"}],
+         "outputs": [{"shape": [8, 32], "dtype": "f32"}]}
+      ]
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/art")).unwrap();
+        let a = m.get("easi").unwrap();
+        assert_eq!(a.inputs.len(), 3);
+        assert_eq!(a.inputs[0].shape, vec![8, 32]);
+        assert_eq!(a.inputs[0].elements(), 256);
+        assert_eq!(m.path_of(a), Path::new("/tmp/art/easi.hlo.txt"));
+        assert_eq!(m.fingerprint, "abc");
+    }
+
+    #[test]
+    fn unknown_artifact_error_lists_names() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp")).unwrap();
+        let err = m.get("nope").unwrap_err().to_string();
+        assert!(err.contains("easi"), "{err}");
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let bad = SAMPLE.replace("\"version\": 1", "\"version\": 9");
+        assert!(Manifest::parse(&bad, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_non_f32() {
+        let bad = SAMPLE.replace("\"f32\"", "\"bf16\"");
+        assert!(Manifest::parse(&bad, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_names() {
+        let dup = SAMPLE.replace(
+            "]\n    }",
+            r#", {"name": "easi", "file": "x", "inputs": [{"shape": [1], "dtype": "f32"}], "outputs": [{"shape": [1], "dtype": "f32"}]}]
+    }"#,
+        );
+        assert!(Manifest::parse(&dup, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_built() {
+        // Integration touch-point: if `make artifacts` has run, the real
+        // manifest must parse and contain the Table I variants.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.get("easi_full_norm_m32_n16_b256").is_ok());
+            assert!(m.get("rp_easi_norm_m32_p16_n8_b256").is_ok());
+        }
+    }
+}

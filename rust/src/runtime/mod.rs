@@ -1,0 +1,246 @@
+//! PJRT runtime — loads the AOT-compiled HLO artifacts and executes
+//! them from the coordinator's hot path.
+//!
+//! Wraps the `xla` crate (xla_extension 0.5.1, CPU PJRT plugin):
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `executable.execute`. One compiled executable per
+//! model variant, cached after first use; all executions are validated
+//! against the manifest's shapes before they reach PJRT, so layer drift
+//! fails with a readable error instead of a C++ abort.
+//!
+//! Python is NEVER on this path — the HLO text was produced once at
+//! build time by `python/compile/aot.py`.
+
+pub mod manifest;
+
+pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
+
+use crate::linalg::Mat;
+use anyhow::{ensure, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+
+/// A tensor crossing the PJRT boundary (host side).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "tensor shape/data mismatch"
+        );
+        Self { shape, data }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self {
+            shape: vec![1],
+            data: vec![v],
+        }
+    }
+
+    pub fn from_mat(m: &Mat) -> Self {
+        Self {
+            shape: vec![m.rows_count(), m.cols_count()],
+            data: m.as_slice().to_vec(),
+        }
+    }
+
+    pub fn into_mat(self) -> Result<Mat> {
+        ensure!(self.shape.len() == 2, "tensor is not rank-2: {:?}", self.shape);
+        Ok(Mat::from_vec(self.shape[0], self.shape[1], self.data))
+    }
+
+    fn matches(&self, spec: &TensorSpec) -> bool {
+        // Outputs may be scalars (shape []) which we surface as len-1.
+        self.shape == spec.shape || (spec.shape.is_empty() && self.data.len() == 1)
+    }
+}
+
+/// The runtime: a PJRT CPU client plus a lazily-populated executable
+/// cache keyed by artifact name.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    // RefCell: compilation populates the cache behind a shared receiver
+    // so call sites can hold `&Runtime`.
+    executables: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl Runtime {
+    /// Create a runtime over an artifact directory (must contain
+    /// `manifest.json`; see `make artifacts`).
+    pub fn load(artifact_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            manifest,
+            executables: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact.
+    fn ensure_compiled(&self, name: &str) -> Result<()> {
+        if self.executables.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let spec = self.manifest.get(name)?;
+        let path = self.manifest.path_of(spec);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let computation = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&computation)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        self.executables.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Eagerly compile a set of artifacts (the coordinator warms its
+    /// variants at startup so the hot path never compiles).
+    pub fn warm(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.ensure_compiled(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute an artifact with host tensors, returning host tensors.
+    ///
+    /// Inputs are validated against the manifest; outputs are unwrapped
+    /// from the tuple that `return_tuple=True` lowering produces and
+    /// validated too.
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let spec = self.manifest.get(name)?.clone();
+        ensure!(
+            inputs.len() == spec.inputs.len(),
+            "{name}: expected {} inputs, got {}",
+            spec.inputs.len(),
+            inputs.len()
+        );
+        for (i, (t, s)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            ensure!(
+                t.matches(s),
+                "{name}: input {i} shape {:?} does not match manifest {:?}",
+                t.shape,
+                s.shape
+            );
+        }
+        self.ensure_compiled(name)?;
+
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(&t.data)
+                    .reshape(&dims)
+                    .with_context(|| format!("staging input for {name}"))
+            })
+            .collect::<Result<_>>()?;
+
+        let cache = self.executables.borrow();
+        let exe = cache.get(name).expect("ensured above");
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {name}"))?;
+        let root = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        // aot.py lowers with return_tuple=True: the root is a tuple with
+        // one element per logical output.
+        let elements = root.to_tuple().context("untupling result")?;
+        ensure!(
+            elements.len() == spec.outputs.len(),
+            "{name}: expected {} outputs, got {}",
+            spec.outputs.len(),
+            elements.len()
+        );
+        let mut outs = Vec::with_capacity(elements.len());
+        for (lit, ospec) in elements.into_iter().zip(&spec.outputs) {
+            let data = lit.to_vec::<f32>().context("reading output literal")?;
+            ensure!(
+                data.len() == ospec.elements().max(1),
+                "{name}: output element count {} vs spec {:?}",
+                data.len(),
+                ospec.shape
+            );
+            let shape = if ospec.shape.is_empty() {
+                vec![1]
+            } else {
+                ospec.shape.clone()
+            };
+            outs.push(Tensor { shape, data });
+        }
+        Ok(outs)
+    }
+
+    /// Convenience: execute an artifact that returns exactly one tensor.
+    pub fn execute1(&self, name: &str, inputs: &[Tensor]) -> Result<Tensor> {
+        let mut outs = self.execute(name, inputs)?;
+        ensure!(
+            outs.len() == 1,
+            "{name}: expected single output, got {}",
+            outs.len()
+        );
+        Ok(outs.pop().unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shape_checks() {
+        let t = Tensor::new(vec![2, 3], vec![0.0; 6]);
+        assert!(t.matches(&TensorSpec {
+            shape: vec![2, 3],
+            dtype: "f32".into()
+        }));
+        assert!(!t.matches(&TensorSpec {
+            shape: vec![3, 2],
+            dtype: "f32".into()
+        }));
+    }
+
+    #[test]
+    #[should_panic(expected = "tensor shape/data mismatch")]
+    fn tensor_rejects_bad_len() {
+        Tensor::new(vec![2, 2], vec![0.0; 3]);
+    }
+
+    #[test]
+    fn tensor_mat_roundtrip() {
+        let m = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let t = Tensor::from_mat(&m);
+        assert_eq!(t.shape, vec![2, 2]);
+        assert_eq!(t.into_mat().unwrap(), m);
+    }
+
+    #[test]
+    fn scalar_tensor() {
+        let t = Tensor::scalar(0.5);
+        assert_eq!(t.shape, vec![1]);
+        assert!(t.matches(&TensorSpec {
+            shape: vec![1],
+            dtype: "f32".into()
+        }));
+    }
+}

@@ -1,0 +1,158 @@
+//! Micro-benchmark harness (offline environment — no criterion).
+//!
+//! Criterion-style adaptive measurement: warm up, pick an iteration
+//! count targeting a fixed measurement window, collect per-batch
+//! samples, report median / mean / p95 with simple outlier trimming.
+//! Used by every `cargo bench` target (`harness = false`).
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    /// Median time per iteration.
+    pub median: Duration,
+    pub mean: Duration,
+    pub p95: Duration,
+    pub iterations: u64,
+    pub samples: usize,
+}
+
+impl Measurement {
+    /// Iterations per second at the median.
+    pub fn throughput(&self) -> f64 {
+        1.0 / self.median.as_secs_f64()
+    }
+
+    /// Human-oriented single line, aligned for table output.
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<44} median {:>12} mean {:>12} p95 {:>12} ({} samples x {} iters)",
+            self.name,
+            fmt_duration(self.median),
+            fmt_duration(self.mean),
+            fmt_duration(self.p95),
+            self.samples,
+            self.iterations,
+        )
+    }
+}
+
+/// Format a duration with appropriate unit.
+pub fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1_000.0 {
+        format!("{ns:.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3} s", ns / 1_000_000_000.0)
+    }
+}
+
+/// The harness. Construct with [`Bench::new`], call [`Bench::run`] per
+/// case, then [`Bench::finish`].
+pub struct Bench {
+    suite: String,
+    target_sample: Duration,
+    samples: usize,
+    results: Vec<Measurement>,
+}
+
+impl Bench {
+    pub fn new(suite: &str) -> Self {
+        // Honour the same quick-mode env var the test suite uses.
+        let quick = std::env::var("DIMRED_BENCH_QUICK").is_ok();
+        Self {
+            suite: suite.to_string(),
+            target_sample: if quick {
+                Duration::from_millis(20)
+            } else {
+                Duration::from_millis(150)
+            },
+            samples: if quick { 5 } else { 15 },
+            results: Vec::new(),
+        }
+    }
+
+    /// Measure `f`, which performs ONE logical iteration per call.
+    /// A `black_box`-style sink defeats dead-code elimination: have `f`
+    /// return something cheap and it will be consumed.
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &Measurement {
+        // Warm-up + calibration: find iters such that one sample ≈
+        // target_sample.
+        let t0 = Instant::now();
+        let mut calib_iters: u64 = 0;
+        while t0.elapsed() < self.target_sample / 4 {
+            std::hint::black_box(f());
+            calib_iters += 1;
+        }
+        let per_iter = (t0.elapsed() / u32::try_from(calib_iters.max(1)).unwrap_or(1)).max(Duration::from_nanos(1));
+        let iters = (self.target_sample.as_nanos() / per_iter.as_nanos()).clamp(1, 1_000_000) as u64;
+
+        let mut times: Vec<Duration> = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let start = Instant::now();
+            for _ in 0..iters {
+                std::hint::black_box(f());
+            }
+            times.push(start.elapsed() / u32::try_from(iters).unwrap_or(1));
+        }
+        times.sort_unstable();
+        let median = times[times.len() / 2];
+        let mean = times.iter().sum::<Duration>() / times.len() as u32;
+        let p95 = times[((times.len() as f64 * 0.95) as usize).min(times.len() - 1)];
+        let m = Measurement {
+            name: name.to_string(),
+            median,
+            mean,
+            p95,
+            iterations: iters,
+            samples: times.len(),
+        };
+        println!("{}", m.report_line());
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    /// Print the suite footer and return all measurements.
+    pub fn finish(self) -> Vec<Measurement> {
+        println!("--- {} : {} benchmarks done ---", self.suite, self.results.len());
+        self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        std::env::set_var("DIMRED_BENCH_QUICK", "1");
+        let mut b = Bench::new("selftest");
+        let m = b
+            .run("sum-1k", || {
+                let mut acc = 0u64;
+                for i in 0..1000u64 {
+                    acc = acc.wrapping_add(std::hint::black_box(i) * 7);
+                }
+                acc
+            })
+            .clone();
+        assert!(m.median > Duration::ZERO);
+        assert!(m.iterations >= 1);
+        let all = b.finish();
+        assert_eq!(all.len(), 1);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_duration(Duration::from_nanos(500)).ends_with("ns"));
+        assert!(fmt_duration(Duration::from_micros(50)).ends_with("µs"));
+        assert!(fmt_duration(Duration::from_millis(5)).ends_with("ms"));
+        assert!(fmt_duration(Duration::from_secs(2)).ends_with(" s"));
+    }
+}

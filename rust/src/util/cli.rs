@@ -1,0 +1,148 @@
+//! Tiny CLI argument parser (offline environment — no clap).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and
+//! positional arguments, with typed accessors and a usage-error path.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without the program
+    /// name). `flag_names` lists options that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, flag_names: &[&str]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if rest.is_empty() {
+                    // `--` terminator: everything after is positional.
+                    args.positional.extend(iter);
+                    break;
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&rest) {
+                    args.flags.push(rest.to_string());
+                } else {
+                    let v = iter
+                        .next()
+                        .ok_or_else(|| anyhow!("option --{rest} needs a value"))?;
+                    args.options.insert(rest.to_string(), v);
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse the process's own arguments.
+    pub fn from_env(flag_names: &[&str]) -> Result<Args> {
+        Self::parse(std::env::args().skip(1), flag_names)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt_str(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.opt_str(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.opt_str(name) {
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{name} expects an integer: {e}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.opt_str(name) {
+            Some(v) => v.parse().map_err(|e| anyhow!("--{name} expects an integer: {e}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn f32_or(&self, name: &str, default: f32) -> Result<f32> {
+        match self.opt_str(name) {
+            Some(v) => v.parse().map_err(|e| anyhow!("--{name} expects a float: {e}")),
+            None => Ok(default),
+        }
+    }
+
+    /// Error if unknown options were passed (catches typos).
+    pub fn ensure_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.options.keys() {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown option --{k} (known: {})", known.join(", "));
+            }
+        }
+        for f in &self.flags {
+            if !known.contains(&f.as_str()) {
+                bail!("unknown flag --{f}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str], flags: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()), flags).unwrap()
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let a = parse(
+            &["train", "--mu", "0.001", "--epochs=5", "--verbose", "extra"],
+            &["verbose"],
+        );
+        assert_eq!(a.positional, vec!["train", "extra"]);
+        assert_eq!(a.f32_or("mu", 0.0).unwrap(), 0.001);
+        assert_eq!(a.usize_or("epochs", 0).unwrap(), 5);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(["--mu".to_string()], &[]).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[], &[]);
+        assert_eq!(a.usize_or("batch", 256).unwrap(), 256);
+        assert_eq!(a.str_or("mode", "full"), "full");
+    }
+
+    #[test]
+    fn unknown_option_detected() {
+        let a = parse(&["--typo", "x"], &[]);
+        assert!(a.ensure_known(&["mu"]).is_err());
+        assert!(a.ensure_known(&["typo"]).is_ok());
+    }
+
+    #[test]
+    fn double_dash_terminator() {
+        let a = parse(&["--mu", "1", "--", "--not-an-option"], &[]);
+        assert_eq!(a.positional, vec!["--not-an-option"]);
+    }
+}

@@ -1,0 +1,7 @@
+//! In-tree utility substrates (the build environment is fully offline,
+//! so JSON handling, CLI parsing and benchmarking helpers are all
+//! implemented here from scratch).
+
+pub mod bench;
+pub mod cli;
+pub mod json;

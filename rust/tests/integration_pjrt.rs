@@ -1,0 +1,256 @@
+//! Integration tests over the PJRT runtime + coordinator: the AOT
+//! artifacts must load, execute, and agree with the native Rust
+//! implementation step-for-step.
+//!
+//! These tests require `make artifacts` to have run; they are skipped
+//! (with a message) when the manifest is absent so `cargo test` works
+//! on a fresh checkout.
+
+use dimred::config::{Backend, ExperimentConfig, PipelineMode};
+use dimred::coordinator::TrainingService;
+use dimred::datasets::waveform::WaveformConfig;
+use dimred::linalg::Mat;
+use dimred::runtime::{Runtime, Tensor};
+use std::path::{Path, PathBuf};
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn small_waveform() -> dimred::datasets::Dataset {
+    let mut d = WaveformConfig {
+        samples: 1600,
+        train: 1500,
+        ..WaveformConfig::paper()
+    }
+    .generate();
+    d.standardize();
+    d
+}
+
+#[test]
+fn runtime_loads_and_lists_artifacts() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    assert!(rt.manifest().artifacts.len() >= 20);
+    assert_eq!(rt.platform().to_lowercase().contains("cpu"), true);
+}
+
+#[test]
+fn transform_artifact_matches_native_matvec() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    let b = Mat::from_fn(16, 32, |i, j| ((i * 13 + j * 7) % 11) as f32 / 11.0 - 0.5);
+    let x = Mat::from_fn(256, 32, |i, j| ((i + j * 3) % 17) as f32 / 17.0 - 0.5);
+    let out = rt
+        .execute1(
+            "transform_m32_n16_b256",
+            &[Tensor::from_mat(&b), Tensor::from_mat(&x)],
+        )
+        .unwrap()
+        .into_mat()
+        .unwrap();
+    let expect = b.apply_rows(&x);
+    let diff = dimred::linalg::max_abs_diff(&out, &expect);
+    assert!(diff < 1e-4, "transform mismatch {diff}");
+}
+
+#[test]
+fn executable_reuse_is_cached() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    rt.warm(&["transform_m32_n8_b1"]).unwrap();
+    let b = Mat::eye(8, 32);
+    let x = Mat::from_fn(1, 32, |_, j| j as f32);
+    for _ in 0..3 {
+        let out = rt
+            .execute1(
+                "transform_m32_n8_b1",
+                &[Tensor::from_mat(&b), Tensor::from_mat(&x)],
+            )
+            .unwrap();
+        assert_eq!(out.shape, vec![1, 8]);
+        assert_eq!(out.data[3], 3.0);
+    }
+}
+
+#[test]
+fn shape_validation_rejects_bad_inputs() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    let bad = Tensor::new(vec![4, 4], vec![0.0; 16]);
+    let err = rt.execute("transform_m32_n16_b256", &[bad.clone(), bad]);
+    assert!(err.is_err());
+    let msg = format!("{:#}", err.unwrap_err());
+    assert!(msg.contains("does not match manifest"), "{msg}");
+}
+
+#[test]
+fn pjrt_training_agrees_with_native() {
+    // The core cross-backend contract: identical config + stream ⇒
+    // near-identical learned state (fp32 association-order differences
+    // only). Warm-up chosen as a multiple of the batch so the rotation
+    // engages at the same sample on both backends.
+    let Some(dir) = artifact_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    let data = small_waveform();
+    let mk = |backend| ExperimentConfig {
+        dataset: "waveform".into(),
+        input_dim: 32,
+        intermediate_dim: 16,
+        output_dim: 8,
+        mode: PipelineMode::RpEasi,
+        backend,
+        epochs: 2,
+        batch: 256,
+        rot_warmup: 512,
+        train_classifier: false,
+        ..Default::default()
+    };
+    let native = TrainingService::new(mk(Backend::Native), None)
+        .run(&data)
+        .unwrap();
+    let pjrt = TrainingService::new(mk(Backend::Pjrt), Some(&rt))
+        .run(&data)
+        .unwrap();
+
+    assert_eq!(native.metrics.samples_in, pjrt.metrics.samples_in);
+    let diff = dimred::linalg::max_abs_diff(&native.separation, &pjrt.separation);
+    let scale = native.separation.fro_norm();
+    assert!(
+        diff / scale < 5e-2,
+        "native vs PJRT separation matrices diverge: {diff} (scale {scale})"
+    );
+    // And the RP matrices are identical (same seed, host-generated).
+    let d2 = dimred::linalg::max_abs_diff(
+        native.rp.as_ref().unwrap(),
+        pjrt.rp.as_ref().unwrap(),
+    );
+    assert_eq!(d2, 0.0);
+}
+
+#[test]
+fn pjrt_whiten_only_mode_runs() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    let data = small_waveform();
+    let cfg = ExperimentConfig {
+        input_dim: 32,
+        intermediate_dim: 16,
+        output_dim: 16,
+        mode: PipelineMode::PcaWhiten,
+        backend: Backend::Pjrt,
+        epochs: 1,
+        batch: 256,
+        train_classifier: false,
+        ..Default::default()
+    };
+    let report = TrainingService::new(cfg, Some(&rt)).run(&data).unwrap();
+    assert_eq!(report.separation.shape(), (16, 32));
+    assert!(report
+        .separation
+        .as_slice()
+        .iter()
+        .all(|v| v.is_finite()));
+}
+
+#[test]
+fn pjrt_tail_batches_run_through_b1_variant() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    let mut data = WaveformConfig {
+        samples: 700,
+        train: 600, // 600 % 256 = 88-sample tail per epoch
+        ..WaveformConfig::paper()
+    }
+    .generate();
+    data.standardize();
+    let cfg = ExperimentConfig {
+        input_dim: 32,
+        intermediate_dim: 16,
+        output_dim: 8,
+        mode: PipelineMode::RpEasi,
+        backend: Backend::Pjrt,
+        epochs: 1,
+        batch: 256,
+        rot_warmup: 0,
+        train_classifier: false,
+        ..Default::default()
+    };
+    let report = TrainingService::new(cfg, Some(&rt)).run(&data).unwrap();
+    assert_eq!(report.metrics.samples_in, 600);
+    assert!(report.metrics.tail_samples > 0);
+}
+
+#[test]
+fn pjrt_mlp_train_step_reduces_loss() {
+    // Drive the classifier training artifact directly: loss after some
+    // steps must drop (the full MLP-on-PJRT path).
+    let Some(dir) = artifact_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    let (d, h, c, b) = (8usize, 64usize, 3usize, 32usize);
+    let name = format!("mlp_train_in{d}_h{h}_c{c}_b{b}");
+    if rt.manifest().get(&name).is_err() {
+        eprintln!("skipping: {name} not in manifest");
+        return;
+    }
+    use dimred::rng::{Pcg64, Rng, RngExt};
+    let mut rng = Pcg64::seed(5);
+    let he = |fan_in: usize| (2.0 / fan_in as f64).sqrt();
+    let mut params: Vec<Tensor> = vec![
+        Tensor::new(vec![h, d], (0..h * d).map(|_| (rng.next_gaussian() * he(d)) as f32).collect()),
+        Tensor::new(vec![h], vec![0.0; h]),
+        Tensor::new(vec![h, h], (0..h * h).map(|_| (rng.next_gaussian() * he(h)) as f32).collect()),
+        Tensor::new(vec![h], vec![0.0; h]),
+        Tensor::new(vec![c, h], (0..c * h).map(|_| (rng.next_gaussian() * he(h)) as f32).collect()),
+        Tensor::new(vec![c], vec![0.0; c]),
+    ];
+    let mut velocities: Vec<Tensor> = params
+        .iter()
+        .map(|t| Tensor::new(t.shape.clone(), vec![0.0; t.data.len()]))
+        .collect();
+
+    let mut first_loss = None;
+    let mut last_loss = 0.0f32;
+    for _ in 0..60 {
+        // Blobs: class = argmax of first c coords + noise.
+        let mut xs = Vec::with_capacity(b * d);
+        let mut onehot = vec![0.0f32; b * c];
+        for i in 0..b {
+            let class = rng.next_below(c as u64) as usize;
+            for j in 0..d {
+                let center = if j == class { 2.0 } else { 0.0 };
+                xs.push(center + rng.next_gaussian() as f32 * 0.5);
+            }
+            onehot[i * c + class] = 1.0;
+        }
+        let mut inputs = params.clone();
+        inputs.extend(velocities.clone());
+        inputs.push(Tensor::new(vec![b, d], xs));
+        inputs.push(Tensor::new(vec![b, c], onehot));
+        inputs.push(Tensor::scalar(0.1));
+        inputs.push(Tensor::scalar(0.9));
+        let outs = rt.execute(&name, &inputs).unwrap();
+        assert_eq!(outs.len(), 13);
+        // outputs: w1, vw1, b1, vb1, w2, vw2, b2, vb2, w3, vw3, b3, vb3, loss
+        for (k, slot) in [0usize, 2, 4, 6, 8, 10].iter().enumerate() {
+            params[k] = outs[*slot].clone();
+            velocities[k] = outs[slot + 1].clone();
+        }
+        last_loss = outs[12].data[0];
+        if first_loss.is_none() {
+            first_loss = Some(last_loss);
+        }
+    }
+    let first = first_loss.unwrap();
+    assert!(
+        last_loss < first * 0.5,
+        "loss did not drop: {first} -> {last_loss}"
+    );
+}
