@@ -44,6 +44,7 @@ fn main() {
         stage: StageSpec::Pca,
         output_dim: n,
         seed: 7,
+        precision: dimred::fxp::Precision::F32,
     };
     bench.run("pca fit(784→64, subspace-iter)", || {
         DrPipeline::fit(pca_spec.clone(), &data.train_x).spec.output_dim
@@ -61,6 +62,7 @@ fn main() {
         },
         output_dim: n,
         seed: 7,
+        precision: dimred::fxp::Precision::F32,
     };
     bench.run("ica fit(784→256→64, 1 epoch)", || {
         DrPipeline::fit(ica_spec.clone(), &data.train_x).spec.output_dim

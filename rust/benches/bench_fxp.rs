@@ -1,0 +1,89 @@
+//! Quantized vs f32 kernel throughput: the software-side payoff of the
+//! integer datapath (and a regression guard on the fxp hot paths).
+//!
+//! Measures, per kernel, the f32 reference against its bit-accurate
+//! fixed-point image at 16-bit Q4.12: RP apply, the GHA step, the
+//! rotation-only EASI step, the composed unit step, and the dense
+//! matvec. Inputs are pre-quantized so the fxp numbers reflect the
+//! steady-state streaming cost (the boundary quantization happens once
+//! per sample at ingress in the real pipeline and is measured
+//! separately).
+
+use dimred::easi::{EasiConfig, EasiMode, EasiTrainer};
+use dimred::fxp::{FxpDrUnit, FxpEasiRot, FxpGha, FxpMat, FxpRp, FxpSpec, FxpUnitConfig};
+use dimred::gha::{GhaConfig, GhaWhitener};
+use dimred::linalg::Mat;
+use dimred::pipeline::{DrUnit, DrUnitConfig};
+use dimred::rp::{RandomProjection, RpDistribution};
+use dimred::util::bench::Bench;
+
+fn main() {
+    let mut bench = Bench::new("fxp-kernels");
+    let spec = FxpSpec::q(4, 12);
+    let (m, p, n) = (32usize, 16usize, 8usize);
+
+    let x: Vec<f32> = (0..m).map(|i| ((i * 37) % 17) as f32 / 17.0 - 0.5).collect();
+    let xq = spec.quantize_vec(&x);
+
+    // ----- boundary cost --------------------------------------------
+    bench.run("quantize 32-dim sample (ingress)", || spec.quantize_vec(&x));
+
+    // ----- RP: f32 sparse adds vs integer adds ----------------------
+    let rp = RandomProjection::new(m, p, RpDistribution::Ternary, 7).unit_variance();
+    let frp = FxpRp::from_rp(&rp, spec);
+    bench.run("f32 rp apply 32→16", || rp.apply(&x));
+    bench.run("fxp rp apply 32→16 (q4.12)", || frp.apply_raw(&xq));
+
+    // ----- GHA step -------------------------------------------------
+    let xp: Vec<f32> = (0..p).map(|i| ((i * 29) % 13) as f32 / 13.0 - 0.5).collect();
+    let xpq = spec.quantize_vec(&xp);
+    let mut gha = GhaWhitener::new(GhaConfig {
+        input_dim: p,
+        output_dim: n,
+        ..Default::default()
+    });
+    bench.run("f32 gha step 16→8", || gha.step(&xp));
+    let mut fgha = FxpGha::new(p, n, 5e-3, 5e-3, 2018, spec);
+    bench.run("fxp gha step 16→8 (q4.12)", || fgha.step_raw(&xpq));
+
+    // ----- rotation-only EASI step ----------------------------------
+    let zn: Vec<f32> = (0..n).map(|i| ((i * 11) % 7) as f32 / 7.0 - 0.5).collect();
+    let znq = spec.quantize_vec(&zn);
+    let mut rot = EasiTrainer::new(EasiConfig {
+        input_dim: n,
+        output_dim: n,
+        mode: EasiMode::RotationOnly,
+        ..Default::default()
+    });
+    bench.run("f32 easi rotation step 8→8", || rot.step(&zn));
+    let mut frot = FxpEasiRot::new(n, n, 1e-3, None, spec);
+    bench.run("fxp easi rotation step 8→8 (q4.12)", || frot.step_raw(&znq));
+
+    // ----- composed unit --------------------------------------------
+    let mut unit = DrUnit::new(DrUnitConfig {
+        input_dim: p,
+        output_dim: n,
+        rot_warmup: 0,
+        ..Default::default()
+    });
+    bench.run("f32 unit step 16→8", || unit.step(&xp));
+    let mut funit = FxpDrUnit::new(FxpUnitConfig {
+        input_dim: p,
+        output_dim: n,
+        mu_w: 5e-3,
+        mu_rot: 1e-3,
+        rotate: true,
+        rot_warmup: 0,
+        seed: 2018,
+        spec,
+    });
+    bench.run("fxp unit step 16→8 (q4.12)", || funit.step_raw(&xpq));
+
+    // ----- dense matvec (inference path) ----------------------------
+    let b = Mat::from_fn(n, m, |i, j| ((i * m + j) as f32 * 0.13).sin());
+    let bq = FxpMat::quantize(&b, spec);
+    bench.run("f32 matvec 32→8", || b.matvec(&x));
+    bench.run("fxp matvec 32→8 (q4.12)", || bq.matvec_raw(&xq));
+
+    bench.finish();
+}

@@ -8,6 +8,7 @@
 //! tweakable.
 
 use crate::easi::EasiMode;
+use crate::fxp::Precision;
 use crate::rp::RpDistribution;
 use crate::util::cli::Args;
 use crate::util::json::Json;
@@ -96,6 +97,10 @@ pub struct ExperimentConfig {
     pub output_dim: usize,
     pub mode: PipelineMode,
     pub backend: Backend,
+    /// Arithmetic of the DR datapath: f32 or bit-accurate fixed point
+    /// (e.g. `"q1.15"`, `"q4.12"`). Fixed point runs the quantized
+    /// kernels of [`crate::fxp`] — native backend only.
+    pub precision: Precision,
     pub rp_distribution: RpDistribution,
     /// EASI rotation learning rate μ.
     pub mu: f32,
@@ -127,6 +132,7 @@ impl Default for ExperimentConfig {
             output_dim: 8,
             mode: PipelineMode::RpEasi,
             backend: Backend::Native,
+            precision: Precision::F32,
             rp_distribution: RpDistribution::Ternary,
             mu: 1e-3,
             mu_w: 5e-3,
@@ -170,6 +176,9 @@ impl ExperimentConfig {
         }
         if let Some(x) = v.get("backend") {
             c.backend = Backend::parse(x.as_str()?)?;
+        }
+        if let Some(x) = v.get("precision") {
+            c.precision = Precision::parse(x.as_str()?)?;
         }
         if let Some(x) = v.get("rp_distribution") {
             c.rp_distribution = match x.as_str()? {
@@ -224,6 +233,9 @@ impl ExperimentConfig {
         if let Some(b) = args.opt_str("backend") {
             self.backend = Backend::parse(b)?;
         }
+        if let Some(p) = args.opt_str("precision") {
+            self.precision = Precision::parse(p)?;
+        }
         self.input_dim = args.usize_or("input-dim", self.input_dim)?;
         self.intermediate_dim = args.usize_or("intermediate-dim", self.intermediate_dim)?;
         self.output_dim = args.usize_or("output-dim", self.output_dim)?;
@@ -259,6 +271,11 @@ impl ExperimentConfig {
         anyhow::ensure!(self.mu > 0.0, "mu must be positive");
         anyhow::ensure!(self.batch >= 1, "batch must be >= 1");
         anyhow::ensure!(self.queue_depth >= 1, "queue_depth must be >= 1");
+        anyhow::ensure!(
+            !(self.precision.is_fixed() && self.backend == Backend::Pjrt),
+            "fixed-point precision runs on the native backend only \
+             (the AOT artifacts are compiled for f32)"
+        );
         Ok(())
     }
 
@@ -277,6 +294,7 @@ impl ExperimentConfig {
                     Backend::Pjrt => "pjrt",
                 }),
             ),
+            ("precision", Json::str(self.precision.label())),
             ("mu", Json::num(self.mu as f64)),
             ("epochs", Json::num(self.epochs as f64)),
             ("batch", Json::num(self.batch as f64)),
@@ -338,6 +356,32 @@ mod tests {
         assert_eq!(c.mode, PipelineMode::Easi);
         assert_eq!(c.epochs, 9);
         assert!((c.mu - 0.005).abs() < 1e-9);
+    }
+
+    #[test]
+    fn precision_json_and_cli() {
+        let c = ExperimentConfig::from_json(
+            &Json::parse(r#"{"precision": "q1.15"}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.precision.label(), "q1.15");
+        let mut c = ExperimentConfig::default();
+        let args = Args::parse(
+            ["--precision", "q4.12"].iter().map(|s| s.to_string()),
+            &[],
+        )
+        .unwrap();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.precision.label(), "q4.12");
+        assert!(c.precision.is_fixed());
+    }
+
+    #[test]
+    fn fixed_precision_rejects_pjrt_backend() {
+        let r = ExperimentConfig::from_json(
+            &Json::parse(r#"{"precision": "q4.12", "backend": "pjrt"}"#).unwrap(),
+        );
+        assert!(r.is_err());
     }
 
     #[test]

@@ -16,6 +16,7 @@
 //! trainer hot-swaps to the full one.
 
 use crate::config::{Backend, ExperimentConfig, PipelineMode};
+use crate::fxp::{FxpDrUnit, FxpRp, FxpUnitConfig, Precision};
 use crate::linalg::Mat;
 use crate::pipeline::unit::{DrUnit, DrUnitConfig, RETRACT_INTERVAL};
 use crate::rp::RandomProjection;
@@ -80,6 +81,15 @@ impl<'rt> Trainer<'rt> {
         match cfg.backend {
             Backend::Native => Ok(Trainer::Native(NativeTrainer::new(cfg)?)),
             Backend::Pjrt => {
+                // Guard here too (not just in config validation, which
+                // struct-literal construction bypasses): the AOT
+                // artifacts compute in f32, so silently accepting a
+                // fixed-precision config would mislabel the run.
+                ensure!(
+                    !cfg.precision.is_fixed(),
+                    "fixed-point precision ({}) runs on the native backend only",
+                    cfg.precision.label()
+                );
                 let rt = runtime.context("PJRT backend needs a loaded Runtime")?;
                 Ok(Trainer::Pjrt(PjrtTrainer::new(cfg, rt)?))
             }
@@ -96,10 +106,11 @@ impl<'rt> Trainer<'rt> {
     }
 
     /// The fitted DR stage as one dense matrix (n × stage_input_dim):
-    /// `U·diag(λ̂^{-1/2})·W` (U omitted in whiten-only modes).
+    /// `U·diag(λ̂^{-1/2})·W` (U omitted in whiten-only modes). For
+    /// fixed-point precision this is the dequantized composition.
     pub fn separation_matrix(&self) -> Mat {
         match self {
-            Trainer::Native(t) => t.unit.effective_matrix(),
+            Trainer::Native(t) => t.separation_matrix(),
             Trainer::Pjrt(t) => t.effective_matrix(),
         }
     }
@@ -115,21 +126,27 @@ impl<'rt> Trainer<'rt> {
     /// Convergence signal (whitener orthonormality ∨ rotation EMA).
     pub fn update_magnitude(&self) -> f64 {
         match self {
-            Trainer::Native(t) => t.unit.update_magnitude(),
+            Trainer::Native(t) => t.update_magnitude(),
             Trainer::Pjrt(t) => t.update_ema,
         }
     }
 
     /// Transform a sample matrix through the fitted pipeline (RP then
-    /// the DR unit). Native matvec; artifact-based inference is
-    /// exercised by examples/benches.
+    /// the DR unit). Native matvec — bit-accurate integer forward for
+    /// fixed precision; artifact-based inference is exercised by
+    /// examples/benches.
     pub fn transform_rows(&self, x: &Mat) -> Mat {
-        let eff = self.separation_matrix();
-        let staged = match self.rp_matrix() {
-            Some(r) => r.apply_rows(x),
-            None => x.clone(),
-        };
-        eff.apply_rows(&staged)
+        match self {
+            Trainer::Native(t) => t.transform_rows(x),
+            Trainer::Pjrt(_) => {
+                let eff = self.separation_matrix();
+                let staged = match self.rp_matrix() {
+                    Some(r) => r.apply_rows(x),
+                    None => x.clone(),
+                };
+                eff.apply_rows(&staged)
+            }
+        }
     }
 
     /// Swap the datapath mode at run time (the paper's reconfigurable
@@ -180,12 +197,27 @@ fn build_rp(cfg: &ExperimentConfig) -> Option<RandomProjection> {
 
 // ------------------------------------------------------------- native
 
-/// Pure-Rust backend.
+/// Pure-Rust backend: either the f32 reference unit or the bit-accurate
+/// fixed-point unit, per `ExperimentConfig::precision`.
 pub struct NativeTrainer {
     mode: PipelineMode,
-    unit: DrUnit,
-    rp: Option<RandomProjection>,
+    engine: NativeEngine,
+    /// Dense scaled RP matrix for reports, whatever the engine.
     rp_dense: Option<Mat>,
+}
+
+enum NativeEngine {
+    F32 {
+        unit: DrUnit,
+        rp: Option<RandomProjection>,
+    },
+    // The arithmetic spec and input prescale live on the unit
+    // (`unit.config.spec`, `unit.quantize_input`) — single source of
+    // truth for the quantization the datapath actually uses.
+    Fxp {
+        unit: FxpDrUnit,
+        rp: Option<FxpRp>,
+    },
 }
 
 impl NativeTrainer {
@@ -196,35 +228,111 @@ impl NativeTrainer {
         } else {
             cfg.input_dim
         };
-        let unit = DrUnit::new(DrUnitConfig {
-            input_dim: stage_in,
-            output_dim: cfg.output_dim,
-            mu_w: cfg.mu_w,
-            mu_rot: cfg.mu,
-            rotate,
-            rot_warmup: cfg.rot_warmup as u64,
-            seed: cfg.seed,
-        });
         let rp = build_rp(cfg);
         let rp_dense = rp.as_ref().map(RandomProjection::to_dense);
+        let engine = match cfg.precision {
+            Precision::F32 => NativeEngine::F32 {
+                unit: DrUnit::new(DrUnitConfig {
+                    input_dim: stage_in,
+                    output_dim: cfg.output_dim,
+                    mu_w: cfg.mu_w,
+                    mu_rot: cfg.mu,
+                    rotate,
+                    rot_warmup: cfg.rot_warmup as u64,
+                    seed: cfg.seed,
+                }),
+                rp,
+            },
+            Precision::Fixed(spec) => NativeEngine::Fxp {
+                unit: FxpDrUnit::new(FxpUnitConfig {
+                    input_dim: stage_in,
+                    output_dim: cfg.output_dim,
+                    mu_w: cfg.mu_w,
+                    mu_rot: cfg.mu,
+                    rotate,
+                    rot_warmup: cfg.rot_warmup as u64,
+                    seed: cfg.seed,
+                    spec,
+                }),
+                rp: rp.as_ref().map(|p| FxpRp::from_rp(p, spec)),
+            },
+        };
         Ok(Self {
             mode: cfg.mode,
-            unit,
-            rp,
+            engine,
             rp_dense,
         })
     }
 
     fn step(&mut self, batch: &Batch) -> Result<()> {
         let rows = batch.rows();
-        match &self.rp {
-            Some(rp) => {
-                let projected = rp.apply_rows(rows);
-                self.unit.step_rows(&projected);
+        match &mut self.engine {
+            NativeEngine::F32 { unit, rp } => match rp {
+                Some(rp) => {
+                    let projected = rp.apply_rows(rows);
+                    unit.step_rows(&projected);
+                }
+                None => unit.step_rows(rows),
+            },
+            NativeEngine::Fxp { unit, rp } => {
+                for i in 0..rows.rows_count() {
+                    let xq = unit.quantize_input(rows.row(i));
+                    match rp {
+                        Some(f) => unit.step_raw(&f.apply_raw(&xq)),
+                        None => unit.step_raw(&xq),
+                    }
+                }
             }
-            None => self.unit.step_rows(rows),
         }
         Ok(())
+    }
+
+    fn separation_matrix(&self) -> Mat {
+        match &self.engine {
+            NativeEngine::F32 { unit, .. } => unit.effective_matrix(),
+            // The fxp unit folds its input prescale in. The trainer
+            // applies that same prescale *before* the (linear) RP stage
+            // instead, and the two placements commute, so the folded
+            // matrix composes correctly with `rp_matrix` as-is.
+            NativeEngine::Fxp { unit, .. } => unit.effective_matrix(),
+        }
+    }
+
+    fn update_magnitude(&self) -> f64 {
+        match &self.engine {
+            NativeEngine::F32 { unit, .. } => unit.update_magnitude(),
+            NativeEngine::Fxp { unit, .. } => unit.update_magnitude(),
+        }
+    }
+
+    /// Bulk transform: dense matvec for f32, the bit-accurate integer
+    /// forward path for fixed point (so reported accuracies reflect the
+    /// quantized pipeline).
+    fn transform_rows(&self, x: &Mat) -> Mat {
+        match &self.engine {
+            NativeEngine::F32 { unit, .. } => {
+                let eff = unit.effective_matrix();
+                let staged = match &self.rp_dense {
+                    Some(r) => r.apply_rows(x),
+                    None => x.clone(),
+                };
+                eff.apply_rows(&staged)
+            }
+            NativeEngine::Fxp { unit, rp } => {
+                let n = unit.config.output_dim;
+                let spec = unit.config.spec;
+                let mut out = Vec::with_capacity(x.rows_count() * n);
+                for i in 0..x.rows_count() {
+                    let xq = unit.quantize_input(x.row(i));
+                    let staged = match rp {
+                        Some(f) => f.apply_raw(&xq),
+                        None => xq,
+                    };
+                    out.extend(spec.dequantize_vec(&unit.transform_raw(&staged)));
+                }
+                Mat::from_vec(x.rows_count(), n, out)
+            }
+        }
     }
 
     fn reconfigure(&mut self, mode: PipelineMode) -> Result<()> {
@@ -233,7 +341,10 @@ impl NativeTrainer {
             mode.uses_rp() == self.mode.uses_rp(),
             "reconfigure cannot change the RP front end (state shapes would change)"
         );
-        self.unit.set_rotation(rotate);
+        match &mut self.engine {
+            NativeEngine::F32 { unit, .. } => unit.set_rotation(rotate),
+            NativeEngine::Fxp { unit, .. } => unit.set_rotation(rotate),
+        }
         self.mode = mode;
         Ok(())
     }
@@ -353,7 +464,7 @@ impl<'rt> PjrtTrainer<'rt> {
         // Host-side retraction of U at the same cadence the native unit
         // uses (between executable calls — cheap: O(n³)).
         if self.rotation_live() && self.samples_seen - self.last_retract >= RETRACT_INTERVAL {
-            orthonormalize_rows(&mut self.u);
+            crate::linalg::orthonormalize_rows(&mut self.u);
             self.last_retract = self.samples_seen;
         }
         Ok(())
@@ -407,25 +518,6 @@ impl<'rt> PjrtTrainer<'rt> {
     }
 }
 
-/// Modified Gram–Schmidt on the rows of a square matrix.
-fn orthonormalize_rows(u: &mut Mat) {
-    let (n, m) = u.shape();
-    for i in 0..n {
-        for j in 0..i {
-            let proj = crate::linalg::dot(u.row(i), u.row(j));
-            for k in 0..m {
-                let v = u.get(i, k) - proj * u.get(j, k);
-                u.set(i, k, v);
-            }
-        }
-        let norm = crate::linalg::norm2(u.row(i)).max(1e-12);
-        for k in 0..m {
-            let v = u.get(i, k) / norm;
-            u.set(i, k, v);
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -456,6 +548,26 @@ mod tests {
     }
 
     #[test]
+    fn native_trainer_fixed_precision_trains_and_transforms() {
+        let cfg = ExperimentConfig {
+            mode: PipelineMode::RpEasi,
+            precision: Precision::parse("q4.12").unwrap(),
+            ..Default::default()
+        };
+        let mut t = Trainer::from_config(&cfg, None).unwrap();
+        let data = Mat::from_fn(256, 32, |i, j| ((i * 31 + j * 7) % 17) as f32 / 17.0 - 0.5);
+        t.step(&Batch::Full(data.clone())).unwrap();
+        let y = t.transform_rows(&data);
+        assert_eq!(y.shape(), (256, 8));
+        assert!(y.as_slice().iter().all(|v| v.is_finite()));
+        assert!(t.rp_matrix().is_some());
+        assert_eq!(t.separation_matrix().shape(), (8, 16));
+        // The mux still reconfigures on the quantized engine.
+        t.reconfigure(PipelineMode::PcaWhiten)
+            .expect_err("rp-easi -> pca-whiten changes the RP front end");
+    }
+
+    #[test]
     fn native_reconfigure_mode_swap() {
         let cfg = ExperimentConfig {
             mode: PipelineMode::Easi,
@@ -477,15 +589,4 @@ mod tests {
         assert!(Trainer::from_config(&cfg, None).is_err());
     }
 
-    #[test]
-    fn orthonormalize_rows_works() {
-        let mut u = Mat::from_vec(2, 2, vec![3.0, 0.0, 1.0, 1.0]);
-        orthonormalize_rows(&mut u);
-        let d00 = crate::linalg::dot(u.row(0), u.row(0));
-        let d01 = crate::linalg::dot(u.row(0), u.row(1));
-        let d11 = crate::linalg::dot(u.row(1), u.row(1));
-        assert!((d00 - 1.0).abs() < 1e-5);
-        assert!(d01.abs() < 1e-5);
-        assert!((d11 - 1.0).abs() < 1e-5);
-    }
 }

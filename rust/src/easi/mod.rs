@@ -323,24 +323,7 @@ impl EasiTrainer {
     pub fn reorthonormalize(&mut self) {
         let (n, m) = self.b.shape();
         debug_assert!(n <= m);
-        for i in 0..n {
-            for j in 0..i {
-                let proj = {
-                    let ri = self.b.row(i);
-                    let rj = self.b.row(j);
-                    crate::linalg::dot(ri, rj)
-                };
-                for k in 0..m {
-                    let v = self.b.get(i, k) - proj * self.b.get(j, k);
-                    self.b.set(i, k, v);
-                }
-            }
-            let norm = crate::linalg::norm2(self.b.row(i)).max(1e-12);
-            for k in 0..m {
-                let v = self.b.get(i, k) / norm;
-                self.b.set(i, k, v);
-            }
-        }
+        crate::linalg::orthonormalize_rows(&mut self.b);
     }
 
     /// Whiteness of the trainer's outputs on the given samples — the

@@ -119,6 +119,7 @@ fn reduce(data: &Dataset, alg: Algorithm, n: usize, which: &str, seed: u64) -> D
                 stage: StageSpec::Pca,
                 output_dim: n,
                 seed,
+                precision: crate::fxp::Precision::F32,
             };
             DrPipeline::fit(spec, &data.train_x).transform_dataset(data)
         }
@@ -141,6 +142,7 @@ fn reduce(data: &Dataset, alg: Algorithm, n: usize, which: &str, seed: u64) -> D
                 },
                 output_dim: n,
                 seed,
+                precision: crate::fxp::Precision::F32,
             };
             DrPipeline::fit(spec, &data.train_x).transform_dataset(data)
         }

@@ -4,4 +4,5 @@
 //! reports the same numbers.
 
 pub mod fig1;
+pub mod fxp_sweep;
 pub mod table1;

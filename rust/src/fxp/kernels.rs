@@ -1,0 +1,890 @@
+//! Bit-accurate quantized kernels for the three DR stages.
+//!
+//! Each kernel mirrors its f32 counterpart's update rule with every
+//! datapath operation performed in fixed point ([`FxpSpec`] arithmetic:
+//! wide accumulators, one rounding per MAC chain, saturation on
+//! write-back):
+//!
+//! * [`FxpRp`] — the RP front end. The conditional add/sub network is
+//!   *exact* in fixed point (integer adds lose nothing); only the
+//!   optional output scale is a rounded constant multiply.
+//! * [`FxpGha`] — Sanger's rule ([`crate::gha`]). The variance EMA uses
+//!   an extended-precision accumulator (`frac + 16` bits), the standard
+//!   trick for slow EMAs whose per-step increment would otherwise
+//!   round to zero at narrow widths.
+//! * [`FxpEasiRot`] — the paper's rotation-only EASI datapath
+//!   ([`crate::easi`], `EasiMode::RotationOnly`), rectangular or
+//!   square.
+//! * [`FxpDrUnit`] — the composed whiten→rotate unit, the fixed-point
+//!   image of [`crate::pipeline::unit::DrUnit`].
+//!
+//! # Host-side helpers (documented deviations from pure streaming)
+//!
+//! Two small computations run outside the integer datapath, at the same
+//! cadence the PJRT backend applies its host-side retraction
+//! (`RETRACT_INTERVAL = 256` samples):
+//!
+//! * the whitening coefficients `σ/√λ̂` (a reciprocal square root — in
+//!   hardware a small sequential LUT/CORDIC unit, not the pipeline);
+//! * the rotation retraction (dequantize → modified Gram–Schmidt →
+//!   requantize), exactly like the PJRT backend.
+//!
+//! # Narrow-format scaling
+//!
+//! Formats with fewer than 4 integer bits cannot hold standardized data
+//! (±~6σ); [`super::input_prescale`] shifts inputs down by an exact
+//! power of two. The whitener then targets output σ = `2^-(3-i)` for
+//! `i` integer bits (so ±4σ fits the format), and the rotation's μ is
+//! compensated by σ⁻⁴ (its update terms scale as σ⁴) — both host-side
+//! constant folding, exact in binary.
+
+use super::{input_prescale, FxpConst, FxpMat, FxpSpec};
+use crate::linalg::{orthonormalize_rows, Mat};
+use crate::rp::{RandomProjection, SparseSignMatrix};
+
+/// Cadence (samples) of the host-side helpers: whitening-coefficient
+/// refresh and rotation retraction. Matches the PJRT backend's
+/// `RETRACT_INTERVAL`.
+pub const HOST_REFRESH_INTERVAL: u64 = 256;
+
+/// Extra fraction bits of the variance-EMA accumulator.
+const VAR_EXTRA_FRAC: u32 = 16;
+
+// ------------------------------------------------------------------ RP
+
+/// Quantized random projection: the exact add/sub network on raw words.
+#[derive(Debug, Clone)]
+pub struct FxpRp {
+    pub in_dim: usize,
+    pub out_dim: usize,
+    pub spec: FxpSpec,
+    /// Ternary/Achlioptas sign pattern (adds only).
+    sparse: Option<SparseSignMatrix>,
+    /// Dense quantized matrix for the Gaussian variant (scale folded
+    /// in, as `to_dense` bakes it).
+    dense: Option<FxpMat>,
+    /// Output scale for sparse variants, when ≠ 1.
+    scale: Option<FxpConst>,
+}
+
+impl FxpRp {
+    /// Quantize an existing projection (same pattern, same scale).
+    pub fn from_rp(rp: &RandomProjection, spec: FxpSpec) -> Self {
+        match rp.sparse_pattern() {
+            Some(s) => Self {
+                in_dim: rp.in_dim,
+                out_dim: rp.out_dim,
+                spec,
+                sparse: Some(s.clone()),
+                dense: None,
+                scale: (rp.scale != 1.0)
+                    .then(|| FxpConst::from_f32(rp.scale, spec.format.width())),
+            },
+            None => Self {
+                in_dim: rp.in_dim,
+                out_dim: rp.out_dim,
+                spec,
+                sparse: None,
+                dense: Some(FxpMat::quantize(&rp.to_dense(), spec)),
+                scale: None,
+            },
+        }
+    }
+
+    /// `y = scale · R x` on raw words. The output scale is applied to
+    /// the *wide* accumulator sum before the format write-back, so a
+    /// sub-unity scale (the unit-variance √(p/m)) can rescue sums that
+    /// would otherwise saturate — the adder network itself stays exact.
+    pub fn apply_raw(&self, x: &[i32]) -> Vec<i32> {
+        assert_eq!(x.len(), self.in_dim, "fxp rp apply shape mismatch");
+        match (&self.sparse, &self.dense) {
+            (Some(s), _) => s
+                .apply_raw(x)
+                .into_iter()
+                .map(|sum| match &self.scale {
+                    Some(c) => {
+                        let p = sum as i128 * c.raw as i128;
+                        self.spec.fit(self.spec.rescale_wide(p, c.frac as u32))
+                    }
+                    None => self.spec.fit(sum),
+                })
+                .collect(),
+            (None, Some(d)) => d.matvec_raw(x),
+            (None, None) => unreachable!("FxpRp holds sparse or dense"),
+        }
+    }
+
+    /// Convenience f32 boundary: quantize in, dequantize out.
+    pub fn apply(&self, x: &[f32]) -> Vec<f32> {
+        let xq = self.spec.quantize_vec(x);
+        self.spec.dequantize_vec(&self.apply_raw(&xq))
+    }
+}
+
+// ----------------------------------------------------------------- GHA
+
+/// Quantized streaming principal-subspace whitener (Sanger's rule).
+#[derive(Debug, Clone)]
+pub struct FxpGha {
+    pub spec: FxpSpec,
+    input_dim: usize,
+    output_dim: usize,
+    w: FxpMat,
+    /// Extended-precision second-moment accumulators, raw with
+    /// `frac_bits + VAR_EXTRA_FRAC` fraction bits.
+    var_acc: Vec<i64>,
+    mu: FxpConst,
+    beta: FxpConst,
+    /// Whitening coefficients `σ/√λ̂`, refreshed every
+    /// [`HOST_REFRESH_INTERVAL`] samples.
+    coeff: Vec<FxpConst>,
+    /// Whitening target σ = 2^-sigma_shift (1 for ≥ 3 integer bits).
+    sigma_shift: i32,
+    steps: u64,
+    y: Vec<i32>,
+    cum: Vec<i32>,
+    delta: Vec<i32>,
+}
+
+impl FxpGha {
+    pub fn new(
+        input_dim: usize,
+        output_dim: usize,
+        mu: f32,
+        var_beta: f32,
+        seed: u64,
+        spec: FxpSpec,
+    ) -> Self {
+        assert!(input_dim >= output_dim && output_dim >= 1);
+        assert!(mu > 0.0 && var_beta > 0.0);
+        let w = FxpMat::quantize(
+            &crate::easi::random_orthonormal(output_dim, input_dim, seed),
+            spec,
+        );
+        let width = spec.format.width();
+        let init_var = 1i64 << (spec.format.frac_bits as u32 + VAR_EXTRA_FRAC);
+        let mut g = Self {
+            spec,
+            input_dim,
+            output_dim,
+            w,
+            var_acc: vec![init_var; output_dim],
+            mu: FxpConst::from_f32(mu, width),
+            beta: FxpConst::from_f32(var_beta, width),
+            coeff: vec![FxpConst { raw: 0, frac: 0 }; output_dim],
+            sigma_shift: (3 - spec.format.int_bits as i32).max(0),
+            steps: 0,
+            y: vec![0; output_dim],
+            cum: vec![0; input_dim],
+            delta: vec![0; output_dim * input_dim],
+        };
+        g.refresh_coeffs();
+        g
+    }
+
+    /// The subspace, dequantized.
+    pub fn subspace(&self) -> Mat {
+        self.w.dequantize()
+    }
+
+    /// λ̂ estimates (in the prescaled-input domain).
+    pub fn variances(&self) -> Vec<f32> {
+        let res =
+            (2.0f64).powi(-(self.spec.format.frac_bits as i32 + VAR_EXTRA_FRAC as i32));
+        self.var_acc.iter().map(|&v| (v as f64 * res) as f32).collect()
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// Whitening target standard deviation (a power of two).
+    pub fn target_sigma(&self) -> f32 {
+        (2.0f32).powi(-self.sigma_shift)
+    }
+
+    /// Recompute the whitening coefficients `σ/√λ̂` (host/LUT side; see
+    /// module docs). Between refreshes the forward path is all-integer.
+    pub fn refresh_coeffs(&mut self) {
+        let vars = self.variances();
+        let width = self.spec.format.width();
+        let sigma = self.target_sigma();
+        let floor = self.spec.format.resolution();
+        for (c, v) in self.coeff.iter_mut().zip(&vars) {
+            *c = FxpConst::from_f32(sigma / v.max(floor).sqrt(), width);
+        }
+    }
+
+    /// One streaming Sanger update on raw words.
+    pub fn step_raw(&mut self, x: &[i32]) {
+        let spec = self.spec;
+        let (n, m) = (self.output_dim, self.input_dim);
+        assert_eq!(x.len(), m, "fxp gha step shape mismatch");
+        for i in 0..n {
+            self.y[i] = spec.dot_raw(self.w.row(i), x);
+        }
+        for c in self.cum.iter_mut() {
+            *c = 0;
+        }
+        // Deltas from the pre-update W (buffered, like the f32 kernel).
+        for i in 0..n {
+            let yi = self.y[i];
+            let row = self.w.row(i);
+            for j in 0..m {
+                self.cum[j] = spec.add(self.cum[j], spec.mul(yi, row[j]));
+                let t = spec.sub(x[j], self.cum[j]);
+                let p = spec.mul(yi, t);
+                self.delta[i * m + j] = spec.mul_const(p, &self.mu);
+            }
+        }
+        for (w, &d) in self.w.as_raw_mut().iter_mut().zip(self.delta.iter()) {
+            *w = spec.add(*w, d);
+        }
+        // Variance EMA in the extended accumulator: λ̂ += β(y² − λ̂).
+        for (va, &yi) in self.var_acc.iter_mut().zip(&self.y) {
+            let y2_ext = (spec.mul(yi, yi) as i64) << VAR_EXTRA_FRAC;
+            let diff = y2_ext - *va;
+            let upd = ((diff as i128 * self.beta.raw as i128) >> self.beta.frac) as i64;
+            *va = (*va + upd).max(0);
+        }
+        self.steps += 1;
+        if self.steps % HOST_REFRESH_INTERVAL == 0 {
+            self.refresh_coeffs();
+        }
+    }
+
+    /// Project without normalisation: `y = Wx`.
+    pub fn project_raw(&self, x: &[i32]) -> Vec<i32> {
+        self.w.matvec_raw(x)
+    }
+
+    /// Whiten: `z_i = coeff_i · (Wx)_i` with `coeff = σ/√λ̂`.
+    pub fn whiten_raw(&self, x: &[i32]) -> Vec<i32> {
+        self.project_raw(x)
+            .into_iter()
+            .zip(&self.coeff)
+            .map(|(yi, c)| self.spec.mul_const(yi, c))
+            .collect()
+    }
+
+    /// The whitening map as a dense f32 matrix `diag(coeff)·W`.
+    pub fn whitening_matrix(&self) -> Mat {
+        let w = self.w.dequantize();
+        let (n, m) = w.shape();
+        Mat::from_fn(n, m, |i, j| w.get(i, j) * self.coeff[i].value())
+    }
+
+    /// Mean absolute row-orthonormality error of W (→ 0 at
+    /// convergence), on dequantized values.
+    pub fn orthonormality_error(&self) -> f64 {
+        let w = self.subspace();
+        let n = w.rows_count();
+        let mut err = 0.0f64;
+        for i in 0..n {
+            for j in 0..n {
+                let d = crate::linalg::dot(w.row(i), w.row(j)) as f64;
+                let want = if i == j { 1.0 } else { 0.0 };
+                err += (d - want).abs();
+            }
+        }
+        err / (n * n) as f64
+    }
+}
+
+// ---------------------------------------------------- rotation-only EASI
+
+/// Quantized rotation-only EASI (the paper's modified datapath):
+/// `B ← B − μ(g uᵀ − y vᵀ)` with `y = Bz`, `g = y³`, `u = Bᵀy`,
+/// `v = Bᵀg`. Rectangular (n×m) or square.
+#[derive(Debug, Clone)]
+pub struct FxpEasiRot {
+    pub spec: FxpSpec,
+    input_dim: usize,
+    output_dim: usize,
+    b: FxpMat,
+    mu: FxpConst,
+    steps: u64,
+    /// EMA of ‖ΔB‖/‖B‖ — the same convergence monitor the f32
+    /// `EasiTrainer` keeps. Computed from the integer deltas; the EMA
+    /// itself is a host-side observability counter, not datapath state.
+    update_ema: f64,
+    y: Vec<i32>,
+    g: Vec<i32>,
+}
+
+impl FxpEasiRot {
+    /// `random_init: Some(seed)` starts from a random orthonormal
+    /// subspace (the rectangular case); `None` starts from the identity
+    /// embedding (square rotations). `mu` is the *effective* learning
+    /// rate — callers fold in any σ compensation.
+    pub fn new(
+        input_dim: usize,
+        output_dim: usize,
+        mu: f32,
+        random_init: Option<u64>,
+        spec: FxpSpec,
+    ) -> Self {
+        assert!(input_dim >= output_dim && output_dim >= 1);
+        assert!(mu > 0.0);
+        let b0 = match random_init {
+            Some(seed) => crate::easi::random_orthonormal(output_dim, input_dim, seed),
+            None => Mat::eye(output_dim, input_dim),
+        };
+        Self {
+            spec,
+            input_dim,
+            output_dim,
+            b: FxpMat::quantize(&b0, spec),
+            mu: FxpConst::from_f32(mu, spec.format.width()),
+            steps: 0,
+            update_ema: 1.0,
+            y: vec![0; output_dim],
+            g: vec![0; output_dim],
+        }
+    }
+
+    /// EMA of ‖ΔB‖_F/‖B‖_F — approaches 0 as the rotation converges
+    /// (same semantics as `EasiTrainer::update_magnitude`).
+    pub fn update_magnitude(&self) -> f64 {
+        self.update_ema
+    }
+
+    /// The separation/rotation matrix, dequantized.
+    pub fn matrix(&self) -> Mat {
+        self.b.dequantize()
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// Forward transform `y = Bz` on raw words.
+    pub fn transform_raw(&self, z: &[i32]) -> Vec<i32> {
+        self.b.matvec_raw(z)
+    }
+
+    /// One rotation-only update on raw words.
+    pub fn step_raw(&mut self, z: &[i32]) {
+        let spec = self.spec;
+        let (n, m) = (self.output_dim, self.input_dim);
+        assert_eq!(z.len(), m, "fxp easi step shape mismatch");
+        for i in 0..n {
+            self.y[i] = spec.dot_raw(self.b.row(i), z);
+        }
+        for i in 0..n {
+            let yi = self.y[i];
+            self.g[i] = spec.mul(spec.mul(yi, yi), yi);
+        }
+        let u = self.b.matvec_t_raw(&self.y);
+        let v = self.b.matvec_t_raw(&self.g);
+        let mut delta2: i128 = 0;
+        let mut b_norm2: i128 = 0;
+        for i in 0..n {
+            let (yi, gi) = (self.y[i], self.g[i]);
+            for j in 0..m {
+                let t = spec.sub(spec.mul(gi, u[j]), spec.mul(yi, v[j]));
+                let d = spec.mul_const(t, &self.mu);
+                let bij = self.b.get_raw(i, j);
+                delta2 += d as i128 * d as i128;
+                b_norm2 += bij as i128 * bij as i128;
+                self.b.set_raw(i, j, spec.sub(bij, d));
+            }
+        }
+        // Convergence monitor (host-side counter, same recursion as the
+        // f32 trainer's): EMA of ‖ΔB‖/‖B‖.
+        let rel = (delta2 as f64).sqrt() / ((b_norm2 as f64).sqrt() + 1e-30);
+        self.update_ema = 0.99 * self.update_ema + 0.01 * rel;
+        self.steps += 1;
+        if self.steps % HOST_REFRESH_INTERVAL == 0 {
+            self.retract();
+        }
+    }
+
+    /// Host-side retraction to the orthonormal manifold (dequantize →
+    /// modified Gram–Schmidt → requantize), same cadence and rationale
+    /// as the PJRT backend's.
+    pub fn retract(&mut self) {
+        let mut m = self.b.dequantize();
+        orthonormalize_rows(&mut m);
+        self.b = FxpMat::quantize(&m, self.spec);
+    }
+}
+
+// --------------------------------------------------------- composed unit
+
+/// Configuration of the composed fixed-point DR unit (mirrors
+/// `pipeline::unit::DrUnitConfig` plus the arithmetic spec).
+#[derive(Debug, Clone, Copy)]
+pub struct FxpUnitConfig {
+    pub input_dim: usize,
+    pub output_dim: usize,
+    /// GHA (whitening) learning rate.
+    pub mu_w: f32,
+    /// EASI rotation learning rate (σ compensation applied internally).
+    pub mu_rot: f32,
+    /// Whether the HOS rotation stage is active (the paper's mux).
+    pub rotate: bool,
+    /// Whitener-only warm-up samples before the rotation learns.
+    pub rot_warmup: u64,
+    pub seed: u64,
+    pub spec: FxpSpec,
+}
+
+/// The composed streaming fixed-point unit: GHA whitening (+σ/√λ̂
+/// scaling) followed by a square EASI rotation — the bit-accurate image
+/// of [`crate::pipeline::unit::DrUnit`].
+#[derive(Debug, Clone)]
+pub struct FxpDrUnit {
+    pub config: FxpUnitConfig,
+    gha: FxpGha,
+    rot: FxpEasiRot,
+    /// ±4σ clamp on whitened inputs to the rotation (mirrors DrUnit's
+    /// ±4 clamp in the σ=1 domain).
+    clamp_raw: i32,
+}
+
+impl FxpDrUnit {
+    pub fn new(config: FxpUnitConfig) -> Self {
+        let spec = config.spec;
+        let gha = FxpGha::new(
+            config.input_dim,
+            config.output_dim,
+            config.mu_w,
+            5e-3,
+            config.seed,
+            spec,
+        );
+        // The rotation's update terms scale as σ⁴ on σ-scaled whitened
+        // inputs; fold σ⁻⁴ into μ (host-side constant folding, exact —
+        // σ is a power of two).
+        let sigma = gha.target_sigma();
+        let mu_eff = config.mu_rot / (sigma * sigma * sigma * sigma);
+        let rot = FxpEasiRot::new(config.output_dim, config.output_dim, mu_eff, None, spec);
+        let clamp_raw = spec.quantize(4.0 * sigma);
+        Self {
+            config,
+            gha,
+            rot,
+            clamp_raw,
+        }
+    }
+
+    /// The power-of-two input prescale for this format (see module
+    /// docs); applied by [`FxpDrUnit::quantize_input`].
+    pub fn prescale(&self) -> f32 {
+        input_prescale(&self.config.spec)
+    }
+
+    /// Quantize an f32 sample into the unit's input domain.
+    pub fn quantize_input(&self, x: &[f32]) -> Vec<i32> {
+        let ps = self.prescale();
+        x.iter().map(|&v| self.config.spec.quantize(v * ps)).collect()
+    }
+
+    /// One streaming sample (raw words, already prescaled/quantized).
+    pub fn step_raw(&mut self, x: &[i32]) {
+        self.gha.step_raw(x);
+        if self.config.rotate && self.gha.steps() > self.config.rot_warmup {
+            let mut z = self.gha.whiten_raw(x);
+            for v in &mut z {
+                *v = (*v).clamp(-self.clamp_raw, self.clamp_raw);
+            }
+            self.rot.step_raw(&z);
+        }
+    }
+
+    /// One streaming sample from f32 (quantizes at the boundary).
+    pub fn step(&mut self, x: &[f32]) {
+        let xq = self.quantize_input(x);
+        self.step_raw(&xq);
+    }
+
+    /// Consume every row of an f32 sample matrix.
+    pub fn step_rows(&mut self, x: &Mat) {
+        for i in 0..x.rows_count() {
+            self.step(x.row(i));
+        }
+    }
+
+    /// Forward transform on raw words.
+    pub fn transform_raw(&self, x: &[i32]) -> Vec<i32> {
+        let z = self.gha.whiten_raw(x);
+        if self.config.rotate {
+            self.rot.transform_raw(&z)
+        } else {
+            z
+        }
+    }
+
+    /// Forward transform from f32 (quantize → integer datapath →
+    /// dequantize).
+    pub fn transform(&self, x: &[f32]) -> Vec<f32> {
+        let xq = self.quantize_input(x);
+        self.config.spec.dequantize_vec(&self.transform_raw(&xq))
+    }
+
+    /// Toggle the rotation stage (the paper's reconfiguration mux).
+    pub fn set_rotation(&mut self, on: bool) {
+        self.config.rotate = on;
+    }
+
+    pub fn rotation_enabled(&self) -> bool {
+        self.config.rotate
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.gha.steps()
+    }
+
+    /// The unit as one dense f32 matrix — `U·diag(σ/√λ̂)·W` times the
+    /// input prescale, so it maps *unscaled* samples like
+    /// `DrUnit::effective_matrix` (up to quantization).
+    pub fn effective_matrix(&self) -> Mat {
+        let mut eff = if self.config.rotate {
+            self.rot.matrix().matmul(&self.gha.whitening_matrix())
+        } else {
+            self.gha.whitening_matrix()
+        };
+        eff.scale(self.prescale());
+        eff
+    }
+
+    /// Convergence signal: the larger of the whitener's orthonormality
+    /// error and the rotation's update EMA — same composition as
+    /// `DrUnit::update_magnitude`, so fixed-precision runs interact
+    /// with the coordinator's stop rules like f32 runs do.
+    pub fn update_magnitude(&self) -> f64 {
+        let gha_like = self.gha.orthonormality_error();
+        if self.config.rotate {
+            gha_like.max(self.rot.update_magnitude())
+        } else {
+            gha_like
+        }
+    }
+
+    /// Access the whitener (tests, diagnostics).
+    pub fn whitener(&self) -> &FxpGha {
+        &self.gha
+    }
+
+    /// Access the rotation stage.
+    pub fn rotation(&self) -> &FxpEasiRot {
+        &self.rot
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gha::{GhaConfig, GhaWhitener};
+    use crate::linalg::whiteness_error;
+    use crate::rng::{Pcg64, RngExt};
+    use crate::rp::RpDistribution;
+
+    // ------------------------------------------------------------- RP
+
+    #[test]
+    fn fxp_rp_ternary_matches_f32() {
+        // Ternary RP has scale 1 — the add/sub network is exact, so the
+        // only error is input quantization: ≤ nnz_row · ulp/2 per
+        // output. Documented tolerance: m · ulp.
+        let spec = FxpSpec::q(8, 16);
+        let rp = RandomProjection::new(64, 16, RpDistribution::Ternary, 11);
+        let frp = FxpRp::from_rp(&rp, spec);
+        let x: Vec<f32> = (0..64).map(|i| (i as f32 * 0.37).sin() * 2.0).collect();
+        let want = rp.apply(&x);
+        let got = frp.apply(&x);
+        let tol = 64.0 * spec.format.resolution();
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() <= tol, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn fxp_rp_exact_on_grid_inputs() {
+        // Inputs on the quantization grid (scale 1): bit-exact.
+        let spec = FxpSpec::q(8, 8);
+        let rp = RandomProjection::new(32, 8, RpDistribution::Ternary, 3);
+        let frp = FxpRp::from_rp(&rp, spec);
+        let x: Vec<f32> = (0..32).map(|i| (i % 7) as f32 * 0.25 - 0.75).collect();
+        let want = rp.apply(&x);
+        let got = frp.apply(&x);
+        for (a, b) in got.iter().zip(&want) {
+            assert_eq!(a, b, "grid inputs must project exactly");
+        }
+    }
+
+    #[test]
+    fn fxp_rp_scaled_variants_close() {
+        // unit_variance folds a √(p/m) constant in: one rounded
+        // multiply per output. Tolerance: (m + |y|/ulp·relerr) · ulp ≈
+        // m · ulp + |y| · 2⁻¹⁵.
+        let spec = FxpSpec::q(8, 16);
+        let rp = RandomProjection::new(64, 16, RpDistribution::Ternary, 5).unit_variance();
+        let frp = FxpRp::from_rp(&rp, spec);
+        let x: Vec<f32> = (0..64).map(|i| (i as f32 * 0.23).cos()).collect();
+        for (a, b) in frp.apply(&x).iter().zip(&rp.apply(&x)) {
+            assert!((a - b).abs() <= 64.0 * spec.format.resolution() + b.abs() * 1e-3);
+        }
+    }
+
+    // ------------------------------------------------------------ GHA
+
+    fn bounded_data(samples: usize, dim: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::seed(seed);
+        // Low-rank structure + noise, bounded in [-2, 2] so the f32
+        // oracle's clip guard never engages.
+        Mat::from_fn(samples, dim, |_, j| {
+            let a = rng.next_f32() * 2.0 - 1.0;
+            (a * ((j as f32 * 0.7).sin() + 1.2)).clamp(-2.0, 2.0)
+        })
+    }
+
+    #[test]
+    fn fxp_gha_single_step_parity() {
+        // One update from an identical starting point, 24-bit datapath,
+        // against the f32 kernel (clip disabled). Documented tolerance:
+        // 32 ulp per entry (init quantization + per-MAC rounding).
+        let spec = FxpSpec::q(8, 16);
+        let (m, n, seed) = (12usize, 4usize, 77u64);
+        let mut f32_gha = GhaWhitener::new(GhaConfig {
+            input_dim: m,
+            output_dim: n,
+            mu: 2e-3,
+            var_beta: 5e-3,
+            clip: 0.0,
+            seed,
+        });
+        let mut fxp_gha = FxpGha::new(m, n, 2e-3, 5e-3, seed, spec);
+        let x: Vec<f32> = (0..m).map(|j| ((j * 5 % 7) as f32 * 0.2 - 0.6)).collect();
+        f32_gha.step(&x);
+        fxp_gha.step_raw(&spec.quantize_vec(&x));
+        let a = f32_gha.subspace();
+        let b = fxp_gha.subspace();
+        let tol = 32.0 * spec.format.resolution();
+        for (u, v) in a.as_slice().iter().zip(b.as_slice()) {
+            assert!((u - v).abs() <= tol, "{u} vs {v}");
+        }
+    }
+
+    #[test]
+    fn fxp_gha_converges_to_principal_subspace() {
+        // Functional parity at 18 bits: the quantized whitener finds
+        // the same principal plane batch PCA does.
+        use crate::pca::BatchPca;
+        let spec = FxpSpec::q(6, 12);
+        let x = bounded_data(4000, 6, 71);
+        let mut gha = FxpGha::new(6, 2, 5e-3, 5e-3, 2018, spec);
+        for _ in 0..6 {
+            for i in 0..x.rows_count() {
+                gha.step_raw(&spec.quantize_vec(x.row(i)));
+            }
+        }
+        let pca = BatchPca::fit(&x, 2);
+        for i in 0..2 {
+            let w = gha.subspace();
+            let wi = w.row(i);
+            let proj: f32 = (0..2)
+                .map(|k| crate::linalg::dot(wi, pca.components.row(k)).powi(2))
+                .sum();
+            let total = crate::linalg::dot(wi, wi);
+            assert!(
+                proj / total > 0.9,
+                "row {i}: {:.2} of its mass in the principal plane",
+                proj / total
+            );
+        }
+        assert!(gha.orthonormality_error() < 0.1);
+    }
+
+    // ----------------------------------------------------------- EASI
+
+    #[test]
+    fn fxp_easi_single_step_parity_vs_f32_oracle() {
+        // One rotation-only update against a literal f32 computation of
+        // the same factored form. Documented tolerance: 32 ulp.
+        let spec = FxpSpec::q(8, 16);
+        let (m, n, mu) = (6usize, 6usize, 1e-3f32);
+        let mut rot = FxpEasiRot::new(m, n, mu, None, spec);
+        let z: Vec<f32> = (0..m).map(|j| (j as f32 * 0.9).sin() * 1.5).collect();
+        let b0 = rot.matrix(); // quantized identity, the shared start
+        rot.step_raw(&spec.quantize_vec(&z));
+
+        // f32 oracle on the same (quantized) starting state.
+        let y = b0.matvec(&z);
+        let g: Vec<f32> = y.iter().map(|v| v * v * v).collect();
+        let u = b0.matvec_t(&y);
+        let v = b0.matvec_t(&g);
+        let mut want = b0.clone();
+        for i in 0..n {
+            for j in 0..m {
+                let d = mu * (g[i] * u[j] - y[i] * v[j]);
+                want.set(i, j, want.get(i, j) - d);
+            }
+        }
+        let got = rot.matrix();
+        let tol = 32.0 * spec.format.resolution();
+        for (a, b) in got.as_slice().iter().zip(want.as_slice()) {
+            assert!((a - b).abs() <= tol, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn fxp_rotation_keeps_white_inputs_white() {
+        // Mirror of the f32 rotation-only test: a skew update cannot
+        // destroy whiteness, quantized or not.
+        let spec = FxpSpec::q(4, 12);
+        let mut rng = Pcg64::seed(37);
+        let x = Mat::from_fn(4000, 4, |_, _| (rng.next_f32() * 2.0 - 1.0) * 3f32.sqrt());
+        let mut rot = FxpEasiRot::new(4, 4, 1e-3, None, spec);
+        for _ in 0..2 {
+            for i in 0..x.rows_count() {
+                rot.step_raw(&spec.quantize_vec(x.row(i)));
+            }
+        }
+        let y = Mat::from_fn(x.rows_count(), 4, |i, j| {
+            spec.dequantize(rot.transform_raw(&spec.quantize_vec(x.row(i)))[j])
+        });
+        let w = whiteness_error(&y);
+        assert!(w < 0.2, "rotation destroyed whiteness: {w}");
+    }
+
+    // ----------------------------------------------------------- unit
+
+    #[test]
+    fn fxp_unit_whitens_at_16_bits() {
+        let spec = FxpSpec::q(4, 12);
+        let x = bounded_data(5000, 8, 81);
+        let mut unit = FxpDrUnit::new(FxpUnitConfig {
+            input_dim: 8,
+            output_dim: 3,
+            mu_w: 5e-3,
+            mu_rot: 1e-3,
+            rotate: true,
+            rot_warmup: 1000,
+            seed: 2018,
+            spec,
+        });
+        for _ in 0..6 {
+            unit.step_rows(&x);
+        }
+        let y = Mat::from_fn(x.rows_count(), 3, |i, j| unit.transform(x.row(i))[j]);
+        let w = whiteness_error(&y);
+        // The σ target rescales outputs uniformly, so whiteness (a
+        // correlation-shaped metric on covariance/σ²) still applies.
+        let sigma2 = (unit.whitener().target_sigma() as f64).powi(2);
+        let cov = y.covariance(true, false);
+        let mut err = 0.0f64;
+        let n = 3;
+        for i in 0..n {
+            for j in 0..n {
+                let want = if i == j { sigma2 } else { 0.0 };
+                err += ((cov.get(i, j) as f64 / sigma2) - want / sigma2).abs();
+            }
+        }
+        err /= (n * n) as f64;
+        assert!(err < 0.35, "unit outputs far from white: {err} (raw {w})");
+    }
+
+    #[test]
+    fn fxp_unit_narrow_format_trains_without_divergence() {
+        // Q1.15: prescale + σ-target machinery. The unit must stay
+        // finite and keep learning signal (subspace must move off init).
+        let spec = FxpSpec::q(1, 15);
+        let x = bounded_data(3000, 8, 83);
+        let mut unit = FxpDrUnit::new(FxpUnitConfig {
+            input_dim: 8,
+            output_dim: 3,
+            mu_w: 5e-3,
+            mu_rot: 1e-3,
+            rotate: true,
+            rot_warmup: 500,
+            seed: 7,
+            spec,
+        });
+        let w0 = unit.whitener().subspace();
+        for _ in 0..4 {
+            unit.step_rows(&x);
+        }
+        let w1 = unit.whitener().subspace();
+        let mut moved = 0.0f64;
+        for (a, b) in w0.as_slice().iter().zip(w1.as_slice()) {
+            moved += ((a - b) as f64).abs();
+        }
+        assert!(moved > 1e-3, "Q1.15 whitener never updated");
+        assert!(w1.as_slice().iter().all(|v| v.is_finite()));
+        assert!(unit.whitener().orthonormality_error() < 0.5);
+    }
+
+    #[test]
+    fn fxp_unit_effective_matrix_matches_transform() {
+        let spec = FxpSpec::q(4, 12);
+        let x = bounded_data(1500, 8, 85);
+        let mut unit = FxpDrUnit::new(FxpUnitConfig {
+            input_dim: 8,
+            output_dim: 4,
+            mu_w: 5e-3,
+            mu_rot: 1e-3,
+            rotate: true,
+            rot_warmup: 200,
+            seed: 9,
+            spec,
+        });
+        unit.step_rows(&x);
+        let eff = unit.effective_matrix();
+        // The dense composition is an f32 approximation of the integer
+        // forward path; agreement within a generous quantization budget.
+        for i in 0..10 {
+            let direct = unit.transform(x.row(i));
+            let via = eff.matvec(x.row(i));
+            for (a, b) in direct.iter().zip(&via) {
+                assert!(
+                    (a - b).abs() < 64.0 * spec.format.resolution(),
+                    "{a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fxp_unit_mux_toggle() {
+        let spec = FxpSpec::q(4, 12);
+        let mut unit = FxpDrUnit::new(FxpUnitConfig {
+            input_dim: 8,
+            output_dim: 4,
+            mu_w: 5e-3,
+            mu_rot: 1e-3,
+            rotate: true,
+            rot_warmup: 0,
+            seed: 1,
+            spec,
+        });
+        assert!(unit.rotation_enabled());
+        unit.set_rotation(false);
+        assert!(!unit.rotation_enabled());
+        let x = vec![0.5f32; 8];
+        unit.step(&x);
+        assert_eq!(unit.transform(&x).len(), 4);
+    }
+
+    #[test]
+    fn fxp_unit_deterministic() {
+        let spec = FxpSpec::q(4, 12);
+        let x = bounded_data(500, 8, 87);
+        let run = || {
+            let mut u = FxpDrUnit::new(FxpUnitConfig {
+                input_dim: 8,
+                output_dim: 4,
+                mu_w: 5e-3,
+                mu_rot: 1e-3,
+                rotate: true,
+                rot_warmup: 100,
+                seed: 3,
+                spec,
+            });
+            u.step_rows(&x);
+            u.effective_matrix()
+        };
+        assert_eq!(run().as_slice(), run().as_slice());
+    }
+}

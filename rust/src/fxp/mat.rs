@@ -1,0 +1,174 @@
+//! Quantized row-major matrix — the fixed-point image of
+//! [`crate::linalg::Mat`].
+
+use super::FxpSpec;
+use crate::linalg::Mat;
+
+/// Row-major matrix of raw fixed-point words, all sharing one
+/// [`FxpSpec`]. Mirrors the subset of [`Mat`]'s API the quantized
+/// kernels need; convert at the boundary with [`FxpMat::quantize`] /
+/// [`FxpMat::dequantize`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FxpMat {
+    rows: usize,
+    cols: usize,
+    raw: Vec<i32>,
+    pub spec: FxpSpec,
+}
+
+impl FxpMat {
+    /// All-zero matrix.
+    pub fn zeros(rows: usize, cols: usize, spec: FxpSpec) -> Self {
+        Self {
+            rows,
+            cols,
+            raw: vec![0; rows * cols],
+            spec,
+        }
+    }
+
+    /// Quantize an f32 matrix entry-wise.
+    pub fn quantize(m: &Mat, spec: FxpSpec) -> Self {
+        let (rows, cols) = m.shape();
+        Self {
+            rows,
+            cols,
+            raw: m.as_slice().iter().map(|&v| spec.quantize(v)).collect(),
+            spec,
+        }
+    }
+
+    /// Dequantize back to f32.
+    pub fn dequantize(&self) -> Mat {
+        Mat::from_vec(
+            self.rows,
+            self.cols,
+            self.raw.iter().map(|&r| self.spec.dequantize(r)).collect(),
+        )
+    }
+
+    /// `(rows, cols)`.
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn rows_count(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols_count(&self) -> usize {
+        self.cols
+    }
+
+    /// Borrow row `i` (raw words).
+    #[inline]
+    pub fn row(&self, i: usize) -> &[i32] {
+        &self.raw[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn get_raw(&self, i: usize, j: usize) -> i32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.raw[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set_raw(&mut self, i: usize, j: usize, v: i32) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.raw[i * self.cols + j] = v;
+    }
+
+    /// Borrow the raw backing slice.
+    pub fn as_raw(&self) -> &[i32] {
+        &self.raw
+    }
+
+    /// Mutably borrow the raw backing slice.
+    pub fn as_raw_mut(&mut self) -> &mut [i32] {
+        &mut self.raw
+    }
+
+    /// `y = M x`, one wide-accumulator dot per row.
+    pub fn matvec_raw(&self, x: &[i32]) -> Vec<i32> {
+        assert_eq!(x.len(), self.cols, "fxp matvec shape mismatch");
+        (0..self.rows)
+            .map(|i| self.spec.dot_raw(self.row(i), x))
+            .collect()
+    }
+
+    /// `y = Mᵀ x`: wide accumulators per output column, rounded and
+    /// saturated once at write-back (same arithmetic as
+    /// [`FxpSpec::dot_raw`], streamed row-wise).
+    pub fn matvec_t_raw(&self, x: &[i32]) -> Vec<i32> {
+        assert_eq!(x.len(), self.rows, "fxp matvec_t shape mismatch");
+        let mut acc = vec![0i128; self.cols];
+        for (i, &xi) in x.iter().enumerate() {
+            let row = self.row(i);
+            for (a, &rij) in acc.iter_mut().zip(row) {
+                *a += xi as i128 * rij as i128;
+            }
+        }
+        let shift = self.spec.format.frac_bits as u32;
+        acc.into_iter()
+            .map(|a| self.spec.fit(self.spec.rescale_wide(a, shift)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantize_dequantize_matrix_roundtrip() {
+        let spec = FxpSpec::q(4, 12);
+        let m = Mat::from_fn(5, 7, |i, j| ((i * 7 + j) as f32 * 0.37).sin() * 3.0);
+        let q = FxpMat::quantize(&m, spec);
+        let back = q.dequantize();
+        for (a, b) in m.as_slice().iter().zip(back.as_slice()) {
+            assert!((a - b).abs() <= spec.format.resolution() / 2.0 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn matvec_matches_f32_within_tolerance() {
+        let spec = FxpSpec::q(6, 14); // 20-bit datapath
+        let m = Mat::from_fn(8, 32, |i, j| ((i + j * 3) as f32 * 0.21).cos());
+        let x: Vec<f32> = (0..32).map(|i| (i as f32 * 0.13).sin()).collect();
+        let q = FxpMat::quantize(&m, spec);
+        let xq = spec.quantize_vec(&x);
+        let y = spec.dequantize_vec(&q.matvec_raw(&xq));
+        let want = m.matvec(&x);
+        // Error budget: input/weight quantization (≤ ulp/2 each over 32
+        // products) + one final rounding.
+        let tol = spec.format.resolution() * 32.0;
+        for (a, b) in y.iter().zip(&want) {
+            assert!((a - b).abs() <= tol, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn matvec_t_matches_transposed_matvec() {
+        let spec = FxpSpec::q(4, 12);
+        let m = Mat::from_fn(6, 10, |i, j| ((i * 10 + j) as f32 * 0.11) - 3.0);
+        let q = FxpMat::quantize(&m, spec);
+        let x: Vec<i32> = (0..6).map(|i| spec.quantize(i as f32 * 0.3 - 1.0)).collect();
+        let direct = q.matvec_t_raw(&x);
+        // Oracle: transpose in f32 space, quantize, matvec.
+        let mt = FxpMat::quantize(&m.dequantize_via(spec).transpose(), spec);
+        let oracle = mt.matvec_raw(&x);
+        for (a, b) in direct.iter().zip(&oracle) {
+            assert!((a - b).abs() <= 1, "{a} vs {b}");
+        }
+    }
+
+    // Small helper so the oracle above uses the same quantized weights.
+    trait DeqVia {
+        fn dequantize_via(&self, spec: FxpSpec) -> Mat;
+    }
+    impl DeqVia for Mat {
+        fn dequantize_via(&self, spec: FxpSpec) -> Mat {
+            FxpMat::quantize(self, spec).dequantize()
+        }
+    }
+}

@@ -1,0 +1,532 @@
+//! Bit-accurate fixed-point arithmetic — the numeric substrate of the
+//! FPGA datapath.
+//!
+//! The paper's resource savings come from a hardware-friendly datapath;
+//! on a real FPGA that datapath computes in two's-complement fixed
+//! point, not fp32 (an 18-bit multiply fits half an Arria-10 DSP, a
+//! fixed-point add is a bare ALM carry chain — see
+//! [`crate::hwmodel`]). This module simulates that arithmetic exactly:
+//!
+//! * [`QFormat`] — a Qi.f format: `i` integer bits (sign included, ARM
+//!   convention) and `f` fraction bits, total width `i + f ≤ 32`.
+//!   Q1.15 is the classic 16-bit audio/DSP format, range `[-1, 1)`.
+//! * [`FxpSpec`] — a format plus overflow ([`Overflow::Saturate`] vs
+//!   [`Overflow::Wrap`]) and rounding ([`Rounding::Nearest`] vs
+//!   [`Rounding::Truncate`]) policies. All scalar/vector ops live here,
+//!   on raw `i32` words with `i64`/`i128` intermediates, mirroring the
+//!   wide DSP accumulators of the hardware.
+//! * [`FxpConst`] — a block-scaled constant (learning rates, RP scale,
+//!   whitening coefficients): the raw value carries its own fraction
+//!   count, chosen to maximise precision, exactly as constants are
+//!   baked into FPGA multiplier inputs.
+//! * [`FxpMat`] ([`mat`]) — a quantized row-major matrix compatible
+//!   with [`crate::linalg::Mat`] via `quantize`/`dequantize`.
+//! * [`kernels`] — quantized forward + update kernels for the three DR
+//!   stages (RP, GHA whitening, rotation-only EASI) and their composed
+//!   unit, selected through [`Precision`] in `PipelineSpec` /
+//!   `ExperimentConfig` / the CLI.
+//!
+//! Rounding semantics follow the common DSP datapath: "nearest" is
+//! add-half-then-truncate (ties toward +∞), "truncate" is an arithmetic
+//! right shift (toward −∞). Saturation clamps to the format's range;
+//! wrapping keeps the low `width` bits with sign extension.
+
+pub mod kernels;
+pub mod mat;
+
+pub use kernels::{FxpDrUnit, FxpEasiRot, FxpGha, FxpRp, FxpUnitConfig};
+pub use mat::FxpMat;
+
+use anyhow::{bail, Result};
+
+/// A Qi.f fixed-point format. `int_bits` includes the sign bit (ARM
+/// convention), so the total word width is `int_bits + frac_bits` and
+/// the representable range is `[-2^(i-1), 2^(i-1) - 2^-f]`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QFormat {
+    /// Integer bits, sign included. At least 1.
+    pub int_bits: u8,
+    /// Fraction bits.
+    pub frac_bits: u8,
+}
+
+impl QFormat {
+    pub fn new(int_bits: u8, frac_bits: u8) -> Self {
+        assert!(int_bits >= 1, "need at least the sign bit");
+        assert!(
+            int_bits as u32 + frac_bits as u32 >= 2
+                && int_bits as u32 + frac_bits as u32 <= 32,
+            "Q{int_bits}.{frac_bits}: width must be in 2..=32"
+        );
+        Self {
+            int_bits,
+            frac_bits,
+        }
+    }
+
+    /// Total word width in bits.
+    pub fn width(&self) -> u8 {
+        self.int_bits + self.frac_bits
+    }
+
+    /// Largest representable raw word.
+    pub fn max_raw(&self) -> i32 {
+        ((1i64 << (self.width() - 1)) - 1) as i32
+    }
+
+    /// Smallest representable raw word.
+    pub fn min_raw(&self) -> i32 {
+        (-(1i64 << (self.width() - 1))) as i32
+    }
+
+    /// One least-significant bit, as a real value.
+    pub fn resolution(&self) -> f32 {
+        (2.0f32).powi(-(self.frac_bits as i32))
+    }
+
+    /// Largest representable real value.
+    pub fn max_value(&self) -> f32 {
+        self.max_raw() as f32 * self.resolution()
+    }
+
+    /// Smallest representable real value.
+    pub fn min_value(&self) -> f32 {
+        self.min_raw() as f32 * self.resolution()
+    }
+}
+
+/// What happens when a result exceeds the format's range.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Overflow {
+    /// Clamp to the representable range (the usual DSP choice).
+    Saturate,
+    /// Keep the low `width` bits, sign-extended (free in hardware,
+    /// catastrophic numerically — provided for bit-exact modelling of
+    /// designs that do it).
+    Wrap,
+}
+
+/// How extra fraction bits are discarded after a multiply.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rounding {
+    /// Add half an LSB then truncate (ties toward +∞) — one adder.
+    Nearest,
+    /// Arithmetic right shift (toward −∞) — free.
+    Truncate,
+}
+
+/// A complete fixed-point arithmetic specification.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FxpSpec {
+    pub format: QFormat,
+    pub overflow: Overflow,
+    pub rounding: Rounding,
+}
+
+impl FxpSpec {
+    /// Saturating, round-to-nearest Qi.f — the datapath default.
+    pub fn q(int_bits: u8, frac_bits: u8) -> Self {
+        Self {
+            format: QFormat::new(int_bits, frac_bits),
+            overflow: Overflow::Saturate,
+            rounding: Rounding::Nearest,
+        }
+    }
+
+    /// Fit a wide intermediate into the format per the overflow policy.
+    #[inline]
+    pub fn fit(&self, v: i64) -> i32 {
+        let (lo, hi) = (self.format.min_raw() as i64, self.format.max_raw() as i64);
+        match self.overflow {
+            Overflow::Saturate => v.clamp(lo, hi) as i32,
+            Overflow::Wrap => {
+                let w = self.format.width() as u32;
+                ((v << (64 - w)) >> (64 - w)) as i32
+            }
+        }
+    }
+
+    /// Discard `shift` fraction bits per the rounding policy.
+    #[inline]
+    fn rescale(&self, p: i64, shift: u32) -> i64 {
+        if shift == 0 {
+            return p;
+        }
+        match self.rounding {
+            Rounding::Nearest => (p + (1i64 << (shift - 1))) >> shift,
+            Rounding::Truncate => p >> shift,
+        }
+    }
+
+    #[inline]
+    fn rescale_wide(&self, p: i128, shift: u32) -> i64 {
+        if shift == 0 {
+            return p.clamp(i64::MIN as i128, i64::MAX as i128) as i64;
+        }
+        let r = match self.rounding {
+            Rounding::Nearest => (p + (1i128 << (shift - 1))) >> shift,
+            Rounding::Truncate => p >> shift,
+        };
+        r.clamp(i64::MIN as i128, i64::MAX as i128) as i64
+    }
+
+    /// Quantize a real value to a raw word. NaN maps to 0; ±∞ saturate.
+    pub fn quantize(&self, x: f32) -> i32 {
+        if x.is_nan() {
+            return 0;
+        }
+        if x.is_infinite() {
+            return if x > 0.0 {
+                self.format.max_raw()
+            } else {
+                self.format.min_raw()
+            };
+        }
+        let scaled = x as f64 * (2.0f64).powi(self.format.frac_bits as i32);
+        let r = match self.rounding {
+            // Add-half-then-floor: ties toward +∞, bit-identical to the
+            // datapath's `rescale` so grid/tie inputs quantize exactly
+            // as the modeled hardware would.
+            Rounding::Nearest => (scaled + 0.5).floor(),
+            Rounding::Truncate => scaled.floor(),
+        };
+        // f64 → i64 casts saturate in Rust, so extreme values land on
+        // the i64 edge and `fit` clamps/wraps from there.
+        self.fit(r as i64)
+    }
+
+    /// Raw word back to a real value.
+    #[inline]
+    pub fn dequantize(&self, raw: i32) -> f32 {
+        raw as f32 * self.format.resolution()
+    }
+
+    /// Quantize a slice.
+    pub fn quantize_vec(&self, x: &[f32]) -> Vec<i32> {
+        x.iter().map(|&v| self.quantize(v)).collect()
+    }
+
+    /// Dequantize a slice.
+    pub fn dequantize_vec(&self, raw: &[i32]) -> Vec<f32> {
+        raw.iter().map(|&r| self.dequantize(r)).collect()
+    }
+
+    /// Fixed-point add.
+    #[inline]
+    pub fn add(&self, a: i32, b: i32) -> i32 {
+        self.fit(a as i64 + b as i64)
+    }
+
+    /// Fixed-point subtract.
+    #[inline]
+    pub fn sub(&self, a: i32, b: i32) -> i32 {
+        self.fit(a as i64 - b as i64)
+    }
+
+    /// Fixed-point multiply: full-precision product, then one rescale
+    /// by `frac_bits`, then the overflow policy.
+    #[inline]
+    pub fn mul(&self, a: i32, b: i32) -> i32 {
+        let p = a as i64 * b as i64;
+        self.fit(self.rescale(p, self.format.frac_bits as u32))
+    }
+
+    /// Multiply a raw word by a block-scaled constant: the product is
+    /// rescaled by the *constant's* fraction count, so the result stays
+    /// in this spec's format regardless of the constant's magnitude.
+    #[inline]
+    pub fn mul_const(&self, a: i32, c: &FxpConst) -> i32 {
+        let p = a as i64 * c.raw as i64;
+        self.fit(self.rescale(p, c.frac as u32))
+    }
+
+    /// Dot product with a wide accumulator (the DSP-cascade model):
+    /// every product is kept at full precision, summed in 128 bits, and
+    /// rounded/saturated exactly once at the end.
+    pub fn dot_raw(&self, a: &[i32], b: &[i32]) -> i32 {
+        debug_assert_eq!(a.len(), b.len());
+        let mut acc: i128 = 0;
+        for (&x, &y) in a.iter().zip(b) {
+            acc += x as i128 * y as i128;
+        }
+        self.fit(self.rescale_wide(acc, self.format.frac_bits as u32))
+    }
+}
+
+/// A constant baked into the datapath (learning rate, projection scale,
+/// whitening coefficient): stored with its own fraction count chosen so
+/// the raw word uses the full width — block scaling, exactly how
+/// constant multiplier inputs are prepared for FPGA synthesis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FxpConst {
+    pub raw: i32,
+    /// Fraction bits of `raw` (may exceed the datapath's, for small
+    /// constants like μ).
+    pub frac: u8,
+}
+
+impl FxpConst {
+    /// Quantize `v` into `width` bits with the best power-of-two scale.
+    pub fn from_f32(v: f32, width: u8) -> Self {
+        assert!((2..=32).contains(&width));
+        if !v.is_finite() || v == 0.0 {
+            return Self { raw: 0, frac: 0 };
+        }
+        let max_raw = ((1i64 << (width - 1)) - 1) as f64;
+        // Largest fraction count keeping |v|·2^f within the raw range,
+        // capped at 30 (resolution floor for denormal-small constants).
+        let mut frac = (max_raw / v.abs() as f64).log2().floor() as i32;
+        frac = frac.clamp(0, 30);
+        while frac > 0 && (v.abs() as f64 * (2.0f64).powi(frac)).round() > max_raw {
+            frac -= 1;
+        }
+        let raw = (v as f64 * (2.0f64).powi(frac))
+            .round()
+            .clamp(-max_raw, max_raw) as i32;
+        Self {
+            raw,
+            frac: frac as u8,
+        }
+    }
+
+    /// The constant's real value after quantization.
+    pub fn value(&self) -> f32 {
+        self.raw as f32 * (2.0f32).powi(-(self.frac as i32))
+    }
+}
+
+/// The precision a pipeline computes in — threaded through
+/// `PipelineSpec`, `ExperimentConfig` and the CLI (`--precision`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    /// IEEE single precision (the reference datapath).
+    F32,
+    /// Bit-accurate fixed point.
+    Fixed(FxpSpec),
+}
+
+impl Precision {
+    /// Parse `"f32"` / `"fp32"` or a Q-format like `"q1.15"`, `"q4.12"`
+    /// (saturating, round-to-nearest — the datapath defaults; wrapping
+    /// and truncation are API-only knobs).
+    pub fn parse(s: &str) -> Result<Self> {
+        let t = s.trim().to_ascii_lowercase();
+        if t == "f32" || t == "fp32" || t == "float" {
+            return Ok(Precision::F32);
+        }
+        let Some(rest) = t.strip_prefix('q') else {
+            bail!("unknown precision '{s}' (f32 | qI.F, e.g. q1.15)");
+        };
+        let Some((i, f)) = rest.split_once('.') else {
+            bail!("malformed Q format '{s}' (expected qI.F, e.g. q4.12)");
+        };
+        let int_bits: u64 = i.parse().map_err(|_| {
+            anyhow::anyhow!("malformed integer bits in precision '{s}'")
+        })?;
+        let frac_bits: u64 = f.parse().map_err(|_| {
+            anyhow::anyhow!("malformed fraction bits in precision '{s}'")
+        })?;
+        // u64 math: absurd inputs must reach this ensure, not wrap into
+        // a plausible width and panic in QFormat::new.
+        anyhow::ensure!(
+            int_bits >= 1
+                && int_bits.saturating_add(frac_bits) >= 2
+                && int_bits.saturating_add(frac_bits) <= 32,
+            "precision '{s}': need 1 <= I and 2 <= I+F <= 32"
+        );
+        Ok(Precision::Fixed(FxpSpec::q(int_bits as u8, frac_bits as u8)))
+    }
+
+    /// Canonical label (`"f32"`, `"q4.12"`).
+    pub fn label(&self) -> String {
+        match self {
+            Precision::F32 => "f32".to_string(),
+            Precision::Fixed(s) => {
+                format!("q{}.{}", s.format.int_bits, s.format.frac_bits)
+            }
+        }
+    }
+
+    pub fn is_fixed(&self) -> bool {
+        matches!(self, Precision::Fixed(_))
+    }
+
+    /// The fixed-point spec, if any.
+    pub fn spec(&self) -> Option<FxpSpec> {
+        match self {
+            Precision::F32 => None,
+            Precision::Fixed(s) => Some(*s),
+        }
+    }
+
+    /// Operand width in bits (32 for f32).
+    pub fn width_bits(&self) -> u8 {
+        match self {
+            Precision::F32 => 32,
+            Precision::Fixed(s) => s.format.width(),
+        }
+    }
+}
+
+/// Power-of-two input prescale giving standardized (unit-variance) data
+/// ≈ ±8 of headroom in narrow-integer formats. Exact in binary fixed
+/// point (a pure shift), and invisible to accuracy: every downstream
+/// stage either renormalises (whitening) or feeds a classifier trained
+/// on standardized features.
+pub fn input_prescale(spec: &FxpSpec) -> f32 {
+    let shift = (4 - spec.format.int_bits as i32).max(0);
+    (2.0f32).powi(-shift)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn q_format_ranges() {
+        let q115 = QFormat::new(1, 15);
+        assert_eq!(q115.width(), 16);
+        assert_eq!(q115.max_raw(), 32767);
+        assert_eq!(q115.min_raw(), -32768);
+        assert!((q115.max_value() - (1.0 - 1.0 / 32768.0)).abs() < 1e-9);
+        assert_eq!(q115.min_value(), -1.0);
+        let q412 = QFormat::new(4, 12);
+        assert_eq!(q412.width(), 16);
+        assert!((q412.max_value() - (8.0 - q412.resolution())).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "width must be in 2..=32")]
+    fn q_format_rejects_wide() {
+        QFormat::new(16, 17);
+    }
+
+    #[test]
+    fn quantize_dequantize_roundtrip() {
+        let spec = FxpSpec::q(4, 12);
+        for &v in &[0.0f32, 1.0, -1.0, 0.5, -0.125, 3.999, -7.5, 0.33333] {
+            let r = spec.quantize(v);
+            let back = spec.dequantize(r);
+            assert!(
+                (back - v).abs() <= spec.format.resolution() / 2.0 + 1e-9,
+                "{v} -> {back}"
+            );
+        }
+        // Values on the grid round-trip exactly.
+        let exact = 1.25f32; // 1.25 = 5120 / 4096
+        assert_eq!(spec.dequantize(spec.quantize(exact)), exact);
+    }
+
+    #[test]
+    fn saturation_edges() {
+        let spec = FxpSpec::q(1, 15);
+        assert_eq!(spec.quantize(2.0), spec.format.max_raw());
+        assert_eq!(spec.quantize(-2.0), spec.format.min_raw());
+        assert_eq!(spec.quantize(f32::INFINITY), spec.format.max_raw());
+        assert_eq!(spec.quantize(f32::NEG_INFINITY), spec.format.min_raw());
+        assert_eq!(spec.quantize(f32::NAN), 0);
+        // Additions saturate instead of wrapping.
+        let max = spec.format.max_raw();
+        assert_eq!(spec.add(max, max), max);
+        assert_eq!(spec.sub(spec.format.min_raw(), 1), spec.format.min_raw());
+    }
+
+    #[test]
+    fn wrapping_mode_wraps() {
+        let mut spec = FxpSpec::q(1, 7); // 8-bit word
+        spec.overflow = Overflow::Wrap;
+        // 127 + 1 wraps to -128 in 8 bits.
+        assert_eq!(spec.add(127, 1), -128);
+        assert_eq!(spec.add(-128, -1), 127);
+    }
+
+    #[test]
+    fn rounding_modes() {
+        let nearest = FxpSpec::q(4, 4);
+        let mut trunc = nearest;
+        trunc.rounding = Rounding::Truncate;
+        // 0.09375 = 1.5/16: nearest ties toward +inf => 2/16, truncate => 1/16.
+        assert_eq!(nearest.quantize(0.09375), 2);
+        assert_eq!(trunc.quantize(0.09375), 1);
+        // Negative tie: nearest still goes toward +inf (add-half,
+        // matching the datapath rescale); truncate goes toward -inf.
+        assert_eq!(nearest.quantize(-0.09375), -1);
+        assert_eq!(trunc.quantize(-0.09375), -2);
+        // Multiply rounding: (0.25 * 0.375) = 0.09375 again.
+        let a = nearest.quantize(0.25);
+        let b = nearest.quantize(0.375);
+        assert_eq!(nearest.mul(a, b), 2);
+        assert_eq!(trunc.mul(a, b), 1);
+    }
+
+    #[test]
+    fn mul_matches_f32_within_half_ulp() {
+        let spec = FxpSpec::q(4, 12);
+        for (x, y) in [(1.5f32, 2.25f32), (-0.75, 0.5), (3.0, -2.5), (0.1, 0.1)] {
+            let r = spec.mul(spec.quantize(x), spec.quantize(y));
+            let err = (spec.dequantize(r) - x * y).abs();
+            // Input quantization (≤ half ulp each) plus product rounding.
+            let tol = spec.format.resolution() * (0.5 + 0.5 * (x.abs() + y.abs()));
+            assert!(err <= tol + 1e-6, "{x}*{y}: err {err} tol {tol}");
+        }
+    }
+
+    #[test]
+    fn dot_uses_wide_accumulator() {
+        // Products that would overflow a narrow accumulator must still
+        // come out right (saturated only at the final write-back).
+        let spec = FxpSpec::q(8, 8);
+        let a: Vec<i32> = vec![spec.quantize(100.0); 64];
+        let b: Vec<i32> = vec![spec.quantize(1.0); 64];
+        // true dot = 6400, saturates at max_value ≈ 127.996.
+        assert_eq!(spec.dot_raw(&a, &b), spec.format.max_raw());
+        // A non-saturating case is exact.
+        let a2: Vec<i32> = (0..16).map(|i| spec.quantize(i as f32 * 0.25)).collect();
+        let b2: Vec<i32> = (0..16).map(|_| spec.quantize(0.5)).collect();
+        let want: f32 = (0..16).map(|i| i as f32 * 0.25 * 0.5).sum();
+        let got = spec.dequantize(spec.dot_raw(&a2, &b2));
+        assert!((got - want).abs() <= spec.format.resolution());
+    }
+
+    #[test]
+    fn fxp_const_block_scaling() {
+        // A tiny constant keeps almost-full relative precision…
+        let mu = FxpConst::from_f32(1e-3, 16);
+        assert!((mu.value() - 1e-3).abs() / 1e-3 < 1e-3, "{}", mu.value());
+        // …and a large one fits without saturating.
+        let big = FxpConst::from_f32(96.5, 16);
+        assert!((big.value() - 96.5).abs() / 96.5 < 1e-3, "{}", big.value());
+        // mul_const keeps the datapath format.
+        let spec = FxpSpec::q(4, 12);
+        let x = spec.quantize(2.0);
+        let y = spec.mul_const(x, &mu);
+        assert!((spec.dequantize(y) - 2e-3).abs() <= spec.format.resolution());
+        let z = spec.mul_const(x, &big);
+        assert_eq!(z, spec.format.max_raw(), "2*96.5 saturates Q4.12");
+    }
+
+    #[test]
+    fn precision_parsing() {
+        assert_eq!(Precision::parse("f32").unwrap(), Precision::F32);
+        assert_eq!(Precision::parse("FP32").unwrap(), Precision::F32);
+        let p = Precision::parse("q1.15").unwrap();
+        assert_eq!(p.label(), "q1.15");
+        assert_eq!(p.width_bits(), 16);
+        assert_eq!(Precision::parse("Q4.12").unwrap().label(), "q4.12");
+        assert!(Precision::parse("q0.16").is_err());
+        assert!(Precision::parse("q17.16").is_err());
+        // Absurd widths must error cleanly, not wrap/panic.
+        assert!(Precision::parse("q4294967290.38").is_err());
+        assert!(Precision::parse("q99999999999999999999.1").is_err());
+        assert!(Precision::parse("int8").is_err());
+        assert!(Precision::parse("q4").is_err());
+    }
+
+    #[test]
+    fn prescale_only_for_narrow_int() {
+        assert_eq!(input_prescale(&FxpSpec::q(4, 12)), 1.0);
+        assert_eq!(input_prescale(&FxpSpec::q(6, 10)), 1.0);
+        assert_eq!(input_prescale(&FxpSpec::q(1, 15)), 0.125);
+        assert_eq!(input_prescale(&FxpSpec::q(2, 14)), 0.25);
+    }
+}

@@ -28,7 +28,7 @@
 //! alternative technologies (Stratix, UltraScale) can be modelled by
 //! substitution.
 
-use super::ops::OpCounts;
+use super::ops::{NumericFormat, OpCounts};
 use super::HwConfig;
 
 /// Arria 10 GX 1150 device capacity (paper §V.C).
@@ -59,12 +59,31 @@ pub struct ResourceReport {
 }
 
 /// The calibrated cost model.
+///
+/// The fp32 constants are Table-II-calibrated (module docs). The
+/// fixed-point constants model the *mechanism* behind the precision
+/// lever:
+///
+/// * **DSPs** — an Arria-10 DSP block natively packs two independent
+///   18×19 multiplies or one 27×27: ½ DSP per multiplier at ≤ 18 bits,
+///   1 at ≤ 27, 2 above (the block pairs up for wide products).
+/// * **ALMs** — a w-bit two's-complement add/sub is a bare carry chain:
+///   each ALM provides two bits of arithmetic plus shared routing,
+///   modelled at `alm_per_bit_addsub = 0.35` ALMs/bit (an 18-bit adder
+///   ≈ 6 ALMs, vs ~100 for a soft fp32 adder), plus a small per-mult
+///   routing overhead.
+/// * **Registers** — the same pipeline/storage *word counts* as fp32,
+///   at the operand width: an 18-bit datapath stores 18-bit words.
 #[derive(Debug, Clone, Copy)]
 pub struct Arria10Model {
     pub dsp_per_mult: f64,
     pub alm_per_hard_op: f64,
     pub alm_per_soft_addsub: f64,
     pub pipeline_regs_per_op: f64,
+    /// ALMs per bit of a fixed-point add/sub carry chain.
+    pub alm_per_bit_addsub: f64,
+    /// ALM routing overhead charged per fixed-point multiplier.
+    pub alm_fixed_mult_overhead: f64,
     pub word_bits: u64,
     pub capacity: DeviceCapacity,
 }
@@ -78,26 +97,59 @@ impl Arria10Model {
             alm_per_hard_op: 38122.0 / 5128.0,         // 7.4340
             alm_per_soft_addsub: 97.6,
             pipeline_regs_per_op: (4324.0 - 624.0) / 5128.0, // 0.7215
+            alm_per_bit_addsub: 0.35,
+            alm_fixed_mult_overhead: 2.0,
             word_bits: 32,
             capacity: ARRIA10_CAPACITY,
         }
     }
 
-    /// Cost a configuration.
-    pub fn cost(&self, cfg: &HwConfig) -> ResourceReport {
-        self.cost_ops(&cfg.op_counts())
+    /// DSP blocks per multiplier at a given operand width (the native
+    /// 18×19 / 27×27 packing of the Arria-10 DSP).
+    pub fn fixed_dsp_per_mult(width_bits: u8) -> f64 {
+        if width_bits <= 18 {
+            0.5
+        } else if width_bits <= 27 {
+            1.0
+        } else {
+            2.0
+        }
     }
 
-    /// Cost raw operation counts.
+    /// Cost a configuration (uses its [`NumericFormat`]).
+    pub fn cost(&self, cfg: &HwConfig) -> ResourceReport {
+        self.cost_fmt(&cfg.op_counts(), cfg.format)
+    }
+
+    /// Cost raw operation counts at fp32 (the paper's Table II mapping).
     pub fn cost_ops(&self, ops: &OpCounts) -> ResourceReport {
+        self.cost_fmt(ops, NumericFormat::Fp32)
+    }
+
+    /// Cost raw operation counts at a given operand format.
+    pub fn cost_fmt(&self, ops: &OpCounts, fmt: NumericFormat) -> ResourceReport {
         let hard_ops = ops.mults + ops.adds;
-        let dsps = (ops.mults as f64 * self.dsp_per_mult).round() as u64;
-        let alms = (hard_ops as f64 * self.alm_per_hard_op
-            + ops.soft_addsubs as f64 * self.alm_per_soft_addsub)
-            .round() as u64;
+        let (dsps, alms, word_bits) = match fmt {
+            NumericFormat::Fp32 => {
+                let dsps = (ops.mults as f64 * self.dsp_per_mult).round() as u64;
+                let alms = (hard_ops as f64 * self.alm_per_hard_op
+                    + ops.soft_addsubs as f64 * self.alm_per_soft_addsub)
+                    .round() as u64;
+                (dsps, alms, self.word_bits)
+            }
+            NumericFormat::Fixed { width_bits } => {
+                let dsps = (ops.mults as f64 * Self::fixed_dsp_per_mult(width_bits))
+                    .ceil() as u64;
+                let alm_per_addsub = width_bits as f64 * self.alm_per_bit_addsub;
+                let alms = ((ops.adds + ops.soft_addsubs) as f64 * alm_per_addsub
+                    + ops.mults as f64 * self.alm_fixed_mult_overhead)
+                    .round() as u64;
+                (dsps, alms, width_bits as u64)
+            }
+        };
         let pipeline_words =
             (hard_ops as f64 * self.pipeline_regs_per_op).round() as u64;
-        let register_bits = (ops.storage_words + pipeline_words) * self.word_bits;
+        let register_bits = (ops.storage_words + pipeline_words) * word_bits;
         ResourceReport {
             dsps,
             alms,
@@ -159,6 +211,71 @@ mod tests {
         // 1518 DSPs.
         assert!(r.dsp_utilisation > 1.0);
         assert!(r.alm_utilisation < 1.0);
+    }
+
+    #[test]
+    fn fixed_point_strictly_cheaper_than_fp32() {
+        // The mechanism behind the paper's savings claim: the same
+        // operator inventory priced at 16/18-bit fixed point must be
+        // strictly cheaper than fp32 on every column, for both Table II
+        // configurations.
+        let model = Arria10Model::paper_calibrated();
+        for ops in [easi_ops(32, 8), easi_ops(16, 8).merge(&rp_ops(32, 16))] {
+            let fp = model.cost_fmt(&ops, NumericFormat::Fp32);
+            for w in [16u8, 18] {
+                let fx = model.cost_fmt(&ops, NumericFormat::Fixed { width_bits: w });
+                assert!(fx.dsps < fp.dsps, "{w}-bit DSPs {} vs {}", fx.dsps, fp.dsps);
+                assert!(fx.alms < fp.alms, "{w}-bit ALMs {} vs {}", fx.alms, fp.alms);
+                assert!(
+                    fx.register_bits < fp.register_bits,
+                    "{w}-bit regs {} vs {}",
+                    fx.register_bits,
+                    fp.register_bits
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn eighteen_bit_multiplier_is_half_a_dsp() {
+        let model = Arria10Model::paper_calibrated();
+        let ops = easi_ops(32, 8);
+        let r = model.cost_fmt(&ops, NumericFormat::Fixed { width_bits: 18 });
+        assert_eq!(r.dsps, (ops.mults as f64 * 0.5).ceil() as u64);
+        // 27-bit: one DSP per multiplier; 32-bit: two.
+        let r27 = model.cost_fmt(&ops, NumericFormat::Fixed { width_bits: 27 });
+        assert_eq!(r27.dsps, ops.mults);
+        let r32 = model.cost_fmt(&ops, NumericFormat::Fixed { width_bits: 32 });
+        assert_eq!(r32.dsps, 2 * ops.mults);
+    }
+
+    #[test]
+    fn fixed_cost_monotone_in_width() {
+        let model = Arria10Model::paper_calibrated();
+        let ops = easi_ops(32, 8).merge(&rp_ops(64, 32));
+        let mut last = (0u64, 0u64, 0u64);
+        for w in [8u8, 12, 16, 18, 20, 27, 32] {
+            let r = model.cost_fmt(&ops, NumericFormat::Fixed { width_bits: w });
+            assert!(
+                r.dsps >= last.0 && r.alms >= last.1 && r.register_bits >= last.2,
+                "width {w} not monotone"
+            );
+            last = (r.dsps, r.alms, r.register_bits);
+        }
+    }
+
+    #[test]
+    fn hwconfig_format_flows_through_cost() {
+        use crate::hwmodel::HwConfig;
+        let model = Arria10Model::paper_calibrated();
+        let fp = model.cost(&HwConfig::rp_easi(32, 16, 8));
+        let fx = model.cost(
+            &HwConfig::rp_easi(32, 16, 8)
+                .with_format(NumericFormat::Fixed { width_bits: 16 }),
+        );
+        assert!(fx.dsps < fp.dsps && fx.alms < fp.alms);
+        // register bits exactly halve: same word count, half the width.
+        assert_eq!(fx.register_bits * 2, fp.register_bits);
     }
 
     #[test]

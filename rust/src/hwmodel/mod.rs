@@ -24,12 +24,12 @@ pub mod ops;
 pub mod pipeline;
 
 pub use arria10::{Arria10Model, ResourceReport, ARRIA10_CAPACITY};
-pub use ops::{easi_ops, rp_ops, OpCounts};
+pub use ops::{easi_ops, rp_ops, NumericFormat, OpCounts};
 pub use pipeline::{PipelineModel, TimingReport};
 
 
 /// One hardware configuration to cost — either plain EASI or the
-/// paper's RP → EASI cascade.
+/// paper's RP → EASI cascade, at a given operand format.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct HwConfig {
     /// Input dimensionality `m`.
@@ -38,26 +38,36 @@ pub struct HwConfig {
     pub intermediate_dim: Option<usize>,
     /// Output dimensionality `n`.
     pub output_dim: usize,
+    /// Operand numeric format (fp32 = the paper's Table II datapath).
+    pub format: NumericFormat,
 }
 
 impl HwConfig {
-    /// Plain EASI, `m → n` (Table II row 1).
+    /// Plain EASI, `m → n` (Table II row 1), fp32.
     pub fn easi(m: usize, n: usize) -> Self {
         Self {
             input_dim: m,
             intermediate_dim: None,
             output_dim: n,
+            format: NumericFormat::Fp32,
         }
     }
 
-    /// RP front end then EASI, `m → p → n` (Table II row 2).
+    /// RP front end then EASI, `m → p → n` (Table II row 2), fp32.
     pub fn rp_easi(m: usize, p: usize, n: usize) -> Self {
         assert!(m >= p && p >= n, "need m >= p >= n");
         Self {
             input_dim: m,
             intermediate_dim: Some(p),
             output_dim: n,
+            format: NumericFormat::Fp32,
         }
+    }
+
+    /// Re-price the same datapath at another operand format.
+    pub fn with_format(mut self, format: NumericFormat) -> Self {
+        self.format = format;
+        self
     }
 
     /// The EASI stage's effective input dimensionality.
@@ -74,11 +84,16 @@ impl HwConfig {
         total
     }
 
-    /// Human-readable label used in reports.
+    /// Human-readable label used in reports (format suffixed when not
+    /// the fp32 baseline).
     pub fn label(&self) -> String {
-        match self.intermediate_dim {
+        let base = match self.intermediate_dim {
             Some(p) => format!("RP({}→{p}) + EASI({p}→{})", self.input_dim, self.output_dim),
             None => format!("EASI({}→{})", self.input_dim, self.output_dim),
+        };
+        match self.format {
+            NumericFormat::Fp32 => base,
+            f => format!("{base} @{}", f.label()),
         }
     }
 }
@@ -135,6 +150,17 @@ mod tests {
             HwConfig::rp_easi(32, 16, 8).label(),
             "RP(32→16) + EASI(16→8)"
         );
+    }
+
+    #[test]
+    fn fixed_format_label_and_table_cost() {
+        let fx = HwConfig::rp_easi(32, 16, 8)
+            .with_format(NumericFormat::Fixed { width_bits: 18 });
+        assert_eq!(fx.label(), "RP(32→16) + EASI(16→8) @fixed18");
+        let rows = table_ii(&[HwConfig::rp_easi(32, 16, 8), fx]);
+        assert!(rows[1].dsps < rows[0].dsps, "fixed18 must undercut fp32");
+        assert!(rows[1].alms < rows[0].alms);
+        assert!(rows[1].register_bits < rows[0].register_bits);
     }
 
     #[test]

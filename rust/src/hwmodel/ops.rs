@@ -7,18 +7,64 @@
 //! O(m·n²) complexity the paper fights lives — stage 4's `F·B` product.
 
 
-/// Fp32 operator and storage inventory for one datapath.
+/// Operand numeric format of a datapath — the precision axis of the
+/// cost model. The operator *counts* are format-independent (the
+/// algorithm fixes how many MACs exist); the format decides what each
+/// operator costs ([`super::Arria10Model::cost_fmt`]) and how wide the
+/// storage words are.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NumericFormat {
+    /// IEEE single precision in hard-FP DSPs (the paper's Table II).
+    Fp32,
+    /// Two's-complement fixed point of the given total operand width.
+    /// An Arria-10 DSP block natively packs two 18×19 multiplies (half
+    /// a DSP per multiplier at ≤ 18 bits) or one 27×27.
+    Fixed { width_bits: u8 },
+}
+
+impl NumericFormat {
+    /// Storage word width in bits.
+    pub fn word_bits(&self) -> u64 {
+        match self {
+            NumericFormat::Fp32 => 32,
+            NumericFormat::Fixed { width_bits } => *width_bits as u64,
+        }
+    }
+
+    /// Human-readable label used in reports.
+    pub fn label(&self) -> String {
+        match self {
+            NumericFormat::Fp32 => "fp32".to_string(),
+            NumericFormat::Fixed { width_bits } => format!("fixed{width_bits}"),
+        }
+    }
+
+    /// The format a pipeline [`crate::fxp::Precision`] implies.
+    pub fn from_precision(p: &crate::fxp::Precision) -> Self {
+        match p {
+            crate::fxp::Precision::F32 => NumericFormat::Fp32,
+            crate::fxp::Precision::Fixed(spec) => NumericFormat::Fixed {
+                width_bits: spec.format.width(),
+            },
+        }
+    }
+}
+
+/// Operator and storage inventory for one datapath, counted in
+/// format-agnostic units (see [`NumericFormat`] for the pricing axis).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct OpCounts {
-    /// fp32 multipliers (DSP candidates).
+    /// Multipliers (DSP candidates).
     pub mults: u64,
-    /// fp32 adders/subtractors realised in hard-FP DSPs alongside the
-    /// multipliers (the matrix-product accumulations).
+    /// Adders/subtractors realised alongside the multipliers (the
+    /// matrix-product accumulations) — hard-FP DSPs at fp32, carry
+    /// chains at fixed point.
     pub adds: u64,
-    /// fp32 add/sub units realised in soft logic (ALMs) — the RP
-    /// module's conditional add/sub network.
+    /// Add/sub units realised in soft logic (ALMs) — the RP module's
+    /// conditional add/sub network.
     pub soft_addsubs: u64,
-    /// 32-bit storage words: state matrices and inter-stage buffers.
+    /// Storage words (width set by the [`NumericFormat`] at costing
+    /// time): state matrices and inter-stage buffers.
     pub storage_words: u64,
 }
 

@@ -7,22 +7,25 @@
 //!
 //! The crate is organised bottom-up:
 //!
-//! * Substrates: [`rng`], [`linalg`], [`datasets`]
+//! * Substrates: [`rng`], [`linalg`], [`fxp`] (bit-accurate fixed-point
+//!   arithmetic + quantized kernels), [`datasets`]
 //! * Dimensionality-reduction algorithms: [`rp`] (random projection),
 //!   [`easi`] (EASI / ICA, including the paper's modified rotation-only
-//!   datapath), [`pca`] (adaptive whitening, batch PCA, bilinear/DCT)
+//!   datapath), [`gha`] (Sanger whitening), [`pca`] (adaptive
+//!   whitening, batch PCA, bilinear/DCT)
 //! * Downstream model: [`mlp`] (2×64 ReLU classifier)
-//! * Hardware co-design: [`hwmodel`] (Arria-10 resource + pipeline model,
-//!   regenerates the paper's Table II)
+//! * Hardware co-design: [`hwmodel`] (bitwidth-aware Arria-10 resource
+//!   + pipeline model, regenerates the paper's Table II)
 //! * System: [`runtime`] (PJRT artifact loader), [`coordinator`]
-//!   (streaming training service), [`pipeline`] (composed DR pipelines),
-//!   [`config`]
+//!   (streaming training service), [`pipeline`] (composed DR pipelines,
+//!   f32 or fixed-point via [`fxp::Precision`]), [`config`]
 
 pub mod config;
 pub mod coordinator;
 pub mod datasets;
 pub mod easi;
 pub mod experiments;
+pub mod fxp;
 pub mod gha;
 pub mod hwmodel;
 pub mod linalg;
@@ -34,5 +37,5 @@ pub mod rp;
 pub mod runtime;
 pub mod util;
 
-/// Crate-wide result alias (eyre-based, matches the binary's error style).
+/// Crate-wide result alias (anyhow-based, matches the binary's error style).
 pub type Result<T> = anyhow::Result<T>;

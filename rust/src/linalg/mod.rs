@@ -53,6 +53,27 @@ pub fn norm2(a: &[f32]) -> f32 {
     dot(a, a).sqrt()
 }
 
+/// Modified Gram–Schmidt on the rows of a matrix, in place. Shared by
+/// the EASI/PJRT retraction paths and the fixed-point kernels'
+/// host-side retraction (see `fxp::kernels`).
+pub fn orthonormalize_rows(m: &mut Mat) {
+    let (n, cols) = m.shape();
+    for i in 0..n {
+        for j in 0..i {
+            let proj = dot(m.row(i), m.row(j));
+            for k in 0..cols {
+                let v = m.get(i, k) - proj * m.get(j, k);
+                m.set(i, k, v);
+            }
+        }
+        let norm = norm2(m.row(i)).max(1e-12);
+        for k in 0..cols {
+            let v = m.get(i, k) / norm;
+            m.set(i, k, v);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -76,5 +97,14 @@ mod tests {
     #[test]
     fn norm2_pythagorean() {
         assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn orthonormalize_rows_produces_orthonormal_rows() {
+        let mut m = Mat::from_vec(2, 3, vec![3.0, 0.0, 0.0, 1.0, 1.0, 0.5]);
+        orthonormalize_rows(&mut m);
+        assert!((dot(m.row(0), m.row(0)) - 1.0).abs() < 1e-5);
+        assert!((dot(m.row(1), m.row(1)) - 1.0).abs() < 1e-5);
+        assert!(dot(m.row(0), m.row(1)).abs() < 1e-5);
     }
 }

@@ -4,16 +4,20 @@
 //! Subcommands:
 //!   train        stream-train a DR pipeline (+ downstream classifier)
 //!   table1       regenerate the paper's Table I (accuracy)
-//!   table2       regenerate the paper's Table II (FPGA cost model)
+//!   table2       regenerate the paper's Table II (FPGA cost model),
+//!                plus bitwidth-aware fixed-point pricing
 //!   fig1 <set>   regenerate a Fig. 1 accuracy-vs-dimensions series
+//!   fxp-sweep    accuracy-vs-bitwidth sweep (quantized pipelines)
 //!   artifacts    list the AOT artifacts the runtime can execute
 //!   timing       pipeline timing model (frequency / latency)
 //!
 //! Examples:
 //!   dimred train --dataset waveform --mode rp-easi --backend pjrt \
 //!       --intermediate-dim 16 --output-dim 8
-//!   dimred table2
+//!   dimred train --mode rp-easi --precision q4.12
+//!   dimred table2 --precision q1.15
 //!   dimred fig1 mnist --points 4
+//!   dimred fxp-sweep waveform --json sweep.json
 
 use anyhow::{bail, Context, Result};
 use dimred::config::{Backend, ExperimentConfig};
@@ -22,7 +26,10 @@ use dimred::datasets::{
     ads_like::AdsLikeConfig, har_like::HarLikeConfig, mnist_like::MnistLikeConfig,
     waveform::WaveformConfig, Dataset,
 };
-use dimred::hwmodel::{paper_table_ii_configs, table_ii, HwConfig, PipelineModel, PAPER_TABLE_II};
+use dimred::fxp::Precision;
+use dimred::hwmodel::{
+    paper_table_ii_configs, table_ii, HwConfig, NumericFormat, PipelineModel, PAPER_TABLE_II,
+};
 use dimred::runtime::Runtime;
 use dimred::util::cli::Args;
 use std::path::Path;
@@ -44,6 +51,7 @@ fn run() -> Result<()> {
         "table1" => cmd_table1(&args),
         "table2" => cmd_table2(&args),
         "fig1" => cmd_fig1(&args),
+        "fxp-sweep" => cmd_fxp_sweep(&args),
         "artifacts" => cmd_artifacts(&args),
         "timing" => cmd_timing(&args),
         "help" | "--help" => {
@@ -63,8 +71,12 @@ COMMANDS:
   train       stream-train a DR pipeline, then train + evaluate the
               2x64 classifier on the reduced features
   table1      regenerate Table I (waveform accuracy, 4 configurations)
-  table2      regenerate Table II (Arria-10 resource model)
+  table2      regenerate Table II (Arria-10 resource model; add
+              --precision qI.F for fixed-point pricing, or omit for the
+              fp32-vs-fixed comparison)
   fig1 <ds>   regenerate Fig. 1 (accuracy vs output dims; ds = mnist|har|ads)
+  fxp-sweep <ds>  accuracy-vs-bitwidth sweep (ds = waveform|har);
+              --formats q4.4,q4.8,... --epochs E --json FILE
   artifacts   list AOT executables from the manifest
   timing      clock/latency model for EASI vs RP+EASI
 
@@ -72,6 +84,9 @@ TRAIN OPTIONS:
   --dataset waveform|mnist|har|ads   (default waveform)
   --mode easi|pca-whiten|rp|rp-easi  (default rp-easi)
   --backend native|pjrt              (default native)
+  --precision f32|qI.F               (default f32; e.g. q1.15, q4.12 —
+                                      bit-accurate fixed-point datapath,
+                                      native backend only)
   --input-dim M --intermediate-dim P --output-dim N
   --mu F --epochs E --batch B --seed S --queue-depth Q
   --artifacts DIR                    (default artifacts/)
@@ -147,10 +162,11 @@ fn cmd_train(args: &Args) -> Result<()> {
         println!("# PJRT platform: {}", rt.platform());
     }
     println!(
-        "# train: dataset={} mode={} backend={:?} m={} p={} n={} mu={} epochs={} batch={}",
+        "# train: dataset={} mode={} backend={:?} precision={} m={} p={} n={} mu={} epochs={} batch={}",
         cfg.dataset,
         cfg.mode.label(),
         cfg.backend,
+        cfg.precision.label(),
         cfg.input_dim,
         cfg.intermediate_dim,
         cfg.output_dim,
@@ -189,11 +205,11 @@ fn cmd_table1(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_table2(_args: &Args) -> Result<()> {
+fn cmd_table2(args: &Args) -> Result<()> {
     let rows = table_ii(&paper_table_ii_configs());
-    println!("Table II — hardware cost (model) vs paper");
+    println!("Table II — hardware cost (model) vs paper, fp32 datapath");
     println!(
-        "{:<28} {:>8} {:>10} {:>12}   {:>8} {:>10} {:>12}",
+        "{:<40} {:>8} {:>10} {:>12}   {:>8} {:>10} {:>12}",
         "configuration", "DSPs", "ALMs", "reg bits", "paper", "paper", "paper"
     );
     for (row, paper) in rows.iter().zip(PAPER_TABLE_II.iter()) {
@@ -202,7 +218,7 @@ fn cmd_table2(_args: &Args) -> Result<()> {
             None => HwConfig::easi(row.input, row.output),
         };
         println!(
-            "{:<28} {:>8} {:>10} {:>12}   {:>8} {:>10} {:>12}",
+            "{:<40} {:>8} {:>10} {:>12}   {:>8} {:>10} {:>12}",
             cfg.label(),
             row.dsps,
             row.alms,
@@ -211,6 +227,81 @@ fn cmd_table2(_args: &Args) -> Result<()> {
             paper.1,
             paper.2
         );
+    }
+
+    // Bitwidth-aware section: the same operator inventories priced at
+    // fixed-point operand widths — the mechanism behind the paper's
+    // resource savings. `--precision qI.F` selects one format;
+    // otherwise show a 16/18-bit comparison.
+    let formats: Vec<NumericFormat> = match args.opt_str("precision") {
+        Some(s) => {
+            let p = Precision::parse(s)?;
+            anyhow::ensure!(p.is_fixed(), "--precision for table2 expects a Q format");
+            vec![NumericFormat::from_precision(&p)]
+        }
+        None => vec![
+            NumericFormat::Fixed { width_bits: 16 },
+            NumericFormat::Fixed { width_bits: 18 },
+        ],
+    };
+    println!("\nfixed-point pricing (same datapaths, bitwidth-aware model)");
+    println!(
+        "{:<40} {:>8} {:>10} {:>12}   {:>9}",
+        "configuration", "DSPs", "ALMs", "reg bits", "DSP ratio"
+    );
+    for base in paper_table_ii_configs() {
+        let fp = dimred::hwmodel::Arria10Model::paper_calibrated().cost(&base);
+        for fmt in &formats {
+            let cfg = base.with_format(*fmt);
+            let r = dimred::hwmodel::Arria10Model::paper_calibrated().cost(&cfg);
+            println!(
+                "{:<40} {:>8} {:>10} {:>12}   {:>8.2}x",
+                cfg.label(),
+                r.dsps,
+                r.alms,
+                r.register_bits,
+                fp.dsps as f64 / r.dsps.max(1) as f64
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_fxp_sweep(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .unwrap_or("waveform");
+    let formats: Vec<Precision> = match args.opt_str("formats") {
+        Some(list) => {
+            let parsed = list
+                .split(',')
+                .map(Precision::parse)
+                .collect::<Result<Vec<_>>>()?;
+            for p in &parsed {
+                anyhow::ensure!(
+                    p.is_fixed(),
+                    "--formats expects Q formats (the f32 baseline is always included)"
+                );
+            }
+            parsed
+        }
+        None => dimred::experiments::fxp_sweep::default_formats(),
+    };
+    let (_, _, _, default_epochs) = dimred::experiments::fxp_sweep::dims_for(which)?;
+    let epochs = args.usize_or("epochs", default_epochs)?;
+    let seed = args.u64_or("seed", 2018)?;
+    let points = dimred::experiments::fxp_sweep::run(which, &formats, epochs, seed)?;
+    println!(
+        "{}",
+        dimred::experiments::fxp_sweep::render(which, &points)
+    );
+    if let Some(path) = args.opt_str("json") {
+        let json = dimred::experiments::fxp_sweep::to_json(which, &points);
+        std::fs::write(path, json.to_string_pretty())
+            .with_context(|| format!("writing {path}"))?;
+        println!("wrote {path}");
     }
     Ok(())
 }

@@ -14,6 +14,7 @@ pub use unit::{DrUnit, DrUnitConfig};
 
 use crate::datasets::Dataset;
 use crate::easi::{EasiConfig, EasiMode, EasiTrainer};
+use crate::fxp::{self, FxpEasiRot, FxpRp, Precision};
 use crate::linalg::Mat;
 use crate::pca::dct::Dct1d;
 use crate::pca::BatchPca;
@@ -33,6 +34,12 @@ pub struct PipelineSpec {
     pub output_dim: usize,
     /// Seed for all randomness (R matrix, init).
     pub seed: u64,
+    /// Arithmetic the fitted pipeline computes in. [`Precision::Fixed`]
+    /// runs the bit-accurate quantized kernels ([`crate::fxp`]) for the
+    /// streaming stages (RP, rotation-only EASI, the composed ICA
+    /// unit); batch/fixed stages (PCA, DCT) have no streaming datapath
+    /// and reject fixed precision.
+    pub precision: Precision,
 }
 
 /// RP front-end declaration.
@@ -80,6 +87,7 @@ impl PipelineSpec {
             },
             output_dim: n,
             seed,
+            precision: Precision::F32,
         }
     }
 
@@ -95,6 +103,7 @@ impl PipelineSpec {
             },
             output_dim: n,
             seed,
+            precision: Precision::F32,
         }
     }
 
@@ -102,18 +111,58 @@ impl PipelineSpec {
     pub fn stage_input_dim(&self) -> usize {
         self.rp.map_or(self.input_dim, |r| r.intermediate_dim)
     }
+
+    /// The same pipeline at another precision.
+    pub fn with_precision(mut self, precision: Precision) -> Self {
+        self.precision = precision;
+        self
+    }
+
+    /// Build the RP front end this spec declares (None without one).
+    /// Single source of the unit-variance policy: adaptive stages
+    /// assume unit-variance inputs, fixed stages get the raw
+    /// distance-preserving projection. Shared by the f32 and
+    /// fixed-precision fit paths so they always project identically.
+    fn build_front_end(&self) -> Option<RandomProjection> {
+        self.rp.map(|r| {
+            let proj = RandomProjection::new(
+                self.input_dim,
+                r.intermediate_dim,
+                r.distribution,
+                self.seed,
+            );
+            if matches!(self.stage, StageSpec::Easi { .. } | StageSpec::Ica { .. }) {
+                proj.unit_variance()
+            } else {
+                proj
+            }
+        })
+    }
+}
+
+/// Prescale + quantize one sample into a fixed-point pipeline's input
+/// domain (the entry-point arithmetic shared by fit and transform).
+fn quantize_prescaled(fspec: &crate::fxp::FxpSpec, x: &[f32]) -> Vec<i32> {
+    let prescale = fxp::input_prescale(fspec);
+    x.iter().map(|&v| fspec.quantize(v * prescale)).collect()
 }
 
 /// A fitted pipeline, ready to transform samples.
 pub struct DrPipeline {
     pub spec: PipelineSpec,
     rp: Option<RandomProjection>,
+    /// Quantized image of `rp` for fixed-precision pipelines.
+    fxp_rp: Option<FxpRp>,
     stage: FittedStage,
 }
 
 enum FittedStage {
     Easi(EasiTrainer),
     Unit(unit::DrUnit),
+    /// Quantized rotation-only EASI (fixed precision).
+    FxpEasi(FxpEasiRot),
+    /// Quantized composed whiten+rotate unit (fixed precision).
+    FxpUnit(fxp::FxpDrUnit),
     Pca(BatchPca, /*whiten=*/ bool),
     Dct(Dct1d),
     Identity,
@@ -122,23 +171,17 @@ enum FittedStage {
 impl DrPipeline {
     /// Fit the pipeline on training data (rows are samples). The DR
     /// model trains unsupervised, as in the paper's §V.B protocol.
+    ///
+    /// With [`Precision::Fixed`], the streaming stages train and run
+    /// bit-accurately in fixed point (quantized RP network, quantized
+    /// update kernels); panics for batch stages (PCA/DCT), which have
+    /// no streaming datapath to quantize.
     pub fn fit(spec: PipelineSpec, train_x: &Mat) -> Self {
         assert_eq!(train_x.cols_count(), spec.input_dim, "input dim mismatch");
-        let rp = spec.rp.map(|r| {
-            let proj = RandomProjection::new(
-                spec.input_dim,
-                r.intermediate_dim,
-                r.distribution,
-                spec.seed,
-            );
-            // Adaptive stages assume unit-variance inputs; fixed stages
-            // get the raw distance-preserving projection.
-            if matches!(spec.stage, StageSpec::Easi { .. } | StageSpec::Ica { .. }) {
-                proj.unit_variance()
-            } else {
-                proj
-            }
-        });
+        if let Precision::Fixed(fspec) = spec.precision {
+            return Self::fit_fixed(spec, fspec, train_x);
+        }
+        let rp = spec.build_front_end();
         // Materialise the (possibly projected) training view for the
         // second stage.
         let staged: Mat = match &rp {
@@ -195,11 +238,105 @@ impl DrPipeline {
                 FittedStage::Identity
             }
         };
-        Self { spec, rp, stage }
+        Self {
+            spec,
+            rp,
+            fxp_rp: None,
+            stage,
+        }
+    }
+
+    /// Fixed-precision fit: quantized RP network feeding quantized
+    /// streaming kernels, trained on the quantized view of the data.
+    fn fit_fixed(spec: PipelineSpec, fspec: crate::fxp::FxpSpec, train_x: &Mat) -> Self {
+        let rp = spec.build_front_end();
+        let fxp_rp = rp.as_ref().map(|p| FxpRp::from_rp(p, fspec));
+        let stage_in = spec.stage_input_dim();
+        // Quantized training view: prescale + quantize each sample and
+        // push it through the quantized RP network once.
+        let staged_raw: Vec<Vec<i32>> = train_x
+            .rows()
+            .map(|row| {
+                let xq = quantize_prescaled(&fspec, row);
+                match &fxp_rp {
+                    Some(f) => f.apply_raw(&xq),
+                    None => xq,
+                }
+            })
+            .collect();
+        let stage = match spec.stage {
+            StageSpec::Easi { mode, mu, epochs } => {
+                assert!(
+                    mode == EasiMode::RotationOnly,
+                    "fixed-point EASI implements the paper's rotation-only \
+                     datapath; got {mode:?}"
+                );
+                // Update terms scale as σ⁴ under the input prescale —
+                // fold the compensation into μ (exact power of two).
+                let mu_eff = mu / fxp::input_prescale(&fspec).powi(4);
+                let mut t =
+                    FxpEasiRot::new(stage_in, spec.output_dim, mu_eff, Some(spec.seed), fspec);
+                for _ in 0..epochs.max(1) {
+                    for row in &staged_raw {
+                        t.step_raw(row);
+                    }
+                }
+                FittedStage::FxpEasi(t)
+            }
+            StageSpec::Ica { mu_w, mu_rot, epochs } => {
+                let mut u = fxp::FxpDrUnit::new(fxp::FxpUnitConfig {
+                    input_dim: stage_in,
+                    output_dim: spec.output_dim,
+                    mu_w,
+                    mu_rot,
+                    rotate: true,
+                    rot_warmup: (train_x.rows_count() / 2).min(2000) as u64,
+                    seed: spec.seed,
+                    spec: fspec,
+                });
+                for _ in 0..epochs.max(1) {
+                    for row in &staged_raw {
+                        u.step_raw(row);
+                    }
+                }
+                FittedStage::FxpUnit(u)
+            }
+            StageSpec::Identity => {
+                assert_eq!(
+                    stage_in, spec.output_dim,
+                    "Identity stage requires RP to land on output_dim"
+                );
+                FittedStage::Identity
+            }
+            other => panic!(
+                "fixed-point precision supports the streaming stages \
+                 (easi rotation-only, ica, identity), not {other:?}"
+            ),
+        };
+        Self {
+            spec,
+            rp,
+            fxp_rp,
+            stage,
+        }
     }
 
     /// Transform one sample `m → n`.
     pub fn transform(&self, x: &[f32]) -> Vec<f32> {
+        if let Precision::Fixed(fspec) = self.spec.precision {
+            let xq = quantize_prescaled(&fspec, x);
+            let staged = match &self.fxp_rp {
+                Some(f) => f.apply_raw(&xq),
+                None => xq,
+            };
+            let out = match &self.stage {
+                FittedStage::FxpEasi(t) => t.transform_raw(&staged),
+                FittedStage::FxpUnit(u) => u.transform_raw(&staged),
+                FittedStage::Identity => staged,
+                _ => unreachable!("fixed pipelines hold quantized stages"),
+            };
+            return fspec.dequantize_vec(&out);
+        }
         let staged: Vec<f32> = match &self.rp {
             Some(proj) => proj.apply(x),
             None => x.to_vec(),
@@ -211,6 +348,9 @@ impl DrPipeline {
             FittedStage::Pca(p, true) => p.whiten(&staged),
             FittedStage::Dct(d) => d.transform(&staged),
             FittedStage::Identity => staged,
+            FittedStage::FxpEasi(_) | FittedStage::FxpUnit(_) => {
+                unreachable!("f32 pipelines hold f32 stages")
+            }
         }
     }
 
@@ -287,6 +427,7 @@ mod tests {
             stage: StageSpec::Pca,
             output_dim: 3,
             seed: 1,
+            precision: Precision::F32,
         };
         let p = DrPipeline::fit(spec, &x);
         let direct = BatchPca::fit(&x, 3);
@@ -309,6 +450,7 @@ mod tests {
             stage: StageSpec::Identity,
             output_dim: 8,
             seed: 1,
+            precision: Precision::F32,
         };
         let p = DrPipeline::fit(spec, &x);
         assert_eq!(p.transform_rows(&x).shape(), (50, 8));
@@ -338,5 +480,78 @@ mod tests {
             p.transform(x.row(0))
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn fixed_precision_proposed_pipeline_tracks_f32() {
+        // The paper's proposed RP→rotation-only-EASI configuration at
+        // 16-bit Q4.12: shapes right, outputs finite, and close to the
+        // f32 pipeline (same seed, same data). Documented tolerance:
+        // 0.15 absolute on ~unit-scale outputs after one epoch.
+        let x = gaussian_data(600, 32, 76);
+        let f32_p = DrPipeline::fit(PipelineSpec::proposed(32, 16, 8, 1e-3, 1, 7), &x);
+        let fx_p = DrPipeline::fit(
+            PipelineSpec::proposed(32, 16, 8, 1e-3, 1, 7)
+                .with_precision(Precision::parse("q4.12").unwrap()),
+            &x,
+        );
+        let y_fx = fx_p.transform_rows(&x);
+        assert_eq!(y_fx.shape(), (600, 8));
+        assert!(y_fx.as_slice().iter().all(|v| v.is_finite()));
+        let y_f32 = f32_p.transform_rows(&x);
+        let mut worst = 0.0f32;
+        let mut mean = 0.0f64;
+        for (a, b) in y_fx.as_slice().iter().zip(y_f32.as_slice()) {
+            worst = worst.max((a - b).abs());
+            mean += (a - b).abs() as f64;
+        }
+        mean /= y_fx.as_slice().len() as f64;
+        // The f32 trainer additionally normalises/clips (guards the
+        // hardware datapath doesn't have) and skips the periodic
+        // retraction, so the trajectories drift — the fitted maps must
+        // still largely agree on ~unit-scale outputs.
+        assert!(mean < 0.25, "fixed vs f32 outputs diverged: mean {mean}");
+        assert!(worst < 1.5, "fixed vs f32 outputs diverged: worst {worst}");
+    }
+
+    #[test]
+    fn fixed_precision_identity_rp_pipeline() {
+        let x = gaussian_data(50, 16, 77);
+        let spec = PipelineSpec {
+            input_dim: 16,
+            rp: Some(RpStage {
+                intermediate_dim: 8,
+                distribution: RpDistribution::Ternary,
+            }),
+            stage: StageSpec::Identity,
+            output_dim: 8,
+            seed: 1,
+            precision: Precision::parse("q8.16").unwrap(),
+        };
+        let p = DrPipeline::fit(spec.clone(), &x);
+        let y = p.transform_rows(&x);
+        assert_eq!(y.shape(), (50, 8));
+        // Ternary RP (scale 1, ≥4 integer bits so no prescale): the
+        // quantized network agrees with f32 to input-quantization error.
+        let f32_p = DrPipeline::fit(spec.with_precision(Precision::F32), &x);
+        let y32 = f32_p.transform_rows(&x);
+        for (a, b) in y.as_slice().iter().zip(y32.as_slice()) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "fixed-point precision supports the streaming stages")]
+    fn fixed_precision_rejects_batch_stages() {
+        let x = gaussian_data(50, 8, 78);
+        let spec = PipelineSpec {
+            input_dim: 8,
+            rp: None,
+            stage: StageSpec::Pca,
+            output_dim: 4,
+            seed: 1,
+            precision: Precision::parse("q4.12").unwrap(),
+        };
+        DrPipeline::fit(spec, &x);
     }
 }

@@ -134,6 +134,13 @@ impl RandomProjection {
         m
     }
 
+    /// The sparse ±1 pattern, if this is a sparse (ternary/Achlioptas)
+    /// projection — used by the fixed-point kernels to run the exact
+    /// add/sub network on raw words (`fxp::FxpRp`).
+    pub fn sparse_pattern(&self) -> Option<&SparseSignMatrix> {
+        self.sparse.as_ref()
+    }
+
     /// Number of nonzero entries (adder inputs in hardware).
     pub fn nnz(&self) -> usize {
         match &self.sparse {
@@ -172,7 +179,12 @@ pub struct Distortion {
 }
 
 /// Measure distortion of `rp` on up to `max_pairs` random pairs of rows.
-pub fn measure_distortion(rp: &RandomProjection, x: &Mat, max_pairs: usize, seed: u64) -> Distortion {
+pub fn measure_distortion(
+    rp: &RandomProjection,
+    x: &Mat,
+    max_pairs: usize,
+    seed: u64,
+) -> Distortion {
     let n = x.rows_count();
     assert!(n >= 2, "need at least two samples");
     let mut rng = Pcg64::seed_stream(seed, 0x4A4C_4449); // "JLDI"

@@ -62,7 +62,8 @@ impl SparseSignMatrix {
 
     /// Total nonzeros — the number of adder inputs in hardware.
     pub fn nnz(&self) -> usize {
-        self.plus.iter().map(Vec::len).sum::<usize>() + self.minus.iter().map(Vec::len).sum::<usize>()
+        self.plus.iter().map(Vec::len).sum::<usize>()
+            + self.minus.iter().map(Vec::len).sum::<usize>()
     }
 
     /// `y = R x` using only additions and subtractions.
@@ -76,6 +77,26 @@ impl SparseSignMatrix {
             }
             for &c in m {
                 acc -= x[c as usize];
+            }
+            y.push(acc);
+        }
+        y
+    }
+
+    /// `y = R x` on raw fixed-point words: the same conditional add/sub
+    /// network, with each output accumulated at full precision in i64
+    /// (pure integer adds are exact — the fixed-point RP datapath loses
+    /// nothing). The caller rounds/saturates the sums into its format.
+    pub fn apply_raw(&self, x: &[i32]) -> Vec<i64> {
+        assert_eq!(x.len(), self.cols, "sparse apply shape mismatch");
+        let mut y = Vec::with_capacity(self.rows);
+        for (p, m) in self.plus.iter().zip(&self.minus) {
+            let mut acc = 0i64;
+            for &c in p {
+                acc += x[c as usize] as i64;
+            }
+            for &c in m {
+                acc -= x[c as usize] as i64;
             }
             y.push(acc);
         }
@@ -110,6 +131,22 @@ mod tests {
         let y2 = s.to_dense().matvec(&x);
         for (a, b) in y1.iter().zip(&y2) {
             assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn apply_raw_matches_f32_apply_on_integer_grid() {
+        // Raw words through the add/sub network are exact integer sums,
+        // so they must agree bit-for-bit with the f32 path on inputs
+        // that are small integers (exactly representable both ways).
+        let mut rng = Pcg64::seed(24);
+        let s = SparseSignMatrix::sample_ternary(&mut rng, 8, 64);
+        let xi: Vec<i32> = (0..64).map(|i| (i as i32 % 17) - 8).collect();
+        let xf: Vec<f32> = xi.iter().map(|&v| v as f32).collect();
+        let raw = s.apply_raw(&xi);
+        let f = s.apply(&xf);
+        for (a, b) in raw.iter().zip(&f) {
+            assert_eq!(*a as f32, *b, "{a} vs {b}");
         }
     }
 

@@ -10,6 +10,12 @@
 //!
 //! Python is NEVER on this path — the HLO text was produced once at
 //! build time by `python/compile/aot.py`.
+//!
+//! Offline builds use the in-crate `xla` stub (see `runtime/xla.rs`):
+//! identical API surface, with client construction failing cleanly.
+//! Linking the real bindings changes no code here.
+
+mod xla;
 
 pub mod manifest;
 

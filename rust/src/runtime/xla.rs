@@ -1,0 +1,183 @@
+//! In-crate stub of the `xla` crate's API surface (xla_extension 0.5.1).
+//!
+//! The offline build environment cannot fetch (or link) the real PJRT
+//! bindings, so this module provides the exact types and signatures
+//! `runtime/mod.rs` consumes, with [`PjRtClient::cpu`] failing cleanly
+//! at construction time. Every downstream method is only reachable
+//! through a constructed client, which the stub makes uninhabited, so
+//! the compiler proves the execution paths dead — swapping in the real
+//! `xla` crate (delete this module, add the dependency) changes no
+//! call-site code.
+//!
+//! Tests and benches already gate on the artifact manifest being
+//! present; on a stub build `Runtime::load` fails before any of this is
+//! reached unless someone has run `make artifacts`, in which case the
+//! client construction error below explains what is missing.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring the real bindings' (string-carrying) errors.
+#[derive(Debug)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+type Result<T> = std::result::Result<T, XlaError>;
+
+fn unavailable() -> XlaError {
+    XlaError(
+        "PJRT is unavailable: this build uses the in-crate xla stub \
+         (src/runtime/xla.rs); link the real `xla` crate to execute \
+         AOT artifacts"
+            .to_string(),
+    )
+}
+
+/// Uninhabited marker: types holding it can never be constructed, so
+/// their methods are statically dead code on stub builds.
+enum Never {}
+
+/// PJRT client handle (stub: construction always fails).
+pub struct PjRtClient {
+    never: Never,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        match self.never {}
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        match self.never {}
+    }
+}
+
+/// Parsed HLO module (stub: parsing always fails — nothing to feed it
+/// to without a client anyway).
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<Self> {
+        Err(unavailable())
+    }
+}
+
+/// An XLA computation wrapping a parsed HLO module.
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// A compiled executable (stub: unconstructible).
+pub struct PjRtLoadedExecutable {
+    never: Never,
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with per-device argument lists; the real API returns one
+    /// buffer list per device.
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        match self.never {}
+    }
+}
+
+/// A device buffer (stub: unconstructible).
+pub struct PjRtBuffer {
+    never: Never,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        match self.never {}
+    }
+}
+
+/// Element types a literal can be read back as.
+pub trait ArrayElement: Sized {
+    fn read(lit: &Literal) -> Vec<Self>;
+}
+
+impl ArrayElement for f32 {
+    fn read(lit: &Literal) -> Vec<Self> {
+        lit.data.clone()
+    }
+}
+
+/// Host literal: flat f32 payload plus dimensions. Constructible (the
+/// staging path runs before execution fails), so it behaves faithfully.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal {
+            dims: vec![data.len() as i64],
+            data: data.to_vec(),
+        }
+    }
+
+    /// Reshape without moving data (row-major, like the real API).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let elements: i64 = dims.iter().product();
+        if elements as usize != self.data.len() {
+            return Err(XlaError(format!(
+                "reshape to {:?} incompatible with {} elements",
+                dims,
+                self.data.len()
+            )));
+        }
+        Ok(Literal {
+            data: self.data.clone(),
+            dims: dims.to_vec(),
+        })
+    }
+
+    /// Destructure a tuple literal. The stub never produces tuples
+    /// (results require execution), so this is always an error here.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable())
+    }
+
+    /// Read the payload back as a typed host vector.
+    pub fn to_vec<T: ArrayElement>(&self) -> Result<Vec<T>> {
+        Ok(T::read(self))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_construction_fails_cleanly() {
+        let err = PjRtClient::cpu().err().expect("stub must fail");
+        assert!(err.to_string().contains("stub"));
+    }
+
+    #[test]
+    fn literal_staging_roundtrip() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.reshape(&[4, 4]).is_err());
+    }
+}
