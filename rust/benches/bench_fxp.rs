@@ -10,7 +10,7 @@
 //! separately).
 
 use dimred::easi::{EasiConfig, EasiMode, EasiTrainer};
-use dimred::fxp::{FxpDrUnit, FxpEasiRot, FxpGha, FxpMat, FxpRp, FxpSpec, FxpUnitConfig};
+use dimred::fxp::{FxpDrUnit, FxpEasiRot, FxpGha, FxpMat, FxpRp, FxpSpec, FxpUnitConfig, QuantMode};
 use dimred::gha::{GhaConfig, GhaWhitener};
 use dimred::linalg::Mat;
 use dimred::pipeline::{DrUnit, DrUnitConfig};
@@ -43,8 +43,10 @@ fn main() {
         ..Default::default()
     });
     bench.run("f32 gha step 16→8", || gha.step(&xp));
-    let mut fgha = FxpGha::new(p, n, 5e-3, 5e-3, 2018, spec);
+    let mut fgha = FxpGha::new(p, n, 5e-3, 5e-3, 2018, spec, QuantMode::BitExact);
     bench.run("fxp gha step 16→8 (q4.12)", || fgha.step_raw(&xpq));
+    let mut fgha_ste = FxpGha::new(p, n, 5e-3, 5e-3, 2018, spec, QuantMode::Ste);
+    bench.run("fxp gha step 16→8 (q4.12, STE)", || fgha_ste.step_raw(&xpq));
 
     // ----- rotation-only EASI step ----------------------------------
     let zn: Vec<f32> = (0..n).map(|i| ((i * 11) % 7) as f32 / 7.0 - 0.5).collect();
@@ -56,8 +58,10 @@ fn main() {
         ..Default::default()
     });
     bench.run("f32 easi rotation step 8→8", || rot.step(&zn));
-    let mut frot = FxpEasiRot::new(n, n, 1e-3, None, spec);
+    let mut frot = FxpEasiRot::new(n, n, 1e-3, None, spec, QuantMode::BitExact);
     bench.run("fxp easi rotation step 8→8 (q4.12)", || frot.step_raw(&znq));
+    let mut frot_ste = FxpEasiRot::new(n, n, 1e-3, None, spec, QuantMode::Ste);
+    bench.run("fxp easi rotation step 8→8 (q4.12, STE)", || frot_ste.step_raw(&znq));
 
     // ----- composed unit --------------------------------------------
     let mut unit = DrUnit::new(DrUnitConfig {
@@ -75,9 +79,27 @@ fn main() {
         rotate: true,
         rot_warmup: 0,
         seed: 2018,
-        spec,
+        whiten_spec: spec,
+        rot_spec: spec,
+        quant: QuantMode::BitExact,
     });
     bench.run("fxp unit step 16→8 (q4.12)", || funit.step_raw(&xpq));
+    let mut funit_mixed = FxpDrUnit::new(FxpUnitConfig {
+        input_dim: p,
+        output_dim: n,
+        mu_w: 5e-3,
+        mu_rot: 1e-3,
+        rotate: true,
+        rot_warmup: 0,
+        seed: 2018,
+        whiten_spec: FxpSpec::q(8, 16),
+        rot_spec: spec,
+        quant: QuantMode::Ste,
+    });
+    let xpq_wide = FxpSpec::q(8, 16).quantize_vec(&xp);
+    bench.run("fxp unit step 16→8 (mixed q8.16/q4.12, STE)", || {
+        funit_mixed.step_raw(&xpq_wide)
+    });
 
     // ----- dense matvec (inference path) ----------------------------
     let b = Mat::from_fn(n, m, |i, j| ((i * m + j) as f32 * 0.13).sin());

@@ -97,9 +97,13 @@ pub struct ExperimentConfig {
     pub output_dim: usize,
     pub mode: PipelineMode,
     pub backend: Backend,
-    /// Arithmetic of the DR datapath: f32 or bit-accurate fixed point
-    /// (e.g. `"q1.15"`, `"q4.12"`). Fixed point runs the quantized
-    /// kernels of [`crate::fxp`] — native backend only.
+    /// Arithmetic of the DR datapath: f32, uniform bit-accurate fixed
+    /// point (`"q4.12"`, optionally with `:wrap`/`:trunc` policy
+    /// suffixes), or a per-stage mixed-precision plan
+    /// (`"rp=q8.16,whiten=q4.12,rot=q1.15[,qat=ste]"` — see
+    /// [`Precision::parse`]). Fixed point runs the quantized kernels of
+    /// [`crate::fxp`] — native backend only; `qat=ste` selects
+    /// straight-through-estimator training.
     pub precision: Precision,
     pub rp_distribution: RpDistribution,
     /// EASI rotation learning rate μ.
@@ -374,6 +378,39 @@ mod tests {
         c.apply_args(&args).unwrap();
         assert_eq!(c.precision.label(), "q4.12");
         assert!(c.precision.is_fixed());
+    }
+
+    #[test]
+    fn mixed_precision_plan_json_and_cli() {
+        // Plan syntax flows through JSON configs…
+        let c = ExperimentConfig::from_json(
+            &Json::parse(r#"{"precision": "rp=q8.16,whiten=q4.12,rot=q1.15,qat=ste"}"#)
+                .unwrap(),
+        )
+        .unwrap();
+        let plan = c.precision.plan().unwrap();
+        assert_eq!(plan.rp.format.width(), 24);
+        assert_eq!(plan.whiten.format.width(), 16);
+        assert_eq!(plan.rot.format.width(), 16);
+        assert_eq!(plan.quant, crate::fxp::QuantMode::Ste);
+        // …and the label round-trips through to_json/from_json.
+        let j = c.to_json();
+        let back = ExperimentConfig::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back.precision, c.precision);
+
+        // CLI override with wrap/trunc policy suffixes (ROADMAP item:
+        // the wrapping/truncating datapath is now reachable end to end).
+        let mut c = ExperimentConfig::default();
+        let args = Args::parse(
+            ["--precision", "q1.15:wrap:trunc"].iter().map(|s| s.to_string()),
+            &[],
+        )
+        .unwrap();
+        c.apply_args(&args).unwrap();
+        let spec = c.precision.spec().unwrap();
+        assert_eq!(spec.overflow, crate::fxp::Overflow::Wrap);
+        assert_eq!(spec.rounding, crate::fxp::Rounding::Truncate);
+        assert_eq!(c.precision.label(), "q1.15:wrap:trunc");
     }
 
     #[test]

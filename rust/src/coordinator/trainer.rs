@@ -16,7 +16,7 @@
 //! trainer hot-swaps to the full one.
 
 use crate::config::{Backend, ExperimentConfig, PipelineMode};
-use crate::fxp::{FxpDrUnit, FxpRp, FxpUnitConfig, Precision};
+use crate::fxp::{FxpDrUnit, FxpRp, FxpSpec, FxpUnitConfig, Precision};
 use crate::linalg::Mat;
 use crate::pipeline::unit::{DrUnit, DrUnitConfig, RETRACT_INTERVAL};
 use crate::rp::RandomProjection;
@@ -211,13 +211,40 @@ enum NativeEngine {
         unit: DrUnit,
         rp: Option<RandomProjection>,
     },
-    // The arithmetic spec and input prescale live on the unit
-    // (`unit.config.spec`, `unit.quantize_input`) — single source of
-    // truth for the quantization the datapath actually uses.
+    // The per-stage arithmetic lives on the unit
+    // (`unit.config.{whiten_spec,rot_spec}`, `unit.output_spec`);
+    // `entry_spec`/`entry_prescale` describe the pipeline's ingress
+    // boundary (the RP accumulator format when an RP front end exists).
     Fxp {
         unit: FxpDrUnit,
         rp: Option<FxpRp>,
+        entry_spec: FxpSpec,
+        entry_prescale: f32,
     },
+}
+
+/// Quantize one f32 sample at the fixed-point pipeline ingress and
+/// cross the RP→whitener format boundary — the single definition shared
+/// by the training and inference paths so the two can never quantize
+/// inputs differently.
+fn fxp_ingress(
+    unit: &FxpDrUnit,
+    rp: &Option<FxpRp>,
+    entry_spec: &FxpSpec,
+    entry_prescale: f32,
+    row: &[f32],
+) -> Vec<i32> {
+    let xq: Vec<i32> = row
+        .iter()
+        .map(|&v| entry_spec.quantize(v * entry_prescale))
+        .collect();
+    match rp {
+        Some(f) => unit
+            .config
+            .whiten_spec
+            .requantize_vec_from(&f.apply_raw(&xq), entry_spec),
+        None => xq,
+    }
 }
 
 impl NativeTrainer {
@@ -243,19 +270,26 @@ impl NativeTrainer {
                 }),
                 rp,
             },
-            Precision::Fixed(spec) => NativeEngine::Fxp {
-                unit: FxpDrUnit::new(FxpUnitConfig {
-                    input_dim: stage_in,
-                    output_dim: cfg.output_dim,
-                    mu_w: cfg.mu_w,
-                    mu_rot: cfg.mu,
-                    rotate,
-                    rot_warmup: cfg.rot_warmup as u64,
-                    seed: cfg.seed,
-                    spec,
-                }),
-                rp: rp.as_ref().map(|p| FxpRp::from_rp(p, spec)),
-            },
+            Precision::Fixed(plan) => {
+                let entry_spec = if rp.is_some() { plan.rp } else { plan.whiten };
+                NativeEngine::Fxp {
+                    unit: FxpDrUnit::new(FxpUnitConfig {
+                        input_dim: stage_in,
+                        output_dim: cfg.output_dim,
+                        mu_w: cfg.mu_w,
+                        mu_rot: cfg.mu,
+                        rotate,
+                        rot_warmup: cfg.rot_warmup as u64,
+                        seed: cfg.seed,
+                        whiten_spec: plan.whiten,
+                        rot_spec: plan.rot,
+                        quant: plan.quant,
+                    }),
+                    rp: rp.as_ref().map(|p| FxpRp::from_rp(p, plan.rp)),
+                    entry_spec,
+                    entry_prescale: plan.entry_prescale(rp.is_some(), &plan.whiten),
+                }
+            }
         };
         Ok(Self {
             mode: cfg.mode,
@@ -274,13 +308,15 @@ impl NativeTrainer {
                 }
                 None => unit.step_rows(rows),
             },
-            NativeEngine::Fxp { unit, rp } => {
+            NativeEngine::Fxp {
+                unit,
+                rp,
+                entry_spec,
+                entry_prescale,
+            } => {
                 for i in 0..rows.rows_count() {
-                    let xq = unit.quantize_input(rows.row(i));
-                    match rp {
-                        Some(f) => unit.step_raw(&f.apply_raw(&xq)),
-                        None => unit.step_raw(&xq),
-                    }
+                    let xq = fxp_ingress(unit, rp, entry_spec, *entry_prescale, rows.row(i));
+                    unit.step_raw(&xq);
                 }
             }
         }
@@ -318,17 +354,18 @@ impl NativeTrainer {
                 };
                 eff.apply_rows(&staged)
             }
-            NativeEngine::Fxp { unit, rp } => {
+            NativeEngine::Fxp {
+                unit,
+                rp,
+                entry_spec,
+                entry_prescale,
+            } => {
                 let n = unit.config.output_dim;
-                let spec = unit.config.spec;
+                let out_spec = unit.output_spec();
                 let mut out = Vec::with_capacity(x.rows_count() * n);
                 for i in 0..x.rows_count() {
-                    let xq = unit.quantize_input(x.row(i));
-                    let staged = match rp {
-                        Some(f) => f.apply_raw(&xq),
-                        None => xq,
-                    };
-                    out.extend(spec.dequantize_vec(&unit.transform_raw(&staged)));
+                    let staged = fxp_ingress(unit, rp, entry_spec, *entry_prescale, x.row(i));
+                    out.extend(out_spec.dequantize_vec(&unit.transform_raw(&staged)));
                 }
                 Mat::from_vec(x.rows_count(), n, out)
             }

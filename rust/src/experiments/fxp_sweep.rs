@@ -14,7 +14,7 @@
 
 use crate::datasets::{har_like::HarLikeConfig, waveform::WaveformConfig, Dataset};
 use crate::fxp::Precision;
-use crate::hwmodel::{Arria10Model, HwConfig, NumericFormat};
+use crate::hwmodel::Arria10Model;
 use crate::mlp::{Mlp, MlpConfig};
 use crate::pipeline::{DrPipeline, PipelineSpec, RpStage, StageSpec};
 use crate::rp::RpDistribution;
@@ -54,7 +54,7 @@ pub fn default_formats() -> Vec<Precision> {
         .collect()
 }
 
-fn load(which: &str, seed: u64, train: usize, test: usize) -> Result<Dataset> {
+pub(crate) fn load(which: &str, seed: u64, train: usize, test: usize) -> Result<Dataset> {
     let mut d = match which {
         "waveform" => WaveformConfig {
             samples: train + test,
@@ -84,8 +84,13 @@ fn classify(reduced: &Dataset, seed: u64, epochs: usize) -> f64 {
     mlp.accuracy(&reduced.test_x, &reduced.test_y) * 100.0
 }
 
-/// Evaluate one precision point on an already-loaded dataset.
-fn eval_point(
+/// Evaluate one precision point on an already-loaded dataset. The
+/// pipeline fit and the classifier init get *sub-seeds* derived from
+/// the master seed (tags 1 and 2; the data draw is the caller's, tag
+/// 0 = the master itself), so the classifier's init noise is not
+/// correlated with the data draw across sweep points. Shared with the
+/// Pareto sweep ([`crate::experiments::pareto`]).
+pub(crate) fn eval_point(
     data: &Dataset,
     dims: (usize, usize, usize),
     precision: Precision,
@@ -94,6 +99,8 @@ fn eval_point(
     seed: u64,
 ) -> SweepPoint {
     let (m, p, n) = dims;
+    let pipe_seed = crate::rng::derive_seed(seed, 1);
+    let mlp_seed = crate::rng::derive_seed(seed, 2);
     let spec = PipelineSpec {
         input_dim: m,
         rp: Some(RpStage {
@@ -106,14 +113,14 @@ fn eval_point(
             epochs: dr_epochs,
         },
         output_dim: n,
-        seed,
+        seed: pipe_seed,
         precision,
     };
     let pipeline = DrPipeline::fit(spec, &data.train_x);
-    let accuracy = classify(&pipeline.transform_dataset(data), seed, mlp_epochs);
-    let cost = Arria10Model::paper_calibrated().cost(
-        &HwConfig::rp_easi(m, p, n).with_format(NumericFormat::from_precision(&precision)),
-    );
+    let accuracy = classify(&pipeline.transform_dataset(data), mlp_seed, mlp_epochs);
+    // Plan-aware pricing: uniform formats keep the PR-1 single-format
+    // numbers bit-for-bit, mixed plans are priced per stage.
+    let cost = Arria10Model::paper_calibrated().cost_precision(m, Some(p), n, &precision);
     SweepPoint {
         precision: precision.label(),
         width_bits: precision.width_bits(),
@@ -145,6 +152,20 @@ pub fn run_sized(
         .collect())
 }
 
+/// Paper-scale dataset splits per dataset: `(train, test)`. Shared
+/// with the Pareto sweep so the two precision experiments always
+/// evaluate on identical splits.
+pub(crate) fn paper_splits(which: &str) -> (usize, usize) {
+    match which {
+        "har" => (2000, 500),
+        _ => (4000, 1000),
+    }
+}
+
+/// Classifier epochs for paper-scale runs (§V.B protocol), shared with
+/// the Pareto sweep.
+pub(crate) const PAPER_MLP_EPOCHS: usize = 30;
+
 /// Run the sweep with the paper-scale dataset splits.
 pub fn run(
     which: &str,
@@ -152,11 +173,8 @@ pub fn run(
     epochs: usize,
     seed: u64,
 ) -> Result<Vec<SweepPoint>> {
-    let (train, test) = match which {
-        "har" => (2000, 500),
-        _ => (4000, 1000),
-    };
-    run_sized(which, formats, epochs, 30, seed, train, test)
+    let (train, test) = paper_splits(which);
+    run_sized(which, formats, epochs, PAPER_MLP_EPOCHS, seed, train, test)
 }
 
 /// Render as an aligned text table, with the fp32 row as the baseline.
@@ -222,6 +240,7 @@ pub fn to_json(which: &str, points: &[SweepPoint]) -> Json {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::hwmodel::{HwConfig, NumericFormat};
 
     #[test]
     fn q4_12_within_two_points_of_f32_on_waveform() {
@@ -270,6 +289,42 @@ mod tests {
         let fx = &pts[1];
         assert_eq!(fx.precision, "q1.15");
         assert!(fx.accuracy > 50.0, "q1.15 accuracy collapsed: {}", fx.accuracy);
+    }
+
+    #[test]
+    fn ste_orders_no_worse_than_bit_exact_at_8_bits_on_waveform() {
+        // The QAT claim on the end-to-end task: at Q4.4 the bit-exact
+        // integer update underflows the format (the whitener stays near
+        // its random init), while STE trains the same quantized forward
+        // datapath with f32 shadow updates. STE must not trail
+        // bit-exact, and must keep the task well above chance (33%).
+        let pts = run_sized(
+            "waveform",
+            &[
+                Precision::parse("q4.4").unwrap(),
+                Precision::parse("q4.4,qat=ste").unwrap(),
+            ],
+            3,
+            25,
+            2018,
+            2500,
+            600,
+        )
+        .unwrap();
+        assert_eq!(pts.len(), 3);
+        let (exact, ste) = (&pts[1], &pts[2]);
+        assert_eq!(exact.precision, "q4.4");
+        assert_eq!(ste.precision, "q4.4,qat=ste");
+        // Same datapath, same price.
+        assert_eq!(exact.dsps, ste.dsps);
+        assert_eq!(exact.alms, ste.alms);
+        assert!(
+            ste.accuracy + 0.5 >= exact.accuracy,
+            "STE ({:.1}) must not trail bit-exact ({:.1}) at 8 bits",
+            ste.accuracy,
+            exact.accuracy
+        );
+        assert!(ste.accuracy > 65.0, "STE q4.4 collapsed: {}", ste.accuracy);
     }
 
     #[test]

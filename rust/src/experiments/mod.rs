@@ -5,4 +5,5 @@
 
 pub mod fig1;
 pub mod fxp_sweep;
+pub mod pareto;
 pub mod table1;

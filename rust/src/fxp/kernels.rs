@@ -36,9 +36,20 @@
 //! power of two. The whitener then targets output σ = `2^-(3-i)` for
 //! `i` integer bits (so ±4σ fits the format), and the rotation's μ is
 //! compensated by σ⁻⁴ (its update terms scale as σ⁴) — both host-side
-//! constant folding, exact in binary.
+//! constant folding, exact in binary. In a mixed-precision unit the σ
+//! target honours the *narrower* of the whitening and rotation formats,
+//! so a narrow rotation stage still sees in-range inputs.
+//!
+//! # Training modes ([`QuantMode`])
+//!
+//! Every kernel trains in one of two modes (see [`super`] docs):
+//! bit-exact integer updates, or STE QAT where the quantized forward
+//! values drive an f32 shadow-weight update that is requantized into
+//! the datapath after each step. The forward/transform path is
+//! identical in both modes — only where the *update* arithmetic runs
+//! differs.
 
-use super::{input_prescale, FxpConst, FxpMat, FxpSpec};
+use super::{input_prescale, FxpConst, FxpMat, FxpSpec, QuantMode};
 use crate::linalg::{orthonormalize_rows, Mat};
 use crate::rp::{RandomProjection, SparseSignMatrix};
 
@@ -141,9 +152,16 @@ pub struct FxpGha {
     /// Whitening target σ = 2^-sigma_shift (1 for ≥ 3 integer bits).
     sigma_shift: i32,
     steps: u64,
+    /// Training mode; [`QuantMode::Ste`] keeps `shadow` weights.
+    quant: QuantMode,
+    /// f32 shadow weights (STE QAT); `w` is always their quantization.
+    shadow: Option<Mat>,
+    /// Full-precision learning rate for the shadow update.
+    mu_f: f32,
     y: Vec<i32>,
     cum: Vec<i32>,
     delta: Vec<i32>,
+    cum_f: Vec<f32>,
 }
 
 impl FxpGha {
@@ -154,13 +172,12 @@ impl FxpGha {
         var_beta: f32,
         seed: u64,
         spec: FxpSpec,
+        quant: QuantMode,
     ) -> Self {
         assert!(input_dim >= output_dim && output_dim >= 1);
         assert!(mu > 0.0 && var_beta > 0.0);
-        let w = FxpMat::quantize(
-            &crate::easi::random_orthonormal(output_dim, input_dim, seed),
-            spec,
-        );
+        let w0 = crate::easi::random_orthonormal(output_dim, input_dim, seed);
+        let w = FxpMat::quantize(&w0, spec);
         let width = spec.format.width();
         let init_var = 1i64 << (spec.format.frac_bits as u32 + VAR_EXTRA_FRAC);
         let mut g = Self {
@@ -174,9 +191,13 @@ impl FxpGha {
             coeff: vec![FxpConst { raw: 0, frac: 0 }; output_dim],
             sigma_shift: (3 - spec.format.int_bits as i32).max(0),
             steps: 0,
+            quant,
+            shadow: (quant == QuantMode::Ste).then_some(w0),
+            mu_f: mu,
             y: vec![0; output_dim],
             cum: vec![0; input_dim],
             delta: vec![0; output_dim * input_dim],
+            cum_f: vec![0.0; input_dim],
         };
         g.refresh_coeffs();
         g
@@ -203,6 +224,20 @@ impl FxpGha {
         (2.0f32).powi(-self.sigma_shift)
     }
 
+    /// Raise the whitening σ target to `2^-shift` (host-side constant
+    /// folding). The composed unit uses this so a *narrower* rotation
+    /// format downstream still receives in-range (±4σ) inputs; callers
+    /// must set it before training starts.
+    pub fn set_sigma_shift(&mut self, shift: i32) {
+        self.sigma_shift = shift.max(0);
+        self.refresh_coeffs();
+    }
+
+    /// The training mode this whitener was built with.
+    pub fn quant_mode(&self) -> QuantMode {
+        self.quant
+    }
+
     /// Recompute the whitening coefficients `σ/√λ̂` (host/LUT side; see
     /// module docs). Between refreshes the forward path is all-integer.
     pub fn refresh_coeffs(&mut self) {
@@ -223,22 +258,54 @@ impl FxpGha {
         for i in 0..n {
             self.y[i] = spec.dot_raw(self.w.row(i), x);
         }
-        for c in self.cum.iter_mut() {
-            *c = 0;
-        }
-        // Deltas from the pre-update W (buffered, like the f32 kernel).
-        for i in 0..n {
-            let yi = self.y[i];
-            let row = self.w.row(i);
-            for j in 0..m {
-                self.cum[j] = spec.add(self.cum[j], spec.mul(yi, row[j]));
-                let t = spec.sub(x[j], self.cum[j]);
-                let p = spec.mul(yi, t);
-                self.delta[i * m + j] = spec.mul_const(p, &self.mu);
+        match self.quant {
+            QuantMode::BitExact => {
+                for c in self.cum.iter_mut() {
+                    *c = 0;
+                }
+                // Deltas from the pre-update W (buffered, like the f32
+                // kernel).
+                for i in 0..n {
+                    let yi = self.y[i];
+                    let row = self.w.row(i);
+                    for j in 0..m {
+                        self.cum[j] = spec.add(self.cum[j], spec.mul(yi, row[j]));
+                        let t = spec.sub(x[j], self.cum[j]);
+                        let p = spec.mul(yi, t);
+                        self.delta[i * m + j] = spec.mul_const(p, &self.mu);
+                    }
+                }
+                for (w, &d) in self.w.as_raw_mut().iter_mut().zip(self.delta.iter()) {
+                    *w = spec.add(*w, d);
+                }
             }
-        }
-        for (w, &d) in self.w.as_raw_mut().iter_mut().zip(self.delta.iter()) {
-            *w = spec.add(*w, d);
+            QuantMode::Ste => {
+                // STE: the Sanger delta is computed from the *quantized*
+                // forward values (y and the datapath weights — what the
+                // deployed hardware saw), in f32, and applied to the
+                // shadow; the datapath weights are then the shadow
+                // requantized. Sub-LSB updates accumulate instead of
+                // rounding to zero.
+                let shadow = self
+                    .shadow
+                    .as_mut()
+                    .expect("STE mode keeps shadow weights");
+                for c in self.cum_f.iter_mut() {
+                    *c = 0.0;
+                }
+                for i in 0..n {
+                    let yi = spec.dequantize(self.y[i]);
+                    let row = self.w.row(i);
+                    for j in 0..m {
+                        self.cum_f[j] += yi * spec.dequantize(row[j]);
+                        let d = self.mu_f
+                            * yi
+                            * (spec.dequantize(x[j]) - self.cum_f[j]);
+                        shadow.as_mut_slice()[i * m + j] += d;
+                    }
+                }
+                self.w.quantize_from(shadow);
+            }
         }
         // Variance EMA in the extended accumulator: λ̂ += β(y² − λ̂).
         for (va, &yi) in self.var_acc.iter_mut().zip(&self.y) {
@@ -304,6 +371,12 @@ pub struct FxpEasiRot {
     b: FxpMat,
     mu: FxpConst,
     steps: u64,
+    /// Training mode; [`QuantMode::Ste`] keeps `shadow` weights.
+    quant: QuantMode,
+    /// f32 shadow matrix (STE QAT); `b` is always its quantization.
+    shadow: Option<Mat>,
+    /// Full-precision learning rate for the shadow update.
+    mu_f: f32,
     /// EMA of ‖ΔB‖/‖B‖ — the same convergence monitor the f32
     /// `EasiTrainer` keeps. Computed from the integer deltas; the EMA
     /// itself is a host-side observability counter, not datapath state.
@@ -323,6 +396,7 @@ impl FxpEasiRot {
         mu: f32,
         random_init: Option<u64>,
         spec: FxpSpec,
+        quant: QuantMode,
     ) -> Self {
         assert!(input_dim >= output_dim && output_dim >= 1);
         assert!(mu > 0.0);
@@ -337,10 +411,18 @@ impl FxpEasiRot {
             b: FxpMat::quantize(&b0, spec),
             mu: FxpConst::from_f32(mu, spec.format.width()),
             steps: 0,
+            quant,
+            shadow: (quant == QuantMode::Ste).then_some(b0),
+            mu_f: mu,
             update_ema: 1.0,
             y: vec![0; output_dim],
             g: vec![0; output_dim],
         }
+    }
+
+    /// The training mode this rotation was built with.
+    pub fn quant_mode(&self) -> QuantMode {
+        self.quant
     }
 
     /// EMA of ‖ΔB‖_F/‖B‖_F — approaches 0 as the rotation converges
@@ -377,22 +459,51 @@ impl FxpEasiRot {
         }
         let u = self.b.matvec_t_raw(&self.y);
         let v = self.b.matvec_t_raw(&self.g);
-        let mut delta2: i128 = 0;
-        let mut b_norm2: i128 = 0;
-        for i in 0..n {
-            let (yi, gi) = (self.y[i], self.g[i]);
-            for j in 0..m {
-                let t = spec.sub(spec.mul(gi, u[j]), spec.mul(yi, v[j]));
-                let d = spec.mul_const(t, &self.mu);
-                let bij = self.b.get_raw(i, j);
-                delta2 += d as i128 * d as i128;
-                b_norm2 += bij as i128 * bij as i128;
-                self.b.set_raw(i, j, spec.sub(bij, d));
+        let rel = match self.quant {
+            QuantMode::BitExact => {
+                let mut delta2: i128 = 0;
+                let mut b_norm2: i128 = 0;
+                for i in 0..n {
+                    let (yi, gi) = (self.y[i], self.g[i]);
+                    for j in 0..m {
+                        let t = spec.sub(spec.mul(gi, u[j]), spec.mul(yi, v[j]));
+                        let d = spec.mul_const(t, &self.mu);
+                        let bij = self.b.get_raw(i, j);
+                        delta2 += d as i128 * d as i128;
+                        b_norm2 += bij as i128 * bij as i128;
+                        self.b.set_raw(i, j, spec.sub(bij, d));
+                    }
+                }
+                (delta2 as f64).sqrt() / ((b_norm2 as f64).sqrt() + 1e-30)
             }
-        }
+            QuantMode::Ste => {
+                // STE: the factored update terms (y, g, u, v) are the
+                // quantized forward values; the delta is applied to the
+                // f32 shadow, then the datapath matrix is requantized.
+                let shadow = self
+                    .shadow
+                    .as_mut()
+                    .expect("STE mode keeps shadow weights");
+                let mut delta2 = 0.0f64;
+                let mut b_norm2 = 0.0f64;
+                for i in 0..n {
+                    let yf = spec.dequantize(self.y[i]);
+                    let gf = spec.dequantize(self.g[i]);
+                    for j in 0..m {
+                        let d = self.mu_f
+                            * (gf * spec.dequantize(u[j]) - yf * spec.dequantize(v[j]));
+                        let s = shadow.as_slice()[i * m + j];
+                        delta2 += (d as f64) * (d as f64);
+                        b_norm2 += (s as f64) * (s as f64);
+                        shadow.as_mut_slice()[i * m + j] = s - d;
+                    }
+                }
+                self.b.quantize_from(shadow);
+                delta2.sqrt() / (b_norm2.sqrt() + 1e-30)
+            }
+        };
         // Convergence monitor (host-side counter, same recursion as the
         // f32 trainer's): EMA of ‖ΔB‖/‖B‖.
-        let rel = (delta2 as f64).sqrt() / ((b_norm2 as f64).sqrt() + 1e-30);
         self.update_ema = 0.99 * self.update_ema + 0.01 * rel;
         self.steps += 1;
         if self.steps % HOST_REFRESH_INTERVAL == 0 {
@@ -400,20 +511,30 @@ impl FxpEasiRot {
         }
     }
 
-    /// Host-side retraction to the orthonormal manifold (dequantize →
-    /// modified Gram–Schmidt → requantize), same cadence and rationale
-    /// as the PJRT backend's.
+    /// Host-side retraction to the orthonormal manifold, same cadence
+    /// and rationale as the PJRT backend's. Bit-exact mode retracts the
+    /// datapath matrix (dequantize → modified Gram–Schmidt →
+    /// requantize); STE retracts the f32 shadow and requantizes.
     pub fn retract(&mut self) {
-        let mut m = self.b.dequantize();
-        orthonormalize_rows(&mut m);
-        self.b = FxpMat::quantize(&m, self.spec);
+        match &mut self.shadow {
+            Some(shadow) => {
+                orthonormalize_rows(shadow);
+                self.b.quantize_from(shadow);
+            }
+            None => {
+                let mut m = self.b.dequantize();
+                orthonormalize_rows(&mut m);
+                self.b.quantize_from(&m);
+            }
+        }
     }
 }
 
 // --------------------------------------------------------- composed unit
 
 /// Configuration of the composed fixed-point DR unit (mirrors
-/// `pipeline::unit::DrUnitConfig` plus the arithmetic spec).
+/// `pipeline::unit::DrUnitConfig` plus the per-stage arithmetic and
+/// training mode).
 #[derive(Debug, Clone, Copy)]
 pub struct FxpUnitConfig {
     pub input_dim: usize,
@@ -427,7 +548,12 @@ pub struct FxpUnitConfig {
     /// Whitener-only warm-up samples before the rotation learns.
     pub rot_warmup: u64,
     pub seed: u64,
-    pub spec: FxpSpec,
+    /// Whitening-stage arithmetic (also the unit's input format).
+    pub whiten_spec: FxpSpec,
+    /// Rotation-stage arithmetic (may be narrower — mixed precision).
+    pub rot_spec: FxpSpec,
+    /// Bit-exact integer training vs STE QAT.
+    pub quant: QuantMode,
 }
 
 /// The composed streaming fixed-point unit: GHA whitening (+σ/√λ̂
@@ -445,22 +571,40 @@ pub struct FxpDrUnit {
 
 impl FxpDrUnit {
     pub fn new(config: FxpUnitConfig) -> Self {
-        let spec = config.spec;
-        let gha = FxpGha::new(
+        let wspec = config.whiten_spec;
+        let mut gha = FxpGha::new(
             config.input_dim,
             config.output_dim,
             config.mu_w,
             5e-3,
             config.seed,
-            spec,
+            wspec,
+            config.quant,
         );
+        // The σ target must satisfy the *narrower* of the two stage
+        // formats: the whitener writes in its own format, but its
+        // outputs feed the rotation after requantization — ±4σ has to
+        // fit both.
+        let narrow_int = config
+            .whiten_spec
+            .format
+            .int_bits
+            .min(config.rot_spec.format.int_bits);
+        gha.set_sigma_shift((3 - narrow_int as i32).max(0));
         // The rotation's update terms scale as σ⁴ on σ-scaled whitened
         // inputs; fold σ⁻⁴ into μ (host-side constant folding, exact —
         // σ is a power of two).
         let sigma = gha.target_sigma();
         let mu_eff = config.mu_rot / (sigma * sigma * sigma * sigma);
-        let rot = FxpEasiRot::new(config.output_dim, config.output_dim, mu_eff, None, spec);
-        let clamp_raw = spec.quantize(4.0 * sigma);
+        let rot = FxpEasiRot::new(
+            config.output_dim,
+            config.output_dim,
+            mu_eff,
+            None,
+            config.rot_spec,
+            config.quant,
+        );
+        let clamp_raw = wspec.quantize(4.0 * sigma);
         Self {
             config,
             gha,
@@ -469,26 +613,50 @@ impl FxpDrUnit {
         }
     }
 
-    /// The power-of-two input prescale for this format (see module
-    /// docs); applied by [`FxpDrUnit::quantize_input`].
+    /// The power-of-two input prescale for the unit's input (whitening)
+    /// format (see module docs); applied by
+    /// [`FxpDrUnit::quantize_input`].
     pub fn prescale(&self) -> f32 {
-        input_prescale(&self.config.spec)
+        input_prescale(&self.config.whiten_spec)
+    }
+
+    /// The format of [`FxpDrUnit::transform_raw`] outputs: the rotation
+    /// format with the rotation stage on, the whitening format with it
+    /// muxed out.
+    pub fn output_spec(&self) -> FxpSpec {
+        if self.config.rotate {
+            self.config.rot_spec
+        } else {
+            self.config.whiten_spec
+        }
     }
 
     /// Quantize an f32 sample into the unit's input domain.
     pub fn quantize_input(&self, x: &[f32]) -> Vec<i32> {
         let ps = self.prescale();
-        x.iter().map(|&v| self.config.spec.quantize(v * ps)).collect()
+        x.iter()
+            .map(|&v| self.config.whiten_spec.quantize(v * ps))
+            .collect()
+    }
+
+    /// Whiten one sample and deliver it in the rotation stage's format
+    /// (±4σ clamp in the whitening domain, then the stage-boundary
+    /// requantization — a no-op for uniform plans).
+    fn whiten_for_rotation(&self, x: &[i32]) -> Vec<i32> {
+        let mut z = self.gha.whiten_raw(x);
+        for v in &mut z {
+            *v = (*v).clamp(-self.clamp_raw, self.clamp_raw);
+        }
+        self.config
+            .rot_spec
+            .requantize_vec_from(&z, &self.config.whiten_spec)
     }
 
     /// One streaming sample (raw words, already prescaled/quantized).
     pub fn step_raw(&mut self, x: &[i32]) {
         self.gha.step_raw(x);
         if self.config.rotate && self.gha.steps() > self.config.rot_warmup {
-            let mut z = self.gha.whiten_raw(x);
-            for v in &mut z {
-                *v = (*v).clamp(-self.clamp_raw, self.clamp_raw);
-            }
+            let z = self.whiten_for_rotation(x);
             self.rot.step_raw(&z);
         }
     }
@@ -506,11 +674,16 @@ impl FxpDrUnit {
         }
     }
 
-    /// Forward transform on raw words.
+    /// Forward transform on raw words. Output words are in
+    /// [`FxpDrUnit::output_spec`]'s format.
     pub fn transform_raw(&self, x: &[i32]) -> Vec<i32> {
         let z = self.gha.whiten_raw(x);
         if self.config.rotate {
-            self.rot.transform_raw(&z)
+            let zr = self
+                .config
+                .rot_spec
+                .requantize_vec_from(&z, &self.config.whiten_spec);
+            self.rot.transform_raw(&zr)
         } else {
             z
         }
@@ -520,7 +693,7 @@ impl FxpDrUnit {
     /// dequantize).
     pub fn transform(&self, x: &[f32]) -> Vec<f32> {
         let xq = self.quantize_input(x);
-        self.config.spec.dequantize_vec(&self.transform_raw(&xq))
+        self.output_spec().dequantize_vec(&self.transform_raw(&xq))
     }
 
     /// Toggle the rotation stage (the paper's reconfiguration mux).
@@ -655,7 +828,7 @@ mod tests {
             clip: 0.0,
             seed,
         });
-        let mut fxp_gha = FxpGha::new(m, n, 2e-3, 5e-3, seed, spec);
+        let mut fxp_gha = FxpGha::new(m, n, 2e-3, 5e-3, seed, spec, QuantMode::BitExact);
         let x: Vec<f32> = (0..m).map(|j| ((j * 5 % 7) as f32 * 0.2 - 0.6)).collect();
         f32_gha.step(&x);
         fxp_gha.step_raw(&spec.quantize_vec(&x));
@@ -674,7 +847,7 @@ mod tests {
         use crate::pca::BatchPca;
         let spec = FxpSpec::q(6, 12);
         let x = bounded_data(4000, 6, 71);
-        let mut gha = FxpGha::new(6, 2, 5e-3, 5e-3, 2018, spec);
+        let mut gha = FxpGha::new(6, 2, 5e-3, 5e-3, 2018, spec, QuantMode::BitExact);
         for _ in 0..6 {
             for i in 0..x.rows_count() {
                 gha.step_raw(&spec.quantize_vec(x.row(i)));
@@ -705,7 +878,7 @@ mod tests {
         // the same factored form. Documented tolerance: 32 ulp.
         let spec = FxpSpec::q(8, 16);
         let (m, n, mu) = (6usize, 6usize, 1e-3f32);
-        let mut rot = FxpEasiRot::new(m, n, mu, None, spec);
+        let mut rot = FxpEasiRot::new(m, n, mu, None, spec, QuantMode::BitExact);
         let z: Vec<f32> = (0..m).map(|j| (j as f32 * 0.9).sin() * 1.5).collect();
         let b0 = rot.matrix(); // quantized identity, the shared start
         rot.step_raw(&spec.quantize_vec(&z));
@@ -736,7 +909,7 @@ mod tests {
         let spec = FxpSpec::q(4, 12);
         let mut rng = Pcg64::seed(37);
         let x = Mat::from_fn(4000, 4, |_, _| (rng.next_f32() * 2.0 - 1.0) * 3f32.sqrt());
-        let mut rot = FxpEasiRot::new(4, 4, 1e-3, None, spec);
+        let mut rot = FxpEasiRot::new(4, 4, 1e-3, None, spec, QuantMode::BitExact);
         for _ in 0..2 {
             for i in 0..x.rows_count() {
                 rot.step_raw(&spec.quantize_vec(x.row(i)));
@@ -763,7 +936,9 @@ mod tests {
             rotate: true,
             rot_warmup: 1000,
             seed: 2018,
-            spec,
+            whiten_spec: spec,
+            rot_spec: spec,
+            quant: QuantMode::BitExact,
         });
         for _ in 0..6 {
             unit.step_rows(&x);
@@ -800,7 +975,9 @@ mod tests {
             rotate: true,
             rot_warmup: 500,
             seed: 7,
-            spec,
+            whiten_spec: spec,
+            rot_spec: spec,
+            quant: QuantMode::BitExact,
         });
         let w0 = unit.whitener().subspace();
         for _ in 0..4 {
@@ -828,7 +1005,9 @@ mod tests {
             rotate: true,
             rot_warmup: 200,
             seed: 9,
-            spec,
+            whiten_spec: spec,
+            rot_spec: spec,
+            quant: QuantMode::BitExact,
         });
         unit.step_rows(&x);
         let eff = unit.effective_matrix();
@@ -857,7 +1036,9 @@ mod tests {
             rotate: true,
             rot_warmup: 0,
             seed: 1,
-            spec,
+            whiten_spec: spec,
+            rot_spec: spec,
+            quant: QuantMode::BitExact,
         });
         assert!(unit.rotation_enabled());
         unit.set_rotation(false);
@@ -865,6 +1046,193 @@ mod tests {
         let x = vec![0.5f32; 8];
         unit.step(&x);
         assert_eq!(unit.transform(&x).len(), 4);
+    }
+
+    // ------------------------------------------------- STE / mixed
+
+    #[test]
+    fn ste_gha_learns_where_bit_exact_stalls() {
+        // Q4.4 (8-bit): the bit-exact Sanger delta μ·y·(x−c) is far
+        // below one LSB (1/16) at μ=2e-3, so integer training barely
+        // moves; the STE shadow accumulates the same sub-LSB updates
+        // and converges toward the principal subspace.
+        use crate::pca::BatchPca;
+        let spec = FxpSpec::q(4, 4);
+        let x = bounded_data(4000, 6, 71);
+        let mut exact = FxpGha::new(6, 2, 2e-3, 5e-3, 2018, spec, QuantMode::BitExact);
+        let mut ste = FxpGha::new(6, 2, 2e-3, 5e-3, 2018, spec, QuantMode::Ste);
+        for _ in 0..6 {
+            for i in 0..x.rows_count() {
+                let xq = spec.quantize_vec(x.row(i));
+                exact.step_raw(&xq);
+                ste.step_raw(&xq);
+            }
+        }
+        let pca = BatchPca::fit(&x, 2);
+        let alignment = |w: &Mat| -> f32 {
+            let mut worst = 1.0f32;
+            for i in 0..2 {
+                let wi = w.row(i);
+                let proj: f32 = (0..2)
+                    .map(|k| crate::linalg::dot(wi, pca.components.row(k)).powi(2))
+                    .sum();
+                worst = worst.min(proj / crate::linalg::dot(wi, wi).max(1e-12));
+            }
+            worst
+        };
+        let a_ste = alignment(&ste.subspace());
+        let a_exact = alignment(&exact.subspace());
+        assert!(a_ste > 0.8, "STE failed to find the principal plane: {a_ste}");
+        assert!(
+            a_ste >= a_exact - 0.05,
+            "STE ({a_ste:.2}) must not trail bit-exact ({a_exact:.2}) at 8 bits"
+        );
+    }
+
+    #[test]
+    fn ste_forward_path_is_quantized() {
+        // The STE whitener's datapath weights must always be exactly
+        // the quantization of its shadow — the deployed model *is* the
+        // quantized model.
+        let spec = FxpSpec::q(4, 8);
+        let x = bounded_data(300, 6, 91);
+        let mut g = FxpGha::new(6, 3, 5e-3, 5e-3, 11, spec, QuantMode::Ste);
+        for i in 0..x.rows_count() {
+            g.step_raw(&spec.quantize_vec(x.row(i)));
+        }
+        let w = g.subspace();
+        for &v in w.as_slice() {
+            let q = spec.dequantize(spec.quantize(v));
+            assert!((v - q).abs() < 1e-9, "datapath weight off-grid: {v}");
+        }
+        assert_eq!(g.quant_mode(), QuantMode::Ste);
+    }
+
+    #[test]
+    fn ste_rotation_keeps_white_inputs_white() {
+        let spec = FxpSpec::q(4, 8);
+        let mut rng = Pcg64::seed(53);
+        let x = Mat::from_fn(3000, 4, |_, _| (rng.next_f32() * 2.0 - 1.0) * 3f32.sqrt());
+        let mut rot = FxpEasiRot::new(4, 4, 1e-3, None, spec, QuantMode::Ste);
+        for _ in 0..2 {
+            for i in 0..x.rows_count() {
+                rot.step_raw(&spec.quantize_vec(x.row(i)));
+            }
+        }
+        let y = Mat::from_fn(x.rows_count(), 4, |i, j| {
+            spec.dequantize(rot.transform_raw(&spec.quantize_vec(x.row(i)))[j])
+        });
+        let w = whiteness_error(&y);
+        assert!(w < 0.25, "STE rotation destroyed whiteness: {w}");
+    }
+
+    #[test]
+    fn mixed_precision_unit_trains_and_requantizes() {
+        // Wide whitener + narrow rotation (the real-datapath shape):
+        // the unit must stay finite, learn, and emit outputs in the
+        // rotation's format.
+        let whiten_spec = FxpSpec::q(8, 16);
+        let rot_spec = FxpSpec::q(1, 15);
+        let x = bounded_data(3000, 8, 95);
+        let mut unit = FxpDrUnit::new(FxpUnitConfig {
+            input_dim: 8,
+            output_dim: 3,
+            mu_w: 5e-3,
+            mu_rot: 1e-3,
+            rotate: true,
+            rot_warmup: 500,
+            seed: 7,
+            whiten_spec,
+            rot_spec,
+            quant: QuantMode::Ste,
+        });
+        // σ target honours the narrow rotation: 2^-(3-1) = 1/4.
+        assert_eq!(unit.whitener().target_sigma(), 0.25);
+        assert_eq!(unit.output_spec(), rot_spec);
+        for _ in 0..4 {
+            unit.step_rows(&x);
+        }
+        let y = unit.transform(x.row(0));
+        assert_eq!(y.len(), 3);
+        assert!(y.iter().all(|v| v.is_finite()));
+        // Outputs live on the rotation format's grid.
+        for &v in &y {
+            let q = rot_spec.dequantize(rot_spec.quantize(v));
+            assert!((v - q).abs() < 1e-9, "output off the rot grid: {v}");
+        }
+        // Mux off: outputs revert to the whitening format.
+        unit.set_rotation(false);
+        assert_eq!(unit.output_spec(), whiten_spec);
+    }
+
+    #[test]
+    fn uniform_plan_unit_identical_to_pr1_datapath() {
+        // A uniform plan's stage boundaries must be bit-exact no-ops:
+        // drive the PR-1 datapath reconstructed from its parts (GHA +
+        // clamp + rotation, with NO requantization between them) and
+        // demand raw-word equality with the composed unit at every
+        // output. If requantize_from ever stopped being the identity
+        // for equal formats, this diverges.
+        let spec = FxpSpec::q(4, 12);
+        let (m, n, warmup) = (8usize, 4usize, 100u64);
+        let (mu_w, mu_rot, seed) = (5e-3f32, 1e-3f32, 3u64);
+        let x = bounded_data(1200, m, 97);
+
+        let mut unit = FxpDrUnit::new(FxpUnitConfig {
+            input_dim: m,
+            output_dim: n,
+            mu_w,
+            mu_rot,
+            rotate: true,
+            rot_warmup: warmup,
+            seed,
+            whiten_spec: spec,
+            rot_spec: spec,
+            quant: QuantMode::BitExact,
+        });
+
+        // The PR-1 single-format composition, by hand.
+        let mut gha = FxpGha::new(m, n, mu_w, 5e-3, seed, spec, QuantMode::BitExact);
+        let sigma = gha.target_sigma();
+        let mu_eff = mu_rot / (sigma * sigma * sigma * sigma);
+        let mut rot =
+            FxpEasiRot::new(n, n, mu_eff, None, spec, QuantMode::BitExact);
+        let clamp = spec.quantize(4.0 * sigma);
+
+        for i in 0..x.rows_count() {
+            let xq = unit.quantize_input(x.row(i));
+            unit.step_raw(&xq);
+            gha.step_raw(&xq);
+            if gha.steps() > warmup {
+                let mut z = gha.whiten_raw(&xq);
+                for v in &mut z {
+                    *v = (*v).clamp(-clamp, clamp);
+                }
+                rot.step_raw(&z);
+            }
+        }
+        for i in 0..20 {
+            let xq = unit.quantize_input(x.row(i));
+            let via_unit = unit.transform_raw(&xq);
+            let via_parts = rot.transform_raw(&gha.whiten_raw(&xq));
+            assert_eq!(via_unit, via_parts, "uniform boundary must be a no-op");
+        }
+        // And STE differs from bit-exact only through the update path —
+        // its transform still returns rot-format outputs of same shape.
+        let mut ste = FxpDrUnit::new(FxpUnitConfig {
+            input_dim: m,
+            output_dim: n,
+            mu_w,
+            mu_rot,
+            rotate: true,
+            rot_warmup: warmup,
+            seed,
+            whiten_spec: spec,
+            rot_spec: spec,
+            quant: QuantMode::Ste,
+        });
+        ste.step_rows(&x);
+        assert_eq!(ste.transform(x.row(0)).len(), n);
     }
 
     #[test]
@@ -880,7 +1248,9 @@ mod tests {
                 rotate: true,
                 rot_warmup: 100,
                 seed: 3,
-                spec,
+                whiten_spec: spec,
+                rot_spec: spec,
+                quant: QuantMode::BitExact,
             });
             u.step_rows(&x);
             u.effective_matrix()

@@ -38,6 +38,17 @@ impl FxpMat {
         }
     }
 
+    /// Requantize an f32 matrix of the same shape into the existing
+    /// raw buffer — the per-step shadow→datapath write of STE training,
+    /// kept allocation-free on the streaming hot path.
+    pub fn quantize_from(&mut self, m: &Mat) {
+        assert_eq!((self.rows, self.cols), m.shape(), "fxp quantize_from shape");
+        let spec = self.spec;
+        for (r, &v) in self.raw.iter_mut().zip(m.as_slice()) {
+            *r = spec.quantize(v);
+        }
+    }
+
     /// Dequantize back to f32.
     pub fn dequantize(&self) -> Mat {
         Mat::from_vec(

@@ -30,6 +30,38 @@
 //! add-half-then-truncate (ties toward +∞), "truncate" is an arithmetic
 //! right shift (toward −∞). Saturation clamps to the format's range;
 //! wrapping keeps the low `width` bits with sign extension.
+//!
+//! # Mixed precision ([`PrecisionPlan`])
+//!
+//! A fixed-point pipeline carries one [`FxpSpec`] *per stage*: the RP
+//! accumulator, the whitener and the rotation each get their own Q
+//! format, as real datapaths do (wide RP accumulators for headroom,
+//! narrow rotation because its inputs are σ-normalised). Raw words
+//! crossing a stage boundary are requantized by a pure shift plus the
+//! destination's rounding/overflow policy
+//! ([`FxpSpec::requantize_from`]); when the two formats match the
+//! boundary is a bit-exact no-op, so a uniform plan behaves exactly
+//! like the single-format datapath. The CLI syntax is
+//! `--precision rp=q8.16,whiten=q4.12,rot=q1.15[,qat=ste]`.
+//!
+//! # Quantization-aware training ([`QuantMode`])
+//!
+//! * [`QuantMode::BitExact`] — updates run in the integer datapath too:
+//!   the bit-exact image of on-chip *training* hardware. At narrow
+//!   widths the per-step update underflows the format's resolution and
+//!   learning stalls — faithful, but a real limitation of deploying
+//!   training at low precision.
+//! * [`QuantMode::Ste`] — straight-through-estimator QAT: the forward
+//!   path (projections, nonlinearity, every activation) still runs the
+//!   quantized datapath, so the trained model *is* the deployed
+//!   fixed-point model; the update is computed from those quantized
+//!   forward values in f32 and applied to f32 shadow weights, which are
+//!   requantized into the datapath after every step. The identity
+//!   gradient is passed "straight through" the quantizer — updates
+//!   smaller than one LSB accumulate in the shadow instead of rounding
+//!   to zero. This is how the paper's "no accuracy degradation at
+//!   reduced precision" claim is actually achieved at deployment
+//!   widths.
 
 pub mod kernels;
 pub mod mat;
@@ -251,6 +283,86 @@ impl FxpSpec {
         }
         self.fit(self.rescale_wide(acc, self.format.frac_bits as u32))
     }
+
+    /// Convert a raw word of another spec's format into this one — the
+    /// inter-stage format boundary of a mixed-precision datapath (a
+    /// pure shift plus this spec's rounding/overflow; a no-op when the
+    /// formats match, so uniform plans are bit-identical to the
+    /// single-format datapath).
+    #[inline]
+    pub fn requantize_from(&self, raw: i32, from: &FxpSpec) -> i32 {
+        if self.format == from.format {
+            return raw;
+        }
+        let shift = self.format.frac_bits as i32 - from.format.frac_bits as i32;
+        if shift >= 0 {
+            self.fit((raw as i64) << shift)
+        } else {
+            self.fit(self.rescale(raw as i64, (-shift) as u32))
+        }
+    }
+
+    /// [`FxpSpec::requantize_from`] over a slice.
+    pub fn requantize_vec_from(&self, raw: &[i32], from: &FxpSpec) -> Vec<i32> {
+        raw.iter().map(|&r| self.requantize_from(r, from)).collect()
+    }
+
+    /// Parse `"qI.F"` with optional policy suffixes: `:wrap` / `:sat`
+    /// (overflow) and `:trunc` / `:nearest` (rounding), in any order —
+    /// e.g. `"q4.12"`, `"q1.15:wrap"`, `"q4.12:wrap:trunc"`. Defaults
+    /// are the datapath's saturate + round-to-nearest.
+    pub fn parse(s: &str) -> Result<Self> {
+        let t = s.trim().to_ascii_lowercase();
+        let mut parts = t.split(':');
+        let fmt = parts.next().unwrap_or("");
+        let Some(rest) = fmt.strip_prefix('q') else {
+            bail!("unknown format '{s}' (expected qI.F, e.g. q4.12)");
+        };
+        let Some((i, f)) = rest.split_once('.') else {
+            bail!("malformed Q format '{s}' (expected qI.F, e.g. q4.12)");
+        };
+        let int_bits: u64 = i
+            .parse()
+            .map_err(|_| anyhow::anyhow!("malformed integer bits in format '{s}'"))?;
+        let frac_bits: u64 = f
+            .parse()
+            .map_err(|_| anyhow::anyhow!("malformed fraction bits in format '{s}'"))?;
+        // u64 math: absurd inputs must reach this ensure, not wrap into
+        // a plausible width and panic in QFormat::new.
+        anyhow::ensure!(
+            int_bits >= 1
+                && int_bits.saturating_add(frac_bits) >= 2
+                && int_bits.saturating_add(frac_bits) <= 32,
+            "format '{s}': need 1 <= I and 2 <= I+F <= 32"
+        );
+        let mut spec = FxpSpec::q(int_bits as u8, frac_bits as u8);
+        for tok in parts {
+            match tok {
+                "wrap" => spec.overflow = Overflow::Wrap,
+                "sat" | "saturate" => spec.overflow = Overflow::Saturate,
+                "trunc" | "truncate" => spec.rounding = Rounding::Truncate,
+                "nearest" | "round" => spec.rounding = Rounding::Nearest,
+                other => bail!(
+                    "unknown policy '{other}' in '{s}' (wrap|sat|trunc|nearest)"
+                ),
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Canonical label: `"q4.12"`, with non-default policies suffixed
+    /// in parse order (`"q1.15:wrap:trunc"`). Round-trips through
+    /// [`FxpSpec::parse`].
+    pub fn label(&self) -> String {
+        let mut s = format!("q{}.{}", self.format.int_bits, self.format.frac_bits);
+        if self.overflow == Overflow::Wrap {
+            s.push_str(":wrap");
+        }
+        if self.rounding == Rounding::Truncate {
+            s.push_str(":trunc");
+        }
+        s
+    }
 }
 
 /// A constant baked into the datapath (learning rate, projection scale,
@@ -295,54 +407,192 @@ impl FxpConst {
     }
 }
 
+/// How a fixed-point pipeline trains.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuantMode {
+    /// Every update computed in the integer datapath — the bit-exact
+    /// image of the deployed on-chip *training* hardware.
+    BitExact,
+    /// Quantization-aware training with a straight-through estimator:
+    /// the forward path runs the quantized datapath (exactly what the
+    /// deployed inference hardware computes), but updates are applied
+    /// to f32 shadow weights that are requantized after every step —
+    /// the standard QAT recipe for training models that *deploy* at
+    /// narrow widths without the update underflow of bit-exact
+    /// training.
+    Ste,
+}
+
+impl QuantMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "bit-exact" | "bitexact" | "exact" => Ok(QuantMode::BitExact),
+            "ste" | "qat" => Ok(QuantMode::Ste),
+            other => bail!("unknown quant mode '{other}' (bit-exact|ste)"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            QuantMode::BitExact => "bit-exact",
+            QuantMode::Ste => "ste",
+        }
+    }
+}
+
+/// Per-stage arithmetic of a fixed-point pipeline — the mixed-precision
+/// axis. Real datapaths are not uniform: the RP accumulator wants
+/// headroom (wide integer part), the whitener mid width, the rotation
+/// can run narrow (its inputs are σ-normalised). Stage boundaries
+/// requantize raw words ([`FxpSpec::requantize_from`]); a uniform plan
+/// makes every boundary a no-op and is bit-identical to the PR-1
+/// single-format datapath.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrecisionPlan {
+    /// RP front-end accumulator format.
+    pub rp: FxpSpec,
+    /// GHA whitening stage format.
+    pub whiten: FxpSpec,
+    /// EASI rotation stage format.
+    pub rot: FxpSpec,
+    /// Training mode (bit-exact integer updates vs STE QAT).
+    pub quant: QuantMode,
+}
+
+impl PrecisionPlan {
+    /// The same format everywhere, bit-exact — what a plain `"q4.12"`
+    /// precision string means.
+    pub fn uniform(spec: FxpSpec) -> Self {
+        Self {
+            rp: spec,
+            whiten: spec,
+            rot: spec,
+            quant: QuantMode::BitExact,
+        }
+    }
+
+    /// Whether all three stages share one arithmetic spec.
+    pub fn is_uniform(&self) -> bool {
+        self.rp == self.whiten && self.whiten == self.rot
+    }
+
+    /// The widest stage width in bits (storage/reporting upper bound).
+    pub fn widest_width(&self) -> u8 {
+        self.rp
+            .format
+            .width()
+            .max(self.whiten.format.width())
+            .max(self.rot.format.width())
+    }
+
+    /// Entry prescale for a pipeline with this plan: the most
+    /// conservative of the formats the raw sample flows through before
+    /// the whitener renormalises (the RP accumulator when an RP front
+    /// end exists, and the trained stage's input format). Exact powers
+    /// of two, invisible to accuracy — see [`input_prescale`].
+    pub fn entry_prescale(&self, uses_rp: bool, stage_spec: &FxpSpec) -> f32 {
+        let stage_ps = input_prescale(stage_spec);
+        if uses_rp {
+            stage_ps.min(input_prescale(&self.rp))
+        } else {
+            stage_ps
+        }
+    }
+}
+
 /// The precision a pipeline computes in — threaded through
 /// `PipelineSpec`, `ExperimentConfig` and the CLI (`--precision`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Precision {
     /// IEEE single precision (the reference datapath).
     F32,
-    /// Bit-accurate fixed point.
-    Fixed(FxpSpec),
+    /// Bit-accurate fixed point, per-stage formats + training mode.
+    Fixed(PrecisionPlan),
 }
 
 impl Precision {
-    /// Parse `"f32"` / `"fp32"` or a Q-format like `"q1.15"`, `"q4.12"`
-    /// (saturating, round-to-nearest — the datapath defaults; wrapping
-    /// and truncation are API-only knobs).
+    /// Parse a precision string:
+    ///
+    /// * `"f32"` / `"fp32"` — the reference datapath;
+    /// * `"q4.12"` — uniform fixed point (optionally with policy
+    ///   suffixes, `"q1.15:wrap:trunc"` — see [`FxpSpec::parse`]);
+    /// * `"rp=q8.16,whiten=q4.12,rot=q1.15"` — per-stage mixed
+    ///   precision. Keys: `rp`, `whiten`, `rot`, `all` (sets every
+    ///   stage not given explicitly), `qat=ste|bit-exact`. Stages left
+    ///   unset default to the widest spec given (headroom-safe). A bare
+    ///   `qI.F` token inside a comma list means `all=qI.F`, so
+    ///   `"q4.12,qat=ste"` selects uniform STE-trained Q4.12.
     pub fn parse(s: &str) -> Result<Self> {
         let t = s.trim().to_ascii_lowercase();
         if t == "f32" || t == "fp32" || t == "float" {
             return Ok(Precision::F32);
         }
-        let Some(rest) = t.strip_prefix('q') else {
-            bail!("unknown precision '{s}' (f32 | qI.F, e.g. q1.15)");
+        if !t.contains(',') && !t.contains('=') {
+            // Plain uniform format.
+            let spec = FxpSpec::parse(&t)
+                .map_err(|e| anyhow::anyhow!("precision '{s}': {e}"))?;
+            return Ok(Precision::Fixed(PrecisionPlan::uniform(spec)));
+        }
+        let (mut rp, mut whiten, mut rot, mut all) = (None, None, None, None);
+        let mut quant = QuantMode::BitExact;
+        for item in t.split(',') {
+            let item = item.trim();
+            if item.is_empty() {
+                continue;
+            }
+            match item.split_once('=') {
+                Some(("rp", v)) => rp = Some(FxpSpec::parse(v)?),
+                Some(("whiten", v)) => whiten = Some(FxpSpec::parse(v)?),
+                Some(("rot", v)) => rot = Some(FxpSpec::parse(v)?),
+                Some(("all", v)) => all = Some(FxpSpec::parse(v)?),
+                Some(("qat", v)) => quant = QuantMode::parse(v)?,
+                Some((k, _)) => {
+                    bail!("unknown precision key '{k}' in '{s}' (rp|whiten|rot|all|qat)")
+                }
+                // Bare qI.F token in a list: shorthand for all=.
+                None => all = Some(FxpSpec::parse(item)?),
+            }
+        }
+        // Unset stages inherit `all`, then the widest explicit spec.
+        let fallback = all.or_else(|| {
+            [rp, whiten, rot]
+                .into_iter()
+                .flatten()
+                .max_by_key(|sp: &FxpSpec| sp.format.width())
+        });
+        let Some(fallback) = fallback else {
+            bail!("precision '{s}' names no Q format (rp=|whiten=|rot=|all=qI.F)");
         };
-        let Some((i, f)) = rest.split_once('.') else {
-            bail!("malformed Q format '{s}' (expected qI.F, e.g. q4.12)");
-        };
-        let int_bits: u64 = i.parse().map_err(|_| {
-            anyhow::anyhow!("malformed integer bits in precision '{s}'")
-        })?;
-        let frac_bits: u64 = f.parse().map_err(|_| {
-            anyhow::anyhow!("malformed fraction bits in precision '{s}'")
-        })?;
-        // u64 math: absurd inputs must reach this ensure, not wrap into
-        // a plausible width and panic in QFormat::new.
-        anyhow::ensure!(
-            int_bits >= 1
-                && int_bits.saturating_add(frac_bits) >= 2
-                && int_bits.saturating_add(frac_bits) <= 32,
-            "precision '{s}': need 1 <= I and 2 <= I+F <= 32"
-        );
-        Ok(Precision::Fixed(FxpSpec::q(int_bits as u8, frac_bits as u8)))
+        Ok(Precision::Fixed(PrecisionPlan {
+            rp: rp.unwrap_or(fallback),
+            whiten: whiten.unwrap_or(fallback),
+            rot: rot.unwrap_or(fallback),
+            quant,
+        }))
     }
 
-    /// Canonical label (`"f32"`, `"q4.12"`).
+    /// Canonical label: `"f32"`, `"q4.12"` for uniform bit-exact plans,
+    /// `"q4.12,qat=ste"` for uniform STE, and the full
+    /// `"rp=…,whiten=…,rot=…[,qat=ste]"` form for mixed plans.
+    /// Round-trips through [`Precision::parse`].
     pub fn label(&self) -> String {
         match self {
             Precision::F32 => "f32".to_string(),
-            Precision::Fixed(s) => {
-                format!("q{}.{}", s.format.int_bits, s.format.frac_bits)
+            Precision::Fixed(p) => {
+                let mut s = if p.is_uniform() {
+                    p.whiten.label()
+                } else {
+                    format!(
+                        "rp={},whiten={},rot={}",
+                        p.rp.label(),
+                        p.whiten.label(),
+                        p.rot.label()
+                    )
+                };
+                if p.quant == QuantMode::Ste {
+                    s.push_str(",qat=ste");
+                }
+                s
             }
         }
     }
@@ -351,19 +601,30 @@ impl Precision {
         matches!(self, Precision::Fixed(_))
     }
 
-    /// The fixed-point spec, if any.
-    pub fn spec(&self) -> Option<FxpSpec> {
+    /// The precision plan, if fixed.
+    pub fn plan(&self) -> Option<PrecisionPlan> {
         match self {
             Precision::F32 => None,
-            Precision::Fixed(s) => Some(*s),
+            Precision::Fixed(p) => Some(*p),
         }
     }
 
-    /// Operand width in bits (32 for f32).
+    /// The single fixed-point spec of a *uniform* plan (None for f32
+    /// and for mixed plans — per-stage consumers read [`Self::plan`]).
+    pub fn spec(&self) -> Option<FxpSpec> {
+        match self {
+            Precision::Fixed(p) if p.is_uniform() => Some(p.whiten),
+            _ => None,
+        }
+    }
+
+    /// Operand width in bits: 32 for f32, the *widest* stage width for
+    /// fixed plans (mixed-plan hardware is priced per stage by
+    /// `hwmodel`; this is the reporting/storage upper bound).
     pub fn width_bits(&self) -> u8 {
         match self {
             Precision::F32 => 32,
-            Precision::Fixed(s) => s.format.width(),
+            Precision::Fixed(p) => p.widest_width(),
         }
     }
 }
@@ -520,6 +781,132 @@ mod tests {
         assert!(Precision::parse("q99999999999999999999.1").is_err());
         assert!(Precision::parse("int8").is_err());
         assert!(Precision::parse("q4").is_err());
+    }
+
+    #[test]
+    fn spec_parse_policies() {
+        let p = FxpSpec::parse("q4.12").unwrap();
+        assert_eq!(p, FxpSpec::q(4, 12));
+        let w = FxpSpec::parse("q1.15:wrap").unwrap();
+        assert_eq!(w.overflow, Overflow::Wrap);
+        assert_eq!(w.rounding, Rounding::Nearest);
+        let t = FxpSpec::parse("q4.12:trunc").unwrap();
+        assert_eq!(t.rounding, Rounding::Truncate);
+        assert_eq!(t.overflow, Overflow::Saturate);
+        let both = FxpSpec::parse("q8.16:wrap:trunc").unwrap();
+        assert_eq!(both.overflow, Overflow::Wrap);
+        assert_eq!(both.rounding, Rounding::Truncate);
+        // Order-free, and explicit defaults accepted.
+        assert_eq!(FxpSpec::parse("q8.16:trunc:wrap").unwrap(), both);
+        assert_eq!(FxpSpec::parse("q4.12:sat:nearest").unwrap(), FxpSpec::q(4, 12));
+        assert!(FxpSpec::parse("q4.12:fancy").is_err());
+        // Labels round-trip, policies included.
+        for s in ["q4.12", "q1.15:wrap", "q4.12:trunc", "q8.16:wrap:trunc"] {
+            let spec = FxpSpec::parse(s).unwrap();
+            assert_eq!(spec.label(), s);
+            assert_eq!(FxpSpec::parse(&spec.label()).unwrap(), spec);
+        }
+    }
+
+    #[test]
+    fn precision_plan_parse_and_roundtrip() {
+        // Mixed plan, all stages explicit.
+        let p = Precision::parse("rp=q8.16,whiten=q4.12,rot=q1.15").unwrap();
+        let plan = p.plan().unwrap();
+        assert_eq!(plan.rp, FxpSpec::q(8, 16));
+        assert_eq!(plan.whiten, FxpSpec::q(4, 12));
+        assert_eq!(plan.rot, FxpSpec::q(1, 15));
+        assert_eq!(plan.quant, QuantMode::BitExact);
+        assert!(!plan.is_uniform());
+        assert_eq!(p.width_bits(), 24);
+        assert_eq!(p.label(), "rp=q8.16,whiten=q4.12,rot=q1.15");
+        assert_eq!(Precision::parse(&p.label()).unwrap(), p);
+
+        // STE flag, uniform shorthand.
+        let u = Precision::parse("q4.12,qat=ste").unwrap();
+        let uplan = u.plan().unwrap();
+        assert!(uplan.is_uniform());
+        assert_eq!(uplan.quant, QuantMode::Ste);
+        assert_eq!(u.label(), "q4.12,qat=ste");
+        assert_eq!(Precision::parse(&u.label()).unwrap(), u);
+
+        // Plain uniform strings still mean what they did in PR 1.
+        let plain = Precision::parse("q4.12").unwrap();
+        assert_eq!(plain.plan().unwrap(), PrecisionPlan::uniform(FxpSpec::q(4, 12)));
+        assert_eq!(plain.spec(), Some(FxpSpec::q(4, 12)));
+        assert_eq!(plain.label(), "q4.12");
+
+        // Unset stages default to the widest explicit spec.
+        let partial = Precision::parse("rp=q8.16,rot=q1.15").unwrap();
+        let pp = partial.plan().unwrap();
+        assert_eq!(pp.whiten, FxpSpec::q(8, 16));
+        // `all=` fills the gaps instead when present.
+        let alled = Precision::parse("all=q4.12,rot=q1.15,qat=ste").unwrap();
+        let ap = alled.plan().unwrap();
+        assert_eq!(ap.rp, FxpSpec::q(4, 12));
+        assert_eq!(ap.whiten, FxpSpec::q(4, 12));
+        assert_eq!(ap.rot, FxpSpec::q(1, 15));
+        assert_eq!(ap.quant, QuantMode::Ste);
+        // Mixed plans have no single uniform spec.
+        assert_eq!(partial.spec(), None);
+
+        // Per-stage policy suffixes flow through the plan syntax (the
+        // ROADMAP's wrap/trunc exposure).
+        let pol = Precision::parse("rp=q8.16,whiten=q4.12:trunc,rot=q1.15:wrap").unwrap();
+        let pl = pol.plan().unwrap();
+        assert_eq!(pl.whiten.rounding, Rounding::Truncate);
+        assert_eq!(pl.rot.overflow, Overflow::Wrap);
+        assert_eq!(Precision::parse(&pol.label()).unwrap(), pol);
+
+        // Errors: unknown keys, empty plans, bad modes.
+        assert!(Precision::parse("gha=q4.12").is_err());
+        assert!(Precision::parse("qat=ste").is_err());
+        assert!(Precision::parse("q4.12,qat=sometimes").is_err());
+    }
+
+    #[test]
+    fn requantize_between_formats() {
+        let wide = FxpSpec::q(8, 16);
+        let narrow = FxpSpec::q(4, 12);
+        // Same format: identity on raw words.
+        assert_eq!(wide.requantize_from(12345, &wide), 12345);
+        // Wide -> narrow: shift right with rounding, value preserved.
+        let v = 1.5f32;
+        let raw_wide = wide.quantize(v);
+        let raw_narrow = narrow.requantize_from(raw_wide, &wide);
+        assert_eq!(narrow.dequantize(raw_narrow), v);
+        // Narrow -> wide: shift left, exact.
+        let back = wide.requantize_from(raw_narrow, &narrow);
+        assert_eq!(wide.dequantize(back), v);
+        // Out-of-range values saturate to the destination format.
+        let big = wide.quantize(100.0);
+        let sat = narrow.requantize_from(big, &wide);
+        assert_eq!(sat, narrow.format.max_raw());
+        // Rounding policy of the destination applies.
+        let mut trunc = narrow;
+        trunc.rounding = Rounding::Truncate;
+        let tie = wide.quantize(narrow.format.resolution() * 0.5); // half a narrow LSB
+        assert_eq!(narrow.requantize_from(tie, &wide), 1); // nearest: up
+        assert_eq!(trunc.requantize_from(tie, &wide), 0); // trunc: down
+    }
+
+    #[test]
+    fn plan_entry_prescale() {
+        let wide = FxpSpec::q(8, 16);
+        let narrow = FxpSpec::q(1, 15);
+        let plan = PrecisionPlan {
+            rp: narrow,
+            whiten: wide,
+            rot: wide,
+            quant: QuantMode::BitExact,
+        };
+        // The narrow RP accumulator forces the conservative prescale.
+        assert_eq!(plan.entry_prescale(true, &plan.whiten), 0.125);
+        // Without RP only the stage format matters.
+        assert_eq!(plan.entry_prescale(false, &plan.whiten), 1.0);
+        // Uniform wide plan: no prescale at all.
+        let u = PrecisionPlan::uniform(wide);
+        assert_eq!(u.entry_prescale(true, &u.whiten), 1.0);
     }
 
     #[test]

@@ -179,12 +179,16 @@ impl GhaWhitener {
         Mat::from_fn(n, m, |i, j| self.w.get(i, j) / self.var[i].max(1e-9).sqrt())
     }
 
-    /// Restore state (checkpoint / PJRT round-trip).
-    pub fn set_state(&mut self, w: Mat, var: Vec<f32>) {
+    /// Restore state (checkpoint / PJRT round-trip). `steps` is part of
+    /// the state: schedules keyed on the step count (the composed
+    /// unit's rotation warm-up, coefficient-refresh cadences) must
+    /// resume where the checkpoint left off, not restart from zero.
+    pub fn set_state(&mut self, w: Mat, var: Vec<f32>, steps: u64) {
         assert_eq!(w.shape(), self.w.shape(), "gha W shape");
         assert_eq!(var.len(), self.var.len(), "gha var length");
         self.w = w;
         self.var = var;
+        self.steps = steps;
     }
 
     /// Mean absolute row-orthonormality error of `W` (→ 0 at
@@ -321,6 +325,34 @@ mod tests {
             proj / dot(w0, w0) > 0.9,
             "GHA failed to escape the noise subspace"
         );
+    }
+
+    #[test]
+    fn set_state_round_trips_steps() {
+        // Regression: set_state used to restore W and λ̂ but not the
+        // step count, so a restored whitener reported a stale steps()
+        // (and step-keyed schedules restarted from zero).
+        let x = structured(1000, 76);
+        let mut gha = GhaWhitener::new(GhaConfig::default_for(6, 2));
+        gha.step_rows(&x);
+        assert_eq!(gha.steps(), 1000);
+        let (w, var, steps) = (
+            gha.subspace().clone(),
+            gha.variances().to_vec(),
+            gha.steps(),
+        );
+        let mut restored = GhaWhitener::new(GhaConfig::default_for(6, 2));
+        assert_eq!(restored.steps(), 0);
+        restored.set_state(w.clone(), var.clone(), steps);
+        assert_eq!(restored.steps(), 1000, "steps must survive the round trip");
+        assert_eq!(restored.subspace().as_slice(), w.as_slice());
+        assert_eq!(restored.variances(), &var[..]);
+        // The restored whitener continues identically to the original.
+        let probe = structured(50, 77);
+        gha.step_rows(&probe);
+        restored.step_rows(&probe);
+        assert_eq!(gha.steps(), restored.steps());
+        assert_eq!(gha.subspace().as_slice(), restored.subspace().as_slice());
     }
 
     #[test]

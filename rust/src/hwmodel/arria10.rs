@@ -58,6 +58,22 @@ pub struct ResourceReport {
     pub alm_utilisation: f64,
 }
 
+impl ResourceReport {
+    /// Sum two module reports (cascaded datapaths), recomputing
+    /// utilisation against the given capacity.
+    pub fn merge(&self, other: &ResourceReport, capacity: &DeviceCapacity) -> ResourceReport {
+        let dsps = self.dsps + other.dsps;
+        let alms = self.alms + other.alms;
+        ResourceReport {
+            dsps,
+            alms,
+            register_bits: self.register_bits + other.register_bits,
+            dsp_utilisation: dsps as f64 / capacity.dsps as f64,
+            alm_utilisation: alms as f64 / capacity.alms as f64,
+        }
+    }
+}
+
 /// The calibrated cost model.
 ///
 /// The fp32 constants are Table-II-calibrated (module docs). The
@@ -124,6 +140,56 @@ impl Arria10Model {
     /// Cost raw operation counts at fp32 (the paper's Table II mapping).
     pub fn cost_ops(&self, ops: &OpCounts) -> ResourceReport {
         self.cost_fmt(ops, NumericFormat::Fp32)
+    }
+
+    /// Cost the RP → trained-stage pipeline under a [`Precision`] —
+    /// the precision axis of the Pareto sweep. f32 and *uniform* fixed
+    /// plans delegate to the single-format path (bit-identical to the
+    /// PR-1 pricing); mixed plans price each precision domain at its
+    /// own width: the RP module at `plan.rp`, the trained stage split
+    /// per [`crate::hwmodel::ops::easi_split_ops`] — its projection
+    /// matvec + state at `plan.whiten`, the HOS/update machinery at
+    /// `plan.rot` — and sum the module reports.
+    pub fn cost_precision(
+        &self,
+        m: usize,
+        p: Option<usize>,
+        n: usize,
+        precision: &crate::fxp::Precision,
+    ) -> ResourceReport {
+        use crate::fxp::Precision;
+        let base = match p {
+            Some(p) => HwConfig::rp_easi(m, p, n),
+            None => HwConfig::easi(m, n),
+        };
+        let plan = match precision {
+            Precision::F32 => return self.cost(&base),
+            Precision::Fixed(plan) if plan.is_uniform() => {
+                return self.cost(&base.with_format(NumericFormat::Fixed {
+                    width_bits: plan.whiten.format.width(),
+                }));
+            }
+            Precision::Fixed(plan) => plan,
+        };
+        let stage_in = base.easi_input();
+        let (whiten_ops, rot_ops) = crate::hwmodel::ops::easi_split_ops(stage_in, n);
+        let at = |w: u8| NumericFormat::Fixed { width_bits: w };
+        let mut report = self
+            .cost_fmt(&whiten_ops, at(plan.whiten.format.width()))
+            .merge(
+                &self.cost_fmt(&rot_ops, at(plan.rot.format.width())),
+                &self.capacity,
+            );
+        if let Some(p) = base.intermediate_dim {
+            report = report.merge(
+                &self.cost_fmt(
+                    &crate::hwmodel::ops::rp_ops(m, p),
+                    at(plan.rp.format.width()),
+                ),
+                &self.capacity,
+            );
+        }
+        report
     }
 
     /// Cost raw operation counts at a given operand format.
@@ -276,6 +342,46 @@ mod tests {
         assert!(fx.dsps < fp.dsps && fx.alms < fp.alms);
         // register bits exactly halve: same word count, half the width.
         assert_eq!(fx.register_bits * 2, fp.register_bits);
+    }
+
+    #[test]
+    fn cost_precision_uniform_matches_single_format_path() {
+        use crate::fxp::Precision;
+        let model = Arria10Model::paper_calibrated();
+        for s in ["f32", "q4.12", "q8.16"] {
+            let prec = Precision::parse(s).unwrap();
+            let via_plan = model.cost_precision(32, Some(16), 8, &prec);
+            let via_cfg = model.cost(
+                &crate::hwmodel::HwConfig::rp_easi(32, 16, 8)
+                    .with_format(NumericFormat::from_precision(&prec)),
+            );
+            assert_eq!(via_plan.dsps, via_cfg.dsps, "{s} DSPs");
+            assert_eq!(via_plan.alms, via_cfg.alms, "{s} ALMs");
+            assert_eq!(via_plan.register_bits, via_cfg.register_bits, "{s} regs");
+        }
+    }
+
+    #[test]
+    fn mixed_plan_undercuts_its_widest_uniform_format() {
+        use crate::fxp::Precision;
+        let model = Arria10Model::paper_calibrated();
+        // Wide RP accumulator + 16-bit trained stage vs uniform 24-bit.
+        let mixed = Precision::parse("rp=q8.16,whiten=q4.12,rot=q4.12").unwrap();
+        let uniform = Precision::parse("q8.16").unwrap();
+        let mx = model.cost_precision(32, Some(16), 8, &mixed);
+        let un = model.cost_precision(32, Some(16), 8, &uniform);
+        // The trained stage holds every multiplier: 16-bit packs two
+        // per DSP where 24-bit needs a whole one.
+        assert!(mx.dsps < un.dsps, "mixed {} vs uniform {}", mx.dsps, un.dsps);
+        assert!(mx.alms < un.alms);
+        assert!(mx.register_bits < un.register_bits);
+        // And narrowing only the rotation still saves versus pricing
+        // everything at the whitener's width.
+        let rot_narrow = Precision::parse("rp=q4.12,whiten=q4.12,rot=q1.7").unwrap();
+        let rn = model.cost_precision(32, Some(16), 8, &rot_narrow);
+        let at16 = model.cost_precision(32, Some(16), 8, &Precision::parse("q4.12").unwrap());
+        assert!(rn.alms < at16.alms);
+        assert!(rn.register_bits < at16.register_bits);
     }
 
     #[test]

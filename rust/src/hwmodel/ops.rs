@@ -39,12 +39,15 @@ impl NumericFormat {
         }
     }
 
-    /// The format a pipeline [`crate::fxp::Precision`] implies.
+    /// The format a pipeline [`crate::fxp::Precision`] implies. For a
+    /// mixed-precision plan this is the *widest* stage width (a single
+    /// conservative format); per-stage pricing is
+    /// [`super::Arria10Model::cost_precision`].
     pub fn from_precision(p: &crate::fxp::Precision) -> Self {
         match p {
             crate::fxp::Precision::F32 => NumericFormat::Fp32,
-            crate::fxp::Precision::Fixed(spec) => NumericFormat::Fixed {
-                width_bits: spec.format.width(),
+            crate::fxp::Precision::Fixed(plan) => NumericFormat::Fixed {
+                width_bits: plan.widest_width(),
             },
         }
     }
@@ -136,6 +139,37 @@ pub fn easi_ops(m: usize, n: usize) -> OpCounts {
     }
 }
 
+/// The EASI datapath inventory split into its two precision domains —
+/// the basis of mixed-precision pricing:
+///
+/// * **whiten share** — stage 1 (`y = Bx`, the projection/whitening
+///   matvec) plus the `B` register file and the `x` input taps;
+/// * **rotation share** — stages 2–5 (the HOS nonlinearity and the
+///   relative-gradient update machinery) plus the `F`, `F·B`, `y`, `g`
+///   buffers.
+///
+/// The two shares sum exactly to [`easi_ops`], so pricing both at one
+/// width reproduces the uniform inventory.
+pub fn easi_split_ops(m: usize, n: usize) -> (OpCounts, OpCounts) {
+    assert!(m >= n && n >= 1, "need m >= n >= 1");
+    let (m64, n64) = (m as u64, n as u64);
+    let (s1_mults, s1_adds) = easi_stage_ops(m, n, 1);
+    let whiten = OpCounts {
+        mults: s1_mults,
+        adds: s1_adds,
+        soft_addsubs: 0,
+        storage_words: n64 * m64 + m64, // B register file + x input regs
+    };
+    let total = easi_ops(m, n);
+    let rot = OpCounts {
+        mults: total.mults - whiten.mults,
+        adds: total.adds - whiten.adds,
+        soft_addsubs: 0,
+        storage_words: total.storage_words - whiten.storage_words,
+    };
+    (whiten, rot)
+}
+
 /// Random-projection module inventory, `m → p`, Fox et al. FPT'16
 /// style: a fully-spatial conditional add/subtract network — `p` output
 /// accumulation trees, each fed by all `m` inputs gated by the ternary
@@ -184,6 +218,18 @@ mod tests {
         let double_n = easi_ops(64, 16).mults as f64;
         assert!((double_m / base - 2.0).abs() < 0.2);
         assert!((double_n / base - 4.0).abs() < 0.6);
+    }
+
+    #[test]
+    fn easi_split_sums_to_total() {
+        for (m, n) in [(32, 8), (16, 8), (64, 16), (8, 8)] {
+            let (w, r) = easi_split_ops(m, n);
+            let total = easi_ops(m, n);
+            assert_eq!(w.merge(&r), total, "split must partition m={m} n={n}");
+            // Stage 4 (the O(m·n²) hot spot) belongs to the rotation
+            // share; the whiten share is the O(m·n) matvec.
+            assert!(r.mults > w.mults);
+        }
     }
 
     #[test]

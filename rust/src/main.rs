@@ -8,6 +8,8 @@
 //!                plus bitwidth-aware fixed-point pricing
 //!   fig1 <set>   regenerate a Fig. 1 accuracy-vs-dimensions series
 //!   fxp-sweep    accuracy-vs-bitwidth sweep (quantized pipelines)
+//!   pareto       accuracy/cost Pareto frontier over precision plans
+//!                (mixed precision × bit-exact/STE training)
 //!   artifacts    list the AOT artifacts the runtime can execute
 //!   timing       pipeline timing model (frequency / latency)
 //!
@@ -15,9 +17,12 @@
 //!   dimred train --dataset waveform --mode rp-easi --backend pjrt \
 //!       --intermediate-dim 16 --output-dim 8
 //!   dimred train --mode rp-easi --precision q4.12
+//!   dimred train --precision rp=q8.16,whiten=q4.12,rot=q1.15,qat=ste
+//!   dimred train --precision q1.15:wrap:trunc
 //!   dimred table2 --precision q1.15
 //!   dimred fig1 mnist --points 4
 //!   dimred fxp-sweep waveform --json sweep.json
+//!   dimred pareto waveform --json pareto.json
 
 use anyhow::{bail, Context, Result};
 use dimred::config::{Backend, ExperimentConfig};
@@ -52,6 +57,7 @@ fn run() -> Result<()> {
         "table2" => cmd_table2(&args),
         "fig1" => cmd_fig1(&args),
         "fxp-sweep" => cmd_fxp_sweep(&args),
+        "pareto" => cmd_pareto(&args),
         "artifacts" => cmd_artifacts(&args),
         "timing" => cmd_timing(&args),
         "help" | "--help" => {
@@ -77,6 +83,11 @@ COMMANDS:
   fig1 <ds>   regenerate Fig. 1 (accuracy vs output dims; ds = mnist|har|ads)
   fxp-sweep <ds>  accuracy-vs-bitwidth sweep (ds = waveform|har);
               --formats q4.4,q4.8,... --epochs E --json FILE
+  pareto <ds> accuracy/cost Pareto frontier over precision plans
+              (ds = waveform|har); --plans \"PLAN;PLAN;...\" --epochs E
+              --seed S --json FILE. Plans are precision strings
+              (`;`-separated — the plan syntax itself uses commas);
+              default grid mixes uniform/mixed and bit-exact/STE.
   artifacts   list AOT executables from the manifest
   timing      clock/latency model for EASI vs RP+EASI
 
@@ -84,9 +95,15 @@ TRAIN OPTIONS:
   --dataset waveform|mnist|har|ads   (default waveform)
   --mode easi|pca-whiten|rp|rp-easi  (default rp-easi)
   --backend native|pjrt              (default native)
-  --precision f32|qI.F               (default f32; e.g. q1.15, q4.12 —
-                                      bit-accurate fixed-point datapath,
-                                      native backend only)
+  --precision f32|qI.F|PLAN          (default f32. qI.F takes optional
+                                      policy suffixes :wrap / :trunc
+                                      (default saturate+nearest), e.g.
+                                      q1.15:wrap:trunc. PLAN is
+                                      per-stage mixed precision + QAT:
+                                      rp=q8.16,whiten=q4.12,rot=q1.15
+                                      [,qat=ste]. Fixed point runs the
+                                      bit-accurate datapath, native
+                                      backend only)
   --input-dim M --intermediate-dim P --output-dim N
   --mu F --epochs E --batch B --seed S --queue-depth Q
   --artifacts DIR                    (default artifacts/)
@@ -299,6 +316,40 @@ fn cmd_fxp_sweep(args: &Args) -> Result<()> {
     );
     if let Some(path) = args.opt_str("json") {
         let json = dimred::experiments::fxp_sweep::to_json(which, &points);
+        std::fs::write(path, json.to_string_pretty())
+            .with_context(|| format!("writing {path}"))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_pareto(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .unwrap_or("waveform");
+    let plans: Vec<Precision> = match args.opt_str("plans") {
+        // `;`-separated precision strings — the plan syntax itself uses
+        // commas (rp=q8.16,whiten=q4.12,...).
+        Some(list) => {
+            let parsed = list
+                .split(';')
+                .filter(|s| !s.trim().is_empty())
+                .map(Precision::parse)
+                .collect::<Result<Vec<_>>>()?;
+            anyhow::ensure!(!parsed.is_empty(), "--plans named no precision plans");
+            parsed
+        }
+        None => dimred::experiments::pareto::default_plans(),
+    };
+    let (_, _, _, default_epochs) = dimred::experiments::fxp_sweep::dims_for(which)?;
+    let epochs = args.usize_or("epochs", default_epochs)?;
+    let seed = args.u64_or("seed", 2018)?;
+    let points = dimred::experiments::pareto::run(which, &plans, epochs, seed)?;
+    println!("{}", dimred::experiments::pareto::render(which, &points));
+    if let Some(path) = args.opt_str("json") {
+        let json = dimred::experiments::pareto::to_json(which, &points);
         std::fs::write(path, json.to_string_pretty())
             .with_context(|| format!("writing {path}"))?;
         println!("wrote {path}");

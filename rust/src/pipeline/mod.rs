@@ -14,7 +14,7 @@ pub use unit::{DrUnit, DrUnitConfig};
 
 use crate::datasets::Dataset;
 use crate::easi::{EasiConfig, EasiMode, EasiTrainer};
-use crate::fxp::{self, FxpEasiRot, FxpRp, Precision};
+use crate::fxp::{self, FxpEasiRot, FxpRp, FxpSpec, Precision, PrecisionPlan};
 use crate::linalg::Mat;
 use crate::pca::dct::Dct1d;
 use crate::pca::BatchPca;
@@ -140,10 +140,22 @@ impl PipelineSpec {
     }
 }
 
+/// Entry/exit arithmetic of a fitted fixed-point pipeline — which
+/// format samples are quantized into, the power-of-two prescale applied
+/// first, the trained stage's input format (the RP→stage boundary
+/// requantizes), and the output format to dequantize from. For uniform
+/// plans all four specs coincide and every boundary is a no-op.
+#[derive(Debug, Clone, Copy)]
+struct FxpIo {
+    entry: FxpSpec,
+    prescale: f32,
+    stage_in: FxpSpec,
+    output: FxpSpec,
+}
+
 /// Prescale + quantize one sample into a fixed-point pipeline's input
 /// domain (the entry-point arithmetic shared by fit and transform).
-fn quantize_prescaled(fspec: &crate::fxp::FxpSpec, x: &[f32]) -> Vec<i32> {
-    let prescale = fxp::input_prescale(fspec);
+fn quantize_prescaled(fspec: &FxpSpec, prescale: f32, x: &[f32]) -> Vec<i32> {
     x.iter().map(|&v| fspec.quantize(v * prescale)).collect()
 }
 
@@ -153,6 +165,8 @@ pub struct DrPipeline {
     rp: Option<RandomProjection>,
     /// Quantized image of `rp` for fixed-precision pipelines.
     fxp_rp: Option<FxpRp>,
+    /// Boundary arithmetic for fixed-precision pipelines.
+    fxp_io: Option<FxpIo>,
     stage: FittedStage,
 }
 
@@ -178,8 +192,8 @@ impl DrPipeline {
     /// no streaming datapath to quantize.
     pub fn fit(spec: PipelineSpec, train_x: &Mat) -> Self {
         assert_eq!(train_x.cols_count(), spec.input_dim, "input dim mismatch");
-        if let Precision::Fixed(fspec) = spec.precision {
-            return Self::fit_fixed(spec, fspec, train_x);
+        if let Precision::Fixed(plan) = spec.precision {
+            return Self::fit_fixed(spec, plan, train_x);
         }
         let rp = spec.build_front_end();
         // Materialise the (possibly projected) training view for the
@@ -242,28 +256,44 @@ impl DrPipeline {
             spec,
             rp,
             fxp_rp: None,
+            fxp_io: None,
             stage,
         }
     }
 
-    /// Fixed-precision fit: quantized RP network feeding quantized
-    /// streaming kernels, trained on the quantized view of the data.
-    fn fit_fixed(spec: PipelineSpec, fspec: crate::fxp::FxpSpec, train_x: &Mat) -> Self {
+    /// Fixed-precision fit: quantized RP network (at the plan's RP
+    /// format) feeding quantized streaming kernels (whitener/rotation
+    /// at theirs), trained on the quantized view of the data. Stage
+    /// boundaries requantize; uniform plans reduce exactly to the
+    /// single-format datapath.
+    fn fit_fixed(spec: PipelineSpec, plan: PrecisionPlan, train_x: &Mat) -> Self {
         let rp = spec.build_front_end();
-        let fxp_rp = rp.as_ref().map(|p| FxpRp::from_rp(p, fspec));
+        let fxp_rp = rp.as_ref().map(|p| FxpRp::from_rp(p, plan.rp));
         let stage_in = spec.stage_input_dim();
-        // Quantized training view: prescale + quantize each sample and
-        // push it through the quantized RP network once.
+        // Per-stage boundary arithmetic. The trained stage's input
+        // format decides the σ machinery; the entry format is the RP
+        // accumulator when an RP front end exists.
+        let stage_in_spec = match spec.stage {
+            StageSpec::Easi { .. } => plan.rot,
+            StageSpec::Ica { .. } => plan.whiten,
+            _ => plan.rp,
+        };
+        let entry = if fxp_rp.is_some() { plan.rp } else { stage_in_spec };
+        let prescale = plan.entry_prescale(fxp_rp.is_some(), &stage_in_spec);
+        // Quantized training view: prescale + quantize each sample,
+        // push it through the quantized RP network once, and cross the
+        // RP→stage boundary.
         let staged_raw: Vec<Vec<i32>> = train_x
             .rows()
             .map(|row| {
-                let xq = quantize_prescaled(&fspec, row);
+                let xq = quantize_prescaled(&entry, prescale, row);
                 match &fxp_rp {
-                    Some(f) => f.apply_raw(&xq),
+                    Some(f) => stage_in_spec.requantize_vec_from(&f.apply_raw(&xq), &plan.rp),
                     None => xq,
                 }
             })
             .collect();
+        let mut output = stage_in_spec;
         let stage = match spec.stage {
             StageSpec::Easi { mode, mu, epochs } => {
                 assert!(
@@ -273,14 +303,21 @@ impl DrPipeline {
                 );
                 // Update terms scale as σ⁴ under the input prescale —
                 // fold the compensation into μ (exact power of two).
-                let mu_eff = mu / fxp::input_prescale(&fspec).powi(4);
-                let mut t =
-                    FxpEasiRot::new(stage_in, spec.output_dim, mu_eff, Some(spec.seed), fspec);
+                let mu_eff = mu / prescale.powi(4);
+                let mut t = FxpEasiRot::new(
+                    stage_in,
+                    spec.output_dim,
+                    mu_eff,
+                    Some(spec.seed),
+                    plan.rot,
+                    plan.quant,
+                );
                 for _ in 0..epochs.max(1) {
                     for row in &staged_raw {
                         t.step_raw(row);
                     }
                 }
+                output = plan.rot;
                 FittedStage::FxpEasi(t)
             }
             StageSpec::Ica { mu_w, mu_rot, epochs } => {
@@ -292,13 +329,16 @@ impl DrPipeline {
                     rotate: true,
                     rot_warmup: (train_x.rows_count() / 2).min(2000) as u64,
                     seed: spec.seed,
-                    spec: fspec,
+                    whiten_spec: plan.whiten,
+                    rot_spec: plan.rot,
+                    quant: plan.quant,
                 });
                 for _ in 0..epochs.max(1) {
                     for row in &staged_raw {
                         u.step_raw(row);
                     }
                 }
+                output = u.output_spec();
                 FittedStage::FxpUnit(u)
             }
             StageSpec::Identity => {
@@ -317,16 +357,22 @@ impl DrPipeline {
             spec,
             rp,
             fxp_rp,
+            fxp_io: Some(FxpIo {
+                entry,
+                prescale,
+                stage_in: stage_in_spec,
+                output,
+            }),
             stage,
         }
     }
 
     /// Transform one sample `m → n`.
     pub fn transform(&self, x: &[f32]) -> Vec<f32> {
-        if let Precision::Fixed(fspec) = self.spec.precision {
-            let xq = quantize_prescaled(&fspec, x);
+        if let Some(io) = &self.fxp_io {
+            let xq = quantize_prescaled(&io.entry, io.prescale, x);
             let staged = match &self.fxp_rp {
-                Some(f) => f.apply_raw(&xq),
+                Some(f) => io.stage_in.requantize_vec_from(&f.apply_raw(&xq), &io.entry),
                 None => xq,
             };
             let out = match &self.stage {
@@ -335,7 +381,7 @@ impl DrPipeline {
                 FittedStage::Identity => staged,
                 _ => unreachable!("fixed pipelines hold quantized stages"),
             };
-            return fspec.dequantize_vec(&out);
+            return io.output.dequantize_vec(&out);
         }
         let staged: Vec<f32> = match &self.rp {
             Some(proj) => proj.apply(x),
@@ -537,6 +583,51 @@ mod tests {
         let y32 = f32_p.transform_rows(&x);
         for (a, b) in y.as_slice().iter().zip(y32.as_slice()) {
             assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn mixed_precision_ste_pipeline_tracks_f32() {
+        // The acceptance plan: wide RP accumulator, 16-bit whiten and
+        // rotation, STE-trained. Must produce finite outputs close to
+        // the f32 pipeline, like the uniform q4.12 test above.
+        let x = gaussian_data(600, 32, 79);
+        let f32_p = DrPipeline::fit(PipelineSpec::proposed(32, 16, 8, 1e-3, 1, 7), &x);
+        let plan = Precision::parse("rp=q8.16,whiten=q4.12,rot=q4.12,qat=ste").unwrap();
+        let fx_p = DrPipeline::fit(
+            PipelineSpec::proposed(32, 16, 8, 1e-3, 1, 7).with_precision(plan),
+            &x,
+        );
+        let y_fx = fx_p.transform_rows(&x);
+        assert_eq!(y_fx.shape(), (600, 8));
+        assert!(y_fx.as_slice().iter().all(|v| v.is_finite()));
+        let y_f32 = f32_p.transform_rows(&x);
+        let mut mean = 0.0f64;
+        for (a, b) in y_fx.as_slice().iter().zip(y_f32.as_slice()) {
+            mean += (a - b).abs() as f64;
+        }
+        mean /= y_fx.as_slice().len() as f64;
+        assert!(mean < 0.25, "mixed STE vs f32 outputs diverged: mean {mean}");
+    }
+
+    #[test]
+    fn mixed_precision_narrow_rotation_stays_finite() {
+        // Narrow rotation behind a wide whitener: the σ target drops to
+        // fit q1.15 and every boundary requantizes; outputs must stay
+        // finite and on the rotation format's grid.
+        let x = gaussian_data(500, 32, 80);
+        let plan = Precision::parse("rp=q8.16,whiten=q8.16,rot=q1.15,qat=ste").unwrap();
+        let p = DrPipeline::fit(
+            PipelineSpec::proposed(32, 16, 8, 1e-3, 1, 7).with_precision(plan),
+            &x,
+        );
+        let y = p.transform_rows(&x);
+        assert_eq!(y.shape(), (500, 8));
+        let rot = plan.plan().unwrap().rot;
+        for &v in y.as_slice() {
+            assert!(v.is_finite());
+            let q = rot.dequantize(rot.quantize(v));
+            assert!((v - q).abs() < 1e-9, "output off the rot grid: {v}");
         }
     }
 

@@ -190,12 +190,15 @@ impl DrUnit {
         &self.rot
     }
 
-    /// Restore state (checkpoint / PJRT round-trip).
-    pub fn set_state(&mut self, w: Mat, var: Vec<f32>, u: Mat) {
+    /// Restore state (checkpoint / PJRT round-trip). `steps` restores
+    /// the whitener's sample count — without it a restored unit would
+    /// re-run the rotation warm-up gate (`gha.steps() > rot_warmup`)
+    /// from zero and freeze its rotation stage.
+    pub fn set_state(&mut self, w: Mat, var: Vec<f32>, u: Mat, steps: u64) {
         assert_eq!(w.shape(), self.gha.subspace().shape());
         assert_eq!(var.len(), self.config.output_dim);
         assert_eq!(u.shape(), self.rot.separation_matrix().shape());
-        self.gha.set_state(w, var);
+        self.gha.set_state(w, var, steps);
         self.rot.set_separation_matrix(u);
     }
 
@@ -306,6 +309,45 @@ mod tests {
             unit.rotation().separation_matrix().as_slice(),
             u_before.as_slice(),
             "rotation must stay frozen with the mux off"
+        );
+    }
+
+    #[test]
+    fn restored_unit_does_not_rerun_rotation_warmup() {
+        // Regression for the set_state steps bug: a unit restored from
+        // a post-warm-up checkpoint must keep training its rotation
+        // immediately, not sit behind the warm-up gate again.
+        let x = correlated(3000, 8, 86);
+        let cfg = DrUnitConfig {
+            input_dim: 8,
+            output_dim: 4,
+            rot_warmup: 2000,
+            ..Default::default()
+        };
+        let mut unit = DrUnit::new(cfg.clone());
+        unit.step_rows(&x); // 3000 samples: warm-up done, rotation live
+        let (w, var, u) = unit.state();
+        let (w, var, u) = (w.clone(), var.to_vec(), u.clone());
+        let steps = unit.whitener().steps();
+        assert!(steps > cfg.rot_warmup);
+
+        let mut restored = DrUnit::new(cfg);
+        restored.set_state(w, var, u, steps);
+        assert_eq!(restored.whitener().steps(), steps);
+        let u_before = restored.rotation().separation_matrix().clone();
+        let probe = correlated(300, 8, 87);
+        restored.step_rows(&probe);
+        let moved: f32 = restored
+            .rotation()
+            .separation_matrix()
+            .as_slice()
+            .iter()
+            .zip(u_before.as_slice())
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(
+            moved > 0.0,
+            "restored rotation stayed frozen — warm-up gate re-ran"
         );
     }
 
