@@ -1,8 +1,10 @@
 //! Bench P1 (DESIGN.md §5): end-to-end training-service throughput —
 //! the coordinator's samples/second through the full producer → bounded
-//! queue → trainer path, native vs PJRT backends, across batch sizes.
-//! The §Perf section of EXPERIMENTS.md tracks these numbers; the FPGA
-//! reference point is 106.64 Msamples/s (one sample per clock).
+//! queue → trainer path, native vs PJRT backends, across batch sizes,
+//! plus the tiled / multi-lane kernel grid of `dimred bench` (per-sample
+//! vs tiled vs multilane, f32 vs fixed point). The §Perf section of
+//! EXPERIMENTS.md tracks these numbers; the FPGA reference point is
+//! 106.64 Msamples/s (one sample per clock).
 
 use dimred::config::{Backend, ExperimentConfig, PipelineMode};
 use dimred::coordinator::TrainingService;
@@ -44,6 +46,33 @@ fn main() {
         };
         let (tput, bp) = run_once(cfg, None);
         println!("native  batch={batch:<5} {tput:>12.0} samples/s   backpressure {bp}");
+    }
+
+    // The fixed-point tiled trainer through the same coordinator path.
+    for batch in [64usize, 256] {
+        let cfg = ExperimentConfig {
+            batch,
+            backend: Backend::Native,
+            precision: dimred::fxp::Precision::parse("q4.12").unwrap(),
+            ..base.clone()
+        };
+        let (tput, bp) = run_once(cfg, None);
+        println!("native  q4.12 batch={batch:<5} {tput:>12.0} samples/s   backpressure {bp}");
+    }
+
+    // Kernel-level grid: per-sample vs tiled vs multi-lane, f32 vs
+    // fixed point — the same harness `dimred bench` runs, so `cargo
+    // bench` covers the tiled paths alongside the coordinator numbers.
+    let opts = dimred::experiments::bench::BenchOptions {
+        datasets: vec!["waveform".into()],
+        tile: 256,
+        lanes: 4,
+        smoke: quick,
+        seed: 2018,
+    };
+    match dimred::experiments::bench::run(&opts) {
+        Ok(results) => print!("{}", dimred::experiments::bench::render(&opts, &results)),
+        Err(e) => println!("tiled kernel bench skipped ({e:#})"),
     }
 
     match Runtime::load(Path::new("artifacts")) {

@@ -119,6 +119,13 @@ pub struct ExperimentConfig {
     /// Bounded-queue depth between the streaming source and the trainer
     /// (backpressure window, in batches).
     pub queue_depth: usize,
+    /// Forward-path lanes for the *fixed-point* engine: its bulk
+    /// transforms shard a tile's rows across this many threads
+    /// (deterministic merge, bit-identical outputs). Training updates
+    /// stay sequential regardless (the Sanger/EASI recursions are
+    /// order-dependent), and the f32 engine's bulk transform is a
+    /// single dense matmul, which ignores this knob. 1 = single-lane.
+    pub lanes: usize,
     pub seed: u64,
     pub artifact_dir: PathBuf,
     /// Train the downstream classifier and report accuracy.
@@ -144,6 +151,7 @@ impl Default for ExperimentConfig {
             epochs: 4,
             batch: 256,
             queue_depth: 4,
+            lanes: 1,
             seed: 2018,
             artifact_dir: PathBuf::from("artifacts"),
             train_classifier: true,
@@ -210,6 +218,9 @@ impl ExperimentConfig {
         if let Some(x) = v.get("queue_depth") {
             c.queue_depth = x.as_usize()?;
         }
+        if let Some(x) = v.get("lanes") {
+            c.lanes = x.as_usize()?;
+        }
         if let Some(x) = v.get("seed") {
             c.seed = x.as_u64()?;
         }
@@ -249,6 +260,7 @@ impl ExperimentConfig {
         self.epochs = args.usize_or("epochs", self.epochs)?;
         self.batch = args.usize_or("batch", self.batch)?;
         self.queue_depth = args.usize_or("queue-depth", self.queue_depth)?;
+        self.lanes = args.usize_or("lanes", self.lanes)?;
         self.seed = args.u64_or("seed", self.seed)?;
         self.mlp_epochs = args.usize_or("mlp-epochs", self.mlp_epochs)?;
         if let Some(dir) = args.opt_str("artifacts") {
@@ -275,6 +287,7 @@ impl ExperimentConfig {
         anyhow::ensure!(self.mu > 0.0, "mu must be positive");
         anyhow::ensure!(self.batch >= 1, "batch must be >= 1");
         anyhow::ensure!(self.queue_depth >= 1, "queue_depth must be >= 1");
+        anyhow::ensure!(self.lanes >= 1, "lanes must be >= 1");
         anyhow::ensure!(
             !(self.precision.is_fixed() && self.backend == Backend::Pjrt),
             "fixed-point precision runs on the native backend only \
@@ -302,6 +315,7 @@ impl ExperimentConfig {
             ("mu", Json::num(self.mu as f64)),
             ("epochs", Json::num(self.epochs as f64)),
             ("batch", Json::num(self.batch as f64)),
+            ("lanes", Json::num(self.lanes as f64)),
             ("seed", Json::num(self.seed as f64)),
         ])
     }

@@ -47,6 +47,21 @@ pub trait SampleSource: Send {
     fn dim(&self) -> usize;
     /// Next sample, or `None` at end of stream.
     fn next_sample(&mut self) -> Option<Vec<f32>>;
+
+    /// Copy the next sample into `out` (length [`SampleSource::dim`])
+    /// without allocating; returns `false` at end of stream. The
+    /// default delegates to [`SampleSource::next_sample`]; sources with
+    /// borrowable storage override it so the producer's fill loop is
+    /// allocation-free per sample.
+    fn next_into(&mut self, out: &mut [f32]) -> bool {
+        match self.next_sample() {
+            Some(s) => {
+                out.copy_from_slice(&s);
+                true
+            }
+            None => false,
+        }
+    }
 }
 
 /// Replays the rows of a matrix for a fixed number of epochs.
@@ -72,13 +87,21 @@ impl SampleSource for EpochSource {
     }
 
     fn next_sample(&mut self) -> Option<Vec<f32>> {
+        let mut out = vec![0.0; self.data.cols_count()];
+        self.next_into(&mut out).then_some(out)
+    }
+
+    // The one copy of the epoch-replay cursor logic; `next_sample`
+    // wraps it.
+    fn next_into(&mut self, out: &mut [f32]) -> bool {
         let total = self.data.rows_count() * self.epochs;
         if self.cursor >= total {
-            return None;
+            return false;
         }
         let row = self.cursor % self.data.rows_count();
         self.cursor += 1;
-        Some(self.data.row(row).to_vec())
+        out.copy_from_slice(self.data.row(row));
+        true
     }
 }
 
@@ -105,7 +128,7 @@ pub fn spawn_producer(
         .name("dimred-producer".into())
         .spawn(move || -> Result<()> {
             let dim = source.dim();
-            let mut buf: Vec<f32> = Vec::with_capacity(batch * dim);
+            let mut buf: Vec<f32> = vec![0.0; batch * dim];
             let mut rows = 0usize;
             let send = |tx: &SyncSender<Batch>, b: Batch, waits: &AtomicU64| {
                 // try_send first so we can count backpressure events,
@@ -121,15 +144,20 @@ pub fn spawn_producer(
                     }
                 }
             };
-            while let Some(sample) = source.next_sample() {
-                debug_assert_eq!(sample.len(), dim);
-                buf.extend_from_slice(&sample);
+            // Fill row slots in place (`next_into`) — no per-sample
+            // vector, and the buffer is zeroed once per batch, not per
+            // sample. The batch buffer itself still allocates once per
+            // batch: ownership travels through the channel.
+            loop {
+                if !source.next_into(&mut buf[rows * dim..(rows + 1) * dim]) {
+                    buf.truncate(rows * dim);
+                    break;
+                }
                 rows += 1;
                 if rows == batch {
-                    let m = Mat::from_vec(rows, dim, std::mem::take(&mut buf));
-                    send(&tx, Batch::Full(m), &waits_clone)?;
+                    let full = std::mem::replace(&mut buf, vec![0.0; batch * dim]);
+                    send(&tx, Batch::Full(Mat::from_vec(rows, dim, full)), &waits_clone)?;
                     rows = 0;
-                    buf = Vec::with_capacity(batch * dim);
                 }
             }
             if rows > 0 {
@@ -192,9 +220,22 @@ mod tests {
 
     #[test]
     fn backpressure_counted_when_consumer_slow() {
+        // Deterministic stall: with a depth-1 queue and 32 pending
+        // batches, the producer is guaranteed to find the queue full.
+        // Instead of sleeping an arbitrary 50 ms, hold off consuming
+        // until the producer has *recorded* a backpressure wait (the
+        // counter is bumped before the blocking send), then drain.
         let src = EpochSource::new(mat(64, 2), 4);
         let (rx, prod) = spawn_producer(Box::new(src), 8, 1);
-        std::thread::sleep(std::time::Duration::from_millis(50));
+        while prod.backpressure_waits.load(Ordering::Relaxed) == 0 {
+            // Fail fast (not hang) if a regression kills the producer
+            // before it ever finds the queue full.
+            assert!(
+                !prod.handle.is_finished(),
+                "producer exited without recording backpressure"
+            );
+            std::thread::yield_now();
+        }
         let mut n = 0;
         for b in rx.iter() {
             n += b.len();

@@ -16,7 +16,7 @@
 //! trainer hot-swaps to the full one.
 
 use crate::config::{Backend, ExperimentConfig, PipelineMode};
-use crate::fxp::{FxpDrUnit, FxpRp, FxpSpec, FxpUnitConfig, Precision};
+use crate::fxp::{FxpDrUnit, FxpRp, FxpSpec, FxpUnitConfig, Precision, Scratch};
 use crate::linalg::Mat;
 use crate::pipeline::unit::{DrUnit, DrUnitConfig, RETRACT_INTERVAL};
 use crate::rp::RandomProjection;
@@ -204,12 +204,19 @@ pub struct NativeTrainer {
     engine: NativeEngine,
     /// Dense scaled RP matrix for reports, whatever the engine.
     rp_dense: Option<Mat>,
+    /// Forward-path lanes for bulk transforms (training updates stay
+    /// sequential — the Sanger/EASI recursions are order-dependent).
+    lanes: usize,
 }
 
 enum NativeEngine {
     F32 {
         unit: DrUnit,
         rp: Option<RandomProjection>,
+        /// Reusable projected-tile buffer (batch × p), rebuilt only
+        /// when the batch shape changes — the training loop stops
+        /// allocating a projected matrix per minibatch.
+        staged: Mat,
     },
     // The per-stage arithmetic lives on the unit
     // (`unit.config.{whiten_spec,rot_spec}`, `unit.output_spec`);
@@ -220,31 +227,34 @@ enum NativeEngine {
         rp: Option<FxpRp>,
         entry_spec: FxpSpec,
         entry_prescale: f32,
+        /// Reusable ingress workspaces (quantized tile + RP stage tile)
+        /// — zero allocations per sample in steady state.
+        scratch: Scratch,
     },
 }
 
-/// Quantize one f32 sample at the fixed-point pipeline ingress and
-/// cross the RP→whitener format boundary — the single definition shared
-/// by the training and inference paths so the two can never quantize
-/// inputs differently.
-fn fxp_ingress(
+/// Tile ingress for the fixed-point engine: delegates to the crate-wide
+/// shared definition ([`crate::fxp::kernels::ingress_tile`]) with the
+/// whitener's format as the stage boundary, so the trainer, the
+/// pipeline and the bench harness can never quantize inputs
+/// differently.
+fn fxp_ingress_tile(
     unit: &FxpDrUnit,
     rp: &Option<FxpRp>,
     entry_spec: &FxpSpec,
     entry_prescale: f32,
-    row: &[f32],
-) -> Vec<i32> {
-    let xq: Vec<i32> = row
-        .iter()
-        .map(|&v| entry_spec.quantize(v * entry_prescale))
-        .collect();
-    match rp {
-        Some(f) => unit
-            .config
-            .whiten_spec
-            .requantize_vec_from(&f.apply_raw(&xq), entry_spec),
-        None => xq,
-    }
+    rows: &Mat,
+    scratch: &mut Scratch,
+) {
+    crate::fxp::kernels::ingress_tile(
+        rp.as_ref(),
+        entry_spec,
+        &unit.config.whiten_spec,
+        entry_prescale,
+        rows.as_slice(),
+        rows.rows_count(),
+        scratch,
+    );
 }
 
 impl NativeTrainer {
@@ -269,6 +279,7 @@ impl NativeTrainer {
                     seed: cfg.seed,
                 }),
                 rp,
+                staged: Mat::zeros(0, 0),
             },
             Precision::Fixed(plan) => {
                 let entry_spec = if rp.is_some() { plan.rp } else { plan.whiten };
@@ -288,6 +299,7 @@ impl NativeTrainer {
                     rp: rp.as_ref().map(|p| FxpRp::from_rp(p, plan.rp)),
                     entry_spec,
                     entry_prescale: plan.entry_prescale(rp.is_some(), &plan.whiten),
+                    scratch: Scratch::new(),
                 }
             }
         };
@@ -295,16 +307,25 @@ impl NativeTrainer {
             mode: cfg.mode,
             engine,
             rp_dense,
+            lanes: cfg.lanes.max(1),
         })
     }
 
+    /// Consume one minibatch as a whole tile: the ingress quantizes the
+    /// full batch into reusable workspaces, then the unit walks the
+    /// tile row by row (bit-identical to per-sample stepping — only the
+    /// per-sample staging vectors are gone).
     fn step(&mut self, batch: &Batch) -> Result<()> {
         let rows = batch.rows();
         match &mut self.engine {
-            NativeEngine::F32 { unit, rp } => match rp {
+            NativeEngine::F32 { unit, rp, staged } => match rp {
                 Some(rp) => {
-                    let projected = rp.apply_rows(rows);
-                    unit.step_rows(&projected);
+                    let shape = (rows.rows_count(), rp.out_dim);
+                    if staged.shape() != shape {
+                        *staged = Mat::zeros(shape.0, shape.1);
+                    }
+                    rp.apply_rows_into(rows, staged);
+                    unit.step_rows(staged);
                 }
                 None => unit.step_rows(rows),
             },
@@ -313,10 +334,14 @@ impl NativeTrainer {
                 rp,
                 entry_spec,
                 entry_prescale,
+                scratch,
             } => {
-                for i in 0..rows.rows_count() {
-                    let xq = fxp_ingress(unit, rp, entry_spec, *entry_prescale, rows.row(i));
-                    unit.step_raw(&xq);
+                let r = rows.rows_count();
+                fxp_ingress_tile(unit, rp, entry_spec, *entry_prescale, rows, scratch);
+                if rp.is_some() {
+                    unit.step_tile_raw(&scratch.stage, r);
+                } else {
+                    unit.step_tile_raw(&scratch.xq, r);
                 }
             }
         }
@@ -343,7 +368,10 @@ impl NativeTrainer {
 
     /// Bulk transform: dense matvec for f32, the bit-accurate integer
     /// forward path for fixed point (so reported accuracies reflect the
-    /// quantized pipeline).
+    /// quantized pipeline). Fixed-point tiles are sharded across
+    /// `lanes` scoped threads — the merge is deterministic (each lane
+    /// owns a disjoint output range), so the raw words are identical to
+    /// the single-lane / per-sample path.
     fn transform_rows(&self, x: &Mat) -> Mat {
         match &self.engine {
             NativeEngine::F32 { unit, .. } => {
@@ -359,15 +387,21 @@ impl NativeTrainer {
                 rp,
                 entry_spec,
                 entry_prescale,
+                ..
             } => {
+                let r = x.rows_count();
                 let n = unit.config.output_dim;
                 let out_spec = unit.output_spec();
-                let mut out = Vec::with_capacity(x.rows_count() * n);
-                for i in 0..x.rows_count() {
-                    let staged = fxp_ingress(unit, rp, entry_spec, *entry_prescale, x.row(i));
-                    out.extend(out_spec.dequantize_vec(&unit.transform_raw(&staged)));
-                }
-                Mat::from_vec(x.rows_count(), n, out)
+                let mut scratch = Scratch::new();
+                fxp_ingress_tile(unit, rp, entry_spec, *entry_prescale, x, &mut scratch);
+                let tile: &[i32] = if rp.is_some() {
+                    &scratch.stage
+                } else {
+                    &scratch.xq
+                };
+                let mut raw = Vec::new();
+                unit.transform_tile_raw_multilane(tile, r, self.lanes, &mut raw);
+                Mat::from_vec(r, n, raw.iter().map(|&w| out_spec.dequantize(w)).collect())
             }
         }
     }
@@ -602,6 +636,29 @@ mod tests {
         // The mux still reconfigures on the quantized engine.
         t.reconfigure(PipelineMode::PcaWhiten)
             .expect_err("rp-easi -> pca-whiten changes the RP front end");
+    }
+
+    #[test]
+    fn fxp_transform_rows_bit_identical_across_lane_counts() {
+        // The multi-lane forward merge is deterministic: any lane count
+        // must reproduce the single-lane outputs exactly.
+        let data = Mat::from_fn(200, 32, |i, j| ((i * 13 + j * 5) % 23) as f32 / 23.0 - 0.5);
+        let run = |lanes: usize| {
+            let cfg = ExperimentConfig {
+                mode: PipelineMode::RpEasi,
+                precision: Precision::parse("q4.12").unwrap(),
+                lanes,
+                train_classifier: false,
+                ..Default::default()
+            };
+            let mut t = Trainer::from_config(&cfg, None).unwrap();
+            t.step(&Batch::Full(data.clone())).unwrap();
+            t.transform_rows(&data)
+        };
+        let one = run(1);
+        for lanes in [2usize, 5, 64] {
+            assert_eq!(one.as_slice(), run(lanes).as_slice(), "lanes={lanes}");
+        }
     }
 
     #[test]

@@ -275,8 +275,8 @@ mod tests {
     fn neighbouring_pixels_correlated() {
         // The property Fig. 1a exploits: local pixel correlation.
         let d = small();
-        let a = d.train_x.col(14 * SIDE + 13);
-        let b = d.train_x.col(14 * SIDE + 14);
+        let a: Vec<f32> = d.train_x.col(14 * SIDE + 13).collect();
+        let b: Vec<f32> = d.train_x.col(14 * SIDE + 14).collect();
         let n = a.len() as f64;
         let (ma, mb) = (
             a.iter().map(|&x| x as f64).sum::<f64>() / n,

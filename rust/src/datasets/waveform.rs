@@ -203,7 +203,7 @@ mod tests {
     fn noise_features_are_standard_normal() {
         let d = WaveformConfig::default().generate();
         // Feature 40 (index 39) is pure noise.
-        let col = d.train_x.col(39);
+        let col: Vec<f32> = d.train_x.col(39).collect();
         let n = col.len() as f64;
         let mean: f64 = col.iter().map(|&x| x as f64).sum::<f64>() / n;
         let var: f64 = col.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n;

@@ -1,0 +1,636 @@
+//! `dimred bench` — the repo's throughput trajectory, as data.
+//!
+//! Times samples/second through the DR datapath along three axes:
+//!
+//! * **precision** — the f32 reference vs the bit-accurate fixed-point
+//!   (Q4.12) kernels;
+//! * **path** — the training step (ingress → whiten → rotate updates)
+//!   vs the forward/inference transform;
+//! * **mode** — `per-sample` (one staging vector per call, the shape of
+//!   the hot path before the tiled refactor), `tiled` (whole tiles
+//!   through reusable scratch workspaces, zero steady-state
+//!   allocations) and `multilane` (forward tiles sharded across scoped
+//!   threads with a deterministic merge).
+//!
+//! Every forward measurement first *proves* bit-identity — the tiled
+//! and multi-lane raw words must equal the per-sample path exactly, or
+//! the bench errors out — so the recorded speedups can never come from
+//! silently changed arithmetic.
+//!
+//! The results are written to `BENCH_throughput.json` under a fixed,
+//! validated schema ([`validate`]), so successive PRs can diff
+//! throughput the way `fxp-sweep`/`pareto` diff accuracy. CI runs
+//! `dimred bench --smoke` (tiny sample counts, same schema) and
+//! uploads the JSON as an artifact.
+
+use crate::experiments::fxp_sweep;
+use crate::fxp::{FxpDrUnit, FxpRp, FxpSpec, FxpUnitConfig, Precision, QuantMode, Scratch};
+use crate::linalg::Mat;
+use crate::pipeline::unit::{DrUnit, DrUnitConfig};
+use crate::rp::{RandomProjection, RpDistribution};
+use crate::util::json::Json;
+use anyhow::{ensure, Context, Result};
+use std::time::Instant;
+
+/// One timed point: a (path, precision, mode) cell of the grid.
+#[derive(Debug, Clone)]
+pub struct BenchPoint {
+    /// `"train"` or `"forward"`.
+    pub path: &'static str,
+    /// `"f32"` or the fixed-point format label.
+    pub precision: String,
+    /// `"per-sample"`, `"tiled"` or `"multilane"`.
+    pub mode: &'static str,
+    /// Lanes used (1 except for multilane).
+    pub lanes: usize,
+    /// Samples processed per measured repetition.
+    pub samples: usize,
+    /// Best-of-reps throughput.
+    pub samples_per_s: f64,
+}
+
+/// All points for one dataset configuration, plus derived speedups.
+#[derive(Debug, Clone)]
+pub struct BenchConfigResult {
+    pub dataset: String,
+    pub m: usize,
+    pub p: usize,
+    pub n: usize,
+    pub samples: usize,
+    pub points: Vec<BenchPoint>,
+    /// (label, ratio) pairs, e.g. `train_fxp_tiled_over_per_sample`.
+    pub speedups: Vec<(String, f64)>,
+}
+
+/// Knobs for one bench run.
+#[derive(Debug, Clone)]
+pub struct BenchOptions {
+    /// Dataset names (waveform | har).
+    pub datasets: Vec<String>,
+    /// Rows per tile fed to the tiled/multilane paths.
+    pub tile: usize,
+    /// Lanes for the multilane forward path.
+    pub lanes: usize,
+    /// Tiny sample counts for CI smoke runs (same schema).
+    pub smoke: bool,
+    pub seed: u64,
+}
+
+impl Default for BenchOptions {
+    fn default() -> Self {
+        Self {
+            datasets: vec!["waveform".into(), "har".into()],
+            tile: 256,
+            lanes: 4,
+            smoke: false,
+            seed: 2018,
+        }
+    }
+}
+
+/// The fixed-point format the bench prices the quantized datapath at —
+/// the paper's 16-bit deployment width.
+fn bench_spec() -> FxpSpec {
+    FxpSpec::q(4, 12)
+}
+
+/// Best-of-`reps` throughput of `f`, which processes `samples` samples
+/// per call.
+fn time_samples(reps: usize, samples: usize, mut f: impl FnMut()) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    samples as f64 / best.max(1e-12)
+}
+
+/// Contiguous `(start_row, rows_in_tile)` ranges covering `rows` rows —
+/// every tiled measurement chunks by the same `--tile` knob so the
+/// recorded tile size is the tile size actually run.
+fn tile_ranges(rows: usize, tile: usize) -> impl Iterator<Item = (usize, usize)> {
+    let tile = tile.max(1);
+    (0..rows)
+        .step_by(tile)
+        .map(move |start| (start, tile.min(rows - start)))
+}
+
+/// Per-sample fixed-point ingress — deliberately the *allocating* shape
+/// of the pre-tile hot path (one staging vector per call), kept here
+/// only as the baseline the tiled kernels are measured against. Its
+/// arithmetic must match the shared tile ingress
+/// ([`crate::fxp::kernels::ingress_tile`], which the trainer and the
+/// tiled measurements below use); the bench asserts raw-word equality
+/// between the two before any timing runs.
+fn ingress_per_sample(
+    rp: &FxpRp,
+    entry: &FxpSpec,
+    wspec: &FxpSpec,
+    prescale: f32,
+    row: &[f32],
+) -> Vec<i32> {
+    let xq: Vec<i32> = row.iter().map(|&v| entry.quantize(v * prescale)).collect();
+    wspec.requantize_vec_from(&rp.apply_raw(&xq), entry)
+}
+
+/// The shared tile ingress (same definition the trainer runs), bound to
+/// the bench's RP front end.
+fn ingress_tile(
+    rp: &FxpRp,
+    entry: &FxpSpec,
+    wspec: &FxpSpec,
+    prescale: f32,
+    x: &[f32],
+    rows: usize,
+    scratch: &mut Scratch,
+) {
+    crate::fxp::kernels::ingress_tile(Some(rp), entry, wspec, prescale, x, rows, scratch);
+}
+
+fn build_fxp_unit(p: usize, n: usize, seed: u64) -> FxpDrUnit {
+    let spec = bench_spec();
+    FxpDrUnit::new(FxpUnitConfig {
+        input_dim: p,
+        output_dim: n,
+        mu_w: 5e-3,
+        mu_rot: 1e-3,
+        rotate: true,
+        rot_warmup: 0,
+        seed,
+        whiten_spec: spec,
+        rot_spec: spec,
+        quant: QuantMode::BitExact,
+    })
+}
+
+fn build_f32_unit(p: usize, n: usize, seed: u64) -> DrUnit {
+    DrUnit::new(DrUnitConfig {
+        input_dim: p,
+        output_dim: n,
+        mu_w: 5e-3,
+        mu_rot: 1e-3,
+        rotate: true,
+        rot_warmup: 0,
+        seed,
+    })
+}
+
+/// Run the bench over every requested dataset configuration.
+pub fn run(opts: &BenchOptions) -> Result<Vec<BenchConfigResult>> {
+    ensure!(opts.tile >= 1, "tile must be >= 1");
+    ensure!(opts.lanes >= 1, "lanes must be >= 1");
+    ensure!(!opts.datasets.is_empty(), "no datasets selected");
+    let reps = if opts.smoke { 2 } else { 5 };
+    let mut out = Vec::new();
+    for name in &opts.datasets {
+        let (m, p, n, _) = fxp_sweep::dims_for(name)?;
+        // Throughput depends on dims, not content; still use the real
+        // generators so the bench exercises exactly the data the
+        // accuracy experiments stream.
+        let (train, test) = if opts.smoke { (256, 8) } else { (2048, 8) };
+        let data = fxp_sweep::load(name, opts.seed, train, test)?;
+        let x = &data.train_x;
+        let rows = x.rows_count();
+        let samples = rows;
+        let fspec = bench_spec();
+        let precision_label = Precision::Fixed(crate::fxp::PrecisionPlan::uniform(fspec)).label();
+
+        let rp = RandomProjection::new(m, p, RpDistribution::Ternary, opts.seed).unit_variance();
+        let frp = FxpRp::from_rp(&rp, fspec);
+        let plan = crate::fxp::PrecisionPlan::uniform(fspec);
+        let entry = plan.rp;
+        let prescale = plan.entry_prescale(true, &plan.whiten);
+        let mut points = Vec::new();
+
+        // ------------------------------------------------- train, f32
+        let mut unit = build_f32_unit(p, n, opts.seed);
+        let t_f32_per_sample = time_samples(reps, samples, || {
+            for i in 0..rows {
+                let proj = rp.apply(x.row(i));
+                unit.step(&proj);
+            }
+        });
+        points.push(BenchPoint {
+            path: "train",
+            precision: "f32".into(),
+            mode: "per-sample",
+            lanes: 1,
+            samples,
+            samples_per_s: t_f32_per_sample,
+        });
+        let mut unit = build_f32_unit(p, n, opts.seed);
+        let mut staged = Mat::zeros(opts.tile.min(rows).max(1), p);
+        let t_f32_tiled = time_samples(reps, samples, || {
+            for (start, r) in tile_ranges(rows, opts.tile) {
+                if staged.shape() != (r, p) {
+                    staged = Mat::zeros(r, p);
+                }
+                for local in 0..r {
+                    rp.apply_into(x.row(start + local), staged.row_mut(local));
+                }
+                unit.step_rows(&staged);
+            }
+        });
+        points.push(BenchPoint {
+            path: "train",
+            precision: "f32".into(),
+            mode: "tiled",
+            lanes: 1,
+            samples,
+            samples_per_s: t_f32_tiled,
+        });
+
+        // ------------------------------------------------- train, fxp
+        let mut unit = build_fxp_unit(p, n, opts.seed);
+        let wspec = unit.config.whiten_spec;
+        let t_fxp_per_sample = time_samples(reps, samples, || {
+            for i in 0..rows {
+                let staged = ingress_per_sample(&frp, &entry, &wspec, prescale, x.row(i));
+                unit.step_raw(&staged);
+            }
+        });
+        points.push(BenchPoint {
+            path: "train",
+            precision: precision_label.clone(),
+            mode: "per-sample",
+            lanes: 1,
+            samples,
+            samples_per_s: t_fxp_per_sample,
+        });
+        let mut unit = build_fxp_unit(p, n, opts.seed);
+        let mut scratch = Scratch::new();
+        let t_fxp_tiled = time_samples(reps, samples, || {
+            // Tile-at-a-time, like the trainer: whole batches through
+            // reusable workspaces.
+            for tile_rows in x.as_slice().chunks(opts.tile * m) {
+                let r = tile_rows.len() / m;
+                ingress_tile(&frp, &entry, &wspec, prescale, tile_rows, r, &mut scratch);
+                unit.step_tile_raw(&scratch.stage, r);
+            }
+        });
+        points.push(BenchPoint {
+            path: "train",
+            precision: precision_label.clone(),
+            mode: "tiled",
+            lanes: 1,
+            samples,
+            samples_per_s: t_fxp_tiled,
+        });
+
+        // ----------------------------------------------- forward, f32
+        let unit = {
+            let mut u = build_f32_unit(p, n, opts.seed);
+            u.step_rows(&rp.apply_rows(x));
+            u
+        };
+        let f_f32_per_sample = time_samples(reps, samples, || {
+            for i in 0..rows {
+                let proj = rp.apply(x.row(i));
+                std::hint::black_box(unit.transform(&proj));
+            }
+        });
+        points.push(BenchPoint {
+            path: "forward",
+            precision: "f32".into(),
+            mode: "per-sample",
+            lanes: 1,
+            samples,
+            samples_per_s: f_f32_per_sample,
+        });
+        let eff = unit.effective_matrix();
+        let tile0 = opts.tile.min(rows).max(1);
+        let mut staged = Mat::zeros(tile0, p);
+        let mut out_f32 = Mat::zeros(tile0, n);
+        let f_f32_tiled = time_samples(reps, samples, || {
+            for (start, r) in tile_ranges(rows, opts.tile) {
+                if staged.shape() != (r, p) {
+                    staged = Mat::zeros(r, p);
+                    out_f32 = Mat::zeros(r, n);
+                }
+                for local in 0..r {
+                    rp.apply_into(x.row(start + local), staged.row_mut(local));
+                }
+                eff.apply_rows_into(&staged, &mut out_f32);
+                std::hint::black_box(&out_f32);
+            }
+        });
+        points.push(BenchPoint {
+            path: "forward",
+            precision: "f32".into(),
+            mode: "tiled",
+            lanes: 1,
+            samples,
+            samples_per_s: f_f32_tiled,
+        });
+
+        // ----------------------------------------------- forward, fxp
+        let unit = {
+            let mut u = build_fxp_unit(p, n, opts.seed);
+            let mut s = Scratch::new();
+            ingress_tile(&frp, &entry, &wspec, prescale, x.as_slice(), rows, &mut s);
+            u.step_tile_raw(&s.stage, rows);
+            u
+        };
+        let mut scratch = Scratch::new();
+        ingress_tile(&frp, &entry, &wspec, prescale, x.as_slice(), rows, &mut scratch);
+        let stage_tile = scratch.stage.clone();
+
+        // Bit-identity proof before timing: per-sample raw words are
+        // the reference; the shared tile ingress and the tiled /
+        // multi-lane forwards must all match exactly.
+        let mut reference: Vec<i32> = Vec::with_capacity(rows * n);
+        for i in 0..rows {
+            let staged = ingress_per_sample(&frp, &entry, &wspec, prescale, x.row(i));
+            ensure!(
+                staged[..] == stage_tile[i * p..(i + 1) * p],
+                "tile ingress diverged from the per-sample ingress ({name})"
+            );
+            reference.extend(unit.transform_raw(&staged));
+        }
+        let mut tiled_out = Vec::new();
+        let mut s2 = Scratch::new();
+        unit.transform_tile_raw(&stage_tile, rows, &mut s2, &mut tiled_out);
+        ensure!(
+            tiled_out == reference,
+            "tiled forward diverged from the per-sample path ({name})"
+        );
+        let mut lane_out = Vec::new();
+        unit.transform_tile_raw_multilane(&stage_tile, rows, opts.lanes, &mut lane_out);
+        ensure!(
+            lane_out == reference,
+            "multi-lane forward diverged from the per-sample path ({name})"
+        );
+
+        let f_fxp_per_sample = time_samples(reps, samples, || {
+            for i in 0..rows {
+                let staged = ingress_per_sample(&frp, &entry, &wspec, prescale, x.row(i));
+                std::hint::black_box(unit.transform_raw(&staged));
+            }
+        });
+        points.push(BenchPoint {
+            path: "forward",
+            precision: precision_label.clone(),
+            mode: "per-sample",
+            lanes: 1,
+            samples,
+            samples_per_s: f_fxp_per_sample,
+        });
+        let mut out_raw = Vec::new();
+        let f_fxp_tiled = time_samples(reps, samples, || {
+            for (start, r) in tile_ranges(rows, opts.tile) {
+                let xs = &x.as_slice()[start * m..(start + r) * m];
+                ingress_tile(&frp, &entry, &wspec, prescale, xs, r, &mut scratch);
+                unit.transform_tile_raw(&scratch.stage, r, &mut s2, &mut out_raw);
+                std::hint::black_box(&out_raw);
+            }
+        });
+        points.push(BenchPoint {
+            path: "forward",
+            precision: precision_label.clone(),
+            mode: "tiled",
+            lanes: 1,
+            samples,
+            samples_per_s: f_fxp_tiled,
+        });
+        let f_fxp_multilane = time_samples(reps, samples, || {
+            for (start, r) in tile_ranges(rows, opts.tile) {
+                let xs = &x.as_slice()[start * m..(start + r) * m];
+                ingress_tile(&frp, &entry, &wspec, prescale, xs, r, &mut scratch);
+                unit.transform_tile_raw_multilane(&scratch.stage, r, opts.lanes, &mut out_raw);
+                std::hint::black_box(&out_raw);
+            }
+        });
+        points.push(BenchPoint {
+            path: "forward",
+            precision: precision_label.clone(),
+            mode: "multilane",
+            lanes: opts.lanes,
+            samples,
+            samples_per_s: f_fxp_multilane,
+        });
+
+        let speedups = vec![
+            (
+                "train_f32_tiled_over_per_sample".to_string(),
+                t_f32_tiled / t_f32_per_sample.max(1e-12),
+            ),
+            (
+                "train_fxp_tiled_over_per_sample".to_string(),
+                t_fxp_tiled / t_fxp_per_sample.max(1e-12),
+            ),
+            (
+                "forward_fxp_tiled_over_per_sample".to_string(),
+                f_fxp_tiled / f_fxp_per_sample.max(1e-12),
+            ),
+            (
+                "forward_fxp_multilane_over_per_sample".to_string(),
+                f_fxp_multilane / f_fxp_per_sample.max(1e-12),
+            ),
+        ];
+        out.push(BenchConfigResult {
+            dataset: name.clone(),
+            m,
+            p,
+            n,
+            samples,
+            points,
+            speedups,
+        });
+    }
+    Ok(out)
+}
+
+/// Aligned text report.
+pub fn render(opts: &BenchOptions, results: &[BenchConfigResult]) -> String {
+    let mut s = format!(
+        "dimred bench — samples/s (tile={}, lanes={}{})\n",
+        opts.tile,
+        opts.lanes,
+        if opts.smoke { ", smoke" } else { "" }
+    );
+    for cfg in results {
+        s.push_str(&format!(
+            "\n[{} m={} p={} n={} samples={}]\n",
+            cfg.dataset, cfg.m, cfg.p, cfg.n, cfg.samples
+        ));
+        s.push_str(&format!(
+            "{:<9} {:<10} {:<11} {:>6} {:>14}\n",
+            "path", "precision", "mode", "lanes", "samples/s"
+        ));
+        for pt in &cfg.points {
+            s.push_str(&format!(
+                "{:<9} {:<10} {:<11} {:>6} {:>14.0}\n",
+                pt.path, pt.precision, pt.mode, pt.lanes, pt.samples_per_s
+            ));
+        }
+        for (label, ratio) in &cfg.speedups {
+            s.push_str(&format!("  {label}: {ratio:.2}x\n"));
+        }
+    }
+    s
+}
+
+/// Serialise one run under the golden schema (see [`validate`]).
+pub fn to_json(opts: &BenchOptions, results: &[BenchConfigResult]) -> Json {
+    Json::obj(vec![
+        ("experiment", Json::str("bench_throughput")),
+        ("schema_version", Json::num(1.0)),
+        ("smoke", Json::Bool(opts.smoke)),
+        ("tile", Json::num(opts.tile as f64)),
+        ("lanes", Json::num(opts.lanes as f64)),
+        ("seed", Json::num(opts.seed as f64)),
+        (
+            "configs",
+            Json::Arr(
+                results
+                    .iter()
+                    .map(|cfg| {
+                        Json::obj(vec![
+                            ("dataset", Json::str(cfg.dataset.clone())),
+                            ("m", Json::num(cfg.m as f64)),
+                            ("p", Json::num(cfg.p as f64)),
+                            ("n", Json::num(cfg.n as f64)),
+                            ("samples", Json::num(cfg.samples as f64)),
+                            (
+                                "points",
+                                Json::Arr(
+                                    cfg.points
+                                        .iter()
+                                        .map(|pt| {
+                                            Json::obj(vec![
+                                                ("path", Json::str(pt.path)),
+                                                (
+                                                    "precision",
+                                                    Json::str(pt.precision.clone()),
+                                                ),
+                                                ("mode", Json::str(pt.mode)),
+                                                ("lanes", Json::num(pt.lanes as f64)),
+                                                ("samples", Json::num(pt.samples as f64)),
+                                                (
+                                                    "samples_per_s",
+                                                    Json::num(pt.samples_per_s),
+                                                ),
+                                            ])
+                                        })
+                                        .collect(),
+                                ),
+                            ),
+                            (
+                                "speedups",
+                                Json::Obj(
+                                    cfg.speedups
+                                        .iter()
+                                        .map(|(k, v)| (k.clone(), Json::num(*v)))
+                                        .collect(),
+                                ),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Golden-schema check for `BENCH_throughput.json` — run by the CLI on
+/// its own output and by CI on the uploaded artifact, so a drifting
+/// writer can never silently break the cross-PR trajectory.
+pub fn validate(v: &Json) -> Result<()> {
+    ensure!(
+        v.field("experiment")?.as_str()? == "bench_throughput",
+        "wrong experiment tag"
+    );
+    ensure!(
+        v.field("schema_version")?.as_usize()? == 1,
+        "unknown schema version"
+    );
+    v.field("smoke")?.as_bool().context("smoke flag")?;
+    v.field("tile")?.as_usize().context("tile")?;
+    v.field("lanes")?.as_usize().context("lanes")?;
+    let configs = v.field("configs")?.as_arr()?;
+    ensure!(!configs.is_empty(), "configs must be non-empty");
+    for cfg in configs {
+        cfg.field("dataset")?.as_str()?;
+        for key in ["m", "p", "n", "samples"] {
+            cfg.field(key)?.as_usize().with_context(|| key.to_string())?;
+        }
+        let points = cfg.field("points")?.as_arr()?;
+        ensure!(!points.is_empty(), "points must be non-empty");
+        for pt in points {
+            let path = pt.field("path")?.as_str()?;
+            ensure!(
+                path == "train" || path == "forward",
+                "unknown path '{path}'"
+            );
+            pt.field("precision")?.as_str()?;
+            let mode = pt.field("mode")?.as_str()?;
+            ensure!(
+                mode == "per-sample" || mode == "tiled" || mode == "multilane",
+                "unknown mode '{mode}'"
+            );
+            ensure!(pt.field("lanes")?.as_usize()? >= 1, "lanes must be >= 1");
+            pt.field("samples")?.as_usize()?;
+            let tput = pt.field("samples_per_s")?.as_f64()?;
+            ensure!(
+                tput.is_finite() && tput > 0.0,
+                "samples_per_s must be positive, got {tput}"
+            );
+        }
+        cfg.field("speedups")?.as_obj()?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn smoke_opts() -> BenchOptions {
+        BenchOptions {
+            datasets: vec!["waveform".into()],
+            tile: 64,
+            lanes: 2,
+            smoke: true,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn smoke_run_produces_valid_schema() {
+        let opts = smoke_opts();
+        let results = run(&opts).unwrap();
+        assert_eq!(results.len(), 1);
+        let cfg = &results[0];
+        assert_eq!(cfg.dataset, "waveform");
+        assert_eq!((cfg.m, cfg.p, cfg.n), (32, 16, 8));
+        // The full grid: 2 train f32 + 2 train fxp + 2 forward f32 +
+        // 3 forward fxp.
+        assert_eq!(cfg.points.len(), 9);
+        assert!(cfg.points.iter().all(|p| p.samples_per_s > 0.0));
+        let json = to_json(&opts, &results);
+        let parsed = Json::parse(&json.to_string_pretty()).unwrap();
+        validate(&parsed).unwrap();
+        let table = render(&opts, &results);
+        assert!(table.contains("multilane"), "{table}");
+    }
+
+    #[test]
+    fn validate_rejects_drifted_schema() {
+        let opts = smoke_opts();
+        let results = run(&opts).unwrap();
+        let good = to_json(&opts, &results);
+        // Drop a required field.
+        let mut map = good.as_obj().unwrap().clone();
+        map.remove("configs");
+        assert!(validate(&Json::Obj(map)).is_err());
+        // Wrong experiment tag.
+        let mut map = good.as_obj().unwrap().clone();
+        map.insert("experiment".into(), Json::str("something_else"));
+        assert!(validate(&Json::Obj(map)).is_err());
+        // Empty configs.
+        let mut map = good.as_obj().unwrap().clone();
+        map.insert("configs".into(), Json::Arr(vec![]));
+        assert!(validate(&Json::Obj(map)).is_err());
+    }
+}

@@ -3,6 +3,7 @@
 //! the runnable examples and the bench harnesses, so every entry point
 //! reports the same numbers.
 
+pub mod bench;
 pub mod fig1;
 pub mod fxp_sweep;
 pub mod pareto;

@@ -58,6 +58,41 @@ use crate::rp::{RandomProjection, SparseSignMatrix};
 /// `RETRACT_INTERVAL`.
 pub const HOST_REFRESH_INTERVAL: u64 = 256;
 
+/// Caller-owned scratch workspaces for the tiled fixed-point datapath.
+///
+/// The tile kernels (`apply_tile_raw` / `transform_tile_*`) write every
+/// intermediate into these buffers instead of allocating. Buffers only
+/// grow ([`resize_buf`] never shrinks capacity), so one `Scratch`
+/// reused across steps — even across differently-shaped tiles — is
+/// allocation-free once it has seen the largest shape.
+#[derive(Debug, Clone, Default)]
+pub struct Scratch {
+    /// Quantized entry tile (rows × entry dim).
+    pub xq: Vec<i32>,
+    /// Inter-stage tile (RP outputs / whitened rows).
+    pub stage: Vec<i32>,
+    /// Output tile (rows × n).
+    pub out: Vec<i32>,
+}
+
+impl Scratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Size a scratch vector to `len` words without shrinking its capacity:
+/// reallocation happens only when a larger tile arrives, so steady-state
+/// reuse is allocation-free. Only newly-grown words are zeroed (no
+/// per-tile memset) — every tile kernel fully overwrites the words it
+/// hands out, so stale content never leaks.
+#[inline]
+pub(crate) fn resize_buf(buf: &mut Vec<i32>, len: usize) {
+    if buf.len() != len {
+        buf.resize(len, 0);
+    }
+}
+
 /// Extra fraction bits of the variance-EMA accumulator.
 const VAR_EXTRA_FRAC: u32 = 16;
 
@@ -107,21 +142,44 @@ impl FxpRp {
     /// sub-unity scale (the unit-variance √(p/m)) can rescue sums that
     /// would otherwise saturate — the adder network itself stays exact.
     pub fn apply_raw(&self, x: &[i32]) -> Vec<i32> {
+        let mut out = vec![0i32; self.out_dim];
+        self.apply_row_into(x, &mut out);
+        out
+    }
+
+    /// One sample through the projection into a caller-owned buffer —
+    /// the allocation-free primitive both [`FxpRp::apply_raw`] and
+    /// [`FxpRp::apply_tile_raw`] are built on (bit-identical to each
+    /// other by construction).
+    pub fn apply_row_into(&self, x: &[i32], out: &mut [i32]) {
         assert_eq!(x.len(), self.in_dim, "fxp rp apply shape mismatch");
+        assert_eq!(out.len(), self.out_dim, "fxp rp apply out shape mismatch");
         match (&self.sparse, &self.dense) {
-            (Some(s), _) => s
-                .apply_raw(x)
-                .into_iter()
-                .map(|sum| match &self.scale {
+            (Some(s), _) => s.apply_raw_each(x, |i, sum| {
+                out[i] = match &self.scale {
                     Some(c) => {
                         let p = sum as i128 * c.raw as i128;
                         self.spec.fit(self.spec.rescale_wide(p, c.frac as u32))
                     }
                     None => self.spec.fit(sum),
-                })
-                .collect(),
-            (None, Some(d)) => d.matvec_raw(x),
+                };
+            }),
+            (None, Some(d)) => d.matvec_raw_into(x, out),
             (None, None) => unreachable!("FxpRp holds sparse or dense"),
+        }
+    }
+
+    /// Tiled [`FxpRp::apply_raw`]: `x` is `rows` row-major samples
+    /// (`rows × in_dim` raw words); writes the projected tile
+    /// (`rows × out_dim`) into `out`, which is resized but never shrunk
+    /// — zero allocations in steady state.
+    pub fn apply_tile_raw(&self, x: &[i32], rows: usize, out: &mut Vec<i32>) {
+        assert_eq!(x.len(), rows * self.in_dim, "fxp rp tile shape mismatch");
+        resize_buf(out, rows * self.out_dim);
+        for r in 0..rows {
+            let xin = &x[r * self.in_dim..(r + 1) * self.in_dim];
+            let orow = &mut out[r * self.out_dim..(r + 1) * self.out_dim];
+            self.apply_row_into(xin, orow);
         }
     }
 
@@ -129,6 +187,36 @@ impl FxpRp {
     pub fn apply(&self, x: &[f32]) -> Vec<f32> {
         let xq = self.spec.quantize_vec(x);
         self.spec.dequantize_vec(&self.apply_raw(&xq))
+    }
+}
+
+/// Quantize a whole f32 sample tile (`rows` row-major samples in `x`)
+/// at the fixed-point pipeline ingress and cross the RP→stage format
+/// boundary, staging through caller-owned scratch: `scratch.xq`
+/// receives the quantized entry tile and, with an RP front end,
+/// `scratch.stage` the projected/requantized stage tile. This is the
+/// single ingress definition shared by the coordinator's training and
+/// inference paths *and* the bench harness, so none of them can
+/// quantize inputs differently; it is row-for-row identical to
+/// quantizing each sample on its own.
+pub fn ingress_tile(
+    rp: Option<&FxpRp>,
+    entry_spec: &FxpSpec,
+    stage_spec: &FxpSpec,
+    prescale: f32,
+    x: &[f32],
+    rows: usize,
+    scratch: &mut Scratch,
+) {
+    resize_buf(&mut scratch.xq, x.len());
+    for (q, &v) in scratch.xq.iter_mut().zip(x) {
+        *q = entry_spec.quantize(v * prescale);
+    }
+    if let Some(f) = rp {
+        f.apply_tile_raw(&scratch.xq, rows, &mut scratch.stage);
+        for v in scratch.stage.iter_mut() {
+            *v = stage_spec.requantize_from(*v, entry_spec);
+        }
     }
 }
 
@@ -208,11 +296,22 @@ impl FxpGha {
         self.w.dequantize()
     }
 
+    /// Real value of one raw LSB of the extended variance accumulator —
+    /// the single definition of the `frac_bits + VAR_EXTRA_FRAC`
+    /// scaling shared by [`FxpGha::variances`] and
+    /// [`FxpGha::refresh_coeffs`].
+    fn var_resolution(&self) -> f64 {
+        (2.0f64).powi(-(self.spec.format.frac_bits as i32 + VAR_EXTRA_FRAC as i32))
+    }
+
+    /// λ̂ estimate for component `i` (prescaled-input domain).
+    fn variance_at(&self, i: usize) -> f32 {
+        (self.var_acc[i] as f64 * self.var_resolution()) as f32
+    }
+
     /// λ̂ estimates (in the prescaled-input domain).
     pub fn variances(&self) -> Vec<f32> {
-        let res =
-            (2.0f64).powi(-(self.spec.format.frac_bits as i32 + VAR_EXTRA_FRAC as i32));
-        self.var_acc.iter().map(|&v| (v as f64 * res) as f32).collect()
+        (0..self.output_dim).map(|i| self.variance_at(i)).collect()
     }
 
     pub fn steps(&self) -> u64 {
@@ -240,13 +339,16 @@ impl FxpGha {
 
     /// Recompute the whitening coefficients `σ/√λ̂` (host/LUT side; see
     /// module docs). Between refreshes the forward path is all-integer.
+    /// Reads the extended accumulators directly (no temporary λ̂ vector)
+    /// so the periodic refresh stays off the heap like the rest of the
+    /// steady-state training step.
     pub fn refresh_coeffs(&mut self) {
-        let vars = self.variances();
         let width = self.spec.format.width();
         let sigma = self.target_sigma();
         let floor = self.spec.format.resolution();
-        for (c, v) in self.coeff.iter_mut().zip(&vars) {
-            *c = FxpConst::from_f32(sigma / v.max(floor).sqrt(), width);
+        for i in 0..self.output_dim {
+            let v = self.variance_at(i);
+            self.coeff[i] = FxpConst::from_f32(sigma / v.max(floor).sqrt(), width);
         }
     }
 
@@ -320,18 +422,57 @@ impl FxpGha {
         }
     }
 
+    /// One streaming Sanger update per tile row, in row order — the
+    /// update recursion is inherently sequential, so the tile form is
+    /// bit-identical to per-sample stepping by construction.
+    pub fn step_tile_raw(&mut self, x: &[i32], rows: usize) {
+        let m = self.input_dim;
+        assert_eq!(x.len(), rows * m, "fxp gha tile shape mismatch");
+        for r in 0..rows {
+            self.step_raw(&x[r * m..(r + 1) * m]);
+        }
+    }
+
     /// Project without normalisation: `y = Wx`.
     pub fn project_raw(&self, x: &[i32]) -> Vec<i32> {
         self.w.matvec_raw(x)
     }
 
+    /// Tiled [`FxpGha::project_raw`] into a caller-owned buffer.
+    pub fn project_tile_raw(&self, x: &[i32], rows: usize, out: &mut Vec<i32>) {
+        let (n, m) = (self.output_dim, self.input_dim);
+        assert_eq!(x.len(), rows * m, "fxp gha tile shape mismatch");
+        resize_buf(out, rows * n);
+        for r in 0..rows {
+            self.w
+                .matvec_raw_into(&x[r * m..(r + 1) * m], &mut out[r * n..(r + 1) * n]);
+        }
+    }
+
     /// Whiten: `z_i = coeff_i · (Wx)_i` with `coeff = σ/√λ̂`.
     pub fn whiten_raw(&self, x: &[i32]) -> Vec<i32> {
-        self.project_raw(x)
-            .into_iter()
-            .zip(&self.coeff)
-            .map(|(yi, c)| self.spec.mul_const(yi, c))
-            .collect()
+        let mut out = vec![0i32; self.output_dim];
+        self.whiten_into(x, &mut out);
+        out
+    }
+
+    /// [`FxpGha::whiten_raw`] into a caller-owned buffer (bit-identical;
+    /// the allocation-free form the composed unit's hot path uses).
+    pub fn whiten_into(&self, x: &[i32], out: &mut [i32]) {
+        self.w.matvec_raw_into(x, out);
+        for (o, c) in out.iter_mut().zip(&self.coeff) {
+            *o = self.spec.mul_const(*o, c);
+        }
+    }
+
+    /// Tiled [`FxpGha::whiten_raw`] into a caller-owned buffer.
+    pub fn whiten_tile_raw(&self, x: &[i32], rows: usize, out: &mut Vec<i32>) {
+        let (n, m) = (self.output_dim, self.input_dim);
+        assert_eq!(x.len(), rows * m, "fxp gha tile shape mismatch");
+        resize_buf(out, rows * n);
+        for r in 0..rows {
+            self.whiten_into(&x[r * m..(r + 1) * m], &mut out[r * n..(r + 1) * n]);
+        }
     }
 
     /// The whitening map as a dense f32 matrix `diag(coeff)·W`.
@@ -383,6 +524,15 @@ pub struct FxpEasiRot {
     update_ema: f64,
     y: Vec<i32>,
     g: Vec<i32>,
+    u: Vec<i32>,
+    v: Vec<i32>,
+    /// Wide accumulators for the fused row-streamed u/v pass (u = Bᵀy,
+    /// v = Bᵀg share one contiguous walk over B).
+    acc_u: Vec<i128>,
+    acc_v: Vec<i128>,
+    /// Host-side f32 view of `b` for the bit-exact retraction, reused
+    /// so the periodic dequantize→MGS→requantize stays off the heap.
+    host_buf: Mat,
 }
 
 impl FxpEasiRot {
@@ -417,6 +567,11 @@ impl FxpEasiRot {
             update_ema: 1.0,
             y: vec![0; output_dim],
             g: vec![0; output_dim],
+            u: vec![0; input_dim],
+            v: vec![0; input_dim],
+            acc_u: vec![0; input_dim],
+            acc_v: vec![0; input_dim],
+            host_buf: Mat::zeros(output_dim, input_dim),
         }
     }
 
@@ -445,6 +600,31 @@ impl FxpEasiRot {
         self.b.matvec_raw(z)
     }
 
+    /// [`FxpEasiRot::transform_raw`] into a caller-owned buffer.
+    pub fn transform_into(&self, z: &[i32], out: &mut [i32]) {
+        self.b.matvec_raw_into(z, out);
+    }
+
+    /// Tiled forward transform into a caller-owned buffer.
+    pub fn transform_tile_raw(&self, z: &[i32], rows: usize, out: &mut Vec<i32>) {
+        let (n, m) = (self.output_dim, self.input_dim);
+        assert_eq!(z.len(), rows * m, "fxp easi tile shape mismatch");
+        resize_buf(out, rows * n);
+        for r in 0..rows {
+            self.transform_into(&z[r * m..(r + 1) * m], &mut out[r * n..(r + 1) * n]);
+        }
+    }
+
+    /// One rotation-only update per tile row, in row order (the update
+    /// is sequential; bit-identical to per-sample stepping).
+    pub fn step_tile_raw(&mut self, z: &[i32], rows: usize) {
+        let m = self.input_dim;
+        assert_eq!(z.len(), rows * m, "fxp easi tile shape mismatch");
+        for r in 0..rows {
+            self.step_raw(&z[r * m..(r + 1) * m]);
+        }
+    }
+
     /// One rotation-only update on raw words.
     pub fn step_raw(&mut self, z: &[i32]) {
         let spec = self.spec;
@@ -457,8 +637,30 @@ impl FxpEasiRot {
             let yi = self.y[i];
             self.g[i] = spec.mul(spec.mul(yi, yi), yi);
         }
-        let u = self.b.matvec_t_raw(&self.y);
-        let v = self.b.matvec_t_raw(&self.g);
+        // Fused row-streamed u = Bᵀy, v = Bᵀg: one contiguous walk over
+        // B feeds both wide accumulators; integer sums are exact in any
+        // order, so the raw words are bit-identical to two separate
+        // `matvec_t_raw` passes.
+        for a in self.acc_u.iter_mut() {
+            *a = 0;
+        }
+        for a in self.acc_v.iter_mut() {
+            *a = 0;
+        }
+        for i in 0..n {
+            let (yi, gi) = (self.y[i] as i128, self.g[i] as i128);
+            let row = self.b.row(i);
+            for j in 0..m {
+                let bij = row[j] as i128;
+                self.acc_u[j] += yi * bij;
+                self.acc_v[j] += gi * bij;
+            }
+        }
+        let shift = spec.format.frac_bits as u32;
+        for j in 0..m {
+            self.u[j] = spec.fit(spec.rescale_wide(self.acc_u[j], shift));
+            self.v[j] = spec.fit(spec.rescale_wide(self.acc_v[j], shift));
+        }
         let rel = match self.quant {
             QuantMode::BitExact => {
                 let mut delta2: i128 = 0;
@@ -466,7 +668,7 @@ impl FxpEasiRot {
                 for i in 0..n {
                     let (yi, gi) = (self.y[i], self.g[i]);
                     for j in 0..m {
-                        let t = spec.sub(spec.mul(gi, u[j]), spec.mul(yi, v[j]));
+                        let t = spec.sub(spec.mul(gi, self.u[j]), spec.mul(yi, self.v[j]));
                         let d = spec.mul_const(t, &self.mu);
                         let bij = self.b.get_raw(i, j);
                         delta2 += d as i128 * d as i128;
@@ -491,7 +693,8 @@ impl FxpEasiRot {
                     let gf = spec.dequantize(self.g[i]);
                     for j in 0..m {
                         let d = self.mu_f
-                            * (gf * spec.dequantize(u[j]) - yf * spec.dequantize(v[j]));
+                            * (gf * spec.dequantize(self.u[j])
+                                - yf * spec.dequantize(self.v[j]));
                         let s = shadow.as_slice()[i * m + j];
                         delta2 += (d as f64) * (d as f64);
                         b_norm2 += (s as f64) * (s as f64);
@@ -514,7 +717,8 @@ impl FxpEasiRot {
     /// Host-side retraction to the orthonormal manifold, same cadence
     /// and rationale as the PJRT backend's. Bit-exact mode retracts the
     /// datapath matrix (dequantize → modified Gram–Schmidt →
-    /// requantize); STE retracts the f32 shadow and requantizes.
+    /// requantize, through the reusable host buffer); STE retracts the
+    /// f32 shadow and requantizes.
     pub fn retract(&mut self) {
         match &mut self.shadow {
             Some(shadow) => {
@@ -522,9 +726,9 @@ impl FxpEasiRot {
                 self.b.quantize_from(shadow);
             }
             None => {
-                let mut m = self.b.dequantize();
-                orthonormalize_rows(&mut m);
-                self.b.quantize_from(&m);
+                self.b.dequantize_into(&mut self.host_buf);
+                orthonormalize_rows(&mut self.host_buf);
+                self.b.quantize_from(&self.host_buf);
             }
         }
     }
@@ -567,6 +771,9 @@ pub struct FxpDrUnit {
     /// ±4σ clamp on whitened inputs to the rotation (mirrors DrUnit's
     /// ±4 clamp in the σ=1 domain).
     clamp_raw: i32,
+    /// Reusable whitened-sample buffer for the training step (the
+    /// whiten→clamp→requantize staging between the two kernels).
+    zbuf: Vec<i32>,
 }
 
 impl FxpDrUnit {
@@ -610,6 +817,7 @@ impl FxpDrUnit {
             gha,
             rot,
             clamp_raw,
+            zbuf: vec![0; config.output_dim],
         }
     }
 
@@ -633,31 +841,49 @@ impl FxpDrUnit {
 
     /// Quantize an f32 sample into the unit's input domain.
     pub fn quantize_input(&self, x: &[f32]) -> Vec<i32> {
-        let ps = self.prescale();
-        x.iter()
-            .map(|&v| self.config.whiten_spec.quantize(v * ps))
-            .collect()
+        let mut out = vec![0i32; x.len()];
+        self.quantize_input_into(x, &mut out);
+        out
     }
 
-    /// Whiten one sample and deliver it in the rotation stage's format
-    /// (±4σ clamp in the whitening domain, then the stage-boundary
-    /// requantization — a no-op for uniform plans).
-    fn whiten_for_rotation(&self, x: &[i32]) -> Vec<i32> {
-        let mut z = self.gha.whiten_raw(x);
-        for v in &mut z {
-            *v = (*v).clamp(-self.clamp_raw, self.clamp_raw);
+    /// [`FxpDrUnit::quantize_input`] into a caller-owned buffer.
+    pub fn quantize_input_into(&self, x: &[f32], out: &mut [i32]) {
+        assert_eq!(x.len(), out.len(), "fxp unit quantize shape mismatch");
+        let ps = self.prescale();
+        for (o, &v) in out.iter_mut().zip(x) {
+            *o = self.config.whiten_spec.quantize(v * ps);
         }
-        self.config
-            .rot_spec
-            .requantize_vec_from(&z, &self.config.whiten_spec)
     }
 
     /// One streaming sample (raw words, already prescaled/quantized).
+    /// Allocation-free: the whiten→clamp→requantize staging between the
+    /// two kernels runs in the unit's reusable buffer.
     pub fn step_raw(&mut self, x: &[i32]) {
         self.gha.step_raw(x);
         if self.config.rotate && self.gha.steps() > self.config.rot_warmup {
-            let z = self.whiten_for_rotation(x);
-            self.rot.step_raw(&z);
+            self.gha.whiten_into(x, &mut self.zbuf);
+            let (wspec, rspec) = (self.config.whiten_spec, self.config.rot_spec);
+            let clamp = self.clamp_raw;
+            for v in &mut self.zbuf {
+                // ±4σ clamp in the whitening domain, then the
+                // stage-boundary requantization (no-op for uniform
+                // plans) — same per-element sequence as the original
+                // whiten_for_rotation staging.
+                *v = rspec.requantize_from((*v).clamp(-clamp, clamp), &wspec);
+            }
+            self.rot.step_raw(&self.zbuf);
+        }
+    }
+
+    /// Consume a whole tile of raw samples (`rows × input_dim`,
+    /// row-major), in row order — bit-identical to per-sample stepping
+    /// (the Sanger/EASI update order is preserved; only the staging
+    /// allocations go away).
+    pub fn step_tile_raw(&mut self, x: &[i32], rows: usize) {
+        let m = self.config.input_dim;
+        assert_eq!(x.len(), rows * m, "fxp unit tile shape mismatch");
+        for r in 0..rows {
+            self.step_raw(&x[r * m..(r + 1) * m]);
         }
     }
 
@@ -677,16 +903,104 @@ impl FxpDrUnit {
     /// Forward transform on raw words. Output words are in
     /// [`FxpDrUnit::output_spec`]'s format.
     pub fn transform_raw(&self, x: &[i32]) -> Vec<i32> {
-        let z = self.gha.whiten_raw(x);
+        let mut out = vec![0i32; self.config.output_dim];
+        let mut scratch = Scratch::new();
+        self.transform_into(x, &mut scratch, &mut out);
+        out
+    }
+
+    /// One-sample forward into a caller-owned buffer, staging through
+    /// `scratch` — the allocation-free primitive behind every forward
+    /// path (per-sample, tiled and multi-lane), so all of them are
+    /// bit-identical by construction.
+    pub fn transform_into(&self, x: &[i32], scratch: &mut Scratch, out: &mut [i32]) {
+        let n = self.config.output_dim;
+        assert_eq!(out.len(), n, "fxp unit transform out shape mismatch");
         if self.config.rotate {
-            let zr = self
-                .config
-                .rot_spec
-                .requantize_vec_from(&z, &self.config.whiten_spec);
-            self.rot.transform_raw(&zr)
+            resize_buf(&mut scratch.stage, n);
+            self.gha.whiten_into(x, &mut scratch.stage);
+            let (wspec, rspec) = (self.config.whiten_spec, self.config.rot_spec);
+            for v in scratch.stage.iter_mut() {
+                *v = rspec.requantize_from(*v, &wspec);
+            }
+            self.rot.transform_into(&scratch.stage, out);
         } else {
-            z
+            self.gha.whiten_into(x, out);
         }
+    }
+
+    /// Tiled forward transform into a caller-owned slice
+    /// (`rows × output_dim`).
+    pub fn transform_tile_into(
+        &self,
+        x: &[i32],
+        rows: usize,
+        scratch: &mut Scratch,
+        out: &mut [i32],
+    ) {
+        let (n, m) = (self.config.output_dim, self.config.input_dim);
+        assert_eq!(x.len(), rows * m, "fxp unit tile shape mismatch");
+        assert_eq!(out.len(), rows * n, "fxp unit tile out shape mismatch");
+        for r in 0..rows {
+            self.transform_into(
+                &x[r * m..(r + 1) * m],
+                scratch,
+                &mut out[r * n..(r + 1) * n],
+            );
+        }
+    }
+
+    /// Tiled forward transform, resizing the caller-owned output tile.
+    pub fn transform_tile_raw(
+        &self,
+        x: &[i32],
+        rows: usize,
+        scratch: &mut Scratch,
+        out: &mut Vec<i32>,
+    ) {
+        resize_buf(out, rows * self.config.output_dim);
+        self.transform_tile_into(x, rows, scratch, out);
+    }
+
+    /// Multi-lane tiled forward transform: shards the tile's rows into
+    /// `lanes` contiguous chunks, one scoped thread per chunk, each
+    /// writing its own disjoint slice of `out`. The merge is therefore
+    /// deterministic by construction and the raw words are bit-identical
+    /// to the per-sample path (every row's computation is independent
+    /// in the forward direction; only training updates are sequential).
+    pub fn transform_tile_raw_multilane(
+        &self,
+        x: &[i32],
+        rows: usize,
+        lanes: usize,
+        out: &mut Vec<i32>,
+    ) {
+        let (n, m) = (self.config.output_dim, self.config.input_dim);
+        assert_eq!(x.len(), rows * m, "fxp unit tile shape mismatch");
+        resize_buf(out, rows * n);
+        if rows == 0 {
+            return;
+        }
+        let lanes = lanes.clamp(1, rows);
+        if lanes == 1 {
+            let mut scratch = Scratch::new();
+            self.transform_tile_into(x, rows, &mut scratch, out);
+            return;
+        }
+        // Ceil-divide so every lane gets a contiguous run of rows and
+        // the chunk boundaries are a pure function of (rows, lanes).
+        let chunk = (rows + lanes - 1) / lanes;
+        std::thread::scope(|s| {
+            for (lane, out_chunk) in out.chunks_mut(chunk * n).enumerate() {
+                let rows_here = out_chunk.len() / n;
+                let start = lane * chunk;
+                let x_chunk = &x[start * m..(start + rows_here) * m];
+                s.spawn(move || {
+                    let mut scratch = Scratch::new();
+                    self.transform_tile_into(x_chunk, rows_here, &mut scratch, out_chunk);
+                });
+            }
+        });
     }
 
     /// Forward transform from f32 (quantize → integer datapath →
@@ -1233,6 +1547,275 @@ mod tests {
         });
         ste.step_rows(&x);
         assert_eq!(ste.transform(x.row(0)).len(), n);
+    }
+
+    // -------------------------------------------- tiled / multi-lane
+
+    use crate::fxp::{Overflow, Rounding};
+
+    /// (whiten, rot) spec pairs covering uniform and mixed plans and
+    /// both overflow/rounding policy axes.
+    fn tile_plan_grid() -> Vec<(FxpSpec, FxpSpec)> {
+        let q412 = FxpSpec::q(4, 12);
+        let mut wrap = q412;
+        wrap.overflow = Overflow::Wrap;
+        let mut trunc = q412;
+        trunc.rounding = Rounding::Truncate;
+        let mut wrap_trunc = FxpSpec::q(4, 8);
+        wrap_trunc.overflow = Overflow::Wrap;
+        wrap_trunc.rounding = Rounding::Truncate;
+        vec![
+            (q412, q412),             // uniform, sat+nearest
+            (wrap, wrap),             // uniform, wrap
+            (trunc, trunc),           // uniform, truncate
+            (wrap_trunc, wrap_trunc), // uniform, wrap+truncate
+            (FxpSpec::q(8, 16), FxpSpec::q(1, 15)), // mixed widths
+            (FxpSpec::q(8, 16), trunc), // mixed width + policy
+        ]
+    }
+
+    #[test]
+    fn rp_tile_matches_per_sample() {
+        let spec = FxpSpec::q(8, 16);
+        for rp in [
+            RandomProjection::new(32, 8, RpDistribution::Ternary, 3).unit_variance(),
+            RandomProjection::new(32, 8, RpDistribution::Ternary, 5),
+            RandomProjection::new(32, 8, RpDistribution::Gaussian, 4),
+        ] {
+            let frp = FxpRp::from_rp(&rp, spec);
+            let rows = 17;
+            let x: Vec<i32> = (0..rows * 32)
+                .map(|i| ((i * 37) % 4001) as i32 - 2000)
+                .collect();
+            let mut tile = Vec::new();
+            frp.apply_tile_raw(&x, rows, &mut tile);
+            assert_eq!(tile.len(), rows * 8);
+            for r in 0..rows {
+                assert_eq!(
+                    &tile[r * 8..(r + 1) * 8],
+                    frp.apply_raw(&x[r * 32..(r + 1) * 32]).as_slice(),
+                    "row {r} diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gha_tile_step_and_outputs_match_per_sample() {
+        let spec = FxpSpec::q(4, 12);
+        let (m, n, rows) = (10usize, 4usize, 300usize);
+        let x = bounded_data(rows, m, 103);
+        let tile: Vec<i32> = x.as_slice().iter().map(|&v| spec.quantize(v)).collect();
+        let mut a = FxpGha::new(m, n, 5e-3, 5e-3, 11, spec, QuantMode::BitExact);
+        let mut b = a.clone();
+        for r in 0..rows {
+            a.step_raw(&tile[r * m..(r + 1) * m]);
+        }
+        b.step_tile_raw(&tile, rows);
+        assert_eq!(a.subspace().as_slice(), b.subspace().as_slice());
+        let mut whiten_tile = Vec::new();
+        b.whiten_tile_raw(&tile, rows, &mut whiten_tile);
+        let mut project_tile = Vec::new();
+        b.project_tile_raw(&tile, rows, &mut project_tile);
+        for r in 0..rows {
+            let xr = &tile[r * m..(r + 1) * m];
+            assert_eq!(&whiten_tile[r * n..(r + 1) * n], a.whiten_raw(xr).as_slice());
+            assert_eq!(
+                &project_tile[r * n..(r + 1) * n],
+                a.project_raw(xr).as_slice()
+            );
+        }
+    }
+
+    #[test]
+    fn easi_tile_step_and_transform_match_per_sample() {
+        let spec = FxpSpec::q(4, 12);
+        let (m, rows) = (5usize, 400usize);
+        let x = bounded_data(rows, m, 107);
+        let tile: Vec<i32> = x.as_slice().iter().map(|&v| spec.quantize(v)).collect();
+        for quant in [QuantMode::BitExact, QuantMode::Ste] {
+            let mut a = FxpEasiRot::new(m, m, 1e-3, None, spec, quant);
+            let mut b = a.clone();
+            for r in 0..rows {
+                a.step_raw(&tile[r * m..(r + 1) * m]);
+            }
+            b.step_tile_raw(&tile, rows);
+            assert_eq!(a.matrix().as_slice(), b.matrix().as_slice(), "{quant:?}");
+            let mut out = Vec::new();
+            b.transform_tile_raw(&tile, rows, &mut out);
+            for r in 0..rows {
+                let zr = &tile[r * m..(r + 1) * m];
+                assert_eq!(&out[r * m..(r + 1) * m], a.transform_raw(zr).as_slice());
+            }
+        }
+    }
+
+    #[test]
+    fn unit_tile_and_multilane_bit_identical_across_plans() {
+        // The acceptance-bar test: for uniform and mixed plans across
+        // saturate/wrap × nearest/truncate, tile training must leave
+        // the unit in exactly the per-sample state, and the tiled and
+        // multi-lane forward paths must emit exactly the per-sample
+        // raw words.
+        for (wspec, rspec) in tile_plan_grid() {
+            let (m, n, rows) = (8usize, 3usize, 500usize);
+            let x = bounded_data(rows, m, 109);
+            let cfg = FxpUnitConfig {
+                input_dim: m,
+                output_dim: n,
+                mu_w: 5e-3,
+                mu_rot: 1e-3,
+                rotate: true,
+                rot_warmup: 100,
+                seed: 5,
+                whiten_spec: wspec,
+                rot_spec: rspec,
+                quant: QuantMode::BitExact,
+            };
+            let mut per_sample = FxpDrUnit::new(cfg);
+            let mut tiled = FxpDrUnit::new(cfg);
+            let mut tile: Vec<i32> = Vec::with_capacity(rows * m);
+            for i in 0..rows {
+                tile.extend(per_sample.quantize_input(x.row(i)));
+            }
+            for r in 0..rows {
+                per_sample.step_raw(&tile[r * m..(r + 1) * m]);
+            }
+            tiled.step_tile_raw(&tile, rows);
+            assert_eq!(
+                per_sample.effective_matrix().as_slice(),
+                tiled.effective_matrix().as_slice(),
+                "tile training diverged (w={} r={})",
+                wspec.label(),
+                rspec.label()
+            );
+
+            let mut want: Vec<i32> = Vec::with_capacity(rows * n);
+            for r in 0..rows {
+                want.extend(per_sample.transform_raw(&tile[r * m..(r + 1) * m]));
+            }
+            let mut scratch = Scratch::new();
+            let mut got_tiled = Vec::new();
+            tiled.transform_tile_raw(&tile, rows, &mut scratch, &mut got_tiled);
+            assert_eq!(got_tiled, want, "tiled forward (w={})", wspec.label());
+            for lanes in [1usize, 2, 3, 8, rows + 7] {
+                let mut got_lanes = Vec::new();
+                tiled.transform_tile_raw_multilane(&tile, rows, lanes, &mut got_lanes);
+                assert_eq!(
+                    got_lanes, want,
+                    "multilane forward lanes={lanes} (w={})",
+                    wspec.label()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn unit_tile_bit_identical_under_ste() {
+        // Same bit-identity bar for the STE trainer (shadow-weight
+        // path) on a uniform and a mixed plan.
+        for (wspec, rspec) in [
+            (FxpSpec::q(4, 12), FxpSpec::q(4, 12)),
+            (FxpSpec::q(8, 16), FxpSpec::q(1, 15)),
+        ] {
+            let (m, n, rows) = (8usize, 3usize, 400usize);
+            let x = bounded_data(rows, m, 113);
+            let cfg = FxpUnitConfig {
+                input_dim: m,
+                output_dim: n,
+                mu_w: 5e-3,
+                mu_rot: 1e-3,
+                rotate: true,
+                rot_warmup: 50,
+                seed: 9,
+                whiten_spec: wspec,
+                rot_spec: rspec,
+                quant: QuantMode::Ste,
+            };
+            let mut per_sample = FxpDrUnit::new(cfg);
+            let mut tiled = FxpDrUnit::new(cfg);
+            let mut tile: Vec<i32> = Vec::with_capacity(rows * m);
+            for i in 0..rows {
+                tile.extend(per_sample.quantize_input(x.row(i)));
+            }
+            for r in 0..rows {
+                per_sample.step_raw(&tile[r * m..(r + 1) * m]);
+            }
+            tiled.step_tile_raw(&tile, rows);
+            assert_eq!(
+                per_sample.effective_matrix().as_slice(),
+                tiled.effective_matrix().as_slice()
+            );
+            let mut want: Vec<i32> = Vec::new();
+            for r in 0..rows {
+                want.extend(per_sample.transform_raw(&tile[r * m..(r + 1) * m]));
+            }
+            let mut got = Vec::new();
+            tiled.transform_tile_raw_multilane(&tile, rows, 4, &mut got);
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_across_shapes_is_safe() {
+        // One Scratch driven through units of different (m, n) shapes,
+        // interleaved, must produce exactly what fresh scratch produces
+        // — the buffers are sized per call, never assumed.
+        let spec = FxpSpec::q(4, 12);
+        let mut shared = Scratch::new();
+        for (m, n, rows, seed) in
+            [(12usize, 5usize, 40usize, 1u64), (5, 2, 90, 2), (16, 7, 11, 3), (5, 2, 90, 2)]
+        {
+            let x = bounded_data(rows, m, 200 + seed);
+            let mut unit = FxpDrUnit::new(FxpUnitConfig {
+                input_dim: m,
+                output_dim: n,
+                mu_w: 5e-3,
+                mu_rot: 1e-3,
+                rotate: true,
+                rot_warmup: 10,
+                seed,
+                whiten_spec: spec,
+                rot_spec: spec,
+                quant: QuantMode::BitExact,
+            });
+            let mut tile: Vec<i32> = Vec::with_capacity(rows * m);
+            for i in 0..rows {
+                tile.extend(unit.quantize_input(x.row(i)));
+            }
+            unit.step_tile_raw(&tile, rows);
+            let mut via_shared = Vec::new();
+            unit.transform_tile_raw(&tile, rows, &mut shared, &mut via_shared);
+            let mut fresh = Scratch::new();
+            let mut via_fresh = Vec::new();
+            unit.transform_tile_raw(&tile, rows, &mut fresh, &mut via_fresh);
+            assert_eq!(via_shared, via_fresh, "shape ({m},{n}) corrupted scratch");
+        }
+    }
+
+    #[test]
+    fn multilane_empty_and_tiny_tiles() {
+        let spec = FxpSpec::q(4, 12);
+        let unit = FxpDrUnit::new(FxpUnitConfig {
+            input_dim: 6,
+            output_dim: 2,
+            mu_w: 5e-3,
+            mu_rot: 1e-3,
+            rotate: true,
+            rot_warmup: 0,
+            seed: 1,
+            whiten_spec: spec,
+            rot_spec: spec,
+            quant: QuantMode::BitExact,
+        });
+        let mut out = vec![99i32; 4];
+        unit.transform_tile_raw_multilane(&[], 0, 4, &mut out);
+        assert!(out.is_empty(), "empty tile must clear the output");
+        // One row, many lanes: clamps to one lane.
+        let tile: Vec<i32> = (0..6).map(|i| spec.quantize(i as f32 * 0.1)).collect();
+        let mut got = Vec::new();
+        unit.transform_tile_raw_multilane(&tile, 1, 16, &mut got);
+        assert_eq!(got, unit.transform_raw(&tile));
     }
 
     #[test]

@@ -58,6 +58,16 @@ impl FxpMat {
         )
     }
 
+    /// Dequantize into an existing same-shape matrix — the
+    /// allocation-free form used by the host-side retraction so the
+    /// periodic cadence stays off the heap too.
+    pub fn dequantize_into(&self, m: &mut Mat) {
+        assert_eq!((self.rows, self.cols), m.shape(), "fxp dequantize_into shape");
+        for (o, &r) in m.as_mut_slice().iter_mut().zip(&self.raw) {
+            *o = self.spec.dequantize(r);
+        }
+    }
+
     /// `(rows, cols)`.
     pub fn shape(&self) -> (usize, usize) {
         (self.rows, self.cols)
@@ -101,28 +111,46 @@ impl FxpMat {
 
     /// `y = M x`, one wide-accumulator dot per row.
     pub fn matvec_raw(&self, x: &[i32]) -> Vec<i32> {
+        let mut out = vec![0i32; self.rows];
+        self.matvec_raw_into(x, &mut out);
+        out
+    }
+
+    /// [`FxpMat::matvec_raw`] into a caller-owned buffer — the
+    /// allocation-free form the tiled datapath runs on. Bit-identical
+    /// to the allocating call.
+    pub fn matvec_raw_into(&self, x: &[i32], out: &mut [i32]) {
         assert_eq!(x.len(), self.cols, "fxp matvec shape mismatch");
-        (0..self.rows)
-            .map(|i| self.spec.dot_raw(self.row(i), x))
-            .collect()
+        assert_eq!(out.len(), self.rows, "fxp matvec out shape mismatch");
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = self.spec.dot_raw(self.row(i), x);
+        }
     }
 
     /// `y = Mᵀ x`: wide accumulators per output column, rounded and
     /// saturated once at write-back (same arithmetic as
-    /// [`FxpSpec::dot_raw`], streamed row-wise).
+    /// [`FxpSpec::dot_raw`]).
     pub fn matvec_t_raw(&self, x: &[i32]) -> Vec<i32> {
+        let mut out = vec![0i32; self.cols];
+        self.matvec_t_raw_into(x, &mut out);
+        out
+    }
+
+    /// [`FxpMat::matvec_t_raw`] into a caller-owned buffer. Walks the
+    /// matrix column-wise so no accumulator vector is needed; integer
+    /// sums are exact in any order, so the raw words are bit-identical
+    /// to the row-streamed form.
+    pub fn matvec_t_raw_into(&self, x: &[i32], out: &mut [i32]) {
         assert_eq!(x.len(), self.rows, "fxp matvec_t shape mismatch");
-        let mut acc = vec![0i128; self.cols];
-        for (i, &xi) in x.iter().enumerate() {
-            let row = self.row(i);
-            for (a, &rij) in acc.iter_mut().zip(row) {
-                *a += xi as i128 * rij as i128;
-            }
-        }
+        assert_eq!(out.len(), self.cols, "fxp matvec_t out shape mismatch");
         let shift = self.spec.format.frac_bits as u32;
-        acc.into_iter()
-            .map(|a| self.spec.fit(self.spec.rescale_wide(a, shift)))
-            .collect()
+        for (j, o) in out.iter_mut().enumerate() {
+            let mut acc: i128 = 0;
+            for (i, &xi) in x.iter().enumerate() {
+                acc += xi as i128 * self.raw[i * self.cols + j] as i128;
+            }
+            *o = self.spec.fit(self.spec.rescale_wide(acc, shift));
+        }
     }
 }
 

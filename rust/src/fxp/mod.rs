@@ -66,7 +66,7 @@
 pub mod kernels;
 pub mod mat;
 
-pub use kernels::{FxpDrUnit, FxpEasiRot, FxpGha, FxpRp, FxpUnitConfig};
+pub use kernels::{FxpDrUnit, FxpEasiRot, FxpGha, FxpRp, FxpUnitConfig, Scratch};
 pub use mat::FxpMat;
 
 use anyhow::{bail, Result};

@@ -166,11 +166,19 @@ impl GhaWhitener {
 
     /// Whiten: `z_i = (Wx)_i / √λ̂_i`.
     pub fn whiten(&self, x: &[f32]) -> Vec<f32> {
-        let mut y = self.project(x);
-        for (yi, &v) in y.iter_mut().zip(&self.var) {
-            *yi /= v.max(1e-9).sqrt();
-        }
+        let mut y = vec![0.0f32; self.w.rows_count()];
+        self.whiten_into(x, &mut y);
         y
+    }
+
+    /// [`GhaWhitener::whiten`] into a caller-owned buffer — identical
+    /// arithmetic, no per-sample allocation (the composed unit's hot
+    /// path stages through its scratch buffer with this).
+    pub fn whiten_into(&self, x: &[f32], out: &mut [f32]) {
+        self.w.matvec_into(x, out);
+        for (o, &v) in out.iter_mut().zip(&self.var) {
+            *o /= v.max(1e-9).sqrt();
+        }
     }
 
     /// The whitening transform as a dense matrix `diag(λ̂^{-1/2}) W`.

@@ -107,15 +107,28 @@ impl Mat {
         self.data.chunks_exact(self.cols)
     }
 
-    /// Copy column `j` out.
-    pub fn col(&self, j: usize) -> Vec<f32> {
-        (0..self.rows).map(|i| self.get(i, j)).collect()
+    /// Iterate over column `j`, top to bottom — column access without a
+    /// temporary vector (callers that need a buffer collect explicitly).
+    pub fn col(&self, j: usize) -> impl Iterator<Item = f32> + '_ {
+        assert!(j < self.cols, "col index out of range");
+        (0..self.rows).map(move |i| self.get(i, j))
     }
 
     /// Matrix–vector product `self * x`.
     pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.rows];
+        self.matvec_into(x, &mut out);
+        out
+    }
+
+    /// [`Mat::matvec`] into a caller-owned buffer — the allocation-free
+    /// form the tiled datapath runs on (identical arithmetic).
+    pub fn matvec_into(&self, x: &[f32], out: &mut [f32]) {
         assert_eq!(x.len(), self.cols, "matvec shape mismatch");
-        self.rows().map(|r| dot(r, x)).collect()
+        assert_eq!(out.len(), self.rows, "matvec out shape mismatch");
+        for (r, o) in self.rows().zip(out.iter_mut()) {
+            *o = dot(r, x);
+        }
     }
 
     /// Transposed matrix–vector product `selfᵀ * x`.
@@ -248,8 +261,25 @@ impl Mat {
     /// Apply `self` (as a linear map) to every row of `x`, producing a
     /// new sample matrix: `out[i] = self * x[i]` — i.e. `X * selfᵀ`.
     pub fn apply_rows(&self, x: &Mat) -> Mat {
+        let mut out = Mat::zeros(x.rows, self.rows);
+        self.apply_rows_into(x, &mut out);
+        out
+    }
+
+    /// [`Mat::apply_rows`] into a caller-owned output matrix
+    /// (`x.rows × self.rows`) — the tile form reused across batches so
+    /// the steady-state training loop stops allocating a projected
+    /// matrix per minibatch.
+    pub fn apply_rows_into(&self, x: &Mat, out: &mut Mat) {
         assert_eq!(self.cols, x.cols, "apply_rows shape mismatch");
-        Mat::from_fn(x.rows, self.rows, |i, j| dot(self.row(j), x.row(i)))
+        assert_eq!(out.shape(), (x.rows, self.rows), "apply_rows out shape");
+        for i in 0..x.rows {
+            let xr = x.row(i);
+            let orow = out.row_mut(i);
+            for (j, o) in orow.iter_mut().enumerate() {
+                *o = dot(self.row(j), xr);
+            }
+        }
     }
 }
 

@@ -46,7 +46,7 @@ fn main() {
     }
 }
 
-const FLAGS: &[&str] = &["no-classifier", "help", "verbose"];
+const FLAGS: &[&str] = &["no-classifier", "help", "verbose", "smoke"];
 
 fn run() -> Result<()> {
     let args = Args::from_env(FLAGS)?;
@@ -58,6 +58,7 @@ fn run() -> Result<()> {
         "fig1" => cmd_fig1(&args),
         "fxp-sweep" => cmd_fxp_sweep(&args),
         "pareto" => cmd_pareto(&args),
+        "bench" => cmd_bench(&args),
         "artifacts" => cmd_artifacts(&args),
         "timing" => cmd_timing(&args),
         "help" | "--help" => {
@@ -88,6 +89,13 @@ COMMANDS:
               --seed S --json FILE. Plans are precision strings
               (`;`-separated — the plan syntax itself uses commas);
               default grid mixes uniform/mixed and bit-exact/STE.
+  bench       datapath throughput: f32 vs fixed point, per-sample vs
+              tiled vs multi-lane, train + forward paths. Proves
+              bit-identity before timing, writes the golden-schema'd
+              BENCH_throughput.json. Options: --datasets waveform,har
+              --tile T (default 256) --lanes L (default 4) --seed S
+              --json FILE (default BENCH_throughput.json) --smoke
+              (tiny CI sizes, same schema)
   artifacts   list AOT executables from the manifest
   timing      clock/latency model for EASI vs RP+EASI
 
@@ -106,6 +114,11 @@ TRAIN OPTIONS:
                                       backend only)
   --input-dim M --intermediate-dim P --output-dim N
   --mu F --epochs E --batch B --seed S --queue-depth Q
+  --lanes L                          (forward-path lanes for fixed-point
+                                      bulk transforms; bit-identical
+                                      merge, default 1. The f32 engine
+                                      transforms via one dense matmul
+                                      and ignores this)
   --artifacts DIR                    (default artifacts/)
   --config FILE.json                 (load config, flags override)
   --no-classifier                    (skip the MLP stage)
@@ -354,6 +367,33 @@ fn cmd_pareto(args: &Args) -> Result<()> {
             .with_context(|| format!("writing {path}"))?;
         println!("wrote {path}");
     }
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let opts = dimred::experiments::bench::BenchOptions {
+        datasets: args
+            .str_or("datasets", "waveform,har")
+            .split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(|s| s.trim().to_string())
+            .collect(),
+        tile: args.usize_or("tile", 256)?,
+        lanes: args.usize_or("lanes", 4)?,
+        smoke: args.flag("smoke"),
+        seed: args.u64_or("seed", 2018)?,
+    };
+    let results = dimred::experiments::bench::run(&opts)?;
+    println!("{}", dimred::experiments::bench::render(&opts, &results));
+    let path = args.str_or("json", "BENCH_throughput.json");
+    let json = dimred::experiments::bench::to_json(&opts, &results);
+    let text = json.to_string_pretty();
+    // Self-check against the golden schema before anything downstream
+    // (CI, cross-PR diffs) consumes the file.
+    dimred::experiments::bench::validate(&dimred::util::json::Json::parse(&text)?)
+        .context("BENCH_throughput schema self-check")?;
+    std::fs::write(&path, text).with_context(|| format!("writing {path}"))?;
+    println!("wrote {path}");
     Ok(())
 }
 

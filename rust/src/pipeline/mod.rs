@@ -14,7 +14,7 @@ pub use unit::{DrUnit, DrUnitConfig};
 
 use crate::datasets::Dataset;
 use crate::easi::{EasiConfig, EasiMode, EasiTrainer};
-use crate::fxp::{self, FxpEasiRot, FxpRp, FxpSpec, Precision, PrecisionPlan};
+use crate::fxp::{self, FxpEasiRot, FxpRp, FxpSpec, Precision, PrecisionPlan, Scratch};
 use crate::linalg::Mat;
 use crate::pca::dct::Dct1d;
 use crate::pca::BatchPca;
@@ -280,19 +280,29 @@ impl DrPipeline {
         };
         let entry = if fxp_rp.is_some() { plan.rp } else { stage_in_spec };
         let prescale = plan.entry_prescale(fxp_rp.is_some(), &stage_in_spec);
-        // Quantized training view: prescale + quantize each sample,
-        // push it through the quantized RP network once, and cross the
-        // RP→stage boundary.
-        let staged_raw: Vec<Vec<i32>> = train_x
-            .rows()
-            .map(|row| {
-                let xq = quantize_prescaled(&entry, prescale, row);
-                match &fxp_rp {
-                    Some(f) => stage_in_spec.requantize_vec_from(&f.apply_raw(&xq), &plan.rp),
-                    None => xq,
-                }
-            })
-            .collect();
+        // Quantized training view, built once as one flat row-major
+        // tile through the crate-wide shared ingress (the same
+        // definition the coordinator and the bench run): prescale +
+        // quantize the whole sample matrix, push the tile through the
+        // quantized RP network, and cross the RP→stage boundary —
+        // row-for-row identical to per-sample ingress, with no
+        // per-sample vectors.
+        let rows = train_x.rows_count();
+        let mut ingress = Scratch::new();
+        fxp::kernels::ingress_tile(
+            fxp_rp.as_ref(),
+            &entry,
+            &stage_in_spec,
+            prescale,
+            train_x.as_slice(),
+            rows,
+            &mut ingress,
+        );
+        let staged_raw: &[i32] = if fxp_rp.is_some() {
+            &ingress.stage
+        } else {
+            &ingress.xq
+        };
         let mut output = stage_in_spec;
         let stage = match spec.stage {
             StageSpec::Easi { mode, mu, epochs } => {
@@ -313,9 +323,7 @@ impl DrPipeline {
                     plan.quant,
                 );
                 for _ in 0..epochs.max(1) {
-                    for row in &staged_raw {
-                        t.step_raw(row);
-                    }
+                    t.step_tile_raw(staged_raw, rows);
                 }
                 output = plan.rot;
                 FittedStage::FxpEasi(t)
@@ -334,9 +342,7 @@ impl DrPipeline {
                     quant: plan.quant,
                 });
                 for _ in 0..epochs.max(1) {
-                    for row in &staged_raw {
-                        u.step_raw(row);
-                    }
+                    u.step_tile_raw(staged_raw, rows);
                 }
                 output = u.output_spec();
                 FittedStage::FxpUnit(u)
@@ -400,14 +406,58 @@ impl DrPipeline {
         }
     }
 
-    /// Transform every row of a sample matrix.
+    /// Transform every row of a sample matrix. Fixed-precision
+    /// pipelines run the whole matrix as one tile through the quantized
+    /// datapath (bit-identical to per-sample [`DrPipeline::transform`],
+    /// without the per-sample staging vectors).
     pub fn transform_rows(&self, x: &Mat) -> Mat {
+        if let Some(io) = self.fxp_io {
+            return self.transform_rows_fixed(&io, x);
+        }
         let rows = x.rows_count();
         let mut out = Vec::with_capacity(rows * self.spec.output_dim);
         for r in x.rows() {
             out.extend(self.transform(r));
         }
         Mat::from_vec(rows, self.spec.output_dim, out)
+    }
+
+    /// The tiled fixed-point bulk transform: the shared ingress
+    /// (quantize at the entry format, project through the quantized RP
+    /// network, cross the stage boundary), then the quantized stage
+    /// tile-at-a-time.
+    fn transform_rows_fixed(&self, io: &FxpIo, x: &Mat) -> Mat {
+        let rows = x.rows_count();
+        let mut ingress = Scratch::new();
+        fxp::kernels::ingress_tile(
+            self.fxp_rp.as_ref(),
+            &io.entry,
+            &io.stage_in,
+            io.prescale,
+            x.as_slice(),
+            rows,
+            &mut ingress,
+        );
+        let staged: &[i32] = if self.fxp_rp.is_some() {
+            &ingress.stage
+        } else {
+            &ingress.xq
+        };
+        let mut raw = Vec::new();
+        match &self.stage {
+            FittedStage::FxpEasi(t) => t.transform_tile_raw(staged, rows, &mut raw),
+            FittedStage::FxpUnit(u) => {
+                let mut scratch = Scratch::new();
+                u.transform_tile_raw(staged, rows, &mut scratch, &mut raw);
+            }
+            FittedStage::Identity => raw.extend_from_slice(staged),
+            _ => unreachable!("fixed pipelines hold quantized stages"),
+        }
+        Mat::from_vec(
+            rows,
+            self.spec.output_dim,
+            raw.iter().map(|&w| io.output.dequantize(w)).collect(),
+        )
     }
 
     /// Map an entire dataset through the pipeline (used before training
@@ -628,6 +678,29 @@ mod tests {
             assert!(v.is_finite());
             let q = rot.dequantize(rot.quantize(v));
             assert!((v - q).abs() < 1e-9, "output off the rot grid: {v}");
+        }
+    }
+
+    #[test]
+    fn fixed_transform_rows_matches_per_sample_transform() {
+        // The tiled bulk path must be bit-identical to per-sample
+        // transform (same raw words, so exactly equal f32 outputs) —
+        // for both uniform and mixed plans.
+        let x = gaussian_data(300, 32, 91);
+        for plan in ["q4.12", "rp=q8.16,whiten=q4.12,rot=q1.15"] {
+            let p = DrPipeline::fit(
+                PipelineSpec::proposed(32, 16, 8, 1e-3, 1, 7)
+                    .with_precision(Precision::parse(plan).unwrap()),
+                &x,
+            );
+            let tiled = p.transform_rows(&x);
+            for i in 0..x.rows_count() {
+                assert_eq!(
+                    tiled.row(i),
+                    p.transform(x.row(i)).as_slice(),
+                    "row {i} diverged under plan {plan}"
+                );
+            }
         }
     }
 

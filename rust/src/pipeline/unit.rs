@@ -107,8 +107,9 @@ impl DrUnit {
     pub fn step(&mut self, x: &[f32]) {
         self.gha.step(x);
         if self.config.rotate && self.gha.steps() > self.config.rot_warmup {
-            let z = self.gha.whiten(x);
-            self.scratch_z.copy_from_slice(&z);
+            // Whiten straight into the scratch buffer (no intermediate
+            // vector — the whole step is allocation-free).
+            self.gha.whiten_into(x, &mut self.scratch_z);
             // Robustness clamp: a whitened coordinate should be O(1);
             // outliers (heavy tails or a still-settling λ̂) are limited
             // so the cubic nonlinearity cannot blow up the rotation.

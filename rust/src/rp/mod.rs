@@ -100,27 +100,47 @@ impl RandomProjection {
     /// Apply to a single sample: `y = scale · R x`. For sparse variants
     /// this is pure add/sub — the hardware-friendly path.
     pub fn apply(&self, x: &[f32]) -> Vec<f32> {
+        let mut y = vec![0.0f32; self.out_dim];
+        self.apply_into(x, &mut y);
+        y
+    }
+
+    /// [`RandomProjection::apply`] into a caller-owned buffer — the
+    /// allocation-free form of the add/sub network (identical
+    /// arithmetic).
+    pub fn apply_into(&self, x: &[f32], out: &mut [f32]) {
         assert_eq!(x.len(), self.in_dim, "rp apply shape mismatch");
-        let mut y = match &self.sparse {
-            Some(s) => s.apply(x),
-            None => self.dense.as_ref().unwrap().matvec(x),
-        };
+        assert_eq!(out.len(), self.out_dim, "rp apply out shape mismatch");
+        match &self.sparse {
+            Some(s) => s.apply_into(x, out),
+            None => self.dense.as_ref().unwrap().matvec_into(x, out),
+        }
         if self.scale != 1.0 {
-            for v in &mut y {
+            for v in out.iter_mut() {
                 *v *= self.scale;
             }
         }
-        y
     }
 
     /// Apply to every row of a sample matrix.
     pub fn apply_rows(&self, x: &Mat) -> Mat {
-        let rows = x.rows_count();
-        let mut out = Vec::with_capacity(rows * self.out_dim);
-        for r in x.rows() {
-            out.extend(self.apply(r));
+        let mut out = Mat::zeros(x.rows_count(), self.out_dim);
+        self.apply_rows_into(x, &mut out);
+        out
+    }
+
+    /// [`RandomProjection::apply_rows`] into a caller-owned matrix
+    /// (`x.rows × out_dim`) — the tile form the trainer reuses across
+    /// minibatches.
+    pub fn apply_rows_into(&self, x: &Mat, out: &mut Mat) {
+        assert_eq!(
+            out.shape(),
+            (x.rows_count(), self.out_dim),
+            "rp apply_rows out shape"
+        );
+        for i in 0..x.rows_count() {
+            self.apply_into(x.row(i), out.row_mut(i));
         }
-        Mat::from_vec(rows, self.out_dim, out)
     }
 
     /// Materialise `scale·R` as a dense matrix (artifact export, cascade

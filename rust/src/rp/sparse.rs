@@ -68,9 +68,17 @@ impl SparseSignMatrix {
 
     /// `y = R x` using only additions and subtractions.
     pub fn apply(&self, x: &[f32]) -> Vec<f32> {
+        let mut y = vec![0.0f32; self.rows];
+        self.apply_into(x, &mut y);
+        y
+    }
+
+    /// [`SparseSignMatrix::apply`] into a caller-owned buffer — the
+    /// allocation-free form the tiled f32 datapath runs on.
+    pub fn apply_into(&self, x: &[f32], out: &mut [f32]) {
         assert_eq!(x.len(), self.cols, "sparse apply shape mismatch");
-        let mut y = Vec::with_capacity(self.rows);
-        for (p, m) in self.plus.iter().zip(&self.minus) {
+        assert_eq!(out.len(), self.rows, "sparse apply out shape mismatch");
+        for ((p, m), o) in self.plus.iter().zip(&self.minus).zip(out.iter_mut()) {
             let mut acc = 0.0f32;
             for &c in p {
                 acc += x[c as usize];
@@ -78,9 +86,8 @@ impl SparseSignMatrix {
             for &c in m {
                 acc -= x[c as usize];
             }
-            y.push(acc);
+            *o = acc;
         }
-        y
     }
 
     /// `y = R x` on raw fixed-point words: the same conditional add/sub
@@ -90,7 +97,17 @@ impl SparseSignMatrix {
     pub fn apply_raw(&self, x: &[i32]) -> Vec<i64> {
         assert_eq!(x.len(), self.cols, "sparse apply shape mismatch");
         let mut y = Vec::with_capacity(self.rows);
-        for (p, m) in self.plus.iter().zip(&self.minus) {
+        self.apply_raw_each(x, |_, acc| y.push(acc));
+        y
+    }
+
+    /// Visit each output row's exact i64 add/sub sum without
+    /// allocating — the primitive behind both [`Self::apply_raw`] and
+    /// the tiled fixed-point RP kernel. Calls `sink(row, sum)` in row
+    /// order.
+    pub fn apply_raw_each(&self, x: &[i32], mut sink: impl FnMut(usize, i64)) {
+        assert_eq!(x.len(), self.cols, "sparse apply shape mismatch");
+        for (i, (p, m)) in self.plus.iter().zip(&self.minus).enumerate() {
             let mut acc = 0i64;
             for &c in p {
                 acc += x[c as usize] as i64;
@@ -98,9 +115,8 @@ impl SparseSignMatrix {
             for &c in m {
                 acc -= x[c as usize] as i64;
             }
-            y.push(acc);
+            sink(i, acc);
         }
-        y
     }
 
     /// Densify (for artifact export and cross-checks).
