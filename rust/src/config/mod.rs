@@ -10,6 +10,8 @@
 use crate::easi::EasiMode;
 use crate::fxp::Precision;
 use crate::rp::RpDistribution;
+use crate::stage::spec::parse_stage_list;
+use crate::stage::{GraphSpec, StageDecl, StageOp};
 use crate::util::cli::Args;
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
@@ -96,6 +98,12 @@ pub struct ExperimentConfig {
     /// Output dimensionality n.
     pub output_dim: usize,
     pub mode: PipelineMode,
+    /// Explicit stage-graph override: a comma-separated stage list
+    /// (`rp:ternary/16,whiten:gha,rot:easi` — see
+    /// [`crate::stage::spec`]) composing an arbitrary DR cascade. When
+    /// set it replaces the `mode` → stage mapping (native backend
+    /// only); `mode` keeps driving the reconfiguration mux.
+    pub stages: Option<String>,
     pub backend: Backend,
     /// Arithmetic of the DR datapath: f32, uniform bit-accurate fixed
     /// point (`"q4.12"`, optionally with `:wrap`/`:trunc` policy
@@ -142,6 +150,7 @@ impl Default for ExperimentConfig {
             intermediate_dim: 16,
             output_dim: 8,
             mode: PipelineMode::RpEasi,
+            stages: None,
             backend: Backend::Native,
             precision: Precision::F32,
             rp_distribution: RpDistribution::Ternary,
@@ -185,6 +194,9 @@ impl ExperimentConfig {
         }
         if let Some(x) = v.get("mode") {
             c.mode = PipelineMode::parse(x.as_str()?)?;
+        }
+        if let Some(x) = v.get("stages") {
+            c.stages = Some(x.as_str()?.to_string());
         }
         if let Some(x) = v.get("backend") {
             c.backend = Backend::parse(x.as_str()?)?;
@@ -245,6 +257,9 @@ impl ExperimentConfig {
         if let Some(m) = args.opt_str("mode") {
             self.mode = PipelineMode::parse(m)?;
         }
+        if let Some(s) = args.opt_str("stages") {
+            self.stages = Some(s.to_string());
+        }
         if let Some(b) = args.opt_str("backend") {
             self.backend = Backend::parse(b)?;
         }
@@ -293,12 +308,62 @@ impl ExperimentConfig {
             "fixed-point precision runs on the native backend only \
              (the AOT artifacts are compiled for f32)"
         );
+        if self.stages.is_some() {
+            anyhow::ensure!(
+                self.backend == Backend::Native,
+                "custom stage lists run on the native backend only \
+                 (the AOT artifacts are compiled per pipeline mode)"
+            );
+            // Surface stage-list errors — unknown/duplicate tokens AND
+            // dimension-chain inconsistencies — at config time, not
+            // mid-run.
+            self.graph_spec()?.resolve()?;
+        }
         Ok(())
+    }
+
+    /// The stage graph this config trains: the explicit `stages` list
+    /// when given, otherwise the legacy mode → stage mapping (the
+    /// paper's proposal is `rp:ternary/p,whiten:gha,rot:easi`).
+    pub fn graph_spec(&self) -> Result<GraphSpec> {
+        let stages = match &self.stages {
+            Some(list) => parse_stage_list(list)?,
+            None => {
+                let mut v = Vec::new();
+                match self.mode {
+                    PipelineMode::RpOnly => bail!("RP-only mode has no trained stage"),
+                    PipelineMode::RpEasi => {
+                        v.push(
+                            StageDecl::new(StageOp::Rp(self.rp_distribution))
+                                .with_dim(self.intermediate_dim),
+                        );
+                        v.push(StageDecl::new(StageOp::WhitenGha));
+                        v.push(StageDecl::new(StageOp::RotEasi));
+                    }
+                    PipelineMode::Easi | PipelineMode::PcaWhiten => {
+                        v.push(StageDecl::new(StageOp::WhitenGha));
+                        v.push(StageDecl::new(StageOp::RotEasi));
+                    }
+                }
+                v
+            }
+        };
+        Ok(GraphSpec {
+            input_dim: self.input_dim,
+            output_dim: self.output_dim,
+            stages,
+            seed: self.seed,
+            precision: self.precision,
+            mu_w: self.mu_w,
+            mu_rot: self.mu,
+            rot_warmup: Some(self.rot_warmup as u64),
+            epochs: self.epochs,
+        })
     }
 
     /// Serialise (reports, checkpoints).
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("dataset", Json::str(self.dataset.clone())),
             ("input_dim", Json::num(self.input_dim as f64)),
             ("intermediate_dim", Json::num(self.intermediate_dim as f64)),
@@ -317,7 +382,11 @@ impl ExperimentConfig {
             ("batch", Json::num(self.batch as f64)),
             ("lanes", Json::num(self.lanes as f64)),
             ("seed", Json::num(self.seed as f64)),
-        ])
+        ];
+        if let Some(s) = &self.stages {
+            fields.push(("stages", Json::str(s.clone())));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -433,6 +502,54 @@ mod tests {
             &Json::parse(r#"{"precision": "q4.12", "backend": "pjrt"}"#).unwrap(),
         );
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn stages_json_cli_and_validation() {
+        let c = ExperimentConfig::from_json(
+            &Json::parse(r#"{"stages": "rp:ternary/16,whiten:gha,rot:easi"}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.stages.as_deref(), Some("rp:ternary/16,whiten:gha,rot:easi"));
+        let g = c.graph_spec().unwrap();
+        assert_eq!(g.stages_label(), "rp:ternary/16,whiten:gha,rot:easi");
+        // Round-trips through to_json.
+        let back =
+            ExperimentConfig::from_json(&Json::parse(&c.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.stages, c.stages);
+        // Unknown stage tokens fail at config time, naming the token.
+        let err = ExperimentConfig::from_json(
+            &Json::parse(r#"{"stages": "frobnicate"}"#).unwrap(),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("frobnicate"), "{err}");
+        // PJRT backend rejects custom stage lists.
+        assert!(ExperimentConfig::from_json(
+            &Json::parse(r#"{"stages": "whiten:gha", "backend": "pjrt"}"#).unwrap()
+        )
+        .is_err());
+        // CLI override.
+        let mut c = ExperimentConfig::default();
+        let args = Args::parse(
+            ["--stages", "dct/16,whiten:gha,rot:easi"]
+                .iter()
+                .map(|s| s.to_string()),
+            &[],
+        )
+        .unwrap();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.stages.as_deref(), Some("dct/16,whiten:gha,rot:easi"));
+        // Legacy modes map onto the equivalent stage lists.
+        let g = ExperimentConfig::default().graph_spec().unwrap();
+        assert_eq!(g.stages_label(), "rp:ternary/16,whiten:gha,rot:easi");
+        let g = ExperimentConfig {
+            mode: PipelineMode::Easi,
+            ..Default::default()
+        }
+        .graph_spec()
+        .unwrap();
+        assert_eq!(g.stages_label(), "whiten:gha,rot:easi");
     }
 
     #[test]

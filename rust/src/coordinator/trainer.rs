@@ -2,25 +2,29 @@
 //! either by the native Rust implementation (baseline/oracle) or by the
 //! AOT-compiled XLA executables through PJRT (the production path).
 //!
-//! Both backends drive the composed DR unit of
-//! [`crate::pipeline::unit`]: optional ternary RP front end → GHA
-//! whitening (+λ̂ scaling) → EASI rotation, with the rotation stage
-//! muxed per the paper's §IV. The PJRT backend realises the paper's
-//! reconfigurability story: each datapath mode is a separate compiled
-//! executable (bitstream analogue) and [`Trainer::reconfigure`] swaps
-//! executables at run time while carrying all state across — the mux of
-//! §IV, without re-synthesis.
+//! The native backend drives a [`crate::stage::StageGraph`] built from
+//! the experiment config — the legacy pipeline modes map onto stage
+//! lists (`rp:ternary/p → whiten:gha → rot:easi` for the paper's
+//! proposal) and `--stages` composes arbitrary cascades — so training
+//! is one tile loop over the graph, whatever the stage mix or numeric
+//! domain (f32 and bit-accurate fixed point are the graph's two
+//! backends). The PJRT backend realises the paper's reconfigurability
+//! story: each datapath mode is a separate compiled executable
+//! (bitstream analogue) and [`Trainer::reconfigure`] swaps executables
+//! at run time while carrying all state across — the mux of §IV,
+//! without re-synthesis. On the native graph the same mux toggles the
+//! rotation stage in place.
 //!
 //! The rotation warm-up is itself expressed through the mux: the first
-//! `rot_warmup` samples run the whiten-only executable, then the
-//! trainer hot-swaps to the full one.
+//! `rot_warmup` samples run the whiten-only datapath, then the rotation
+//! stage starts learning.
 
 use crate::config::{Backend, ExperimentConfig, PipelineMode};
-use crate::fxp::{FxpDrUnit, FxpRp, FxpSpec, FxpUnitConfig, Precision, Scratch};
 use crate::linalg::Mat;
-use crate::pipeline::unit::{DrUnit, DrUnitConfig, RETRACT_INTERVAL};
+use crate::pipeline::unit::RETRACT_INTERVAL;
 use crate::rp::RandomProjection;
 use crate::runtime::{Runtime, Tensor};
+use crate::stage::{StageGraph, StageRole};
 use anyhow::{bail, ensure, Context, Result};
 
 use super::batcher::Batch;
@@ -90,6 +94,11 @@ impl<'rt> Trainer<'rt> {
                     "fixed-point precision ({}) runs on the native backend only",
                     cfg.precision.label()
                 );
+                ensure!(
+                    cfg.stages.is_none(),
+                    "custom stage lists run on the native backend only \
+                     (the AOT artifacts are compiled per pipeline mode)"
+                );
                 let rt = runtime.context("PJRT backend needs a loaded Runtime")?;
                 Ok(Trainer::Pjrt(PjrtTrainer::new(cfg, rt)?))
             }
@@ -106,7 +115,7 @@ impl<'rt> Trainer<'rt> {
     }
 
     /// The fitted DR stage as one dense matrix (n × stage_input_dim):
-    /// `U·diag(λ̂^{-1/2})·W` (U omitted in whiten-only modes). For
+    /// the fold of every trained stage behind the RP front end. For
     /// fixed-point precision this is the dequantized composition.
     pub fn separation_matrix(&self) -> Mat {
         match self {
@@ -131,10 +140,10 @@ impl<'rt> Trainer<'rt> {
         }
     }
 
-    /// Transform a sample matrix through the fitted pipeline (RP then
-    /// the DR unit). Native matvec — bit-accurate integer forward for
-    /// fixed precision; artifact-based inference is exercised by
-    /// examples/benches.
+    /// Transform a sample matrix through the fitted pipeline. Native:
+    /// the graph's bulk forward — dense matvec for f32, the
+    /// bit-accurate multi-lane integer forward for fixed precision;
+    /// artifact-based inference is exercised by examples/benches.
     pub fn transform_rows(&self, x: &Mat) -> Mat {
         match self {
             Trainer::Native(t) => t.transform_rows(x),
@@ -197,213 +206,80 @@ fn build_rp(cfg: &ExperimentConfig) -> Option<RandomProjection> {
 
 // ------------------------------------------------------------- native
 
-/// Pure-Rust backend: either the f32 reference unit or the bit-accurate
-/// fixed-point unit, per `ExperimentConfig::precision`.
+/// Pure-Rust backend: one [`StageGraph`] built from the config — the
+/// f32 reference stages or their bit-accurate fixed-point images, per
+/// `ExperimentConfig::precision`, behind one generic tile loop.
 pub struct NativeTrainer {
     mode: PipelineMode,
-    engine: NativeEngine,
-    /// Dense scaled RP matrix for reports, whatever the engine.
+    graph: StageGraph,
+    /// Dense scaled RP matrix for reports, whatever the backend.
     rp_dense: Option<Mat>,
     /// Forward-path lanes for bulk transforms (training updates stay
     /// sequential — the Sanger/EASI recursions are order-dependent).
     lanes: usize,
 }
 
-enum NativeEngine {
-    F32 {
-        unit: DrUnit,
-        rp: Option<RandomProjection>,
-        /// Reusable projected-tile buffer (batch × p), rebuilt only
-        /// when the batch shape changes — the training loop stops
-        /// allocating a projected matrix per minibatch.
-        staged: Mat,
-    },
-    // The per-stage arithmetic lives on the unit
-    // (`unit.config.{whiten_spec,rot_spec}`, `unit.output_spec`);
-    // `entry_spec`/`entry_prescale` describe the pipeline's ingress
-    // boundary (the RP accumulator format when an RP front end exists).
-    Fxp {
-        unit: FxpDrUnit,
-        rp: Option<FxpRp>,
-        entry_spec: FxpSpec,
-        entry_prescale: f32,
-        /// Reusable ingress workspaces (quantized tile + RP stage tile)
-        /// — zero allocations per sample in steady state.
-        scratch: Scratch,
-    },
-}
-
-/// Tile ingress for the fixed-point engine: delegates to the crate-wide
-/// shared definition ([`crate::fxp::kernels::ingress_tile`]) with the
-/// whitener's format as the stage boundary, so the trainer, the
-/// pipeline and the bench harness can never quantize inputs
-/// differently.
-fn fxp_ingress_tile(
-    unit: &FxpDrUnit,
-    rp: &Option<FxpRp>,
-    entry_spec: &FxpSpec,
-    entry_prescale: f32,
-    rows: &Mat,
-    scratch: &mut Scratch,
-) {
-    crate::fxp::kernels::ingress_tile(
-        rp.as_ref(),
-        entry_spec,
-        &unit.config.whiten_spec,
-        entry_prescale,
-        rows.as_slice(),
-        rows.rows_count(),
-        scratch,
-    );
-}
-
 impl NativeTrainer {
     pub fn new(cfg: &ExperimentConfig) -> Result<Self> {
-        let rotate = rotation_active(cfg.mode)?;
-        let stage_in = if cfg.mode.uses_rp() {
-            cfg.intermediate_dim
-        } else {
-            cfg.input_dim
-        };
-        let rp = build_rp(cfg);
-        let rp_dense = rp.as_ref().map(RandomProjection::to_dense);
-        let engine = match cfg.precision {
-            Precision::F32 => NativeEngine::F32 {
-                unit: DrUnit::new(DrUnitConfig {
-                    input_dim: stage_in,
-                    output_dim: cfg.output_dim,
-                    mu_w: cfg.mu_w,
-                    mu_rot: cfg.mu,
-                    rotate,
-                    rot_warmup: cfg.rot_warmup as u64,
-                    seed: cfg.seed,
-                }),
-                rp,
-                staged: Mat::zeros(0, 0),
-            },
-            Precision::Fixed(plan) => {
-                let entry_spec = if rp.is_some() { plan.rp } else { plan.whiten };
-                NativeEngine::Fxp {
-                    unit: FxpDrUnit::new(FxpUnitConfig {
-                        input_dim: stage_in,
-                        output_dim: cfg.output_dim,
-                        mu_w: cfg.mu_w,
-                        mu_rot: cfg.mu,
-                        rotate,
-                        rot_warmup: cfg.rot_warmup as u64,
-                        seed: cfg.seed,
-                        whiten_spec: plan.whiten,
-                        rot_spec: plan.rot,
-                        quant: plan.quant,
-                    }),
-                    rp: rp.as_ref().map(|p| FxpRp::from_rp(p, plan.rp)),
-                    entry_spec,
-                    entry_prescale: plan.entry_prescale(rp.is_some(), &plan.whiten),
-                    scratch: Scratch::new(),
-                }
+        let gspec = cfg.graph_spec()?;
+        let mut graph = gspec.build(None)?;
+        if cfg.stages.is_none() {
+            // Legacy modes select the rotation mux (custom stage lists
+            // start with every declared stage live).
+            let rotate = rotation_active(cfg.mode)?;
+            if !rotate {
+                graph.set_role_active(StageRole::Rot, false);
             }
-        };
+        }
+        let rp_dense = graph.random_projection().map(RandomProjection::to_dense);
         Ok(Self {
             mode: cfg.mode,
-            engine,
+            graph,
             rp_dense,
             lanes: cfg.lanes.max(1),
         })
     }
 
-    /// Consume one minibatch as a whole tile: the ingress quantizes the
-    /// full batch into reusable workspaces, then the unit walks the
-    /// tile row by row (bit-identical to per-sample stepping — only the
-    /// per-sample staging vectors are gone).
+    /// The trainer's stage graph (checkpointing, per-stage access).
+    pub fn graph(&self) -> &StageGraph {
+        &self.graph
+    }
+
+    /// Mutable graph access (checkpoint restore).
+    pub fn graph_mut(&mut self) -> &mut StageGraph {
+        &mut self.graph
+    }
+
+    /// Consume one minibatch as a whole tile: one pass over the stage
+    /// list, every stage before the last trainable one emitting its
+    /// per-row training outputs into reusable graph workspaces —
+    /// bit-identical to the legacy fused per-sample stepping, with no
+    /// per-stage match arms and zero steady-state allocations.
     fn step(&mut self, batch: &Batch) -> Result<()> {
-        let rows = batch.rows();
-        match &mut self.engine {
-            NativeEngine::F32 { unit, rp, staged } => match rp {
-                Some(rp) => {
-                    let shape = (rows.rows_count(), rp.out_dim);
-                    if staged.shape() != shape {
-                        *staged = Mat::zeros(shape.0, shape.1);
-                    }
-                    rp.apply_rows_into(rows, staged);
-                    unit.step_rows(staged);
-                }
-                None => unit.step_rows(rows),
-            },
-            NativeEngine::Fxp {
-                unit,
-                rp,
-                entry_spec,
-                entry_prescale,
-                scratch,
-            } => {
-                let r = rows.rows_count();
-                fxp_ingress_tile(unit, rp, entry_spec, *entry_prescale, rows, scratch);
-                if rp.is_some() {
-                    unit.step_tile_raw(&scratch.stage, r);
-                } else {
-                    unit.step_tile_raw(&scratch.xq, r);
-                }
-            }
-        }
+        self.graph.step_rows(batch.rows());
         Ok(())
     }
 
     fn separation_matrix(&self) -> Mat {
-        match &self.engine {
-            NativeEngine::F32 { unit, .. } => unit.effective_matrix(),
-            // The fxp unit folds its input prescale in. The trainer
-            // applies that same prescale *before* the (linear) RP stage
-            // instead, and the two placements commute, so the folded
-            // matrix composes correctly with `rp_matrix` as-is.
-            NativeEngine::Fxp { unit, .. } => unit.effective_matrix(),
-        }
+        // The fixed-point graph folds its input prescale in. The
+        // trainer applies that same prescale *before* the (linear) RP
+        // stage instead, and the two placements commute, so the folded
+        // matrix composes correctly with `rp_matrix` as-is.
+        self.graph.separation_matrix()
     }
 
     fn update_magnitude(&self) -> f64 {
-        match &self.engine {
-            NativeEngine::F32 { unit, .. } => unit.update_magnitude(),
-            NativeEngine::Fxp { unit, .. } => unit.update_magnitude(),
-        }
+        self.graph.update_magnitude()
     }
 
-    /// Bulk transform: dense matvec for f32, the bit-accurate integer
-    /// forward path for fixed point (so reported accuracies reflect the
-    /// quantized pipeline). Fixed-point tiles are sharded across
-    /// `lanes` scoped threads — the merge is deterministic (each lane
-    /// owns a disjoint output range), so the raw words are identical to
-    /// the single-lane / per-sample path.
+    /// Bulk transform through the graph: dense matvec for f32, the
+    /// bit-accurate integer forward path for fixed point (so reported
+    /// accuracies reflect the quantized pipeline). Fixed-point tiles
+    /// are sharded across `lanes` scoped threads — the merge is
+    /// deterministic (each lane owns a disjoint output range), so the
+    /// raw words are identical to the single-lane / per-sample path.
     fn transform_rows(&self, x: &Mat) -> Mat {
-        match &self.engine {
-            NativeEngine::F32 { unit, .. } => {
-                let eff = unit.effective_matrix();
-                let staged = match &self.rp_dense {
-                    Some(r) => r.apply_rows(x),
-                    None => x.clone(),
-                };
-                eff.apply_rows(&staged)
-            }
-            NativeEngine::Fxp {
-                unit,
-                rp,
-                entry_spec,
-                entry_prescale,
-                ..
-            } => {
-                let r = x.rows_count();
-                let n = unit.config.output_dim;
-                let out_spec = unit.output_spec();
-                let mut scratch = Scratch::new();
-                fxp_ingress_tile(unit, rp, entry_spec, *entry_prescale, x, &mut scratch);
-                let tile: &[i32] = if rp.is_some() {
-                    &scratch.stage
-                } else {
-                    &scratch.xq
-                };
-                let mut raw = Vec::new();
-                unit.transform_tile_raw_multilane(tile, r, self.lanes, &mut raw);
-                Mat::from_vec(r, n, raw.iter().map(|&w| out_spec.dequantize(w)).collect())
-            }
-        }
+        self.graph.forward_rows(x, self.lanes)
     }
 
     fn reconfigure(&mut self, mode: PipelineMode) -> Result<()> {
@@ -412,10 +288,11 @@ impl NativeTrainer {
             mode.uses_rp() == self.mode.uses_rp(),
             "reconfigure cannot change the RP front end (state shapes would change)"
         );
-        match &mut self.engine {
-            NativeEngine::F32 { unit, .. } => unit.set_rotation(rotate),
-            NativeEngine::Fxp { unit, .. } => unit.set_rotation(rotate),
-        }
+        ensure!(
+            self.graph.has_role(StageRole::Rot),
+            "this stage graph has no rotation stage to reconfigure"
+        );
+        self.graph.set_role_active(StageRole::Rot, rotate);
         self.mode = mode;
         Ok(())
     }
@@ -592,6 +469,7 @@ impl<'rt> PjrtTrainer<'rt> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fxp::Precision;
 
     #[test]
     fn artifact_name_derivation() {
@@ -675,6 +553,51 @@ mod tests {
     }
 
     #[test]
+    fn native_trainer_runs_custom_stage_lists() {
+        // A non-paper cascade straight from the stage-list syntax:
+        // dct → whiten → rot, fitted and transformed with zero
+        // trainer-side plumbing.
+        let cfg = ExperimentConfig {
+            stages: Some("dct/16,whiten:gha,rot:easi".into()),
+            train_classifier: false,
+            ..Default::default()
+        };
+        let mut t = Trainer::from_config(&cfg, None).unwrap();
+        let data = Mat::from_fn(128, 32, |i, j| ((i * 29 + j * 11) % 19) as f32 / 19.0 - 0.5);
+        t.step(&Batch::Full(data.clone())).unwrap();
+        let y = t.transform_rows(&data);
+        assert_eq!(y.shape(), (128, 8));
+        assert!(y.as_slice().iter().all(|v| v.is_finite()));
+        // No RP stage → no RP matrix reported.
+        assert!(t.rp_matrix().is_none());
+        // rp → batch PCA: the batch stage bootstraps on the first tile.
+        let cfg = ExperimentConfig {
+            stages: Some("rp:ternary/16,pca".into()),
+            train_classifier: false,
+            ..Default::default()
+        };
+        let mut t = Trainer::from_config(&cfg, None).unwrap();
+        t.step(&Batch::Full(data.clone())).unwrap();
+        let y = t.transform_rows(&data);
+        assert_eq!(y.shape(), (128, 8));
+        assert!(y.as_slice().iter().all(|v| v.is_finite()));
+        assert!(t.rp_matrix().is_some());
+        assert_eq!(t.separation_matrix().shape(), (8, 16));
+        // Whiten-only fixed point, also from the stage list.
+        let cfg = ExperimentConfig {
+            stages: Some("whiten:gha".into()),
+            precision: Precision::parse("q4.12").unwrap(),
+            train_classifier: false,
+            ..Default::default()
+        };
+        let mut t = Trainer::from_config(&cfg, None).unwrap();
+        t.step(&Batch::Full(data.clone())).unwrap();
+        let y = t.transform_rows(&data);
+        assert_eq!(y.shape(), (128, 8));
+        assert!(y.as_slice().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
     fn pjrt_backend_requires_runtime() {
         let cfg = ExperimentConfig {
             backend: Backend::Pjrt,
@@ -682,5 +605,4 @@ mod tests {
         };
         assert!(Trainer::from_config(&cfg, None).is_err());
     }
-
 }

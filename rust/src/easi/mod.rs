@@ -193,6 +193,13 @@ impl EasiTrainer {
         self.steps
     }
 
+    /// Restore the sample count (checkpoint restore) — without it a
+    /// restored trainer would re-run step-count-gated cadences (the
+    /// composed unit's rotation retraction) from zero.
+    pub fn set_steps(&mut self, steps: u64) {
+        self.steps = steps;
+    }
+
     /// EMA of ‖ΔB‖_F/‖B‖_F — approaches 0 as training converges.
     pub fn update_magnitude(&self) -> f64 {
         self.update_ema

@@ -23,11 +23,13 @@
 //! `dimred bench --smoke` (tiny sample counts, same schema) and
 //! uploads the JSON as an artifact.
 
-use crate::experiments::fxp_sweep;
+use crate::experiments::grid;
 use crate::fxp::{FxpDrUnit, FxpRp, FxpSpec, FxpUnitConfig, Precision, QuantMode, Scratch};
 use crate::linalg::Mat;
 use crate::pipeline::unit::{DrUnit, DrUnitConfig};
 use crate::rp::{RandomProjection, RpDistribution};
+use crate::stage::spec::parse_stage_list;
+use crate::stage::GraphSpec;
 use crate::util::json::Json;
 use anyhow::{ensure, Context, Result};
 use std::time::Instant;
@@ -49,6 +51,20 @@ pub struct BenchPoint {
     pub samples_per_s: f64,
 }
 
+/// One stage-graph scenario's forward throughput — the
+/// scenario-diversity axis: non-paper cascades (`rp→pca`,
+/// `dct→whiten→rot`, whiten-only fixed point) benched through the same
+/// harness with zero new plumbing.
+#[derive(Debug, Clone)]
+pub struct ScenarioPoint {
+    /// Canonical stage list (round-trips through the `--stages` parser).
+    pub stages: String,
+    /// Precision label the graph ran at.
+    pub precision: String,
+    /// Whole-tile forward throughput.
+    pub samples_per_s: f64,
+}
+
 /// All points for one dataset configuration, plus derived speedups.
 #[derive(Debug, Clone)]
 pub struct BenchConfigResult {
@@ -60,6 +76,8 @@ pub struct BenchConfigResult {
     pub points: Vec<BenchPoint>,
     /// (label, ratio) pairs, e.g. `train_fxp_tiled_over_per_sample`.
     pub speedups: Vec<(String, f64)>,
+    /// Stage-graph scenarios (forward path, whole-tile).
+    pub scenarios: Vec<ScenarioPoint>,
 }
 
 /// Knobs for one bench run.
@@ -184,12 +202,12 @@ pub fn run(opts: &BenchOptions) -> Result<Vec<BenchConfigResult>> {
     let reps = if opts.smoke { 2 } else { 5 };
     let mut out = Vec::new();
     for name in &opts.datasets {
-        let (m, p, n, _) = fxp_sweep::dims_for(name)?;
+        let (m, p, n, _) = grid::dims_for(name)?;
         // Throughput depends on dims, not content; still use the real
         // generators so the bench exercises exactly the data the
         // accuracy experiments stream.
         let (train, test) = if opts.smoke { (256, 8) } else { (2048, 8) };
-        let data = fxp_sweep::load(name, opts.seed, train, test)?;
+        let data = grid::load(name, opts.seed, train, test)?;
         let x = &data.train_x;
         let rows = x.rows_count();
         let samples = rows;
@@ -428,6 +446,41 @@ pub fn run(opts: &BenchOptions) -> Result<Vec<BenchConfigResult>> {
                 f_fxp_multilane / f_fxp_per_sample.max(1e-12),
             ),
         ];
+        // ------------------------------------------- graph scenarios
+        // Non-paper cascades through the stage-graph datapath: fit
+        // briefly, then time the whole-tile forward. These rows are the
+        // scenario-diversity trajectory (zero plumbing per new graph:
+        // a stage list + a precision string).
+        let scenario_specs = [
+            (format!("rp:ternary/{p},pca"), "f32"),
+            (format!("dct/{p},whiten:gha,rot:easi"), "f32"),
+            ("whiten:gha".to_string(), "q4.12"),
+        ];
+        let mut scenarios = Vec::new();
+        for (stages, prec) in scenario_specs {
+            let gspec = GraphSpec {
+                input_dim: m,
+                output_dim: n,
+                stages: parse_stage_list(&stages)?,
+                seed: opts.seed,
+                precision: Precision::parse(prec)?,
+                mu_w: 5e-3,
+                mu_rot: 1e-3,
+                rot_warmup: Some(0),
+                epochs: 1,
+            };
+            let mut graph = gspec.build(Some(rows))?;
+            graph.fit(x, 1);
+            let tput = time_samples(reps, samples, || {
+                std::hint::black_box(graph.transform_rows(x));
+            });
+            scenarios.push(ScenarioPoint {
+                stages: gspec.stages_label(),
+                precision: prec.to_string(),
+                samples_per_s: tput,
+            });
+        }
+
         out.push(BenchConfigResult {
             dataset: name.clone(),
             m,
@@ -436,6 +489,7 @@ pub fn run(opts: &BenchOptions) -> Result<Vec<BenchConfigResult>> {
             samples,
             points,
             speedups,
+            scenarios,
         });
     }
     Ok(out)
@@ -467,6 +521,12 @@ pub fn render(opts: &BenchOptions, results: &[BenchConfigResult]) -> String {
         for (label, ratio) in &cfg.speedups {
             s.push_str(&format!("  {label}: {ratio:.2}x\n"));
         }
+        for sc in &cfg.scenarios {
+            s.push_str(&format!(
+                "  scenario {:<40} {:<10} {:>14.0}\n",
+                sc.stages, sc.precision, sc.samples_per_s
+            ));
+        }
     }
     s
 }
@@ -475,7 +535,8 @@ pub fn render(opts: &BenchOptions, results: &[BenchConfigResult]) -> String {
 pub fn to_json(opts: &BenchOptions, results: &[BenchConfigResult]) -> Json {
     Json::obj(vec![
         ("experiment", Json::str("bench_throughput")),
-        ("schema_version", Json::num(1.0)),
+        // v2: per-config stage-graph `scenarios` rows joined the grid.
+        ("schema_version", Json::num(2.0)),
         ("smoke", Json::Bool(opts.smoke)),
         ("tile", Json::num(opts.tile as f64)),
         ("lanes", Json::num(opts.lanes as f64)),
@@ -525,6 +586,27 @@ pub fn to_json(opts: &BenchOptions, results: &[BenchConfigResult]) -> Json {
                                         .collect(),
                                 ),
                             ),
+                            (
+                                "scenarios",
+                                Json::Arr(
+                                    cfg.scenarios
+                                        .iter()
+                                        .map(|sc| {
+                                            Json::obj(vec![
+                                                ("stages", Json::str(sc.stages.clone())),
+                                                (
+                                                    "precision",
+                                                    Json::str(sc.precision.clone()),
+                                                ),
+                                                (
+                                                    "samples_per_s",
+                                                    Json::num(sc.samples_per_s),
+                                                ),
+                                            ])
+                                        })
+                                        .collect(),
+                                ),
+                            ),
                         ])
                     })
                     .collect(),
@@ -542,7 +624,7 @@ pub fn validate(v: &Json) -> Result<()> {
         "wrong experiment tag"
     );
     ensure!(
-        v.field("schema_version")?.as_usize()? == 1,
+        v.field("schema_version")?.as_usize()? == 2,
         "unknown schema version"
     );
     v.field("smoke")?.as_bool().context("smoke flag")?;
@@ -578,6 +660,17 @@ pub fn validate(v: &Json) -> Result<()> {
             );
         }
         cfg.field("speedups")?.as_obj()?;
+        let scenarios = cfg.field("scenarios")?.as_arr()?;
+        ensure!(!scenarios.is_empty(), "scenarios must be non-empty");
+        for sc in scenarios {
+            sc.field("stages")?.as_str()?;
+            sc.field("precision")?.as_str()?;
+            let tput = sc.field("samples_per_s")?.as_f64()?;
+            ensure!(
+                tput.is_finite() && tput > 0.0,
+                "scenario samples_per_s must be positive, got {tput}"
+            );
+        }
     }
     Ok(())
 }
@@ -608,11 +701,23 @@ mod tests {
         // 3 forward fxp.
         assert_eq!(cfg.points.len(), 9);
         assert!(cfg.points.iter().all(|p| p.samples_per_s > 0.0));
+        // The three stage-graph scenarios ride along per config.
+        assert_eq!(cfg.scenarios.len(), 3);
+        assert!(cfg.scenarios.iter().all(|s| s.samples_per_s > 0.0));
+        assert!(cfg
+            .scenarios
+            .iter()
+            .any(|s| s.stages == "rp:ternary/16,pca"));
+        assert!(cfg
+            .scenarios
+            .iter()
+            .any(|s| s.stages == "whiten:gha" && s.precision == "q4.12"));
         let json = to_json(&opts, &results);
         let parsed = Json::parse(&json.to_string_pretty()).unwrap();
         validate(&parsed).unwrap();
         let table = render(&opts, &results);
         assert!(table.contains("multilane"), "{table}");
+        assert!(table.contains("scenario"), "{table}");
     }
 
     #[test]

@@ -1,49 +1,27 @@
 //! Accuracy-vs-bitwidth sweep — the precision analogue of Fig. 1.
 //!
-//! Trains the paper's proposed pipeline (ternary RP front end + the
-//! composed whiten/rotate unit) at a grid of fixed-point formats plus
-//! the f32 reference, on the waveform or HAR-like dataset, and reports
-//! per-point test accuracy alongside the bitwidth-aware Arria-10
-//! resource cost ([`crate::hwmodel`]). This is the artifact the
-//! precision claim rests on: where on the width axis accuracy is flat
-//! while DSPs/ALMs/registers fall.
+//! Trains a stage graph (default: the paper's proposed ternary-RP →
+//! whiten → rotate cascade; any `--stages` list otherwise) at a grid of
+//! fixed-point formats plus the f32 reference, on the waveform or
+//! HAR-like dataset, and reports per-point test accuracy alongside the
+//! bitwidth-aware Arria-10 resource cost ([`crate::hwmodel`]). This is
+//! the artifact the precision claim rests on: where on the width axis
+//! accuracy is flat while DSPs/ALMs/registers fall.
+//!
+//! The evaluation loop is the shared grid harness
+//! ([`crate::experiments::grid`], also behind `pareto`), so the two
+//! precision experiments can never drift apart.
 //!
 //! CLI: `dimred fxp-sweep [waveform|har] [--formats q4.4,q4.8,q4.12]
-//! [--epochs E] [--seed S] [--json FILE]` — text table to stdout, JSON
-//! to the given path.
+//! [--stages LIST] [--epochs E] [--seed S] [--json FILE]` — text table
+//! to stdout, JSON to the given path.
 
-use crate::datasets::{har_like::HarLikeConfig, waveform::WaveformConfig, Dataset};
+use super::grid;
 use crate::fxp::Precision;
-use crate::hwmodel::Arria10Model;
-use crate::mlp::{Mlp, MlpConfig};
-use crate::pipeline::{DrPipeline, PipelineSpec, RpStage, StageSpec};
-use crate::rp::RpDistribution;
 use crate::util::json::Json;
-use anyhow::{bail, Result};
+use anyhow::Result;
 
-/// One sweep point: a precision, its accuracy, and its hardware price.
-#[derive(Debug, Clone)]
-pub struct SweepPoint {
-    /// `"f32"` or `"qI.F"`.
-    pub precision: String,
-    /// Operand width in bits (32 for f32).
-    pub width_bits: u8,
-    /// Test accuracy, percent.
-    pub accuracy: f64,
-    /// Arria-10 cost of the RP+EASI datapath at this width.
-    pub dsps: u64,
-    pub alms: u64,
-    pub register_bits: u64,
-}
-
-/// Pipeline dimensions per dataset: `(m, p, n, dr_epochs_default)`.
-pub fn dims_for(which: &str) -> Result<(usize, usize, usize, usize)> {
-    match which {
-        "waveform" => Ok((32, 16, 8, 4)),
-        "har" => Ok((561, 64, 16, 2)),
-        other => bail!("unknown fxp-sweep dataset '{other}' (waveform|har)"),
-    }
-}
+pub use super::grid::{dims_for, SweepPoint};
 
 /// The default format grid: 8 → 18 bits with 4 integer bits (enough
 /// headroom for standardized data without prescaling).
@@ -52,83 +30,6 @@ pub fn default_formats() -> Vec<Precision> {
         .iter()
         .map(|s| Precision::parse(s).expect("static format"))
         .collect()
-}
-
-pub(crate) fn load(which: &str, seed: u64, train: usize, test: usize) -> Result<Dataset> {
-    let mut d = match which {
-        "waveform" => WaveformConfig {
-            samples: train + test,
-            train,
-            seed,
-            ..WaveformConfig::paper()
-        }
-        .generate(),
-        "har" => HarLikeConfig { train, test, seed }.generate(),
-        other => bail!("unknown fxp-sweep dataset '{other}'"),
-    };
-    d.standardize();
-    Ok(d)
-}
-
-/// Train the paper's 2×64 classifier on reduced features, return test
-/// accuracy in percent (paper §V.B protocol).
-fn classify(reduced: &Dataset, seed: u64, epochs: usize) -> f64 {
-    let mut reduced = reduced.clone();
-    reduced.standardize();
-    let mut mlp = Mlp::new(MlpConfig {
-        epochs,
-        seed,
-        ..MlpConfig::paper(reduced.input_dim(), reduced.num_classes)
-    });
-    mlp.train(&reduced.train_x, &reduced.train_y);
-    mlp.accuracy(&reduced.test_x, &reduced.test_y) * 100.0
-}
-
-/// Evaluate one precision point on an already-loaded dataset. The
-/// pipeline fit and the classifier init get *sub-seeds* derived from
-/// the master seed (tags 1 and 2; the data draw is the caller's, tag
-/// 0 = the master itself), so the classifier's init noise is not
-/// correlated with the data draw across sweep points. Shared with the
-/// Pareto sweep ([`crate::experiments::pareto`]).
-pub(crate) fn eval_point(
-    data: &Dataset,
-    dims: (usize, usize, usize),
-    precision: Precision,
-    dr_epochs: usize,
-    mlp_epochs: usize,
-    seed: u64,
-) -> SweepPoint {
-    let (m, p, n) = dims;
-    let pipe_seed = crate::rng::derive_seed(seed, 1);
-    let mlp_seed = crate::rng::derive_seed(seed, 2);
-    let spec = PipelineSpec {
-        input_dim: m,
-        rp: Some(RpStage {
-            intermediate_dim: p,
-            distribution: RpDistribution::Ternary,
-        }),
-        stage: StageSpec::Ica {
-            mu_w: 5e-3,
-            mu_rot: 1e-3,
-            epochs: dr_epochs,
-        },
-        output_dim: n,
-        seed: pipe_seed,
-        precision,
-    };
-    let pipeline = DrPipeline::fit(spec, &data.train_x);
-    let accuracy = classify(&pipeline.transform_dataset(data), mlp_seed, mlp_epochs);
-    // Plan-aware pricing: uniform formats keep the PR-1 single-format
-    // numbers bit-for-bit, mixed plans are priced per stage.
-    let cost = Arria10Model::paper_calibrated().cost_precision(m, Some(p), n, &precision);
-    SweepPoint {
-        precision: precision.label(),
-        width_bits: precision.width_bits(),
-        accuracy,
-        dsps: cost.dsps,
-        alms: cost.alms,
-        register_bits: cost.register_bits,
-    }
 }
 
 /// Run the sweep at custom dataset sizes (tests use reduced splits).
@@ -141,30 +42,35 @@ pub fn run_sized(
     train: usize,
     test: usize,
 ) -> Result<Vec<SweepPoint>> {
-    let (m, p, n, _) = dims_for(which)?;
-    let data = load(which, seed, train, test)?;
+    run_sized_stages(which, formats, None, dr_epochs, mlp_epochs, seed, train, test)
+}
+
+/// [`run_sized`] over an explicit stage graph (`None` = the paper's
+/// proposed cascade).
+pub fn run_sized_stages(
+    which: &str,
+    formats: &[Precision],
+    stages: Option<&str>,
+    dr_epochs: usize,
+    mlp_epochs: usize,
+    seed: u64,
+    train: usize,
+    test: usize,
+) -> Result<Vec<SweepPoint>> {
     // f32 reference first, then the fixed formats ascending by width.
     let mut precisions = vec![Precision::F32];
     precisions.extend_from_slice(formats);
-    Ok(precisions
-        .into_iter()
-        .map(|prec| eval_point(&data, (m, p, n), prec, dr_epochs, mlp_epochs, seed))
-        .collect())
+    grid::run_grid(
+        which,
+        &precisions,
+        stages,
+        dr_epochs,
+        mlp_epochs,
+        seed,
+        train,
+        test,
+    )
 }
-
-/// Paper-scale dataset splits per dataset: `(train, test)`. Shared
-/// with the Pareto sweep so the two precision experiments always
-/// evaluate on identical splits.
-pub(crate) fn paper_splits(which: &str) -> (usize, usize) {
-    match which {
-        "har" => (2000, 500),
-        _ => (4000, 1000),
-    }
-}
-
-/// Classifier epochs for paper-scale runs (§V.B protocol), shared with
-/// the Pareto sweep.
-pub(crate) const PAPER_MLP_EPOCHS: usize = 30;
 
 /// Run the sweep with the paper-scale dataset splits.
 pub fn run(
@@ -173,14 +79,34 @@ pub fn run(
     epochs: usize,
     seed: u64,
 ) -> Result<Vec<SweepPoint>> {
-    let (train, test) = paper_splits(which);
-    run_sized(which, formats, epochs, PAPER_MLP_EPOCHS, seed, train, test)
+    run_with(which, formats, epochs, seed, None)
+}
+
+/// [`run`] over an explicit stage graph (the `--stages` CLI path).
+pub fn run_with(
+    which: &str,
+    formats: &[Precision],
+    epochs: usize,
+    seed: u64,
+    stages: Option<&str>,
+) -> Result<Vec<SweepPoint>> {
+    let (train, test) = grid::paper_splits(which);
+    run_sized_stages(
+        which,
+        formats,
+        stages,
+        epochs,
+        grid::PAPER_MLP_EPOCHS,
+        seed,
+        train,
+        test,
+    )
 }
 
 /// Render as an aligned text table, with the fp32 row as the baseline.
 pub fn render(which: &str, points: &[SweepPoint]) -> String {
     let mut out =
-        format!("fxp sweep ({which}) — accuracy vs operand width (RP+EASI datapath cost)\n");
+        format!("fxp sweep ({which}) — accuracy vs operand width (stage-graph datapath cost)\n");
     out.push_str(&format!(
         "{:<10} {:>6} {:>9} {:>8} {:>10} {:>12} {:>10}\n",
         "precision", "bits", "acc (%)", "DSPs", "ALMs", "reg bits", "DSP ratio"
@@ -240,7 +166,7 @@ pub fn to_json(which: &str, points: &[SweepPoint]) -> Json {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::hwmodel::{HwConfig, NumericFormat};
+    use crate::hwmodel::{Arria10Model, HwConfig, NumericFormat};
 
     #[test]
     fn q4_12_within_two_points_of_f32_on_waveform() {
@@ -375,12 +301,5 @@ mod tests {
             2
         );
         assert_eq!(parsed.field("dataset").unwrap().as_str().unwrap(), "waveform");
-    }
-
-    #[test]
-    fn dims_for_known_datasets() {
-        assert_eq!(dims_for("waveform").unwrap(), (32, 16, 8, 4));
-        assert_eq!(dims_for("har").unwrap().0, 561);
-        assert!(dims_for("bogus").is_err());
     }
 }

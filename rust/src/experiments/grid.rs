@@ -1,0 +1,212 @@
+//! Shared precision-grid harness — the single evaluation path behind
+//! `fxp-sweep` and `pareto` (previously duplicated between the two),
+//! now expressed over stage graphs so any cascade — not just the
+//! paper's RP → unit shape — sweeps, prices and classifies with zero
+//! new plumbing.
+//!
+//! One grid point = fit a [`GraphSpec`] at one [`Precision`] on a
+//! dataset, train the paper's 2×64 classifier on the reduced features,
+//! and join the test accuracy with the graph's per-stage Arria-10 price
+//! ([`GraphSpec::hw_cost`] — bit-identical to the historical
+//! `cost_precision` numbers for the legacy shapes).
+
+use crate::datasets::{har_like::HarLikeConfig, waveform::WaveformConfig, Dataset};
+use crate::fxp::Precision;
+use crate::hwmodel::Arria10Model;
+use crate::mlp::{Mlp, MlpConfig};
+use crate::rp::RpDistribution;
+use crate::stage::spec::parse_stage_list;
+use crate::stage::{GraphSpec, StageDecl, StageOp};
+use anyhow::{bail, Result};
+
+/// One grid point: a precision, its accuracy, and its hardware price.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    /// `"f32"` or the precision-plan label.
+    pub precision: String,
+    /// Operand width in bits (32 for f32, widest stage for plans).
+    pub width_bits: u8,
+    /// Test accuracy, percent.
+    pub accuracy: f64,
+    /// Arria-10 cost of the stage graph at this precision.
+    pub dsps: u64,
+    pub alms: u64,
+    pub register_bits: u64,
+}
+
+/// Pipeline dimensions per dataset: `(m, p, n, dr_epochs_default)`.
+pub fn dims_for(which: &str) -> Result<(usize, usize, usize, usize)> {
+    match which {
+        "waveform" => Ok((32, 16, 8, 4)),
+        "har" => Ok((561, 64, 16, 2)),
+        other => bail!("unknown sweep dataset '{other}' (waveform|har)"),
+    }
+}
+
+/// The paper's proposed graph at intermediate dim `p`: ternary RP →
+/// GHA whitening → EASI rotation.
+pub fn proposed_stages(p: usize) -> Vec<StageDecl> {
+    vec![
+        StageDecl::new(StageOp::Rp(RpDistribution::Ternary)).with_dim(p),
+        StageDecl::new(StageOp::WhitenGha),
+        StageDecl::new(StageOp::RotEasi),
+    ]
+}
+
+pub(crate) fn load(which: &str, seed: u64, train: usize, test: usize) -> Result<Dataset> {
+    let mut d = match which {
+        "waveform" => WaveformConfig {
+            samples: train + test,
+            train,
+            seed,
+            ..WaveformConfig::paper()
+        }
+        .generate(),
+        "har" => HarLikeConfig { train, test, seed }.generate(),
+        other => bail!("unknown sweep dataset '{other}'"),
+    };
+    d.standardize();
+    Ok(d)
+}
+
+/// Paper-scale dataset splits per dataset: `(train, test)` — shared so
+/// the precision experiments always evaluate on identical splits.
+pub(crate) fn paper_splits(which: &str) -> (usize, usize) {
+    match which {
+        "har" => (2000, 500),
+        _ => (4000, 1000),
+    }
+}
+
+/// Classifier epochs for paper-scale runs (§V.B protocol).
+pub(crate) const PAPER_MLP_EPOCHS: usize = 30;
+
+/// Train the paper's 2×64 classifier on reduced features, return test
+/// accuracy in percent (paper §V.B protocol).
+pub(crate) fn classify(reduced: &Dataset, seed: u64, epochs: usize) -> f64 {
+    let mut reduced = reduced.clone();
+    reduced.standardize();
+    let mut mlp = Mlp::new(MlpConfig {
+        epochs,
+        seed,
+        ..MlpConfig::paper(reduced.input_dim(), reduced.num_classes)
+    });
+    mlp.train(&reduced.train_x, &reduced.train_y);
+    mlp.accuracy(&reduced.test_x, &reduced.test_y) * 100.0
+}
+
+/// Evaluate one (graph, precision) point on an already-loaded dataset.
+/// The graph fit and the classifier init get *sub-seeds* derived from
+/// the master seed (tags 1 and 2; the data draw is the caller's, tag 0
+/// = the master itself), so the classifier's init noise is not
+/// correlated with the data draw across sweep points.
+pub(crate) fn eval_point(
+    data: &Dataset,
+    dims: (usize, usize, usize),
+    stages: &[StageDecl],
+    precision: Precision,
+    dr_epochs: usize,
+    mlp_epochs: usize,
+    seed: u64,
+) -> Result<SweepPoint> {
+    let (m, _p, n) = dims;
+    let pipe_seed = crate::rng::derive_seed(seed, 1);
+    let mlp_seed = crate::rng::derive_seed(seed, 2);
+    let gspec = GraphSpec {
+        input_dim: m,
+        output_dim: n,
+        stages: stages.to_vec(),
+        seed: pipe_seed,
+        precision,
+        mu_w: 5e-3,
+        mu_rot: 1e-3,
+        rot_warmup: None,
+        epochs: dr_epochs,
+    };
+    let mut graph = gspec.build(Some(data.train_x.rows_count()))?;
+    graph.fit(&data.train_x, dr_epochs);
+    let reduced = Dataset {
+        name: format!("{}+dr{n}", data.name),
+        train_x: graph.transform_rows(&data.train_x),
+        train_y: data.train_y.clone(),
+        test_x: graph.transform_rows(&data.test_x),
+        test_y: data.test_y.clone(),
+        num_classes: data.num_classes,
+    };
+    let accuracy = classify(&reduced, mlp_seed, mlp_epochs);
+    // Graph-folded, plan-aware pricing: legacy shapes keep the
+    // historical single/per-stage numbers bit-for-bit, arbitrary
+    // cascades fold per-stage inventories.
+    let cost = gspec.hw_cost(&Arria10Model::paper_calibrated())?;
+    Ok(SweepPoint {
+        precision: precision.label(),
+        width_bits: precision.width_bits(),
+        accuracy,
+        dsps: cost.dsps,
+        alms: cost.alms,
+        register_bits: cost.register_bits,
+    })
+}
+
+/// Evaluate a precision grid over one stage graph (the default is the
+/// paper's proposed graph at the dataset's `(m, p, n)`).
+pub fn run_grid(
+    which: &str,
+    precisions: &[Precision],
+    stages: Option<&str>,
+    dr_epochs: usize,
+    mlp_epochs: usize,
+    seed: u64,
+    train: usize,
+    test: usize,
+) -> Result<Vec<SweepPoint>> {
+    let (m, p, n, _) = dims_for(which)?;
+    let data = load(which, seed, train, test)?;
+    let stages = match stages {
+        Some(s) => parse_stage_list(s)?,
+        None => proposed_stages(p),
+    };
+    precisions
+        .iter()
+        .map(|prec| eval_point(&data, (m, p, n), &stages, *prec, dr_epochs, mlp_epochs, seed))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dims_for_known_datasets() {
+        assert_eq!(dims_for("waveform").unwrap(), (32, 16, 8, 4));
+        assert_eq!(dims_for("har").unwrap().0, 561);
+        assert!(dims_for("bogus").is_err());
+    }
+
+    #[test]
+    fn custom_stage_grid_runs_end_to_end() {
+        // The scenario-diversity acceptance: non-paper graphs sweep
+        // through the same harness with zero new plumbing.
+        for (stages, prec) in [
+            ("rp:ternary/16,pca", "f32"),
+            ("dct/16,whiten:gha,rot:easi", "f32"),
+            ("whiten:gha", "q4.12"),
+        ] {
+            let pts = run_grid(
+                "waveform",
+                &[Precision::parse(prec).unwrap()],
+                Some(stages),
+                1,
+                4,
+                2018,
+                400,
+                120,
+            )
+            .unwrap();
+            assert_eq!(pts.len(), 1, "{stages}");
+            let pt = &pts[0];
+            assert!(pt.accuracy.is_finite() && pt.accuracy > 20.0, "{stages}: {}", pt.accuracy);
+            assert!(pt.alms > 0, "{stages} must price nonzero");
+        }
+    }
+}

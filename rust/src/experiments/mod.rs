@@ -6,5 +6,6 @@
 pub mod bench;
 pub mod fig1;
 pub mod fxp_sweep;
+pub mod grid;
 pub mod pareto;
 pub mod table1;

@@ -18,7 +18,7 @@
 //! [`Precision`] strings (the plan syntax itself uses commas); text
 //! report to stdout, JSON to the given path.
 
-use crate::experiments::fxp_sweep;
+use crate::experiments::grid;
 use crate::fxp::{Precision, QuantMode};
 use crate::util::json::Json;
 use anyhow::Result;
@@ -46,7 +46,7 @@ pub struct ParetoPoint {
 }
 
 impl ParetoPoint {
-    fn from_sweep(precision: &Precision, sp: fxp_sweep::SweepPoint) -> Self {
+    fn from_sweep(precision: &Precision, sp: grid::SweepPoint) -> Self {
         let (quant, mixed) = match precision {
             Precision::F32 => ("f32", false),
             Precision::Fixed(plan) => (plan.quant.label(), !plan.is_uniform()),
@@ -138,16 +138,29 @@ pub fn run_sized(
     train: usize,
     test: usize,
 ) -> Result<Vec<ParetoPoint>> {
-    let (m, p, n, _) = fxp_sweep::dims_for(which)?;
-    let data = fxp_sweep::load(which, seed, train, test)?;
+    run_sized_stages(which, plans, None, dr_epochs, mlp_epochs, seed, train, test)
+}
+
+/// [`run_sized`] over an explicit stage graph (`None` = the paper's
+/// proposed cascade) — the shared grid harness does the evaluation, so
+/// `pareto` and `fxp-sweep` can never drift apart.
+pub fn run_sized_stages(
+    which: &str,
+    plans: &[Precision],
+    stages: Option<&str>,
+    dr_epochs: usize,
+    mlp_epochs: usize,
+    seed: u64,
+    train: usize,
+    test: usize,
+) -> Result<Vec<ParetoPoint>> {
+    let sweep = grid::run_grid(
+        which, plans, stages, dr_epochs, mlp_epochs, seed, train, test,
+    )?;
     let mut points: Vec<ParetoPoint> = plans
         .iter()
-        .map(|prec| {
-            ParetoPoint::from_sweep(
-                prec,
-                fxp_sweep::eval_point(&data, (m, p, n), *prec, dr_epochs, mlp_epochs, seed),
-            )
-        })
+        .zip(sweep)
+        .map(|(prec, sp)| ParetoPoint::from_sweep(prec, sp))
         .collect();
     mark_frontier(&mut points);
     Ok(points)
@@ -156,12 +169,24 @@ pub fn run_sized(
 /// Run the sweep with the paper-scale dataset splits (shared with
 /// `fxp_sweep` so the two precision experiments stay comparable).
 pub fn run(which: &str, plans: &[Precision], epochs: usize, seed: u64) -> Result<Vec<ParetoPoint>> {
-    let (train, test) = fxp_sweep::paper_splits(which);
-    run_sized(
+    run_with(which, plans, epochs, seed, None)
+}
+
+/// [`run`] over an explicit stage graph (the `--stages` CLI path).
+pub fn run_with(
+    which: &str,
+    plans: &[Precision],
+    epochs: usize,
+    seed: u64,
+    stages: Option<&str>,
+) -> Result<Vec<ParetoPoint>> {
+    let (train, test) = grid::paper_splits(which);
+    run_sized_stages(
         which,
         plans,
+        stages,
         epochs,
-        fxp_sweep::PAPER_MLP_EPOCHS,
+        grid::PAPER_MLP_EPOCHS,
         seed,
         train,
         test,
@@ -212,7 +237,7 @@ pub fn render(which: &str, points: &[ParetoPoint]) -> String {
 /// test: `experiment`, `dataset`, `pipeline`, `points[]` (with
 /// `on_frontier`), `frontier[]` (labels), and the `claim` object.
 pub fn to_json(which: &str, points: &[ParetoPoint]) -> Json {
-    let (m, p, n, _) = fxp_sweep::dims_for(which).unwrap_or((0, 0, 0, 0));
+    let (m, p, n, _) = grid::dims_for(which).unwrap_or((0, 0, 0, 0));
     let claim = match find_domination(points, CLAIM_TOL) {
         Some((mixed, uniform)) => Json::obj(vec![
             ("holds", Json::Bool(true)),
@@ -394,6 +419,23 @@ mod tests {
         assert!(labels
             .iter()
             .any(|l| l == "rp=q8.16,whiten=q4.12,rot=q4.12,qat=ste"));
+    }
+
+    #[test]
+    fn custom_stage_graph_pareto_runs() {
+        // A non-paper graph (whiten-only fixed point) through the same
+        // harness: points evaluate, price, and mark a frontier with
+        // zero new plumbing.
+        let plans = vec![
+            Precision::parse("f32").unwrap(),
+            Precision::parse("q4.12").unwrap(),
+        ];
+        let pts =
+            run_sized_stages("waveform", &plans, Some("whiten:gha"), 1, 4, 2018, 400, 120)
+                .unwrap();
+        assert_eq!(pts.len(), 2);
+        assert!(pts.iter().all(|p| p.alms > 0));
+        assert!(pts.iter().any(|p| p.on_frontier));
     }
 
     #[test]

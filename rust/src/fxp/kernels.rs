@@ -194,11 +194,16 @@ impl FxpRp {
 /// at the fixed-point pipeline ingress and cross the RP→stage format
 /// boundary, staging through caller-owned scratch: `scratch.xq`
 /// receives the quantized entry tile and, with an RP front end,
-/// `scratch.stage` the projected/requantized stage tile. This is the
-/// single ingress definition shared by the coordinator's training and
-/// inference paths *and* the bench harness, so none of them can
-/// quantize inputs differently; it is row-for-row identical to
-/// quantizing each sample on its own.
+/// `scratch.stage` the projected/requantized stage tile. It is
+/// row-for-row identical to quantizing each sample on its own.
+///
+/// This is the two-boundary ingress of the paper's fixed RP → unit
+/// shape; [`crate::stage::StageGraph`] generalises the same arithmetic
+/// (`entry.quantize(v·prescale)` + per-boundary `requantize_from`) to
+/// arbitrary cascades, and the bit-identity tests
+/// (`tests/stage_graph_identity.rs`) pin the graph against this
+/// definition for every legacy configuration, while the bench harness
+/// keeps calling it directly as the per-sample baseline.
 pub fn ingress_tile(
     rp: Option<&FxpRp>,
     entry_spec: &FxpSpec,
@@ -294,6 +299,16 @@ impl FxpGha {
     /// The subspace, dequantized.
     pub fn subspace(&self) -> Mat {
         self.w.dequantize()
+    }
+
+    /// Stage input dimensionality.
+    pub fn input_dim(&self) -> usize {
+        self.input_dim
+    }
+
+    /// Stage output dimensionality.
+    pub fn output_dim(&self) -> usize {
+        self.output_dim
     }
 
     /// Real value of one raw LSB of the extended variance accumulator —
@@ -482,6 +497,50 @@ impl FxpGha {
         Mat::from_fn(n, m, |i, j| w.get(i, j) * self.coeff[i].value())
     }
 
+    /// Checkpoint the whitener's datapath state: raw subspace words,
+    /// the extended-precision variance accumulators, the sample count,
+    /// the *current* whitening coefficients (refreshed only every
+    /// [`HOST_REFRESH_INTERVAL`] samples, so they cannot be recomputed
+    /// from the accumulators without breaking bit-exactness), and (STE)
+    /// the f32 shadow weights. Restoring through
+    /// [`FxpGha::restore_state`] reproduces the training trajectory
+    /// bit-for-bit — including the shadow, so STE checkpoints carry
+    /// their sub-LSB accumulation across reconfigurations.
+    #[allow(clippy::type_complexity)]
+    pub fn save_state(&self) -> (Vec<i32>, Vec<i64>, u64, Vec<FxpConst>, Option<Mat>) {
+        (
+            self.w.as_raw().to_vec(),
+            self.var_acc.clone(),
+            self.steps,
+            self.coeff.clone(),
+            self.shadow.clone(),
+        )
+    }
+
+    /// Restore a [`FxpGha::save_state`] checkpoint — bit-exact
+    /// continuation (the saved coefficients are reinstated verbatim;
+    /// the next periodic refresh recomputes them on schedule).
+    pub fn restore_state(
+        &mut self,
+        w_raw: &[i32],
+        var_acc: &[i64],
+        steps: u64,
+        coeff: &[FxpConst],
+        shadow: Option<&Mat>,
+    ) {
+        assert_eq!(w_raw.len(), self.output_dim * self.input_dim);
+        assert_eq!(var_acc.len(), self.output_dim);
+        assert_eq!(coeff.len(), self.output_dim);
+        self.w.as_raw_mut().copy_from_slice(w_raw);
+        self.var_acc.copy_from_slice(var_acc);
+        self.steps = steps;
+        self.coeff.copy_from_slice(coeff);
+        if let (Some(dst), Some(src)) = (self.shadow.as_mut(), shadow) {
+            assert_eq!(src.shape(), dst.shape());
+            dst.as_mut_slice().copy_from_slice(src.as_slice());
+        }
+    }
+
     /// Mean absolute row-orthonormality error of W (→ 0 at
     /// convergence), on dequantized values.
     pub fn orthonormality_error(&self) -> f64 {
@@ -578,6 +637,16 @@ impl FxpEasiRot {
     /// The training mode this rotation was built with.
     pub fn quant_mode(&self) -> QuantMode {
         self.quant
+    }
+
+    /// Stage input dimensionality.
+    pub fn input_dim(&self) -> usize {
+        self.input_dim
+    }
+
+    /// Stage output dimensionality.
+    pub fn output_dim(&self) -> usize {
+        self.output_dim
     }
 
     /// EMA of ‖ΔB‖_F/‖B‖_F — approaches 0 as the rotation converges
@@ -711,6 +780,25 @@ impl FxpEasiRot {
         self.steps += 1;
         if self.steps % HOST_REFRESH_INTERVAL == 0 {
             self.retract();
+        }
+    }
+
+    /// Checkpoint the rotation's datapath state: raw matrix words, the
+    /// step count (which pins the retraction cadence), and (STE) the
+    /// f32 shadow matrix.
+    pub fn save_state(&self) -> (Vec<i32>, u64, Option<Mat>) {
+        (self.b.as_raw().to_vec(), self.steps, self.shadow.clone())
+    }
+
+    /// Restore a [`FxpEasiRot::save_state`] checkpoint — bit-exact
+    /// continuation, shadow included.
+    pub fn restore_state(&mut self, b_raw: &[i32], steps: u64, shadow: Option<&Mat>) {
+        assert_eq!(b_raw.len(), self.output_dim * self.input_dim);
+        self.b.as_raw_mut().copy_from_slice(b_raw);
+        self.steps = steps;
+        if let (Some(dst), Some(src)) = (self.shadow.as_mut(), shadow) {
+            assert_eq!(src.shape(), dst.shape());
+            dst.as_mut_slice().copy_from_slice(src.as_slice());
         }
     }
 

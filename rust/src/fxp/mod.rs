@@ -440,6 +440,23 @@ impl QuantMode {
     }
 }
 
+/// The precision role a stage of a composable DR graph plays — how a
+/// [`PrecisionPlan`] assigns an arithmetic spec to each stage of a
+/// [`crate::stage::StageGraph`]. Static front-end stages (RP, DCT,
+/// identity) share the entry/accumulator format; the whitening and
+/// rotation stages each have their own. A graph stage can still
+/// override its role's format individually via the stage-list syntax
+/// (`rp:ternary/16@q8.16` — see [`crate::stage::spec`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageRole {
+    /// RP front end / static entry stages (DCT, identity).
+    Rp,
+    /// GHA whitening stage.
+    Whiten,
+    /// EASI rotation (or standalone EASI) stage.
+    Rot,
+}
+
 /// Per-stage arithmetic of a fixed-point pipeline — the mixed-precision
 /// axis. Real datapaths are not uniform: the RP accumulator wants
 /// headroom (wide integer part), the whitener mid width, the rotation
@@ -447,6 +464,11 @@ impl QuantMode {
 /// requantize raw words ([`FxpSpec::requantize_from`]); a uniform plan
 /// makes every boundary a no-op and is bit-identical to the PR-1
 /// single-format datapath.
+///
+/// Graph stages consume the plan through [`PrecisionPlan::spec_for`]
+/// (keyed by [`StageRole`]) rather than as a hardwired rp/whiten/rot
+/// triple, so any stage cascade — not just the paper's RP → unit shape
+/// — gets a per-stage format assignment.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PrecisionPlan {
     /// RP front-end accumulator format.
@@ -474,6 +496,17 @@ impl PrecisionPlan {
     /// Whether all three stages share one arithmetic spec.
     pub fn is_uniform(&self) -> bool {
         self.rp == self.whiten && self.whiten == self.rot
+    }
+
+    /// The arithmetic spec this plan assigns to a graph stage of the
+    /// given role — the per-graph-stage view of the plan (see
+    /// [`StageRole`]).
+    pub fn spec_for(&self, role: StageRole) -> FxpSpec {
+        match role {
+            StageRole::Rp => self.rp,
+            StageRole::Whiten => self.whiten,
+            StageRole::Rot => self.rot,
+        }
     }
 
     /// The widest stage width in bits (storage/reporting upper bound).
@@ -533,24 +566,46 @@ impl Precision {
                 .map_err(|e| anyhow::anyhow!("precision '{s}': {e}"))?;
             return Ok(Precision::Fixed(PrecisionPlan::uniform(spec)));
         }
+        // Duplicate keys are rejected (naming the offending token)
+        // rather than silently last-wins: a typo'd plan must fail loudly.
+        fn set_spec(
+            slot: &mut Option<FxpSpec>,
+            key: &str,
+            v: &str,
+            whole: &str,
+        ) -> Result<()> {
+            anyhow::ensure!(
+                slot.is_none(),
+                "duplicate precision key '{key}' in '{whole}'"
+            );
+            *slot = Some(FxpSpec::parse(v)?);
+            Ok(())
+        }
         let (mut rp, mut whiten, mut rot, mut all) = (None, None, None, None);
         let mut quant = QuantMode::BitExact;
+        let mut quant_seen = false;
         for item in t.split(',') {
             let item = item.trim();
             if item.is_empty() {
                 continue;
             }
             match item.split_once('=') {
-                Some(("rp", v)) => rp = Some(FxpSpec::parse(v)?),
-                Some(("whiten", v)) => whiten = Some(FxpSpec::parse(v)?),
-                Some(("rot", v)) => rot = Some(FxpSpec::parse(v)?),
-                Some(("all", v)) => all = Some(FxpSpec::parse(v)?),
-                Some(("qat", v)) => quant = QuantMode::parse(v)?,
+                Some(("rp", v)) => set_spec(&mut rp, "rp", v, &t)?,
+                Some(("whiten", v)) => set_spec(&mut whiten, "whiten", v, &t)?,
+                Some(("rot", v)) => set_spec(&mut rot, "rot", v, &t)?,
+                Some(("all", v)) => set_spec(&mut all, "all", v, &t)?,
+                Some(("qat", v)) => {
+                    if quant_seen {
+                        bail!("duplicate precision key 'qat' in '{t}'");
+                    }
+                    quant = QuantMode::parse(v)?;
+                    quant_seen = true;
+                }
                 Some((k, _)) => {
                     bail!("unknown precision key '{k}' in '{s}' (rp|whiten|rot|all|qat)")
                 }
                 // Bare qI.F token in a list: shorthand for all=.
-                None => all = Some(FxpSpec::parse(item)?),
+                None => set_spec(&mut all, "all", item, &t)?,
             }
         }
         // Unset stages inherit `all`, then the widest explicit spec.
@@ -862,6 +917,43 @@ mod tests {
         assert!(Precision::parse("gha=q4.12").is_err());
         assert!(Precision::parse("qat=ste").is_err());
         assert!(Precision::parse("q4.12,qat=sometimes").is_err());
+    }
+
+    #[test]
+    fn precision_plan_rejects_duplicate_keys() {
+        // Duplicate keys must fail naming the offending key, not
+        // silently last-win.
+        for s in [
+            "rp=q4.12,rp=q8.16",
+            "whiten=q4.12,whiten=q4.8",
+            "rot=q1.15,rot=q4.12",
+            "all=q4.12,all=q8.16",
+            "q4.12,q8.16",       // two bare tokens both mean `all=`
+            "all=q4.12,q8.16",   // explicit + bare `all=`
+            "qat=ste,qat=ste",
+            "q4.12,qat=ste,qat=bit-exact",
+        ] {
+            let err = Precision::parse(s).unwrap_err().to_string();
+            assert!(err.contains("duplicate precision key"), "{s}: {err}");
+        }
+        // Distinct keys still compose fine.
+        assert!(Precision::parse("rp=q8.16,whiten=q4.12,rot=q1.15,qat=ste").is_ok());
+    }
+
+    #[test]
+    fn plan_spec_for_roles() {
+        let plan = Precision::parse("rp=q8.16,whiten=q4.12,rot=q1.15")
+            .unwrap()
+            .plan()
+            .unwrap();
+        assert_eq!(plan.spec_for(StageRole::Rp), FxpSpec::q(8, 16));
+        assert_eq!(plan.spec_for(StageRole::Whiten), FxpSpec::q(4, 12));
+        assert_eq!(plan.spec_for(StageRole::Rot), FxpSpec::q(1, 15));
+        // Uniform plans answer the same spec for every role.
+        let u = PrecisionPlan::uniform(FxpSpec::q(4, 12));
+        for role in [StageRole::Rp, StageRole::Whiten, StageRole::Rot] {
+            assert_eq!(u.spec_for(role), FxpSpec::q(4, 12));
+        }
     }
 
     #[test]

@@ -192,6 +192,23 @@ impl Arria10Model {
         report
     }
 
+    /// Price an arbitrary stage cascade by folding per-stage
+    /// inventories, each at its own operand format — the stage-graph
+    /// pricing path ([`crate::stage::GraphSpec::hw_cost`]). Summing the
+    /// module reports mirrors how cascaded datapaths compose on the
+    /// fabric (each stage is its own pipelined region).
+    pub fn cost_stages(&self, stages: &[(OpCounts, NumericFormat)]) -> ResourceReport {
+        let mut report: Option<ResourceReport> = None;
+        for (ops, fmt) in stages {
+            let part = self.cost_fmt(ops, *fmt);
+            report = Some(match report {
+                None => part,
+                Some(acc) => acc.merge(&part, &self.capacity),
+            });
+        }
+        report.unwrap_or_else(|| self.cost_fmt(&OpCounts::default(), NumericFormat::Fp32))
+    }
+
     /// Cost raw operation counts at a given operand format.
     pub fn cost_fmt(&self, ops: &OpCounts, fmt: NumericFormat) -> ResourceReport {
         let hard_ops = ops.mults + ops.adds;

@@ -170,6 +170,22 @@ pub fn easi_split_ops(m: usize, n: usize) -> (OpCounts, OpCounts) {
     (whiten, rot)
 }
 
+/// Dense linear-stage inventory, `m → k`: one pipelined matvec (a DCT
+/// truncation or a batch-PCA projection realised as a constant-matrix
+/// multiply), plus the coefficient store and input taps. Used by the
+/// stage-graph pricing for cascades beyond the paper's RP → EASI shape.
+pub fn dense_stage_ops(m: usize, k: usize) -> OpCounts {
+    assert!(m >= k && k >= 1, "need m >= k >= 1");
+    let (m64, k64) = (m as u64, k as u64);
+    OpCounts {
+        mults: k64 * m64,
+        adds: k64 * (m64 - 1),
+        soft_addsubs: 0,
+        storage_words: k64 * m64 // coefficient matrix
+            + m64, // input taps
+    }
+}
+
 /// Random-projection module inventory, `m → p`, Fox et al. FPT'16
 /// style: a fully-spatial conditional add/subtract network — `p` output
 /// accumulation trees, each fed by all `m` inputs gated by the ternary

@@ -17,8 +17,10 @@
 //! * Hardware co-design: [`hwmodel`] (bitwidth-aware Arria-10 resource
 //!   + pipeline model, regenerates the paper's Table II)
 //! * System: [`runtime`] (PJRT artifact loader), [`coordinator`]
-//!   (streaming training service), [`pipeline`] (composed DR pipelines,
-//!   f32 or fixed-point via [`fxp::Precision`]), [`config`]
+//!   (streaming training service), [`stage`] (the unified stage-graph
+//!   datapath: one `Stage` abstraction over f32 and fixed point),
+//!   [`pipeline`] (composed DR pipelines — thin façade over the stage
+//!   graph, f32 or fixed-point via [`fxp::Precision`]), [`config`]
 
 pub mod config;
 pub mod coordinator;
@@ -35,6 +37,7 @@ pub mod pipeline;
 pub mod rng;
 pub mod rp;
 pub mod runtime;
+pub mod stage;
 pub mod util;
 
 /// Crate-wide result alias (anyhow-based, matches the binary's error style).

@@ -17,11 +17,16 @@
 //!   dimred train --dataset waveform --mode rp-easi --backend pjrt \
 //!       --intermediate-dim 16 --output-dim 8
 //!   dimred train --mode rp-easi --precision q4.12
+//!   dimred train --stages rp:ternary/16,whiten:gha,rot:easi
+//!   dimred train --stages rp:ternary/16,pca --no-classifier
+//!   dimred train --stages dct/16,whiten:gha,rot:easi --precision q4.12
+//!   dimred train --stages whiten:gha --precision q4.12
 //!   dimred train --precision rp=q8.16,whiten=q4.12,rot=q1.15,qat=ste
 //!   dimred train --precision q1.15:wrap:trunc
 //!   dimred table2 --precision q1.15
 //!   dimred fig1 mnist --points 4
 //!   dimred fxp-sweep waveform --json sweep.json
+//!   dimred fxp-sweep waveform --stages whiten:gha
 //!   dimred pareto waveform --json pareto.json
 
 use anyhow::{bail, Context, Result};
@@ -102,6 +107,18 @@ COMMANDS:
 TRAIN OPTIONS:
   --dataset waveform|mnist|har|ads   (default waveform)
   --mode easi|pca-whiten|rp|rp-easi  (default rp-easi)
+  --stages LIST                      (explicit stage graph replacing the
+                                      mode mapping; comma-separated
+                                      name[:variant][/dim][@qI.F] tokens:
+                                      rp:ternary|achlioptas|gaussian/D,
+                                      whiten:gha, rot:easi, easi:full|rot,
+                                      pca[:whiten], dct, identity. E.g.
+                                      rp:ternary/16,whiten:gha,rot:easi
+                                      (the paper), rp:ternary/16,pca,
+                                      dct/16,whiten:gha,rot:easi, or a
+                                      lone whiten:gha. Native backend
+                                      only; fxp-sweep/pareto take the
+                                      same flag)
   --backend native|pjrt              (default native)
   --precision f32|qI.F|PLAN          (default f32. qI.F takes optional
                                       policy suffixes :wrap / :trunc
@@ -204,6 +221,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.epochs,
         cfg.batch
     );
+    if let Some(s) = &cfg.stages {
+        println!("# stages: {s}");
+    }
 
     let mut svc = TrainingService::new(cfg.clone(), runtime.as_ref());
     let report = svc.run(&data)?;
@@ -322,7 +342,11 @@ fn cmd_fxp_sweep(args: &Args) -> Result<()> {
     let (_, _, _, default_epochs) = dimred::experiments::fxp_sweep::dims_for(which)?;
     let epochs = args.usize_or("epochs", default_epochs)?;
     let seed = args.u64_or("seed", 2018)?;
-    let points = dimred::experiments::fxp_sweep::run(which, &formats, epochs, seed)?;
+    let stages = args.opt_str("stages");
+    if let Some(s) = stages {
+        println!("# stages: {s}");
+    }
+    let points = dimred::experiments::fxp_sweep::run_with(which, &formats, epochs, seed, stages)?;
     println!(
         "{}",
         dimred::experiments::fxp_sweep::render(which, &points)
@@ -359,7 +383,11 @@ fn cmd_pareto(args: &Args) -> Result<()> {
     let (_, _, _, default_epochs) = dimred::experiments::fxp_sweep::dims_for(which)?;
     let epochs = args.usize_or("epochs", default_epochs)?;
     let seed = args.u64_or("seed", 2018)?;
-    let points = dimred::experiments::pareto::run(which, &plans, epochs, seed)?;
+    let stages = args.opt_str("stages");
+    if let Some(s) = stages {
+        println!("# stages: {s}");
+    }
+    let points = dimred::experiments::pareto::run_with(which, &plans, epochs, seed, stages)?;
     println!("{}", dimred::experiments::pareto::render(which, &points));
     if let Some(path) = args.opt_str("json") {
         let json = dimred::experiments::pareto::to_json(which, &points);

@@ -1,27 +1,36 @@
 //! Composed dimensionality-reduction pipelines — the paper's §IV
 //! proposal as a first-class API.
 //!
-//! A [`DrPipeline`] is an optional random-projection front end followed
-//! by an optional trained stage (EASI in one of its modes, or batch
-//! PCA, or a fixed DCT). The paper's proposed configuration is
-//! `Rp → Easi(RotationOnly)`; the baselines of Table I and Fig. 1 are
-//! other points in the same space, which is exactly the
-//! reconfigurability story of §IV.
+//! A [`DrPipeline`] is a fitted [`crate::stage::StageGraph`]: the
+//! legacy declarative surface ([`PipelineSpec`] — an optional RP front
+//! end plus one [`StageSpec`]) maps onto a stage list
+//! ([`PipelineSpec::to_graph_spec`]) and both numeric domains run the
+//! same graph — f32 and bit-accurate fixed point are two *backends* of
+//! one pipeline, not two pipelines. The paper's proposed configuration
+//! is the graph `rp:ternary/p → whiten:gha → rot:easi`; the baselines
+//! of Table I and Fig. 1 are other graphs in the same space, which is
+//! exactly the reconfigurability story of §IV.
+//!
+//! Arbitrary cascades beyond the legacy forms (e.g. `rp → pca`,
+//! `dct → whiten → rot`, a whiten-only fixed-point datapath) are built
+//! directly from a [`crate::stage::GraphSpec`] / the `--stages` CLI
+//! syntax — see [`crate::stage::spec`].
 
 pub mod unit;
 
 pub use unit::{DrUnit, DrUnitConfig};
 
 use crate::datasets::Dataset;
-use crate::easi::{EasiConfig, EasiMode, EasiTrainer};
-use crate::fxp::{self, FxpEasiRot, FxpRp, FxpSpec, Precision, PrecisionPlan, Scratch};
+use crate::easi::EasiMode;
+use crate::fxp::Precision;
 use crate::linalg::Mat;
-use crate::pca::dct::Dct1d;
-use crate::pca::BatchPca;
 use crate::rp::{RandomProjection, RpDistribution};
+use crate::stage::{GraphSpec, StageDecl, StageGraph, StageOp};
 
 /// Declarative pipeline specification (maps 1:1 onto the CLI / TOML
-/// config and onto AOT artifact variants).
+/// config and onto AOT artifact variants). The legacy two-slot form;
+/// [`PipelineSpec::to_graph_spec`] is the bridge to the composable
+/// stage-graph representation.
 #[derive(Debug, Clone)]
 pub struct PipelineSpec {
     /// Input dimensionality `m`.
@@ -37,8 +46,8 @@ pub struct PipelineSpec {
     /// Arithmetic the fitted pipeline computes in. [`Precision::Fixed`]
     /// runs the bit-accurate quantized kernels ([`crate::fxp`]) for the
     /// streaming stages (RP, rotation-only EASI, the composed ICA
-    /// unit); batch/fixed stages (PCA, DCT) have no streaming datapath
-    /// and reject fixed precision.
+    /// unit); batch stages (PCA) have no streaming datapath and reject
+    /// fixed precision.
     pub precision: Precision,
 }
 
@@ -58,7 +67,7 @@ pub enum StageSpec {
     /// for an actually-learning reduction stage.
     Easi { mode: EasiMode, mu: f32, epochs: usize },
     /// The composed GHA-whitening + EASI-rotation unit (production
-    /// pipeline; see pipeline::unit).
+    /// pipeline; the graph stages `whiten:gha → rot:easi`).
     Ica { mu_w: f32, mu_rot: f32, epochs: usize },
     /// Batch PCA projection (no whitening).
     Pca,
@@ -118,68 +127,50 @@ impl PipelineSpec {
         self
     }
 
-    /// Build the RP front end this spec declares (None without one).
-    /// Single source of the unit-variance policy: adaptive stages
-    /// assume unit-variance inputs, fixed stages get the raw
-    /// distance-preserving projection. Shared by the f32 and
-    /// fixed-precision fit paths so they always project identically.
-    fn build_front_end(&self) -> Option<RandomProjection> {
-        self.rp.map(|r| {
-            let proj = RandomProjection::new(
-                self.input_dim,
-                r.intermediate_dim,
-                r.distribution,
-                self.seed,
-            );
-            if matches!(self.stage, StageSpec::Easi { .. } | StageSpec::Ica { .. }) {
-                proj.unit_variance()
-            } else {
-                proj
+    /// The golden mapping: every legacy `StageSpec` form as a stage
+    /// list (so one graph builder serves both numeric domains). The
+    /// resulting graph is bit-identical to the pre-graph fused datapath
+    /// — enforced by `tests/stage_graph_identity.rs`.
+    pub fn to_graph_spec(&self) -> GraphSpec {
+        let mut stages = Vec::new();
+        if let Some(r) = self.rp {
+            stages.push(StageDecl::new(StageOp::Rp(r.distribution)).with_dim(r.intermediate_dim));
+        }
+        let (mu_w, mu_rot, epochs) = match self.stage {
+            StageSpec::Easi { mu, epochs, .. } => (5e-3, mu, epochs),
+            StageSpec::Ica { mu_w, mu_rot, epochs } => (mu_w, mu_rot, epochs),
+            _ => (5e-3, 1e-3, 1),
+        };
+        match self.stage {
+            StageSpec::Easi { mode, .. } => stages.push(StageDecl::new(StageOp::Easi(mode))),
+            StageSpec::Ica { .. } => {
+                stages.push(StageDecl::new(StageOp::WhitenGha));
+                stages.push(StageDecl::new(StageOp::RotEasi));
             }
-        })
+            StageSpec::Pca => stages.push(StageDecl::new(StageOp::Pca { whiten: false })),
+            StageSpec::PcaWhiten => stages.push(StageDecl::new(StageOp::Pca { whiten: true })),
+            StageSpec::Dct => stages.push(StageDecl::new(StageOp::Dct)),
+            StageSpec::Identity => stages.push(StageDecl::new(StageOp::Identity)),
+        }
+        GraphSpec {
+            input_dim: self.input_dim,
+            output_dim: self.output_dim,
+            stages,
+            seed: self.seed,
+            precision: self.precision,
+            mu_w,
+            mu_rot,
+            rot_warmup: None,
+            epochs,
+        }
     }
 }
 
-/// Entry/exit arithmetic of a fitted fixed-point pipeline — which
-/// format samples are quantized into, the power-of-two prescale applied
-/// first, the trained stage's input format (the RP→stage boundary
-/// requantizes), and the output format to dequantize from. For uniform
-/// plans all four specs coincide and every boundary is a no-op.
-#[derive(Debug, Clone, Copy)]
-struct FxpIo {
-    entry: FxpSpec,
-    prescale: f32,
-    stage_in: FxpSpec,
-    output: FxpSpec,
-}
-
-/// Prescale + quantize one sample into a fixed-point pipeline's input
-/// domain (the entry-point arithmetic shared by fit and transform).
-fn quantize_prescaled(fspec: &FxpSpec, prescale: f32, x: &[f32]) -> Vec<i32> {
-    x.iter().map(|&v| fspec.quantize(v * prescale)).collect()
-}
-
-/// A fitted pipeline, ready to transform samples.
+/// A fitted pipeline, ready to transform samples — a thin façade over
+/// the fitted [`StageGraph`].
 pub struct DrPipeline {
     pub spec: PipelineSpec,
-    rp: Option<RandomProjection>,
-    /// Quantized image of `rp` for fixed-precision pipelines.
-    fxp_rp: Option<FxpRp>,
-    /// Boundary arithmetic for fixed-precision pipelines.
-    fxp_io: Option<FxpIo>,
-    stage: FittedStage,
-}
-
-enum FittedStage {
-    Easi(EasiTrainer),
-    Unit(unit::DrUnit),
-    /// Quantized rotation-only EASI (fixed precision).
-    FxpEasi(FxpEasiRot),
-    /// Quantized composed whiten+rotate unit (fixed precision).
-    FxpUnit(fxp::FxpDrUnit),
-    Pca(BatchPca, /*whiten=*/ bool),
-    Dct(Dct1d),
-    Identity,
+    graph: StageGraph,
 }
 
 impl DrPipeline {
@@ -188,222 +179,22 @@ impl DrPipeline {
     ///
     /// With [`Precision::Fixed`], the streaming stages train and run
     /// bit-accurately in fixed point (quantized RP network, quantized
-    /// update kernels); panics for batch stages (PCA/DCT), which have
-    /// no streaming datapath to quantize.
+    /// update kernels); panics for batch stages (PCA), which have no
+    /// streaming datapath to quantize.
     pub fn fit(spec: PipelineSpec, train_x: &Mat) -> Self {
         assert_eq!(train_x.cols_count(), spec.input_dim, "input dim mismatch");
-        if let Precision::Fixed(plan) = spec.precision {
-            return Self::fit_fixed(spec, plan, train_x);
-        }
-        let rp = spec.build_front_end();
-        // Materialise the (possibly projected) training view for the
-        // second stage.
-        let staged: Mat = match &rp {
-            Some(proj) => proj.apply_rows(train_x),
-            None => train_x.clone(),
+        let gspec = spec.to_graph_spec();
+        let mut graph = match gspec.build(Some(train_x.rows_count())) {
+            Ok(g) => g,
+            Err(e) => panic!("{e}"),
         };
-        let stage = match spec.stage {
-            StageSpec::Easi { mode, mu, epochs } => {
-                let mut t = EasiTrainer::new(EasiConfig {
-                    input_dim: spec.stage_input_dim(),
-                    output_dim: spec.output_dim,
-                    mu,
-                    mode,
-                    normalized: true,
-                    max_norm: if mode == EasiMode::RotationOnly {
-                        4.0 * (spec.output_dim as f32).sqrt()
-                    } else {
-                        1e4
-                    },
-                    clip: 0.05,
-                    random_init: Some(spec.seed),
-                });
-                for _ in 0..epochs.max(1) {
-                    t.step_rows(&staged);
-                }
-                FittedStage::Easi(t)
-            }
-            StageSpec::Ica { mu_w, mu_rot, epochs } => {
-                let mut u = unit::DrUnit::new(unit::DrUnitConfig {
-                    input_dim: spec.stage_input_dim(),
-                    output_dim: spec.output_dim,
-                    mu_w,
-                    mu_rot,
-                    rotate: true,
-                    rot_warmup: (staged.rows_count() / 2).min(2000) as u64,
-                    seed: spec.seed,
-                });
-                for _ in 0..epochs.max(1) {
-                    u.step_rows(&staged);
-                }
-                FittedStage::Unit(u)
-            }
-            StageSpec::Pca => FittedStage::Pca(BatchPca::fit(&staged, spec.output_dim), false),
-            StageSpec::PcaWhiten => {
-                FittedStage::Pca(BatchPca::fit(&staged, spec.output_dim), true)
-            }
-            StageSpec::Dct => FittedStage::Dct(Dct1d::new(spec.stage_input_dim(), spec.output_dim)),
-            StageSpec::Identity => {
-                assert_eq!(
-                    spec.stage_input_dim(),
-                    spec.output_dim,
-                    "Identity stage requires RP to land on output_dim"
-                );
-                FittedStage::Identity
-            }
-        };
-        Self {
-            spec,
-            rp,
-            fxp_rp: None,
-            fxp_io: None,
-            stage,
-        }
-    }
-
-    /// Fixed-precision fit: quantized RP network (at the plan's RP
-    /// format) feeding quantized streaming kernels (whitener/rotation
-    /// at theirs), trained on the quantized view of the data. Stage
-    /// boundaries requantize; uniform plans reduce exactly to the
-    /// single-format datapath.
-    fn fit_fixed(spec: PipelineSpec, plan: PrecisionPlan, train_x: &Mat) -> Self {
-        let rp = spec.build_front_end();
-        let fxp_rp = rp.as_ref().map(|p| FxpRp::from_rp(p, plan.rp));
-        let stage_in = spec.stage_input_dim();
-        // Per-stage boundary arithmetic. The trained stage's input
-        // format decides the σ machinery; the entry format is the RP
-        // accumulator when an RP front end exists.
-        let stage_in_spec = match spec.stage {
-            StageSpec::Easi { .. } => plan.rot,
-            StageSpec::Ica { .. } => plan.whiten,
-            _ => plan.rp,
-        };
-        let entry = if fxp_rp.is_some() { plan.rp } else { stage_in_spec };
-        let prescale = plan.entry_prescale(fxp_rp.is_some(), &stage_in_spec);
-        // Quantized training view, built once as one flat row-major
-        // tile through the crate-wide shared ingress (the same
-        // definition the coordinator and the bench run): prescale +
-        // quantize the whole sample matrix, push the tile through the
-        // quantized RP network, and cross the RP→stage boundary —
-        // row-for-row identical to per-sample ingress, with no
-        // per-sample vectors.
-        let rows = train_x.rows_count();
-        let mut ingress = Scratch::new();
-        fxp::kernels::ingress_tile(
-            fxp_rp.as_ref(),
-            &entry,
-            &stage_in_spec,
-            prescale,
-            train_x.as_slice(),
-            rows,
-            &mut ingress,
-        );
-        let staged_raw: &[i32] = if fxp_rp.is_some() {
-            &ingress.stage
-        } else {
-            &ingress.xq
-        };
-        let mut output = stage_in_spec;
-        let stage = match spec.stage {
-            StageSpec::Easi { mode, mu, epochs } => {
-                assert!(
-                    mode == EasiMode::RotationOnly,
-                    "fixed-point EASI implements the paper's rotation-only \
-                     datapath; got {mode:?}"
-                );
-                // Update terms scale as σ⁴ under the input prescale —
-                // fold the compensation into μ (exact power of two).
-                let mu_eff = mu / prescale.powi(4);
-                let mut t = FxpEasiRot::new(
-                    stage_in,
-                    spec.output_dim,
-                    mu_eff,
-                    Some(spec.seed),
-                    plan.rot,
-                    plan.quant,
-                );
-                for _ in 0..epochs.max(1) {
-                    t.step_tile_raw(staged_raw, rows);
-                }
-                output = plan.rot;
-                FittedStage::FxpEasi(t)
-            }
-            StageSpec::Ica { mu_w, mu_rot, epochs } => {
-                let mut u = fxp::FxpDrUnit::new(fxp::FxpUnitConfig {
-                    input_dim: stage_in,
-                    output_dim: spec.output_dim,
-                    mu_w,
-                    mu_rot,
-                    rotate: true,
-                    rot_warmup: (train_x.rows_count() / 2).min(2000) as u64,
-                    seed: spec.seed,
-                    whiten_spec: plan.whiten,
-                    rot_spec: plan.rot,
-                    quant: plan.quant,
-                });
-                for _ in 0..epochs.max(1) {
-                    u.step_tile_raw(staged_raw, rows);
-                }
-                output = u.output_spec();
-                FittedStage::FxpUnit(u)
-            }
-            StageSpec::Identity => {
-                assert_eq!(
-                    stage_in, spec.output_dim,
-                    "Identity stage requires RP to land on output_dim"
-                );
-                FittedStage::Identity
-            }
-            other => panic!(
-                "fixed-point precision supports the streaming stages \
-                 (easi rotation-only, ica, identity), not {other:?}"
-            ),
-        };
-        Self {
-            spec,
-            rp,
-            fxp_rp,
-            fxp_io: Some(FxpIo {
-                entry,
-                prescale,
-                stage_in: stage_in_spec,
-                output,
-            }),
-            stage,
-        }
+        graph.fit(train_x, gspec.epochs);
+        Self { spec, graph }
     }
 
     /// Transform one sample `m → n`.
     pub fn transform(&self, x: &[f32]) -> Vec<f32> {
-        if let Some(io) = &self.fxp_io {
-            let xq = quantize_prescaled(&io.entry, io.prescale, x);
-            let staged = match &self.fxp_rp {
-                Some(f) => io.stage_in.requantize_vec_from(&f.apply_raw(&xq), &io.entry),
-                None => xq,
-            };
-            let out = match &self.stage {
-                FittedStage::FxpEasi(t) => t.transform_raw(&staged),
-                FittedStage::FxpUnit(u) => u.transform_raw(&staged),
-                FittedStage::Identity => staged,
-                _ => unreachable!("fixed pipelines hold quantized stages"),
-            };
-            return io.output.dequantize_vec(&out);
-        }
-        let staged: Vec<f32> = match &self.rp {
-            Some(proj) => proj.apply(x),
-            None => x.to_vec(),
-        };
-        match &self.stage {
-            FittedStage::Easi(t) => t.transform(&staged),
-            FittedStage::Unit(u) => u.transform(&staged),
-            FittedStage::Pca(p, false) => p.transform(&staged),
-            FittedStage::Pca(p, true) => p.whiten(&staged),
-            FittedStage::Dct(d) => d.transform(&staged),
-            FittedStage::Identity => staged,
-            FittedStage::FxpEasi(_) | FittedStage::FxpUnit(_) => {
-                unreachable!("f32 pipelines hold f32 stages")
-            }
-        }
+        self.graph.transform(x)
     }
 
     /// Transform every row of a sample matrix. Fixed-precision
@@ -411,53 +202,7 @@ impl DrPipeline {
     /// datapath (bit-identical to per-sample [`DrPipeline::transform`],
     /// without the per-sample staging vectors).
     pub fn transform_rows(&self, x: &Mat) -> Mat {
-        if let Some(io) = self.fxp_io {
-            return self.transform_rows_fixed(&io, x);
-        }
-        let rows = x.rows_count();
-        let mut out = Vec::with_capacity(rows * self.spec.output_dim);
-        for r in x.rows() {
-            out.extend(self.transform(r));
-        }
-        Mat::from_vec(rows, self.spec.output_dim, out)
-    }
-
-    /// The tiled fixed-point bulk transform: the shared ingress
-    /// (quantize at the entry format, project through the quantized RP
-    /// network, cross the stage boundary), then the quantized stage
-    /// tile-at-a-time.
-    fn transform_rows_fixed(&self, io: &FxpIo, x: &Mat) -> Mat {
-        let rows = x.rows_count();
-        let mut ingress = Scratch::new();
-        fxp::kernels::ingress_tile(
-            self.fxp_rp.as_ref(),
-            &io.entry,
-            &io.stage_in,
-            io.prescale,
-            x.as_slice(),
-            rows,
-            &mut ingress,
-        );
-        let staged: &[i32] = if self.fxp_rp.is_some() {
-            &ingress.stage
-        } else {
-            &ingress.xq
-        };
-        let mut raw = Vec::new();
-        match &self.stage {
-            FittedStage::FxpEasi(t) => t.transform_tile_raw(staged, rows, &mut raw),
-            FittedStage::FxpUnit(u) => {
-                let mut scratch = Scratch::new();
-                u.transform_tile_raw(staged, rows, &mut scratch, &mut raw);
-            }
-            FittedStage::Identity => raw.extend_from_slice(staged),
-            _ => unreachable!("fixed pipelines hold quantized stages"),
-        }
-        Mat::from_vec(
-            rows,
-            self.spec.output_dim,
-            raw.iter().map(|&w| io.output.dequantize(w)).collect(),
-        )
+        self.graph.transform_rows(x)
     }
 
     /// Map an entire dataset through the pipeline (used before training
@@ -473,24 +218,21 @@ impl DrPipeline {
         }
     }
 
-    /// Access the fitted EASI trainer (None for non-EASI stages) — used
-    /// by the coordinator for checkpointing and by tests.
-    pub fn easi(&self) -> Option<&EasiTrainer> {
-        match &self.stage {
-            FittedStage::Easi(t) => Some(t),
-            _ => None,
-        }
+    /// The fitted stage graph (per-stage access, checkpointing).
+    pub fn graph(&self) -> &StageGraph {
+        &self.graph
     }
 
     /// The RP front end, if any.
     pub fn rp(&self) -> Option<&RandomProjection> {
-        self.rp.as_ref()
+        self.graph.random_projection()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::pca::BatchPca;
     use crate::rng::{Pcg64, RngExt};
 
     fn gaussian_data(n: usize, d: usize, seed: u64) -> Mat {
@@ -576,6 +318,41 @@ mod tests {
             p.transform(x.row(0))
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn legacy_specs_map_onto_stage_lists() {
+        // The golden mapping, shape level: every legacy StageSpec
+        // variant produces the expected stage list (bit-identity of the
+        // built graphs is enforced in tests/stage_graph_identity.rs).
+        let base = PipelineSpec::proposed(32, 16, 8, 1e-3, 2, 7);
+        assert_eq!(base.to_graph_spec().stages_label(), "rp:ternary/16,easi:rot");
+        let ica = PipelineSpec {
+            stage: StageSpec::Ica {
+                mu_w: 5e-3,
+                mu_rot: 1e-3,
+                epochs: 2,
+            },
+            ..base.clone()
+        };
+        assert_eq!(
+            ica.to_graph_spec().stages_label(),
+            "rp:ternary/16,whiten:gha,rot:easi"
+        );
+        let easi = PipelineSpec::easi_only(32, 16, 1e-3, 1, 7);
+        assert_eq!(easi.to_graph_spec().stages_label(), "easi:full");
+        for (stage, want) in [
+            (StageSpec::Pca, "rp:ternary/16,pca"),
+            (StageSpec::PcaWhiten, "rp:ternary/16,pca:whiten"),
+            (StageSpec::Dct, "rp:ternary/16,dct"),
+            (StageSpec::Identity, "rp:ternary/16,identity"),
+        ] {
+            let spec = PipelineSpec {
+                stage,
+                ..base.clone()
+            };
+            assert_eq!(spec.to_graph_spec().stages_label(), want);
+        }
     }
 
     #[test]

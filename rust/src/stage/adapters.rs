@@ -1,0 +1,949 @@
+//! [`Stage`](super::Stage) adapters for every existing kernel — the f32
+//! stages and their fixed-point images, each reproducing the legacy
+//! fused datapath's per-row arithmetic exactly (see the bit-identity
+//! tests in `tests/stage_graph_identity.rs`).
+//!
+//! Training-path emission rules (what a downstream stage trains on):
+//!
+//! * static stages (RP, DCT, identity) emit their forward transform;
+//! * the GHA whitener emits the whitened row computed *after* that
+//!   row's update, clamped to ±4σ — exactly the staging the fused
+//!   `DrUnit`/`FxpDrUnit` performed between its two halves;
+//! * the EASI rotation emits its (post-update) forward transform, and
+//!   gates its own updates behind the whiten-only warm-up using a
+//!   sample counter that tracks the full stream (including rows seen
+//!   while the stage was muxed out), matching the fused units' gate on
+//!   the whitener's global step count.
+
+use super::{resize_f32, Stage, StageRole, StageState};
+use crate::easi::EasiTrainer;
+use crate::fxp::kernels::resize_buf;
+use crate::fxp::{FxpConst, FxpEasiRot, FxpGha, FxpMat, FxpRp, FxpSpec};
+use crate::gha::GhaWhitener;
+use crate::linalg::Mat;
+use crate::pca::dct::Dct1d;
+use crate::pca::BatchPca;
+use crate::rp::RandomProjection;
+use anyhow::ensure;
+
+// --------------------------------------------------------------- f32
+
+/// Random-projection front end (f32 backend). Static: training is a
+/// pass-through of the forward transform. The dense scaled matrix is
+/// materialised once at construction (bulk forwards and reports reuse
+/// it instead of re-densifying per call).
+pub struct RpStage {
+    pub rp: RandomProjection,
+    pub dense: Mat,
+}
+
+impl RpStage {
+    pub fn new(rp: RandomProjection) -> Self {
+        let dense = rp.to_dense();
+        Self { rp, dense }
+    }
+}
+
+impl Stage for RpStage {
+    fn name(&self) -> &'static str {
+        "rp"
+    }
+
+    fn role(&self) -> StageRole {
+        StageRole::Rp
+    }
+
+    fn in_dim(&self) -> usize {
+        self.rp.in_dim
+    }
+
+    fn out_dim(&self) -> usize {
+        self.rp.out_dim
+    }
+
+    fn step_tile(&mut self, x: &[f32], rows: usize, out: Option<&mut Vec<f32>>) {
+        if let Some(o) = out {
+            self.transform_tile(x, rows, o);
+        }
+    }
+
+    fn transform_tile(&self, x: &[f32], rows: usize, out: &mut Vec<f32>) {
+        let (m, p) = (self.rp.in_dim, self.rp.out_dim);
+        assert_eq!(x.len(), rows * m, "rp stage tile shape mismatch");
+        resize_f32(out, rows * p);
+        for r in 0..rows {
+            self.rp
+                .apply_into(&x[r * m..(r + 1) * m], &mut out[r * p..(r + 1) * p]);
+        }
+    }
+
+    fn dense_matrix(&self) -> Option<Mat> {
+        Some(self.dense.clone())
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+/// GHA whitening stage (f32 backend). Emits post-update whitened rows
+/// clamped to ±4 (the σ = 1 domain), as the fused `DrUnit` staged them
+/// for its rotation half.
+pub struct GhaStage {
+    pub gha: GhaWhitener,
+}
+
+impl GhaStage {
+    pub fn new(gha: GhaWhitener) -> Self {
+        Self { gha }
+    }
+}
+
+impl Stage for GhaStage {
+    fn name(&self) -> &'static str {
+        "whiten:gha"
+    }
+
+    fn role(&self) -> StageRole {
+        StageRole::Whiten
+    }
+
+    fn in_dim(&self) -> usize {
+        self.gha.config.input_dim
+    }
+
+    fn out_dim(&self) -> usize {
+        self.gha.config.output_dim
+    }
+
+    fn is_adaptive(&self) -> bool {
+        true
+    }
+
+    fn step_tile(&mut self, x: &[f32], rows: usize, out: Option<&mut Vec<f32>>) {
+        let (m, n) = (self.gha.config.input_dim, self.gha.config.output_dim);
+        assert_eq!(x.len(), rows * m, "gha stage tile shape mismatch");
+        match out {
+            Some(o) => {
+                resize_f32(o, rows * n);
+                for r in 0..rows {
+                    let row = &x[r * m..(r + 1) * m];
+                    self.gha.step(row);
+                    let orow = &mut o[r * n..(r + 1) * n];
+                    self.gha.whiten_into(row, orow);
+                    for v in orow.iter_mut() {
+                        *v = v.clamp(-4.0, 4.0);
+                    }
+                }
+            }
+            None => {
+                for r in 0..rows {
+                    self.gha.step(&x[r * m..(r + 1) * m]);
+                }
+            }
+        }
+    }
+
+    fn transform_tile(&self, x: &[f32], rows: usize, out: &mut Vec<f32>) {
+        let (m, n) = (self.gha.config.input_dim, self.gha.config.output_dim);
+        assert_eq!(x.len(), rows * m, "gha stage tile shape mismatch");
+        resize_f32(out, rows * n);
+        for r in 0..rows {
+            self.gha
+                .whiten_into(&x[r * m..(r + 1) * m], &mut out[r * n..(r + 1) * n]);
+        }
+    }
+
+    fn update_magnitude(&self) -> Option<f64> {
+        Some(self.gha.orthonormality_error())
+    }
+
+    fn dense_matrix(&self) -> Option<Mat> {
+        Some(self.gha.whitening_matrix())
+    }
+
+    fn save_state(&self) -> StageState {
+        StageState {
+            mats: vec![self.gha.subspace().clone()],
+            vecs: vec![self.gha.variances().to_vec()],
+            counters: vec![self.gha.steps()],
+            ..StageState::default()
+        }
+    }
+
+    fn restore_state(&mut self, st: &StageState) -> anyhow::Result<()> {
+        ensure!(
+            st.mats.len() == 1 && st.vecs.len() == 1 && st.counters.len() == 1,
+            "gha stage state shape"
+        );
+        self.gha
+            .set_state(st.mats[0].clone(), st.vecs[0].clone(), st.counters[0]);
+        Ok(())
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+/// EASI stage (f32 backend): the square rotation of the composed unit
+/// or the standalone (possibly rectangular) EASI trainer, depending on
+/// construction. Carries the warm-up gate, the periodic retraction of
+/// the unit's rotation, and the reconfiguration mux.
+pub struct EasiStage {
+    pub trainer: EasiTrainer,
+    label: &'static str,
+    warmup: u64,
+    seen: u64,
+    retract_every: Option<u64>,
+    active: bool,
+}
+
+impl EasiStage {
+    pub fn new(
+        trainer: EasiTrainer,
+        label: &'static str,
+        warmup: u64,
+        retract_every: Option<u64>,
+    ) -> Self {
+        Self {
+            trainer,
+            label,
+            warmup,
+            seen: 0,
+            retract_every,
+            active: true,
+        }
+    }
+
+    fn train_row(&mut self, row: &[f32]) {
+        self.seen += 1;
+        if self.active && self.seen > self.warmup {
+            self.trainer.step(row);
+            if let Some(k) = self.retract_every {
+                if self.trainer.steps() % k == 0 {
+                    self.trainer.reorthonormalize();
+                }
+            }
+        }
+    }
+}
+
+impl Stage for EasiStage {
+    fn name(&self) -> &'static str {
+        self.label
+    }
+
+    fn role(&self) -> StageRole {
+        StageRole::Rot
+    }
+
+    fn in_dim(&self) -> usize {
+        self.trainer.config.input_dim
+    }
+
+    fn out_dim(&self) -> usize {
+        self.trainer.config.output_dim
+    }
+
+    fn is_adaptive(&self) -> bool {
+        true
+    }
+
+    fn bypassed(&self) -> bool {
+        !self.active
+    }
+
+    fn set_active(&mut self, on: bool) {
+        self.active = on;
+    }
+
+    fn advance(&mut self, rows: usize) {
+        self.seen += rows as u64;
+    }
+
+    fn step_tile(&mut self, x: &[f32], rows: usize, out: Option<&mut Vec<f32>>) {
+        let (m, n) = (self.trainer.config.input_dim, self.trainer.config.output_dim);
+        assert_eq!(x.len(), rows * m, "easi stage tile shape mismatch");
+        match out {
+            Some(o) => {
+                resize_f32(o, rows * n);
+                for r in 0..rows {
+                    let row = &x[r * m..(r + 1) * m];
+                    self.train_row(row);
+                    let y = self.trainer.transform(row);
+                    o[r * n..(r + 1) * n].copy_from_slice(&y);
+                }
+            }
+            None => {
+                for r in 0..rows {
+                    self.train_row(&x[r * m..(r + 1) * m]);
+                }
+            }
+        }
+    }
+
+    fn transform_tile(&self, x: &[f32], rows: usize, out: &mut Vec<f32>) {
+        let (m, n) = (self.trainer.config.input_dim, self.trainer.config.output_dim);
+        assert_eq!(x.len(), rows * m, "easi stage tile shape mismatch");
+        resize_f32(out, rows * n);
+        for r in 0..rows {
+            let y = self.trainer.transform(&x[r * m..(r + 1) * m]);
+            out[r * n..(r + 1) * n].copy_from_slice(&y);
+        }
+    }
+
+    fn update_magnitude(&self) -> Option<f64> {
+        Some(self.trainer.update_magnitude())
+    }
+
+    fn dense_matrix(&self) -> Option<Mat> {
+        Some(self.trainer.separation_matrix().clone())
+    }
+
+    fn save_state(&self) -> StageState {
+        StageState {
+            mats: vec![self.trainer.separation_matrix().clone()],
+            counters: vec![self.trainer.steps(), self.seen],
+            ..StageState::default()
+        }
+    }
+
+    fn restore_state(&mut self, st: &StageState) -> anyhow::Result<()> {
+        ensure!(
+            st.mats.len() == 1 && st.counters.len() == 2,
+            "easi stage state shape"
+        );
+        self.trainer.set_separation_matrix(st.mats[0].clone());
+        self.trainer.set_steps(st.counters[0]);
+        self.seen = st.counters[1];
+        Ok(())
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+/// Batch-PCA stage (f32 only): fits on the full staged training matrix
+/// before any streaming, then transforms like a static stage.
+pub struct PcaStage {
+    pca: Option<BatchPca>,
+    whiten: bool,
+    in_dim: usize,
+    out_dim: usize,
+}
+
+impl PcaStage {
+    pub fn new(in_dim: usize, out_dim: usize, whiten: bool) -> Self {
+        Self {
+            pca: None,
+            whiten,
+            in_dim,
+            out_dim,
+        }
+    }
+
+    fn fitted(&self) -> &BatchPca {
+        self.pca.as_ref().expect("pca stage used before fit")
+    }
+}
+
+impl Stage for PcaStage {
+    fn name(&self) -> &'static str {
+        if self.whiten {
+            "pca:whiten"
+        } else {
+            "pca"
+        }
+    }
+
+    fn role(&self) -> StageRole {
+        StageRole::Whiten
+    }
+
+    fn in_dim(&self) -> usize {
+        self.in_dim
+    }
+
+    fn out_dim(&self) -> usize {
+        self.out_dim
+    }
+
+    fn is_batch(&self) -> bool {
+        true
+    }
+
+    fn is_affine(&self) -> bool {
+        true
+    }
+
+    fn fit_batch(&mut self, x: &Mat) {
+        assert_eq!(x.cols_count(), self.in_dim, "pca stage fit shape mismatch");
+        self.pca = Some(BatchPca::fit(x, self.out_dim));
+    }
+
+    fn batch_fitted(&self) -> bool {
+        self.pca.is_some()
+    }
+
+    fn step_tile(&mut self, x: &[f32], rows: usize, out: Option<&mut Vec<f32>>) {
+        if let Some(o) = out {
+            self.transform_tile(x, rows, o);
+        }
+    }
+
+    fn transform_tile(&self, x: &[f32], rows: usize, out: &mut Vec<f32>) {
+        let (m, n) = (self.in_dim, self.out_dim);
+        assert_eq!(x.len(), rows * m, "pca stage tile shape mismatch");
+        resize_f32(out, rows * n);
+        let pca = self.fitted();
+        for r in 0..rows {
+            let row = &x[r * m..(r + 1) * m];
+            let y = if self.whiten {
+                pca.whiten(row)
+            } else {
+                pca.transform(row)
+            };
+            out[r * n..(r + 1) * n].copy_from_slice(&y);
+        }
+    }
+
+    /// The *linear part* of the affine PCA map (the mean offset is not
+    /// representable in a matrix fold) — reporting only; bulk forwards
+    /// detect [`Stage::is_affine`] and take the sequential chain.
+    fn dense_matrix(&self) -> Option<Mat> {
+        self.pca.as_ref().map(|p| {
+            if self.whiten {
+                p.whitening.clone()
+            } else {
+                p.components.clone()
+            }
+        })
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+/// Fixed 1-D DCT truncation stage (f32 backend).
+pub struct DctStage {
+    pub dct: Dct1d,
+    in_dim: usize,
+    out_dim: usize,
+}
+
+impl DctStage {
+    pub fn new(in_dim: usize, out_dim: usize) -> Self {
+        Self {
+            dct: Dct1d::new(in_dim, out_dim),
+            in_dim,
+            out_dim,
+        }
+    }
+}
+
+impl Stage for DctStage {
+    fn name(&self) -> &'static str {
+        "dct"
+    }
+
+    fn role(&self) -> StageRole {
+        StageRole::Rp
+    }
+
+    fn in_dim(&self) -> usize {
+        self.in_dim
+    }
+
+    fn out_dim(&self) -> usize {
+        self.out_dim
+    }
+
+    fn step_tile(&mut self, x: &[f32], rows: usize, out: Option<&mut Vec<f32>>) {
+        if let Some(o) = out {
+            self.transform_tile(x, rows, o);
+        }
+    }
+
+    fn transform_tile(&self, x: &[f32], rows: usize, out: &mut Vec<f32>) {
+        let (m, n) = (self.in_dim, self.out_dim);
+        assert_eq!(x.len(), rows * m, "dct stage tile shape mismatch");
+        resize_f32(out, rows * n);
+        for r in 0..rows {
+            let y = self.dct.transform(&x[r * m..(r + 1) * m]);
+            out[r * n..(r + 1) * n].copy_from_slice(&y);
+        }
+    }
+
+    fn dense_matrix(&self) -> Option<Mat> {
+        Some(self.dct.matrix().clone())
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+/// Pass-through stage (both backends). In a fixed-point graph it
+/// carries its boundary format so graph requantization stays explicit.
+pub struct IdentityStage {
+    dim: usize,
+    spec: Option<FxpSpec>,
+}
+
+impl IdentityStage {
+    pub fn new(dim: usize, spec: Option<FxpSpec>) -> Self {
+        Self { dim, spec }
+    }
+}
+
+impl Stage for IdentityStage {
+    fn name(&self) -> &'static str {
+        "identity"
+    }
+
+    fn role(&self) -> StageRole {
+        StageRole::Rp
+    }
+
+    fn in_dim(&self) -> usize {
+        self.dim
+    }
+
+    fn out_dim(&self) -> usize {
+        self.dim
+    }
+
+    fn step_tile(&mut self, x: &[f32], rows: usize, out: Option<&mut Vec<f32>>) {
+        if let Some(o) = out {
+            self.transform_tile(x, rows, o);
+        }
+    }
+
+    fn transform_tile(&self, x: &[f32], rows: usize, out: &mut Vec<f32>) {
+        assert_eq!(x.len(), rows * self.dim, "identity stage tile shape");
+        resize_f32(out, x.len());
+        out.copy_from_slice(x);
+    }
+
+    fn input_spec(&self) -> Option<FxpSpec> {
+        self.spec
+    }
+
+    fn output_spec(&self) -> Option<FxpSpec> {
+        self.spec
+    }
+
+    fn step_tile_raw(&mut self, x: &[i32], rows: usize, out: Option<&mut Vec<i32>>) {
+        if let Some(o) = out {
+            self.transform_tile_raw(x, rows, o);
+        }
+    }
+
+    fn transform_tile_raw(&self, x: &[i32], rows: usize, out: &mut Vec<i32>) {
+        assert_eq!(x.len(), rows * self.dim, "identity stage tile shape");
+        resize_buf(out, x.len());
+        out.copy_from_slice(x);
+    }
+
+    fn dense_matrix(&self) -> Option<Mat> {
+        Some(Mat::eye(self.dim, self.dim))
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+// --------------------------------------------------------- raw words
+
+/// Quantized random-projection front end. Keeps the f32 projection it
+/// was quantized from (and its dense image, materialised once) for
+/// reports (`rp_matrix`, artifact export).
+pub struct FxpRpStage {
+    pub rp_f32: RandomProjection,
+    pub rp: FxpRp,
+    pub dense: Mat,
+}
+
+impl FxpRpStage {
+    pub fn new(rp_f32: RandomProjection, spec: FxpSpec) -> Self {
+        let rp = FxpRp::from_rp(&rp_f32, spec);
+        let dense = rp_f32.to_dense();
+        Self { rp_f32, rp, dense }
+    }
+}
+
+impl Stage for FxpRpStage {
+    fn name(&self) -> &'static str {
+        "rp"
+    }
+
+    fn role(&self) -> StageRole {
+        StageRole::Rp
+    }
+
+    fn in_dim(&self) -> usize {
+        self.rp.in_dim
+    }
+
+    fn out_dim(&self) -> usize {
+        self.rp.out_dim
+    }
+
+    fn input_spec(&self) -> Option<FxpSpec> {
+        Some(self.rp.spec)
+    }
+
+    fn output_spec(&self) -> Option<FxpSpec> {
+        Some(self.rp.spec)
+    }
+
+    fn step_tile_raw(&mut self, x: &[i32], rows: usize, out: Option<&mut Vec<i32>>) {
+        if let Some(o) = out {
+            self.rp.apply_tile_raw(x, rows, o);
+        }
+    }
+
+    fn transform_tile_raw(&self, x: &[i32], rows: usize, out: &mut Vec<i32>) {
+        self.rp.apply_tile_raw(x, rows, out);
+    }
+
+    fn dense_matrix(&self) -> Option<Mat> {
+        Some(self.dense.clone())
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+/// Quantized GHA whitening stage. Emits post-update whitened rows
+/// clamped to ±4σ in its own format — the fused `FxpDrUnit` staging;
+/// the graph's boundary requantization then maps them into the next
+/// stage's format, completing the legacy per-element sequence.
+pub struct FxpGhaStage {
+    pub gha: FxpGha,
+    clamp_raw: i32,
+}
+
+impl FxpGhaStage {
+    /// `gha` must already carry its σ target (the builder sets the
+    /// sigma shift from the narrower of this stage's and any downstream
+    /// rotation's formats before constructing the stage).
+    pub fn new(gha: FxpGha) -> Self {
+        let clamp_raw = gha.spec.quantize(4.0 * gha.target_sigma());
+        Self { gha, clamp_raw }
+    }
+}
+
+impl Stage for FxpGhaStage {
+    fn name(&self) -> &'static str {
+        "whiten:gha"
+    }
+
+    fn role(&self) -> StageRole {
+        StageRole::Whiten
+    }
+
+    fn in_dim(&self) -> usize {
+        self.gha.input_dim()
+    }
+
+    fn out_dim(&self) -> usize {
+        self.gha.output_dim()
+    }
+
+    fn is_adaptive(&self) -> bool {
+        true
+    }
+
+    fn input_spec(&self) -> Option<FxpSpec> {
+        Some(self.gha.spec)
+    }
+
+    fn output_spec(&self) -> Option<FxpSpec> {
+        Some(self.gha.spec)
+    }
+
+    fn step_tile_raw(&mut self, x: &[i32], rows: usize, out: Option<&mut Vec<i32>>) {
+        let (m, n) = (self.gha.input_dim(), self.gha.output_dim());
+        assert_eq!(x.len(), rows * m, "fxp gha stage tile shape mismatch");
+        match out {
+            Some(o) => {
+                resize_buf(o, rows * n);
+                for r in 0..rows {
+                    let row = &x[r * m..(r + 1) * m];
+                    self.gha.step_raw(row);
+                    let orow = &mut o[r * n..(r + 1) * n];
+                    self.gha.whiten_into(row, orow);
+                    for v in orow.iter_mut() {
+                        *v = (*v).clamp(-self.clamp_raw, self.clamp_raw);
+                    }
+                }
+            }
+            None => self.gha.step_tile_raw(x, rows),
+        }
+    }
+
+    fn transform_tile_raw(&self, x: &[i32], rows: usize, out: &mut Vec<i32>) {
+        self.gha.whiten_tile_raw(x, rows, out);
+    }
+
+    fn update_magnitude(&self) -> Option<f64> {
+        Some(self.gha.orthonormality_error())
+    }
+
+    fn dense_matrix(&self) -> Option<Mat> {
+        Some(self.gha.whitening_matrix())
+    }
+
+    fn save_state(&self) -> StageState {
+        let (w, var_acc, steps, coeff, shadow) = self.gha.save_state();
+        // The block-scaled coefficients ride in two word buffers (raw
+        // mantissas + fraction counts).
+        let coeff_raw: Vec<i32> = coeff.iter().map(|c| c.raw).collect();
+        let coeff_frac: Vec<i32> = coeff.iter().map(|c| c.frac as i32).collect();
+        StageState {
+            mats: shadow.into_iter().collect(),
+            words: vec![w, coeff_raw, coeff_frac],
+            wide: vec![var_acc],
+            counters: vec![steps],
+            ..StageState::default()
+        }
+    }
+
+    fn restore_state(&mut self, st: &StageState) -> anyhow::Result<()> {
+        ensure!(
+            st.words.len() == 3 && st.wide.len() == 1 && st.counters.len() == 1,
+            "fxp gha stage state shape"
+        );
+        ensure!(
+            st.words[1].len() == st.words[2].len(),
+            "fxp gha stage coefficient state shape"
+        );
+        let coeff: Vec<FxpConst> = st.words[1]
+            .iter()
+            .zip(&st.words[2])
+            .map(|(&raw, &frac)| FxpConst {
+                raw,
+                frac: frac as u8,
+            })
+            .collect();
+        self.gha.restore_state(
+            &st.words[0],
+            &st.wide[0],
+            st.counters[0],
+            &coeff,
+            st.mats.first(),
+        );
+        Ok(())
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+/// Quantized EASI rotation / standalone EASI stage, with the warm-up
+/// gate and the reconfiguration mux (the retraction cadence lives
+/// inside the kernel's own step counter).
+pub struct FxpEasiStage {
+    pub rot: FxpEasiRot,
+    label: &'static str,
+    warmup: u64,
+    seen: u64,
+    active: bool,
+}
+
+impl FxpEasiStage {
+    pub fn new(rot: FxpEasiRot, label: &'static str, warmup: u64) -> Self {
+        Self {
+            rot,
+            label,
+            warmup,
+            seen: 0,
+            active: true,
+        }
+    }
+
+    fn train_row(&mut self, row: &[i32]) {
+        self.seen += 1;
+        if self.active && self.seen > self.warmup {
+            self.rot.step_raw(row);
+        }
+    }
+}
+
+impl Stage for FxpEasiStage {
+    fn name(&self) -> &'static str {
+        self.label
+    }
+
+    fn role(&self) -> StageRole {
+        StageRole::Rot
+    }
+
+    fn in_dim(&self) -> usize {
+        self.rot.input_dim()
+    }
+
+    fn out_dim(&self) -> usize {
+        self.rot.output_dim()
+    }
+
+    fn is_adaptive(&self) -> bool {
+        true
+    }
+
+    fn bypassed(&self) -> bool {
+        !self.active
+    }
+
+    fn set_active(&mut self, on: bool) {
+        self.active = on;
+    }
+
+    fn advance(&mut self, rows: usize) {
+        self.seen += rows as u64;
+    }
+
+    fn input_spec(&self) -> Option<FxpSpec> {
+        Some(self.rot.spec)
+    }
+
+    fn output_spec(&self) -> Option<FxpSpec> {
+        Some(self.rot.spec)
+    }
+
+    fn step_tile_raw(&mut self, x: &[i32], rows: usize, out: Option<&mut Vec<i32>>) {
+        let (m, n) = (self.rot.input_dim(), self.rot.output_dim());
+        assert_eq!(x.len(), rows * m, "fxp easi stage tile shape mismatch");
+        match out {
+            Some(o) => {
+                resize_buf(o, rows * n);
+                for r in 0..rows {
+                    let row = &x[r * m..(r + 1) * m];
+                    self.train_row(row);
+                    self.rot.transform_into(row, &mut o[r * n..(r + 1) * n]);
+                }
+            }
+            None => {
+                for r in 0..rows {
+                    self.train_row(&x[r * m..(r + 1) * m]);
+                }
+            }
+        }
+    }
+
+    fn transform_tile_raw(&self, x: &[i32], rows: usize, out: &mut Vec<i32>) {
+        self.rot.transform_tile_raw(x, rows, out);
+    }
+
+    fn update_magnitude(&self) -> Option<f64> {
+        Some(self.rot.update_magnitude())
+    }
+
+    fn dense_matrix(&self) -> Option<Mat> {
+        Some(self.rot.matrix())
+    }
+
+    fn save_state(&self) -> StageState {
+        let (b, steps, shadow) = self.rot.save_state();
+        StageState {
+            mats: shadow.into_iter().collect(),
+            words: vec![b],
+            counters: vec![steps, self.seen],
+            ..StageState::default()
+        }
+    }
+
+    fn restore_state(&mut self, st: &StageState) -> anyhow::Result<()> {
+        ensure!(
+            st.words.len() == 1 && st.counters.len() == 2,
+            "fxp easi stage state shape"
+        );
+        self.rot
+            .restore_state(&st.words[0], st.counters[0], st.mats.first());
+        self.seen = st.counters[1];
+        Ok(())
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+/// Quantized fixed 1-D DCT truncation: a dense quantized matvec — the
+/// fixed-point image of [`DctStage`] (new with the stage graph; no
+/// legacy counterpart existed).
+pub struct FxpDctStage {
+    mat: FxpMat,
+    spec: FxpSpec,
+    in_dim: usize,
+    out_dim: usize,
+}
+
+impl FxpDctStage {
+    pub fn new(in_dim: usize, out_dim: usize, spec: FxpSpec) -> Self {
+        let d = Dct1d::new(in_dim, out_dim);
+        Self {
+            mat: FxpMat::quantize(d.matrix(), spec),
+            spec,
+            in_dim,
+            out_dim,
+        }
+    }
+}
+
+impl Stage for FxpDctStage {
+    fn name(&self) -> &'static str {
+        "dct"
+    }
+
+    fn role(&self) -> StageRole {
+        StageRole::Rp
+    }
+
+    fn in_dim(&self) -> usize {
+        self.in_dim
+    }
+
+    fn out_dim(&self) -> usize {
+        self.out_dim
+    }
+
+    fn input_spec(&self) -> Option<FxpSpec> {
+        Some(self.spec)
+    }
+
+    fn output_spec(&self) -> Option<FxpSpec> {
+        Some(self.spec)
+    }
+
+    fn step_tile_raw(&mut self, x: &[i32], rows: usize, out: Option<&mut Vec<i32>>) {
+        if let Some(o) = out {
+            self.transform_tile_raw(x, rows, o);
+        }
+    }
+
+    fn transform_tile_raw(&self, x: &[i32], rows: usize, out: &mut Vec<i32>) {
+        let (m, n) = (self.in_dim, self.out_dim);
+        assert_eq!(x.len(), rows * m, "fxp dct stage tile shape mismatch");
+        resize_buf(out, rows * n);
+        for r in 0..rows {
+            self.mat
+                .matvec_raw_into(&x[r * m..(r + 1) * m], &mut out[r * n..(r + 1) * n]);
+        }
+    }
+
+    fn dense_matrix(&self) -> Option<Mat> {
+        Some(self.mat.dequantize())
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}

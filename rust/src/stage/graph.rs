@@ -1,0 +1,537 @@
+//! [`StageGraph`] — a composed cascade of [`Stage`]s, one datapath for
+//! both numeric domains.
+//!
+//! The graph owns boxed stages plus the entry arithmetic of its domain:
+//! f32 graphs stream `&[f32]` tiles straight through; fixed-point
+//! graphs quantize samples once at the entry (`entry.quantize(v ·
+//! prescale)` — the shared-ingress arithmetic) and thread raw words
+//! stage to stage, requantizing at every format boundary with the
+//! destination stage's rounding/overflow policy (a bit-exact no-op when
+//! formats match, so uniform plans behave exactly like the
+//! single-format datapath).
+//!
+//! A training pass walks the stage list once per tile: every stage
+//! before the last active adaptive stage emits its per-row
+//! training-path outputs into graph-owned ping-pong scratch buffers
+//! (allocation-free in steady state), the last trainable stage consumes
+//! without emitting, and muxed-out adaptive stages have their sample
+//! counters advanced so warm-up gates stay in sync with the stream.
+//! Because each adaptive stage emits a row's output immediately after
+//! that row's update, this stage-by-stage pass is bit-identical to the
+//! legacy fused per-row recursions (`DrUnit::step` / `FxpDrUnit::
+//! step_raw`) — the downstream stage sees the same words in the same
+//! order.
+//!
+//! Forward paths: [`StageGraph::transform_rows`] chains stage
+//! transforms tile-at-a-time (the pipeline semantics);
+//! [`StageGraph::forward_rows`] is the coordinator's bulk path — the
+//! folded dense matrix for f32 (exactly the legacy effective-matrix
+//! arithmetic) and the multi-lane row-sharded quantized forward for
+//! fixed point (deterministic disjoint-slice merge, bit-identical to
+//! single-lane).
+
+use super::adapters::{FxpRpStage, RpStage};
+use super::{Stage, StageRole, StageState};
+use crate::fxp::kernels::resize_buf;
+use crate::fxp::{input_prescale, FxpSpec};
+use crate::linalg::Mat;
+use crate::rp::RandomProjection;
+use anyhow::{ensure, Result};
+
+/// The numeric domain a graph computes in.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Domain {
+    /// IEEE single precision end to end.
+    F32,
+    /// Bit-accurate fixed point: samples are quantized once at the
+    /// entry format (after the power-of-two prescale) and flow as raw
+    /// words from there.
+    Fxp { entry: FxpSpec, prescale: f32 },
+}
+
+/// Reusable tile workspaces for the training pass (ping-pong between
+/// consecutive stages; buffers only grow, so steady-state training is
+/// allocation-free).
+#[derive(Default)]
+struct GraphScratch {
+    raw_a: Vec<i32>,
+    raw_b: Vec<i32>,
+    f_a: Vec<f32>,
+    f_b: Vec<f32>,
+}
+
+/// A fitted / trainable cascade of stages (see module docs).
+pub struct StageGraph {
+    stages: Vec<Box<dyn Stage>>,
+    domain: Domain,
+    input_dim: usize,
+    output_dim: usize,
+    scratch: GraphScratch,
+}
+
+impl StageGraph {
+    /// Compose a graph from built stages. Panics on inconsistent
+    /// chaining (dimension mismatch, missing fixed-point specs) —
+    /// construction errors are caught by [`super::spec::GraphSpec`]
+    /// before stages are built, so this is a programming-error check.
+    pub fn new(
+        stages: Vec<Box<dyn Stage>>,
+        domain: Domain,
+        input_dim: usize,
+        output_dim: usize,
+    ) -> Self {
+        let mut dim = input_dim;
+        for s in &stages {
+            assert_eq!(
+                s.in_dim(),
+                dim,
+                "stage '{}' input dim mismatch in graph",
+                s.name()
+            );
+            dim = s.out_dim();
+            if let Domain::Fxp { .. } = domain {
+                assert!(
+                    s.input_spec().is_some() && s.output_spec().is_some(),
+                    "stage '{}' has no fixed-point datapath",
+                    s.name()
+                );
+            }
+        }
+        assert_eq!(dim, output_dim, "graph output dim mismatch");
+        Self {
+            stages,
+            domain,
+            input_dim,
+            output_dim,
+            scratch: GraphScratch::default(),
+        }
+    }
+
+    pub fn domain(&self) -> Domain {
+        self.domain
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.input_dim
+    }
+
+    pub fn output_dim(&self) -> usize {
+        self.output_dim
+    }
+
+    /// The composed stages (reports, tests).
+    pub fn stages(&self) -> &[Box<dyn Stage>] {
+        &self.stages
+    }
+
+    /// The leading random-projection front end, if the graph has one
+    /// (either backend — the fixed-point stage keeps its f32 image).
+    pub fn random_projection(&self) -> Option<&RandomProjection> {
+        let s = self.stages.first()?;
+        if let Some(rp) = s.as_any().downcast_ref::<RpStage>() {
+            return Some(&rp.rp);
+        }
+        if let Some(rp) = s.as_any().downcast_ref::<FxpRpStage>() {
+            return Some(&rp.rp_f32);
+        }
+        None
+    }
+
+    /// The leading RP stage's dense scaled matrix (materialised once at
+    /// stage construction), if the graph has one.
+    fn leading_rp_dense(&self) -> Option<&Mat> {
+        let s = self.stages.first()?;
+        if let Some(rp) = s.as_any().downcast_ref::<RpStage>() {
+            return Some(&rp.dense);
+        }
+        if let Some(rp) = s.as_any().downcast_ref::<FxpRpStage>() {
+            return Some(&rp.dense);
+        }
+        None
+    }
+
+    /// Toggle every stage of the given role (the paper's
+    /// reconfiguration mux — `Rot` toggles ICA ↔ PCA-whitening).
+    /// Returns whether any stage matched.
+    pub fn set_role_active(&mut self, role: StageRole, on: bool) -> bool {
+        let mut found = false;
+        for s in self.stages.iter_mut() {
+            if s.role() == role {
+                s.set_active(on);
+                found = true;
+            }
+        }
+        found
+    }
+
+    /// Whether the graph contains a stage of the given role.
+    pub fn has_role(&self, role: StageRole) -> bool {
+        self.stages.iter().any(|s| s.role() == role)
+    }
+
+    // ------------------------------------------------------- training
+
+    /// Fit on a full training matrix: batch stages first (one prefix
+    /// pass), then `epochs` streaming passes for the adaptive stages.
+    pub fn fit(&mut self, x: &Mat, epochs: usize) {
+        self.fit_batch_stages(x);
+        let trains = self
+            .stages
+            .iter()
+            .any(|s| s.is_adaptive() && !s.bypassed());
+        if trains {
+            for _ in 0..epochs.max(1) {
+                self.step_rows(x);
+            }
+        }
+    }
+
+    fn fit_batch_stages(&mut self, x: &Mat) {
+        let last = match self.stages.iter().rposition(|s| s.is_batch()) {
+            Some(l) => l,
+            None => return,
+        };
+        assert!(
+            matches!(self.domain, Domain::F32),
+            "batch stages have no fixed-point datapath"
+        );
+        let mut cur = x.clone();
+        for i in 0..=last {
+            if self.stages[i].bypassed() {
+                continue;
+            }
+            if self.stages[i].is_batch() {
+                self.stages[i].fit_batch(&cur);
+            }
+            if i < last {
+                let rows = cur.rows_count();
+                let mut out = Vec::new();
+                self.stages[i].transform_tile(cur.as_slice(), rows, &mut out);
+                cur = Mat::from_vec(rows, self.stages[i].out_dim(), out);
+            }
+        }
+    }
+
+    /// One streaming training pass over a tile of samples — the single
+    /// tile loop the coordinator drives, whatever the stage cascade.
+    pub fn step_rows(&mut self, x: &Mat) {
+        assert_eq!(x.cols_count(), self.input_dim, "graph step input dim");
+        let rows = x.rows_count();
+        if rows == 0 {
+            return;
+        }
+        // Streaming bootstrap: batch stages (PCA) fit on the first tile
+        // the stream delivers (a full-fit path exists via `fit`).
+        if self.stages.iter().any(|s| s.is_batch() && !s.batch_fitted()) {
+            self.fit_batch_stages(x);
+        }
+        match self.domain {
+            Domain::F32 => self.step_pass_f32(x, rows),
+            Domain::Fxp { entry, prescale } => self.step_pass_raw(x, rows, entry, prescale),
+        }
+    }
+
+    fn step_pass_f32(&mut self, x: &Mat, rows: usize) {
+        let Self {
+            stages, scratch, ..
+        } = self;
+        let last = match stages
+            .iter()
+            .rposition(|s| s.is_adaptive() && !s.bypassed())
+        {
+            Some(l) => l,
+            None => {
+                advance_adaptive(stages, 0, rows);
+                return;
+            }
+        };
+        let mut cur = std::mem::take(&mut scratch.f_a);
+        let mut next = std::mem::take(&mut scratch.f_b);
+        let mut have_cur = false;
+        for i in 0..=last {
+            if stages[i].bypassed() {
+                stages[i].advance(rows);
+                continue;
+            }
+            let input: &[f32] = if have_cur { &cur } else { x.as_slice() };
+            if i == last {
+                stages[i].step_tile(input, rows, None);
+            } else {
+                stages[i].step_tile(input, rows, Some(&mut next));
+                std::mem::swap(&mut cur, &mut next);
+                have_cur = true;
+            }
+        }
+        advance_adaptive(stages, last + 1, rows);
+        scratch.f_a = cur;
+        scratch.f_b = next;
+    }
+
+    fn step_pass_raw(&mut self, x: &Mat, rows: usize, entry: FxpSpec, prescale: f32) {
+        let Self {
+            stages, scratch, ..
+        } = self;
+        let last = match stages
+            .iter()
+            .rposition(|s| s.is_adaptive() && !s.bypassed())
+        {
+            Some(l) => l,
+            None => {
+                advance_adaptive(stages, 0, rows);
+                return;
+            }
+        };
+        let mut cur = std::mem::take(&mut scratch.raw_a);
+        let mut next = std::mem::take(&mut scratch.raw_b);
+        // Entry quantization — the shared-ingress arithmetic.
+        resize_buf(&mut cur, x.as_slice().len());
+        for (q, &v) in cur.iter_mut().zip(x.as_slice()) {
+            *q = entry.quantize(v * prescale);
+        }
+        let mut cur_spec = entry;
+        for i in 0..=last {
+            if stages[i].bypassed() {
+                stages[i].advance(rows);
+                continue;
+            }
+            let want = stages[i].input_spec().expect("fixed-point graph stage");
+            if want.format != cur_spec.format {
+                for v in cur.iter_mut() {
+                    *v = want.requantize_from(*v, &cur_spec);
+                }
+            }
+            if i == last {
+                stages[i].step_tile_raw(&cur, rows, None);
+            } else {
+                stages[i].step_tile_raw(&cur, rows, Some(&mut next));
+                std::mem::swap(&mut cur, &mut next);
+                cur_spec = stages[i].output_spec().expect("fixed-point graph stage");
+            }
+        }
+        advance_adaptive(stages, last + 1, rows);
+        scratch.raw_a = cur;
+        scratch.raw_b = next;
+    }
+
+    // -------------------------------------------------------- forward
+
+    /// Transform one sample `input_dim → output_dim` (the per-sample
+    /// pipeline path; bit-identical to the tiled forms).
+    pub fn transform(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.input_dim, "graph transform input dim");
+        let m = Mat::from_vec(1, self.input_dim, x.to_vec());
+        self.transform_rows(&m).into_vec()
+    }
+
+    /// Transform every row of a sample matrix, chaining stage
+    /// transforms tile-at-a-time (muxed-out stages are skipped, format
+    /// boundaries requantize).
+    pub fn transform_rows(&self, x: &Mat) -> Mat {
+        assert_eq!(x.cols_count(), self.input_dim, "graph transform input dim");
+        let rows = x.rows_count();
+        match self.domain {
+            Domain::F32 => {
+                let mut cur: Vec<f32> = x.as_slice().to_vec();
+                let mut cur_dim = self.input_dim;
+                let mut next: Vec<f32> = Vec::new();
+                for s in self.stages.iter().filter(|s| !s.bypassed()) {
+                    s.transform_tile(&cur, rows, &mut next);
+                    std::mem::swap(&mut cur, &mut next);
+                    cur_dim = s.out_dim();
+                }
+                Mat::from_vec(rows, cur_dim, cur)
+            }
+            Domain::Fxp { entry, prescale } => {
+                let (raw, spec, dim) = self.forward_chunk_raw(x.as_slice(), rows, entry, prescale);
+                Mat::from_vec(rows, dim, raw.iter().map(|&w| spec.dequantize(w)).collect())
+            }
+        }
+    }
+
+    /// The quantized forward chain on one row chunk. Returns the raw
+    /// output tile, its format, and its row width.
+    fn forward_chunk_raw(
+        &self,
+        x: &[f32],
+        rows: usize,
+        entry: FxpSpec,
+        prescale: f32,
+    ) -> (Vec<i32>, FxpSpec, usize) {
+        let mut cur: Vec<i32> = x.iter().map(|&v| entry.quantize(v * prescale)).collect();
+        let mut cur_spec = entry;
+        let mut cur_dim = self.input_dim;
+        let mut next: Vec<i32> = Vec::new();
+        for s in self.stages.iter().filter(|s| !s.bypassed()) {
+            let want = s.input_spec().expect("fixed-point graph stage");
+            if want.format != cur_spec.format {
+                for v in cur.iter_mut() {
+                    *v = want.requantize_from(*v, &cur_spec);
+                }
+            }
+            s.transform_tile_raw(&cur, rows, &mut next);
+            std::mem::swap(&mut cur, &mut next);
+            cur_spec = s.output_spec().expect("fixed-point graph stage");
+            cur_dim = s.out_dim();
+        }
+        (cur, cur_spec, cur_dim)
+    }
+
+    /// The coordinator's bulk transform: the folded dense matrix for
+    /// f32 (the legacy effective-matrix arithmetic, bit-for-bit), the
+    /// multi-lane row-sharded quantized forward for fixed point (each
+    /// lane owns a disjoint output slice, so the merge is deterministic
+    /// and the raw words are identical to the single-lane path).
+    pub fn forward_rows(&self, x: &Mat, lanes: usize) -> Mat {
+        match self.domain {
+            Domain::F32 => {
+                // Affine stages (batch PCA) cannot be folded into one
+                // matrix; those graphs take the sequential chain.
+                if self.stages.iter().any(|s| !s.bypassed() && s.is_affine()) {
+                    return self.transform_rows(x);
+                }
+                let staged = match self.leading_rp_dense() {
+                    Some(r) => r.apply_rows(x),
+                    None => x.clone(),
+                };
+                self.separation_matrix().apply_rows(&staged)
+            }
+            Domain::Fxp { entry, prescale } => {
+                let rows = x.rows_count();
+                let n = self.forward_out_dim();
+                let out_spec = self.forward_out_spec(entry);
+                if rows == 0 {
+                    return Mat::zeros(0, n);
+                }
+                let lanes = lanes.clamp(1, rows);
+                let m = self.input_dim;
+                let mut raw = vec![0i32; rows * n];
+                // Ceil-divide so every lane gets a contiguous run of
+                // rows and the chunk boundaries are a pure function of
+                // (rows, lanes).
+                let chunk = rows.div_ceil(lanes);
+                std::thread::scope(|scope| {
+                    for (lane, out_chunk) in raw.chunks_mut(chunk * n).enumerate() {
+                        let rows_here = out_chunk.len() / n;
+                        let start = lane * chunk;
+                        let xs = &x.as_slice()[start * m..(start + rows_here) * m];
+                        scope.spawn(move || {
+                            let (got, _, _) =
+                                self.forward_chunk_raw(xs, rows_here, entry, prescale);
+                            out_chunk.copy_from_slice(&got);
+                        });
+                    }
+                });
+                Mat::from_vec(rows, n, raw.iter().map(|&w| out_spec.dequantize(w)).collect())
+            }
+        }
+    }
+
+    fn forward_out_dim(&self) -> usize {
+        self.stages
+            .iter()
+            .rev()
+            .find(|s| !s.bypassed())
+            .map_or(self.input_dim, |s| s.out_dim())
+    }
+
+    fn forward_out_spec(&self, entry: FxpSpec) -> FxpSpec {
+        self.stages
+            .iter()
+            .rev()
+            .find(|s| !s.bypassed())
+            .and_then(|s| s.output_spec())
+            .unwrap_or(entry)
+    }
+
+    // ------------------------------------------------------ reporting
+
+    /// The trained stages as one dense matrix — the fold of every
+    /// active stage's linearization *behind* the RP front end (RP is
+    /// reported separately, as the legacy trainer did). Fixed-point
+    /// graphs fold in the adaptive stages' input prescale, so the
+    /// matrix maps unscaled samples like the f32 one. Affine stages
+    /// contribute their linear part only (the mean offset of batch PCA
+    /// is not representable in a matrix fold — use the transform paths
+    /// for exact outputs).
+    pub fn separation_matrix(&self) -> Mat {
+        let skip = usize::from(self.random_projection().is_some());
+        let mut eff: Option<Mat> = None;
+        for s in self.stages.iter().skip(skip) {
+            if s.bypassed() {
+                continue;
+            }
+            let m = s
+                .dense_matrix()
+                .unwrap_or_else(|| panic!("stage '{}' has no dense linearization", s.name()));
+            eff = Some(match eff {
+                None => m,
+                Some(e) => m.matmul(&e),
+            });
+        }
+        let mut eff = eff.unwrap_or_else(|| Mat::eye(self.output_dim, self.output_dim));
+        if let Domain::Fxp { .. } = self.domain {
+            eff.scale(self.fxp_unit_prescale());
+        }
+        eff
+    }
+
+    /// The power-of-two prescale the *trained* stages see (the first
+    /// adaptive stage's input format) — what the fused unit folded into
+    /// its effective matrix.
+    fn fxp_unit_prescale(&self) -> f32 {
+        self.stages
+            .iter()
+            .find(|s| s.is_adaptive())
+            .and_then(|s| s.input_spec())
+            .map(|sp| input_prescale(&sp))
+            .unwrap_or(1.0)
+    }
+
+    /// Convergence signal: the max over the active adaptive stages'
+    /// monitors (the whitener dominates early, the rotation late) —
+    /// same composition as the fused units'.
+    pub fn update_magnitude(&self) -> f64 {
+        let mut mag = 0.0f64;
+        for s in &self.stages {
+            if s.bypassed() {
+                continue;
+            }
+            if let Some(u) = s.update_magnitude() {
+                mag = mag.max(u);
+            }
+        }
+        mag
+    }
+
+    /// Checkpoint every stage's state, in graph order.
+    pub fn save_state(&self) -> Vec<StageState> {
+        self.stages.iter().map(|s| s.save_state()).collect()
+    }
+
+    /// Restore a [`StageGraph::save_state`] checkpoint into a graph of
+    /// the same shape.
+    pub fn restore_state(&mut self, st: &[StageState]) -> Result<()> {
+        ensure!(
+            st.len() == self.stages.len(),
+            "checkpoint has {} stages, graph has {}",
+            st.len(),
+            self.stages.len()
+        );
+        for (s, state) in self.stages.iter_mut().zip(st) {
+            s.restore_state(state)?;
+        }
+        Ok(())
+    }
+}
+
+/// Advance the sample counters of adaptive stages from `from` on —
+/// stages that did not train this pass (muxed out, or behind the last
+/// trainable stage) still observe the stream length, so warm-up gates
+/// match the fused units' global-step gating.
+fn advance_adaptive(stages: &mut [Box<dyn Stage>], from: usize, rows: usize) {
+    for s in stages.iter_mut().skip(from) {
+        if s.is_adaptive() {
+            s.advance(rows);
+        }
+    }
+}

@@ -1,0 +1,205 @@
+//! The unified stage abstraction — one composable datapath over f32
+//! and fixed point.
+//!
+//! Prior to this module the crate held *two* pipelines: an f32 path
+//! (`DrPipeline`'s fitted-stage dispatch) and a fixed-point special
+//! case (`FxpIo` + the `Fxp*` kernels), forked again inside the
+//! coordinator's trainer. A [`Stage`] is the common shape of every
+//! datapath element — RP, GHA whitening, EASI rotation, batch PCA, DCT,
+//! identity — with the two numeric domains as two *backends* of the
+//! same trait:
+//!
+//! * the f32 backend works on `&[f32]` row-major tiles
+//!   ([`Stage::step_tile`] / [`Stage::transform_tile`]);
+//! * the fixed-point backend works on raw `i32` words
+//!   ([`Stage::step_tile_raw`] / [`Stage::transform_tile_raw`]), with
+//!   the stage's arithmetic published through [`Stage::input_spec`] /
+//!   [`Stage::output_spec`] so the graph can requantize at every
+//!   boundary exactly as the fused kernels did.
+//!
+//! Training is *streaming*: `step_tile` walks a tile's rows in order,
+//! updates state per row, and emits the per-row training-path outputs
+//! (what a downstream adaptive stage trains on) into a caller-owned
+//! scratch buffer — the `_into` shape of the PR 3 tiled datapath, so a
+//! [`graph::StageGraph`] training step is allocation-free in steady
+//! state. The emitted rows are computed immediately after that row's
+//! update, which makes a stage-by-stage tile pass bit-identical to the
+//! legacy fused per-row recursion (the downstream stage sees exactly
+//! the same words in the same order).
+//!
+//! [`graph::StageGraph`] composes boxed stages; [`spec::GraphSpec`]
+//! declares and builds them (including the `--stages` CLI syntax and
+//! the mapping from the legacy `StageSpec` forms).
+
+pub mod adapters;
+pub mod graph;
+pub mod spec;
+
+pub use adapters::{
+    DctStage, EasiStage, FxpDctStage, FxpEasiStage, FxpGhaStage, FxpRpStage, GhaStage,
+    IdentityStage, PcaStage, RpStage,
+};
+pub use graph::{Domain, StageGraph};
+pub use spec::{GraphSpec, StageDecl, StageOp};
+
+use crate::fxp::FxpSpec;
+use crate::linalg::Mat;
+
+pub use crate::fxp::StageRole;
+
+/// Opaque per-stage checkpoint: dense f32 matrices (subspaces, shadow
+/// weights), f32 vectors (variance estimates), raw word buffers
+/// (quantized state), wide accumulators (the whitener's extended
+/// variance EMA) and counters (sample counts — without them a restored
+/// stage re-runs warm-up gates and retraction cadences from zero).
+#[derive(Debug, Clone, Default)]
+pub struct StageState {
+    pub mats: Vec<Mat>,
+    pub vecs: Vec<Vec<f32>>,
+    pub words: Vec<Vec<i32>>,
+    pub wide: Vec<Vec<i64>>,
+    pub counters: Vec<u64>,
+}
+
+/// Size an f32 scratch vector without shrinking capacity (the `f32`
+/// mirror of [`crate::fxp::kernels::resize_buf`]).
+#[inline]
+pub(crate) fn resize_f32(buf: &mut Vec<f32>, len: usize) {
+    if buf.len() != len {
+        buf.resize(len, 0.0);
+    }
+}
+
+/// One element of a composable DR datapath. See the module docs for the
+/// two-backend contract; a concrete stage implements the backend(s) it
+/// supports and panics (programming error, not runtime input) on the
+/// other — the [`spec::GraphSpec`] builder only ever composes stages
+/// within one domain.
+pub trait Stage: Send + Sync {
+    /// Short label used in errors and reports (e.g. `"whiten:gha"`).
+    fn name(&self) -> &'static str;
+
+    /// The precision role this stage plays in a [`crate::fxp::PrecisionPlan`].
+    fn role(&self) -> StageRole;
+
+    fn in_dim(&self) -> usize;
+
+    fn out_dim(&self) -> usize;
+
+    /// Whether the stage learns from streamed samples.
+    fn is_adaptive(&self) -> bool {
+        false
+    }
+
+    /// Whether the stage fits on a full batch before streaming starts.
+    fn is_batch(&self) -> bool {
+        false
+    }
+
+    /// Whether the stage's transform is affine rather than purely
+    /// linear (batch PCA's mean subtraction) — such stages cannot be
+    /// folded into one dense matrix, so bulk forwards take the
+    /// sequential chain (and [`Stage::dense_matrix`] reports the linear
+    /// part only).
+    fn is_affine(&self) -> bool {
+        false
+    }
+
+    /// Whether the stage is currently muxed out of the datapath (the
+    /// paper's reconfiguration mux). Only square stages may be
+    /// bypassed.
+    fn bypassed(&self) -> bool {
+        false
+    }
+
+    /// Toggle the stage's mux (no-op for stages without one).
+    fn set_active(&mut self, _on: bool) {}
+
+    /// Advance the stage's sample counter without training — keeps
+    /// warm-up gates in sync with the stream while the stage is muxed
+    /// out, exactly as the fused units gated on the *whitener's* global
+    /// sample count.
+    fn advance(&mut self, _rows: usize) {}
+
+    // ------------------------------------------------------------ f32
+
+    /// One streaming training pass over a row-major tile
+    /// (`rows × in_dim`), in row order. When `out` is given it is
+    /// resized to `rows × out_dim` and receives the per-row
+    /// training-path outputs (computed right after that row's update).
+    fn step_tile(&mut self, _x: &[f32], _rows: usize, _out: Option<&mut Vec<f32>>) {
+        panic!("stage '{}' has no f32 training path", self.name());
+    }
+
+    /// Pure forward transform of a tile into a caller-owned buffer.
+    fn transform_tile(&self, _x: &[f32], _rows: usize, _out: &mut Vec<f32>) {
+        panic!("stage '{}' has no f32 forward path", self.name());
+    }
+
+    /// Batch fit (PCA-style stages) on a full sample matrix.
+    fn fit_batch(&mut self, _x: &Mat) {
+        panic!("stage '{}' is not a batch stage", self.name());
+    }
+
+    /// Whether a batch stage has been fitted (always true for
+    /// streaming/static stages). The graph bootstraps unfitted batch
+    /// stages on the first tile a streaming pass delivers.
+    fn batch_fitted(&self) -> bool {
+        true
+    }
+
+    // ------------------------------------------------------ raw words
+
+    /// The fixed-point format this stage consumes (None for f32-only
+    /// stages). The graph requantizes incoming words into it.
+    fn input_spec(&self) -> Option<FxpSpec> {
+        None
+    }
+
+    /// The fixed-point format this stage emits.
+    fn output_spec(&self) -> Option<FxpSpec> {
+        None
+    }
+
+    /// Raw-word mirror of [`Stage::step_tile`].
+    fn step_tile_raw(&mut self, _x: &[i32], _rows: usize, _out: Option<&mut Vec<i32>>) {
+        panic!("stage '{}' has no fixed-point training path", self.name());
+    }
+
+    /// Raw-word mirror of [`Stage::transform_tile`].
+    fn transform_tile_raw(&self, _x: &[i32], _rows: usize, _out: &mut Vec<i32>) {
+        panic!("stage '{}' has no fixed-point forward path", self.name());
+    }
+
+    // ------------------------------------------------------ reporting
+
+    /// Convergence signal, if the stage has one (the graph folds the
+    /// max over adaptive stages, like the fused units did).
+    fn update_magnitude(&self) -> Option<f64> {
+        None
+    }
+
+    /// The stage as a dense f32 matrix (`out_dim × in_dim`) — used for
+    /// the folded separation matrix and reports. Affine stages
+    /// ([`Stage::is_affine`]) report their *linear part* (batch PCA's
+    /// mean offset is not representable here — bulk forwards route
+    /// around the fold for them); stages with no dense image return
+    /// None.
+    fn dense_matrix(&self) -> Option<Mat> {
+        None
+    }
+
+    /// Checkpoint the stage's state (see [`StageState`]).
+    fn save_state(&self) -> StageState {
+        StageState::default()
+    }
+
+    /// Restore a [`Stage::save_state`] checkpoint.
+    fn restore_state(&mut self, _st: &StageState) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    /// Typed access for callers that need the concrete stage (the
+    /// pipeline's `rp()` accessor, tests).
+    fn as_any(&self) -> &dyn std::any::Any;
+}

@@ -1,0 +1,788 @@
+//! Declarative stage graphs: the `--stages` syntax, dimension/format
+//! resolution, the builder that turns a [`GraphSpec`] into a
+//! [`StageGraph`], and per-stage hardware pricing.
+//!
+//! # Stage-list syntax
+//!
+//! A graph is a comma-separated list of stage tokens, each
+//! `name[:variant][/dim][@qI.F[:policies]]`:
+//!
+//! | token                         | stage                                    |
+//! |-------------------------------|------------------------------------------|
+//! | `rp:ternary/16`               | random projection to 16 (also `gaussian`, `achlioptas`; `rp/16` = ternary) |
+//! | `whiten:gha` (or `whiten`)    | streaming GHA whitener (reduces to `/dim`, default the graph output) |
+//! | `rot:easi` (or `rot`)         | square EASI rotation (the composed unit's second half) |
+//! | `easi:full` / `easi:rot`      | standalone EASI trainer (Table I datapaths) |
+//! | `pca` / `pca:whiten`          | batch PCA projection / whitening (f32 only) |
+//! | `dct/24`                      | fixed 1-D DCT truncation                 |
+//! | `identity`                    | pass-through                             |
+//!
+//! `@qI.F` overrides the stage's fixed-point format individually; the
+//! [`PrecisionPlan`] supplies formats per [`StageRole`] otherwise, so
+//! `--precision rp=q8.16,whiten=q4.12,rot=q1.15` keeps meaning what it
+//! did while any cascade — `rp:ternary/16,pca`, `dct/24,whiten:gha,
+//! rot:easi`, a lone `whiten:gha` — gets per-stage arithmetic with no
+//! new plumbing. Unknown or duplicate stage tokens fail naming the
+//! offending token.
+
+use super::adapters::{
+    DctStage, EasiStage, FxpDctStage, FxpEasiStage, FxpGhaStage, FxpRpStage, GhaStage,
+    IdentityStage, PcaStage, RpStage,
+};
+use super::graph::{Domain, StageGraph};
+use super::{Stage, StageRole};
+use crate::easi::{EasiConfig, EasiMode, EasiTrainer};
+use crate::fxp::{input_prescale, FxpEasiRot, FxpGha, FxpSpec, Precision};
+use crate::gha::{GhaConfig, GhaWhitener};
+use crate::hwmodel::ops::{dense_stage_ops, easi_ops, easi_split_ops, rp_ops};
+use crate::hwmodel::{Arria10Model, NumericFormat, OpCounts, ResourceReport};
+use crate::pipeline::unit::RETRACT_INTERVAL;
+use crate::rp::{RandomProjection, RpDistribution};
+use anyhow::{bail, ensure, Result};
+
+/// What a declared stage computes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StageOp {
+    /// Random-projection front end.
+    Rp(RpDistribution),
+    /// Streaming GHA whitener (the composed unit's first half).
+    WhitenGha,
+    /// Square EASI rotation (the composed unit's second half: warm-up
+    /// gated, periodically retracted, identity-initialised).
+    RotEasi,
+    /// Standalone EASI trainer (the Table I datapaths; random
+    /// orthonormal init, no warm-up).
+    Easi(EasiMode),
+    /// Batch PCA (projection or whitening) — f32 only.
+    Pca { whiten: bool },
+    /// Fixed 1-D DCT truncation.
+    Dct,
+    /// Pass-through.
+    Identity,
+}
+
+/// One declared stage: the op, an optional output dimension, and an
+/// optional per-stage fixed-point format override.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StageDecl {
+    pub op: StageOp,
+    pub out_dim: Option<usize>,
+    pub fxp: Option<FxpSpec>,
+}
+
+impl StageDecl {
+    pub fn new(op: StageOp) -> Self {
+        Self {
+            op,
+            out_dim: None,
+            fxp: None,
+        }
+    }
+
+    pub fn with_dim(mut self, dim: usize) -> Self {
+        self.out_dim = Some(dim);
+        self
+    }
+
+    /// Canonical token (round-trips through [`parse_stage_list`]).
+    pub fn label(&self) -> String {
+        let base = match self.op {
+            StageOp::Rp(RpDistribution::Ternary) => "rp:ternary".to_string(),
+            StageOp::Rp(RpDistribution::Achlioptas) => "rp:achlioptas".to_string(),
+            StageOp::Rp(RpDistribution::Gaussian) => "rp:gaussian".to_string(),
+            StageOp::WhitenGha => "whiten:gha".to_string(),
+            StageOp::RotEasi => "rot:easi".to_string(),
+            StageOp::Easi(EasiMode::Full) => "easi:full".to_string(),
+            StageOp::Easi(EasiMode::RotationOnly) => "easi:rot".to_string(),
+            StageOp::Easi(_) => "easi".to_string(),
+            StageOp::Pca { whiten: false } => "pca".to_string(),
+            StageOp::Pca { whiten: true } => "pca:whiten".to_string(),
+            StageOp::Dct => "dct".to_string(),
+            StageOp::Identity => "identity".to_string(),
+        };
+        let mut s = base;
+        if let Some(d) = self.out_dim {
+            s.push_str(&format!("/{d}"));
+        }
+        if let Some(f) = self.fxp {
+            s.push_str(&format!("@{}", f.label()));
+        }
+        s
+    }
+}
+
+/// Parse a comma-separated stage list. Unknown stage names/variants and
+/// duplicate adaptive/front-end stages fail with an error naming the
+/// offending token.
+pub fn parse_stage_list(s: &str) -> Result<Vec<StageDecl>> {
+    let mut out: Vec<StageDecl> = Vec::new();
+    for token in s.split(',') {
+        let token = token.trim();
+        if token.is_empty() {
+            continue;
+        }
+        let t = token.to_ascii_lowercase();
+        let (head, fmt) = match t.split_once('@') {
+            Some((h, f)) => (h, Some(FxpSpec::parse(f)?)),
+            None => (t.as_str(), None),
+        };
+        let (kind, dim) = match head.split_once('/') {
+            Some((k, d)) => {
+                let dim: usize = d.parse().map_err(|_| {
+                    anyhow::anyhow!(
+                        "bad dimension in stage '{token}' (expected e.g. rp:ternary/16)"
+                    )
+                })?;
+                (k, Some(dim))
+            }
+            None => (head, None),
+        };
+        let (name, variant) = match kind.split_once(':') {
+            Some((n, v)) => (n, Some(v)),
+            None => (kind, None),
+        };
+        let op = match (name, variant) {
+            ("rp", None | Some("ternary")) => StageOp::Rp(RpDistribution::Ternary),
+            ("rp", Some("achlioptas")) => StageOp::Rp(RpDistribution::Achlioptas),
+            ("rp", Some("gaussian")) => StageOp::Rp(RpDistribution::Gaussian),
+            ("whiten", None | Some("gha")) => StageOp::WhitenGha,
+            ("rot", None | Some("easi")) => StageOp::RotEasi,
+            ("easi", None | Some("full")) => StageOp::Easi(EasiMode::Full),
+            ("easi", Some("rot" | "rotation")) => StageOp::Easi(EasiMode::RotationOnly),
+            ("pca", None) => StageOp::Pca { whiten: false },
+            ("pca", Some("whiten")) => StageOp::Pca { whiten: true },
+            ("dct", None) => StageOp::Dct,
+            ("identity", None) => StageOp::Identity,
+            _ => bail!(
+                "unknown stage '{token}' in stage list (rp[:ternary|achlioptas|gaussian]/D, \
+                 whiten:gha, rot:easi, easi[:full|rot], pca[:whiten], dct, identity)"
+            ),
+        };
+        // Duplicate front-end / adaptive stages are almost certainly a
+        // typo'd list; fail naming the token rather than building a
+        // silently-weird cascade.
+        let duplicate = out.iter().any(|d| match (d.op, op) {
+            (StageOp::Rp(_), StageOp::Rp(_)) => true,
+            (StageOp::WhitenGha, StageOp::WhitenGha) => true,
+            (StageOp::RotEasi | StageOp::Easi(_), StageOp::RotEasi | StageOp::Easi(_)) => true,
+            _ => false,
+        });
+        if duplicate {
+            bail!("duplicate stage '{token}' in stage list");
+        }
+        out.push(StageDecl {
+            op,
+            out_dim: dim,
+            fxp: fmt,
+        });
+    }
+    ensure!(!out.is_empty(), "stage list '{s}' names no stages");
+    Ok(out)
+}
+
+/// A declared DR graph: stage list + dimensions + arithmetic + the
+/// hyper-parameters the adaptive stages consume. The single source both
+/// `DrPipeline` (legacy `StageSpec` forms map onto it) and the
+/// coordinator build from.
+#[derive(Debug, Clone)]
+pub struct GraphSpec {
+    pub input_dim: usize,
+    pub output_dim: usize,
+    pub stages: Vec<StageDecl>,
+    pub seed: u64,
+    pub precision: Precision,
+    /// GHA (whitening) learning rate.
+    pub mu_w: f32,
+    /// EASI learning rate (rotation and standalone stages).
+    pub mu_rot: f32,
+    /// Whiten-only warm-up before the unit rotation trains; `None`
+    /// derives the legacy `(rows/2).min(2000)` from the fit data.
+    pub rot_warmup: Option<u64>,
+    /// Streaming passes over the training set.
+    pub epochs: usize,
+}
+
+/// One stage after dimension/role resolution.
+#[derive(Debug, Clone, Copy)]
+pub struct ResolvedStage {
+    pub op: StageOp,
+    pub in_dim: usize,
+    pub out_dim: usize,
+    pub role: StageRole,
+    pub fxp_override: Option<FxpSpec>,
+}
+
+fn role_of(op: StageOp) -> StageRole {
+    match op {
+        StageOp::Rp(_) | StageOp::Dct | StageOp::Identity => StageRole::Rp,
+        StageOp::WhitenGha | StageOp::Pca { .. } => StageRole::Whiten,
+        StageOp::RotEasi | StageOp::Easi(_) => StageRole::Rot,
+    }
+}
+
+fn is_adaptive_op(op: StageOp) -> bool {
+    matches!(op, StageOp::WhitenGha | StageOp::RotEasi | StageOp::Easi(_))
+}
+
+impl GraphSpec {
+    /// Canonical stage-list label (round-trips through
+    /// [`parse_stage_list`]).
+    pub fn stages_label(&self) -> String {
+        self.stages
+            .iter()
+            .map(StageDecl::label)
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// Resolve per-stage dimensions and roles. Unset dims default to
+    /// the graph output (square stages keep their input); every chain
+    /// inconsistency fails with a message naming the stage.
+    pub fn resolve(&self) -> Result<Vec<ResolvedStage>> {
+        ensure!(!self.stages.is_empty(), "stage list is empty");
+        ensure!(
+            self.output_dim >= 1 && self.output_dim <= self.input_dim,
+            "need 1 <= output_dim <= input_dim"
+        );
+        let mut out = Vec::with_capacity(self.stages.len());
+        let mut dim = self.input_dim;
+        let mut seen_adaptive = false;
+        for d in &self.stages {
+            let label = d.label();
+            // A per-stage format override on an f32 graph would be
+            // silently dead — fail loudly naming the token.
+            ensure!(
+                d.fxp.is_none() || self.precision.is_fixed(),
+                "stage '{label}' has a fixed-point format override, but the \
+                 graph precision is f32 (pass --precision qI.F or a plan)"
+            );
+            let out_dim = match (d.op, d.out_dim) {
+                (StageOp::Rp(_), None) => {
+                    bail!("stage '{label}' needs an explicit dimension (e.g. rp:ternary/16)")
+                }
+                (StageOp::RotEasi, Some(k)) if k != dim => {
+                    bail!("stage '{label}' is square: /{k} conflicts with its input dim {dim}")
+                }
+                (StageOp::RotEasi, _) => dim,
+                (StageOp::Identity, Some(k)) if k != dim => {
+                    bail!("stage '{label}' cannot change dimensionality ({dim} -> {k})")
+                }
+                (StageOp::Identity, _) => dim,
+                (_, Some(k)) => k,
+                (_, None) => self.output_dim,
+            };
+            ensure!(
+                out_dim >= 1 && out_dim <= dim,
+                "stage '{label}' must reduce: need 1 <= {out_dim} <= {dim}"
+            );
+            if matches!(d.op, StageOp::Pca { .. }) {
+                ensure!(
+                    !seen_adaptive,
+                    "batch stage '{label}' cannot follow an adaptive stage"
+                );
+            }
+            seen_adaptive = seen_adaptive || is_adaptive_op(d.op);
+            out.push(ResolvedStage {
+                op: d.op,
+                in_dim: dim,
+                out_dim,
+                role: role_of(d.op),
+                fxp_override: d.fxp,
+            });
+            dim = out_dim;
+        }
+        ensure!(
+            dim == self.output_dim,
+            "stage list ends at dim {dim}, but output_dim is {}",
+            self.output_dim
+        );
+        Ok(out)
+    }
+
+    /// Build the graph. `fit_rows` (when known) feeds the legacy
+    /// auto warm-up `(rows/2).min(2000)` when [`GraphSpec::rot_warmup`]
+    /// is `None`.
+    pub fn build(&self, fit_rows: Option<usize>) -> Result<StageGraph> {
+        let resolved = self.resolve()?;
+        let warmup = self
+            .rot_warmup
+            .unwrap_or_else(|| fit_rows.map_or(2000, |r| ((r / 2).min(2000)) as u64));
+        match self.precision {
+            Precision::F32 => self.build_f32(&resolved, warmup),
+            Precision::Fixed(_) => self.build_fxp(&resolved, warmup),
+        }
+    }
+
+    fn build_rp(
+        &self,
+        resolved: &[ResolvedStage],
+        i: usize,
+        dist: RpDistribution,
+    ) -> RandomProjection {
+        let rs = &resolved[i];
+        let rp = RandomProjection::new(rs.in_dim, rs.out_dim, dist, self.seed);
+        // Single source of the unit-variance policy: adaptive stages
+        // assume unit-variance inputs, fixed stages get the raw
+        // distance-preserving projection (same rule the legacy
+        // front-end builder applied).
+        if resolved[i + 1..].iter().any(|r| is_adaptive_op(r.op)) {
+            rp.unit_variance()
+        } else {
+            rp
+        }
+    }
+
+    fn build_f32(&self, resolved: &[ResolvedStage], warmup: u64) -> Result<StageGraph> {
+        let mut stages: Vec<Box<dyn Stage>> = Vec::with_capacity(resolved.len());
+        for (i, rs) in resolved.iter().enumerate() {
+            let stage: Box<dyn Stage> = match rs.op {
+                StageOp::Rp(dist) => Box::new(RpStage::new(self.build_rp(resolved, i, dist))),
+                StageOp::WhitenGha => Box::new(GhaStage::new(GhaWhitener::new(GhaConfig {
+                    input_dim: rs.in_dim,
+                    output_dim: rs.out_dim,
+                    mu: self.mu_w,
+                    seed: self.seed,
+                    ..Default::default()
+                }))),
+                StageOp::RotEasi => {
+                    let n = rs.out_dim;
+                    let t = EasiTrainer::new(EasiConfig {
+                        input_dim: n,
+                        output_dim: n,
+                        mu: self.mu_rot,
+                        mode: EasiMode::RotationOnly,
+                        normalized: true,
+                        max_norm: 4.0 * (n as f32).sqrt(),
+                        clip: 0.05,
+                        random_init: None,
+                    });
+                    Box::new(EasiStage::new(t, "rot:easi", warmup, Some(RETRACT_INTERVAL)))
+                }
+                StageOp::Easi(mode) => {
+                    let t = EasiTrainer::new(EasiConfig {
+                        input_dim: rs.in_dim,
+                        output_dim: rs.out_dim,
+                        mu: self.mu_rot,
+                        mode,
+                        normalized: true,
+                        max_norm: if mode == EasiMode::RotationOnly {
+                            4.0 * (rs.out_dim as f32).sqrt()
+                        } else {
+                            1e4
+                        },
+                        clip: 0.05,
+                        random_init: Some(self.seed),
+                    });
+                    Box::new(EasiStage::new(t, "easi", 0, None))
+                }
+                StageOp::Pca { whiten } => Box::new(PcaStage::new(rs.in_dim, rs.out_dim, whiten)),
+                StageOp::Dct => Box::new(DctStage::new(rs.in_dim, rs.out_dim)),
+                StageOp::Identity => Box::new(IdentityStage::new(rs.in_dim, None)),
+            };
+            stages.push(stage);
+        }
+        Ok(StageGraph::new(
+            stages,
+            Domain::F32,
+            self.input_dim,
+            self.output_dim,
+        ))
+    }
+
+    /// Per-stage fixed-point formats: each stage's `@override` first,
+    /// then the plan's format for the stage's role (identity inherits
+    /// its predecessor's boundary).
+    fn fxp_specs(&self, resolved: &[ResolvedStage]) -> Vec<FxpSpec> {
+        let plan = self.precision.plan().expect("fixed-point graph");
+        let mut specs = Vec::with_capacity(resolved.len());
+        let mut prev: Option<FxpSpec> = None;
+        for rs in resolved {
+            let sp = match rs.fxp_override {
+                Some(sp) => sp,
+                None => match rs.op {
+                    StageOp::Identity => prev.unwrap_or_else(|| plan.spec_for(rs.role)),
+                    _ => plan.spec_for(rs.role),
+                },
+            };
+            specs.push(sp);
+            prev = Some(sp);
+        }
+        specs
+    }
+
+    /// The entry prescale of a fixed-point graph: the most conservative
+    /// of the formats a raw sample flows through before the first
+    /// whitener renormalises (the legacy `entry_prescale` rule,
+    /// generalised to any cascade).
+    fn fxp_prescale(resolved: &[ResolvedStage], specs: &[FxpSpec]) -> f32 {
+        let mut ps = 1.0f32;
+        for (rs, sp) in resolved.iter().zip(specs) {
+            ps = ps.min(input_prescale(sp));
+            if rs.op == StageOp::WhitenGha {
+                break;
+            }
+        }
+        ps
+    }
+
+    fn build_fxp(&self, resolved: &[ResolvedStage], warmup: u64) -> Result<StageGraph> {
+        let plan = self.precision.plan().expect("fixed-point graph");
+        let specs = self.fxp_specs(resolved);
+        let prescale = Self::fxp_prescale(resolved, &specs);
+        let mut stages: Vec<Box<dyn Stage>> = Vec::with_capacity(resolved.len());
+        // σ of the most recent whitener: downstream rotation learning
+        // rates fold in σ⁻⁴ (host-side constant folding, exact — σ is a
+        // power of two); rotations with no whitener upstream compensate
+        // the entry prescale instead, as the legacy fixed path did.
+        let mut last_sigma: Option<f32> = None;
+        for (i, rs) in resolved.iter().enumerate() {
+            let spec = specs[i];
+            let stage: Box<dyn Stage> = match rs.op {
+                StageOp::Rp(dist) => {
+                    Box::new(FxpRpStage::new(self.build_rp(resolved, i, dist), spec))
+                }
+                StageOp::WhitenGha => {
+                    let mut gha = FxpGha::new(
+                        rs.in_dim,
+                        rs.out_dim,
+                        self.mu_w,
+                        5e-3,
+                        self.seed,
+                        spec,
+                        plan.quant,
+                    );
+                    // The σ target must satisfy the *narrower* of this
+                    // stage's format and any downstream rotation's —
+                    // ±4σ has to fit both sides of the boundary.
+                    let rot_int = resolved[i + 1..]
+                        .iter()
+                        .zip(&specs[i + 1..])
+                        .find(|(r, _)| r.role == StageRole::Rot)
+                        .map(|(_, sp)| sp.format.int_bits);
+                    let narrow = match rot_int {
+                        Some(r) => spec.format.int_bits.min(r),
+                        None => spec.format.int_bits,
+                    };
+                    gha.set_sigma_shift((3 - narrow as i32).max(0));
+                    last_sigma = Some(gha.target_sigma());
+                    Box::new(FxpGhaStage::new(gha))
+                }
+                StageOp::RotEasi => {
+                    let mu_eff = match last_sigma {
+                        Some(sigma) => self.mu_rot / (sigma * sigma * sigma * sigma),
+                        None => self.mu_rot / prescale.powi(4),
+                    };
+                    let rot = FxpEasiRot::new(
+                        rs.out_dim,
+                        rs.out_dim,
+                        mu_eff,
+                        None,
+                        spec,
+                        plan.quant,
+                    );
+                    Box::new(FxpEasiStage::new(rot, "rot:easi", warmup))
+                }
+                StageOp::Easi(mode) => {
+                    if mode != EasiMode::RotationOnly {
+                        bail!(
+                            "fixed-point EASI implements the paper's rotation-only \
+                             datapath; got {mode:?}"
+                        );
+                    }
+                    // Update terms scale as the fourth power of the
+                    // input scale: σ behind a whitener, the entry
+                    // prescale otherwise — fold the compensation into μ
+                    // (exact power of two).
+                    let mu_eff = match last_sigma {
+                        Some(sigma) => self.mu_rot / (sigma * sigma * sigma * sigma),
+                        None => self.mu_rot / prescale.powi(4),
+                    };
+                    let rot = FxpEasiRot::new(
+                        rs.in_dim,
+                        rs.out_dim,
+                        mu_eff,
+                        Some(self.seed),
+                        spec,
+                        plan.quant,
+                    );
+                    Box::new(FxpEasiStage::new(rot, "easi", 0))
+                }
+                StageOp::Dct => Box::new(FxpDctStage::new(rs.in_dim, rs.out_dim, spec)),
+                StageOp::Identity => Box::new(IdentityStage::new(rs.in_dim, Some(spec))),
+                StageOp::Pca { .. } => bail!(
+                    "fixed-point precision supports the streaming stages \
+                     (easi rotation-only, ica, identity), not {:?}",
+                    rs.op
+                ),
+            };
+            stages.push(stage);
+        }
+        let entry = specs[0];
+        Ok(StageGraph::new(
+            stages,
+            Domain::Fxp { entry, prescale },
+            self.input_dim,
+            self.output_dim,
+        ))
+    }
+
+    // ----------------------------------------------------- hw pricing
+
+    /// The legacy `(m, p, n)` shape, when this graph is one of the
+    /// forms `cost_precision` has always priced — pricing those through
+    /// the same path keeps every historical number bit-for-bit.
+    fn legacy_hw_shape(&self) -> Option<(usize, Option<usize>, usize)> {
+        if self.stages.iter().any(|d| d.fxp.is_some()) {
+            return None;
+        }
+        let ops: Vec<StageOp> = self.stages.iter().map(|d| d.op).collect();
+        let (p, rest): (Option<usize>, &[StageOp]) = match ops.as_slice() {
+            [StageOp::Rp(_), rest @ ..] => (self.stages[0].out_dim, rest),
+            rest => (None, rest),
+        };
+        match rest {
+            [StageOp::WhitenGha, StageOp::RotEasi] | [StageOp::Easi(_)] => {
+                Some((self.input_dim, p, self.output_dim))
+            }
+            _ => None,
+        }
+    }
+
+    /// Per-stage operator inventories and operand formats — the
+    /// fold-ready view of the graph for [`Arria10Model::cost_stages`].
+    pub fn hw_ops(&self) -> Result<Vec<(String, OpCounts, NumericFormat)>> {
+        let resolved = self.resolve()?;
+        let fmt_of = |spec: Option<FxpSpec>| match (&self.precision, spec) {
+            (Precision::F32, _) => NumericFormat::Fp32,
+            (Precision::Fixed(_), Some(sp)) => NumericFormat::Fixed {
+                width_bits: sp.format.width(),
+            },
+            (Precision::Fixed(plan), None) => NumericFormat::Fixed {
+                width_bits: plan.widest_width(),
+            },
+        };
+        let specs: Option<Vec<FxpSpec>> = self
+            .precision
+            .plan()
+            .map(|_| self.fxp_specs(&resolved));
+        let mut out = Vec::with_capacity(resolved.len());
+        let mut last_whiten_in: Option<usize> = None;
+        for (i, rs) in resolved.iter().enumerate() {
+            let spec = specs.as_ref().map(|s| s[i]);
+            let ops = match rs.op {
+                StageOp::Rp(_) => rp_ops(rs.in_dim, rs.out_dim),
+                StageOp::WhitenGha => {
+                    last_whiten_in = Some(rs.in_dim);
+                    easi_split_ops(rs.in_dim, rs.out_dim).0
+                }
+                StageOp::RotEasi => match last_whiten_in {
+                    // The rotation share of the split depends on the
+                    // whitener's input width (stage 4's F·B is the
+                    // O(m·n²) hot spot).
+                    Some(m) => easi_split_ops(m, rs.out_dim).1,
+                    None => easi_ops(rs.in_dim, rs.out_dim),
+                },
+                StageOp::Easi(_) => easi_ops(rs.in_dim, rs.out_dim),
+                StageOp::Pca { .. } | StageOp::Dct => dense_stage_ops(rs.in_dim, rs.out_dim),
+                StageOp::Identity => OpCounts::default(),
+            };
+            out.push((
+                self.stages[i].label(),
+                ops,
+                fmt_of(spec),
+            ));
+        }
+        Ok(out)
+    }
+
+    /// Price the graph: legacy shapes delegate to `cost_precision`
+    /// (bit-identical to every historical sweep number), anything else
+    /// folds the per-stage inventories at their per-stage widths.
+    pub fn hw_cost(&self, model: &Arria10Model) -> Result<ResourceReport> {
+        if let Some((m, p, n)) = self.legacy_hw_shape() {
+            return Ok(model.cost_precision(m, p, n, &self.precision));
+        }
+        let parts = self.hw_ops()?;
+        let stages: Vec<(OpCounts, NumericFormat)> =
+            parts.into_iter().map(|(_, ops, fmt)| (ops, fmt)).collect();
+        Ok(model.cost_stages(&stages))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(stages: &str, m: usize, n: usize, precision: &str) -> GraphSpec {
+        GraphSpec {
+            input_dim: m,
+            output_dim: n,
+            stages: parse_stage_list(stages).unwrap(),
+            seed: 7,
+            precision: Precision::parse(precision).unwrap(),
+            mu_w: 5e-3,
+            mu_rot: 1e-3,
+            rot_warmup: Some(100),
+            epochs: 1,
+        }
+    }
+
+    #[test]
+    fn parse_known_stage_tokens() {
+        let decls = parse_stage_list("rp:ternary/16,whiten:gha,rot:easi").unwrap();
+        assert_eq!(decls.len(), 3);
+        assert_eq!(decls[0].op, StageOp::Rp(RpDistribution::Ternary));
+        assert_eq!(decls[0].out_dim, Some(16));
+        assert_eq!(decls[1].op, StageOp::WhitenGha);
+        assert_eq!(decls[2].op, StageOp::RotEasi);
+        // Aliases and defaults.
+        let decls = parse_stage_list("rp/8,whiten,rot").unwrap();
+        assert_eq!(decls[0].op, StageOp::Rp(RpDistribution::Ternary));
+        assert_eq!(decls[1].op, StageOp::WhitenGha);
+        assert_eq!(decls[2].op, StageOp::RotEasi);
+        // Per-stage format overrides parse and round-trip.
+        let decls = parse_stage_list("rp:ternary/16@q8.16,whiten:gha@q4.12:trunc").unwrap();
+        assert_eq!(decls[0].fxp, Some(FxpSpec::parse("q8.16").unwrap()));
+        assert_eq!(decls[1].fxp, Some(FxpSpec::parse("q4.12:trunc").unwrap()));
+        for d in &decls {
+            let back = parse_stage_list(&d.label()).unwrap();
+            assert_eq!(back[0], *d, "label {} must round-trip", d.label());
+        }
+    }
+
+    #[test]
+    fn parse_rejects_unknown_tokens_naming_them() {
+        for (list, needle) in [
+            ("rp:ternary/16,frobnicate", "frobnicate"),
+            ("whiten:svd", "whiten:svd"),
+            ("rp:binary/16", "rp:binary/16"),
+            ("pca:kernel", "pca:kernel"),
+            ("identity:twice", "identity:twice"),
+        ] {
+            let err = parse_stage_list(list).unwrap_err().to_string();
+            assert!(
+                err.contains("unknown stage") && err.contains(needle),
+                "{list}: {err}"
+            );
+        }
+        // Bad dimension token.
+        let err = parse_stage_list("rp:ternary/lots").unwrap_err().to_string();
+        assert!(err.contains("bad dimension"), "{err}");
+    }
+
+    #[test]
+    fn parse_rejects_duplicate_stages_naming_them() {
+        for (list, needle) in [
+            ("whiten:gha,whiten:gha", "whiten:gha"),
+            ("rot:easi,rot:easi", "rot:easi"),
+            ("rp:ternary/16,rp:gaussian/8", "rp:gaussian/8"),
+            ("rot:easi,easi:full", "easi:full"),
+        ] {
+            let err = parse_stage_list(list).unwrap_err().to_string();
+            assert!(
+                err.contains("duplicate stage") && err.contains(needle),
+                "{list}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn resolve_dims_and_errors() {
+        let g = spec("rp:ternary/16,whiten:gha,rot:easi", 32, 8, "f32");
+        let r = g.resolve().unwrap();
+        assert_eq!(r[0].in_dim, 32);
+        assert_eq!(r[0].out_dim, 16);
+        assert_eq!(r[1].out_dim, 8);
+        assert_eq!(r[2].in_dim, 8);
+        assert_eq!(r[2].out_dim, 8);
+        // RP without a dimension.
+        let g = spec("rp:ternary,whiten:gha", 32, 8, "f32");
+        assert!(g.resolve().unwrap_err().to_string().contains("explicit dimension"));
+        // Chain must land on output_dim.
+        let g = spec("dct/16", 32, 8, "f32");
+        assert!(g.resolve().is_err());
+        // Batch stage behind an adaptive stage is rejected.
+        let g = spec("whiten:gha/16,pca", 32, 8, "f32");
+        let err = g.resolve().unwrap_err().to_string();
+        assert!(err.contains("cannot follow an adaptive stage"), "{err}");
+        // A per-stage format override on an f32 graph is dead — reject
+        // loudly naming the stage.
+        let g = spec("rp:ternary/16@q8.16,whiten:gha,rot:easi", 32, 8, "f32");
+        let err = g.resolve().unwrap_err().to_string();
+        assert!(
+            err.contains("rp:ternary/16@q8.16") && err.contains("f32"),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn legacy_shapes_price_identically_to_cost_precision() {
+        let model = Arria10Model::paper_calibrated();
+        for (stages, m, p, n) in [
+            ("rp:ternary/16,whiten:gha,rot:easi", 32usize, Some(16usize), 8usize),
+            ("whiten:gha,rot:easi", 32, None, 8),
+            ("easi:full/8", 32, None, 8),
+            ("rp:ternary/16,easi:rot", 32, Some(16), 8),
+        ] {
+            for prec in ["f32", "q4.12", "rp=q8.16,whiten=q4.12,rot=q1.15"] {
+                let g = spec(stages, m, n, prec);
+                let got = g.hw_cost(&model).unwrap();
+                let want =
+                    model.cost_precision(m, p, n, &Precision::parse(prec).unwrap());
+                assert_eq!(got.dsps, want.dsps, "{stages} {prec} DSPs");
+                assert_eq!(got.alms, want.alms, "{stages} {prec} ALMs");
+                assert_eq!(got.register_bits, want.register_bits, "{stages} {prec} regs");
+            }
+        }
+    }
+
+    #[test]
+    fn graph_fold_prices_new_scenarios() {
+        let model = Arria10Model::paper_calibrated();
+        // rp → pca (f32): RP soft add/subs + a dense matvec.
+        let g = spec("rp:ternary/16,pca", 32, 8, "f32");
+        let c = g.hw_cost(&model).unwrap();
+        assert!(c.alms > 0 && c.dsps > 0);
+        // dct → whiten → rot: fold of three inventories.
+        let g = spec("dct/16,whiten:gha,rot:easi", 32, 8, "f32");
+        let c32 = g.hw_cost(&model).unwrap();
+        let gq = spec("dct/16,whiten:gha,rot:easi", 32, 8, "q4.12");
+        let cq = gq.hw_cost(&model).unwrap();
+        assert!(cq.dsps < c32.dsps, "fixed point must undercut f32");
+        assert!(cq.alms < c32.alms);
+        // whiten-only fixed point: just the whiten share.
+        let g = spec("whiten:gha", 32, 8, "q4.12");
+        let c = g.hw_cost(&model).unwrap();
+        let full = spec("whiten:gha,rot:easi", 32, 8, "q4.12")
+            .hw_cost(&model)
+            .unwrap();
+        assert!(c.dsps < full.dsps, "whiten share must undercut whiten+rot");
+        // A per-stage @override changes the fold (wider RP → more ALMs).
+        let narrow = spec("rp:ternary/16@q4.12,whiten:gha,rot:easi", 32, 8, "q4.12");
+        let wide = spec("rp:ternary/16@q8.16,whiten:gha,rot:easi", 32, 8, "q4.12");
+        let cn = narrow.hw_cost(&model).unwrap();
+        let cw = wide.hw_cost(&model).unwrap();
+        assert!(cw.alms > cn.alms, "wider RP accumulator must cost more ALMs");
+    }
+
+    #[test]
+    fn builds_f32_and_fxp_graphs() {
+        use crate::linalg::Mat;
+        let x = Mat::from_fn(200, 32, |i, j| ((i * 7 + j * 3) % 13) as f32 / 13.0 - 0.5);
+        for prec in ["f32", "q4.12"] {
+            let g = spec("rp:ternary/16,whiten:gha,rot:easi", 32, 8, prec);
+            let mut graph = g.build(Some(x.rows_count())).unwrap();
+            graph.fit(&x, 1);
+            let y = graph.transform_rows(&x);
+            assert_eq!(y.shape(), (200, 8));
+            assert!(y.as_slice().iter().all(|v| v.is_finite()));
+        }
+        // Batch stages reject fixed point with the legacy message.
+        let g = spec("pca", 32, 8, "q4.12");
+        let err = g.build(None).unwrap_err().to_string();
+        assert!(
+            err.contains("fixed-point precision supports the streaming stages"),
+            "{err}"
+        );
+    }
+}

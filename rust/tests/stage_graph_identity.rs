@@ -1,0 +1,413 @@
+//! Golden mapping tests: every legacy `StageSpec` / pipeline-mode form,
+//! rebuilt as a stage graph, must reproduce the pre-graph fused
+//! datapath **bit for bit**.
+//!
+//! The legacy oracle is reconstructed inline from the kernels the fused
+//! paths were made of (`ingress_tile` + `FxpDrUnit` / `FxpEasiRot` for
+//! fixed point, `RandomProjection` + `DrUnit` / `EasiTrainer` for f32)
+//! — exactly the arithmetic the old `DrPipeline::fit_fixed` /
+//! `NativeTrainer` engines executed. Raw-word identity is asserted
+//! through exact `f32` equality of the dequantized outputs (dequantize
+//! is injective at these widths), across uniform and mixed
+//! `PrecisionPlan`s and both training modes (BitExact + STE).
+
+use dimred::config::{ExperimentConfig, PipelineMode};
+use dimred::coordinator::{Batch, Trainer};
+use dimred::easi::EasiMode;
+use dimred::fxp::kernels::ingress_tile;
+use dimred::fxp::{FxpDrUnit, FxpEasiRot, FxpRp, FxpUnitConfig, Precision, PrecisionPlan, Scratch};
+use dimred::linalg::Mat;
+use dimred::pipeline::unit::{DrUnit, DrUnitConfig};
+use dimred::pipeline::{DrPipeline, PipelineSpec, RpStage, StageSpec};
+use dimred::rp::{RandomProjection, RpDistribution};
+use dimred::stage::GraphSpec;
+
+const M: usize = 32;
+const P: usize = 16;
+const N: usize = 8;
+
+fn data(rows: usize, seed: u64) -> Mat {
+    Mat::from_fn(rows, M, |i, j| {
+        (((i as u64 * 31 + j as u64 * 7 + seed * 13) % 97) as f32 / 97.0 - 0.5) * 2.0
+    })
+}
+
+/// The plan grid the acceptance criterion names: uniform and mixed,
+/// bit-exact and STE.
+fn plan_grid() -> Vec<Precision> {
+    [
+        "q4.12",
+        "rp=q8.16,whiten=q4.12,rot=q1.15",
+        "q4.4,qat=ste",
+        "rp=q8.16,whiten=q4.12,rot=q4.12,qat=ste",
+    ]
+    .iter()
+    .map(|s| Precision::parse(s).expect("static plan"))
+    .collect()
+}
+
+/// The legacy fixed-point ingress: quantize at the entry format,
+/// project through the quantized RP network, requantize into the
+/// trained stage's format (copied from the pre-graph `fit_fixed`).
+fn legacy_ingress(
+    frp: &FxpRp,
+    plan: &PrecisionPlan,
+    stage_in_spec: dimred::fxp::FxpSpec,
+    x: &Mat,
+) -> (Vec<i32>, f32) {
+    let entry = plan.rp;
+    let prescale = plan.entry_prescale(true, &stage_in_spec);
+    let mut ingress = Scratch::new();
+    ingress_tile(
+        Some(frp),
+        &entry,
+        &stage_in_spec,
+        prescale,
+        x.as_slice(),
+        x.rows_count(),
+        &mut ingress,
+    );
+    (ingress.stage.clone(), prescale)
+}
+
+#[test]
+fn ica_fixed_graph_is_bit_identical_to_fused_unit() {
+    let x = data(500, 3);
+    let (seed, epochs) = (7u64, 2usize);
+    for precision in plan_grid() {
+        let plan = precision.plan().unwrap();
+        // ---- legacy oracle: the pre-graph fit_fixed arithmetic.
+        let rp = RandomProjection::new(M, P, RpDistribution::Ternary, seed).unit_variance();
+        let frp = FxpRp::from_rp(&rp, plan.rp);
+        let (staged, _) = legacy_ingress(&frp, &plan, plan.whiten, &x);
+        let rows = x.rows_count();
+        let mut unit = FxpDrUnit::new(FxpUnitConfig {
+            input_dim: P,
+            output_dim: N,
+            mu_w: 5e-3,
+            mu_rot: 1e-3,
+            rotate: true,
+            rot_warmup: (rows / 2).min(2000) as u64,
+            seed,
+            whiten_spec: plan.whiten,
+            rot_spec: plan.rot,
+            quant: plan.quant,
+        });
+        for _ in 0..epochs {
+            unit.step_tile_raw(&staged, rows);
+        }
+        let out_spec = unit.output_spec();
+        // ---- graph under test: the legacy Ica StageSpec mapped onto
+        // rp → whiten → rot.
+        let spec = PipelineSpec {
+            input_dim: M,
+            rp: Some(RpStage {
+                intermediate_dim: P,
+                distribution: RpDistribution::Ternary,
+            }),
+            stage: StageSpec::Ica {
+                mu_w: 5e-3,
+                mu_rot: 1e-3,
+                epochs,
+            },
+            output_dim: N,
+            seed,
+            precision,
+        };
+        let pipe = DrPipeline::fit(spec, &x);
+        let tiled = pipe.transform_rows(&x);
+        for i in 0..rows {
+            let want = out_spec
+                .dequantize_vec(&unit.transform_raw(&staged[i * P..(i + 1) * P].to_vec()));
+            let got = pipe.transform(x.row(i));
+            assert_eq!(
+                got,
+                want,
+                "row {i} diverged under plan {}",
+                precision.label()
+            );
+            assert_eq!(
+                tiled.row(i),
+                want.as_slice(),
+                "tiled row {i} diverged under plan {}",
+                precision.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn easi_fixed_graph_is_bit_identical_to_fused_kernel() {
+    // The paper's proposed config (rotation-only EASI behind RP), the
+    // legacy StageSpec::Easi fixed path.
+    let x = data(400, 5);
+    let (seed, epochs, mu) = (9u64, 2usize, 1e-3f32);
+    for precision in plan_grid() {
+        let plan = precision.plan().unwrap();
+        let rp = RandomProjection::new(M, P, RpDistribution::Ternary, seed).unit_variance();
+        let frp = FxpRp::from_rp(&rp, plan.rp);
+        let (staged, prescale) = legacy_ingress(&frp, &plan, plan.rot, &x);
+        let rows = x.rows_count();
+        let mu_eff = mu / prescale.powi(4);
+        let mut rot = FxpEasiRot::new(P, N, mu_eff, Some(seed), plan.rot, plan.quant);
+        for _ in 0..epochs {
+            rot.step_tile_raw(&staged, rows);
+        }
+        let spec = PipelineSpec::proposed(M, P, N, mu, epochs, seed).with_precision(precision);
+        let pipe = DrPipeline::fit(spec, &x);
+        for i in (0..rows).step_by(7) {
+            let want = plan
+                .rot
+                .dequantize_vec(&rot.transform_raw(&staged[i * P..(i + 1) * P].to_vec()));
+            let got = pipe.transform(x.row(i));
+            assert_eq!(got, want, "row {i} diverged under plan {}", precision.label());
+        }
+    }
+}
+
+#[test]
+fn identity_fixed_graph_is_bit_identical() {
+    let x = data(120, 11);
+    let precision = Precision::parse("rp=q8.16,whiten=q4.12,rot=q1.15").unwrap();
+    let plan = precision.plan().unwrap();
+    let seed = 1u64;
+    // Legacy: entry/stage format are both the RP accumulator's; the
+    // staged words *are* the output.
+    let rp = RandomProjection::new(M, N, RpDistribution::Ternary, seed);
+    let frp = FxpRp::from_rp(&rp, plan.rp);
+    let (staged, _) = legacy_ingress(&frp, &plan, plan.rp, &x);
+    let spec = PipelineSpec {
+        input_dim: M,
+        rp: Some(RpStage {
+            intermediate_dim: N,
+            distribution: RpDistribution::Ternary,
+        }),
+        stage: StageSpec::Identity,
+        output_dim: N,
+        seed,
+        precision,
+    };
+    let pipe = DrPipeline::fit(spec, &x);
+    for i in 0..x.rows_count() {
+        let want = plan.rp.dequantize_vec(&staged[i * N..(i + 1) * N].to_vec());
+        assert_eq!(pipe.transform(x.row(i)), want, "row {i}");
+    }
+}
+
+#[test]
+fn ica_f32_graph_is_bit_identical_to_fused_unit() {
+    let x = data(600, 13);
+    let (seed, epochs) = (17u64, 2usize);
+    // Legacy oracle: the pre-graph f32 fit (RP staged once, the fused
+    // DrUnit stepped over it).
+    let rp = RandomProjection::new(M, P, RpDistribution::Ternary, seed).unit_variance();
+    let staged = rp.apply_rows(&x);
+    let mut unit = DrUnit::new(DrUnitConfig {
+        input_dim: P,
+        output_dim: N,
+        mu_w: 5e-3,
+        mu_rot: 1e-3,
+        rotate: true,
+        rot_warmup: (staged.rows_count() / 2).min(2000) as u64,
+        seed,
+    });
+    for _ in 0..epochs {
+        unit.step_rows(&staged);
+    }
+    let spec = PipelineSpec {
+        input_dim: M,
+        rp: Some(RpStage {
+            intermediate_dim: P,
+            distribution: RpDistribution::Ternary,
+        }),
+        stage: StageSpec::Ica {
+            mu_w: 5e-3,
+            mu_rot: 1e-3,
+            epochs,
+        },
+        output_dim: N,
+        seed,
+        precision: Precision::F32,
+    };
+    let pipe = DrPipeline::fit(spec, &x);
+    for i in 0..x.rows_count() {
+        let want = unit.transform(staged.row(i));
+        assert_eq!(pipe.transform(x.row(i)), want, "row {i}");
+    }
+}
+
+#[test]
+fn easi_f32_graph_is_bit_identical_to_fused_trainer() {
+    // Both legacy EasiTrainer forms: full EASI (Table I) and the
+    // proposed rotation-only datapath behind RP.
+    use dimred::easi::{EasiConfig, EasiTrainer};
+    let x = data(400, 19);
+    let (seed, epochs, mu) = (23u64, 2usize, 1e-3f32);
+
+    // Full EASI, no RP.
+    let mut t = EasiTrainer::new(EasiConfig {
+        input_dim: M,
+        output_dim: P,
+        mu,
+        mode: EasiMode::Full,
+        normalized: true,
+        max_norm: 1e4,
+        clip: 0.05,
+        random_init: Some(seed),
+    });
+    for _ in 0..epochs {
+        t.step_rows(&x);
+    }
+    let pipe = DrPipeline::fit(PipelineSpec::easi_only(M, P, mu, epochs, seed), &x);
+    for i in (0..x.rows_count()).step_by(11) {
+        assert_eq!(pipe.transform(x.row(i)), t.transform(x.row(i)), "row {i}");
+    }
+
+    // Rotation-only behind RP (the proposed config).
+    let rp = RandomProjection::new(M, P, RpDistribution::Ternary, seed).unit_variance();
+    let staged = rp.apply_rows(&x);
+    let mut t = EasiTrainer::new(EasiConfig {
+        input_dim: P,
+        output_dim: N,
+        mu,
+        mode: EasiMode::RotationOnly,
+        normalized: true,
+        max_norm: 4.0 * (N as f32).sqrt(),
+        clip: 0.05,
+        random_init: Some(seed),
+    });
+    for _ in 0..epochs {
+        t.step_rows(&staged);
+    }
+    let pipe = DrPipeline::fit(PipelineSpec::proposed(M, P, N, mu, epochs, seed), &x);
+    for i in (0..x.rows_count()).step_by(11) {
+        assert_eq!(pipe.transform(x.row(i)), t.transform(staged.row(i)), "row {i}");
+    }
+}
+
+#[test]
+fn trainer_graph_is_bit_identical_to_fused_engine() {
+    // The coordinator's generic tile loop vs the legacy fused engines,
+    // fixed point: same batches, same warm-up, identical raw words out
+    // of transform_rows and an identical folded separation matrix.
+    let precision = Precision::parse("rp=q8.16,whiten=q4.12,rot=q4.12").unwrap();
+    let plan = precision.plan().unwrap();
+    let cfg = ExperimentConfig {
+        mode: PipelineMode::RpEasi,
+        precision,
+        rot_warmup: 100,
+        train_classifier: false,
+        ..Default::default()
+    };
+    let x = data(512, 29);
+    let mut t = Trainer::from_config(&cfg, None).unwrap();
+    // Two half-batches, like the streaming loop would deliver.
+    let first = Mat::from_vec(256, M, x.as_slice()[..256 * M].to_vec());
+    let second = Mat::from_vec(256, M, x.as_slice()[256 * M..].to_vec());
+    t.step(&Batch::Full(first.clone())).unwrap();
+    t.step(&Batch::Full(second.clone())).unwrap();
+
+    // Legacy fused engine: shared ingress + FxpDrUnit per batch tile.
+    let rp = RandomProjection::new(M, P, RpDistribution::Ternary, cfg.seed).unit_variance();
+    let frp = FxpRp::from_rp(&rp, plan.rp);
+    let mut unit = FxpDrUnit::new(FxpUnitConfig {
+        input_dim: P,
+        output_dim: N,
+        mu_w: cfg.mu_w,
+        mu_rot: cfg.mu,
+        rotate: true,
+        rot_warmup: cfg.rot_warmup as u64,
+        seed: cfg.seed,
+        whiten_spec: plan.whiten,
+        rot_spec: plan.rot,
+        quant: plan.quant,
+    });
+    for batch in [&first, &second] {
+        let (staged, _) = legacy_ingress(&frp, &plan, plan.whiten, batch);
+        unit.step_tile_raw(&staged, batch.rows_count());
+    }
+    let (staged, _) = legacy_ingress(&frp, &plan, plan.whiten, &x);
+    let mut raw = Vec::new();
+    unit.transform_tile_raw_multilane(&staged, x.rows_count(), 1, &mut raw);
+    let out_spec = unit.output_spec();
+    let want = Mat::from_vec(
+        x.rows_count(),
+        N,
+        raw.iter().map(|&w| out_spec.dequantize(w)).collect(),
+    );
+    let got = t.transform_rows(&x);
+    assert_eq!(got.as_slice(), want.as_slice(), "fxp trainer outputs diverged");
+    assert_eq!(
+        t.separation_matrix().as_slice(),
+        unit.effective_matrix().as_slice(),
+        "fxp separation matrices diverged"
+    );
+
+    // And the f32 engine: staged dense RP + fused unit, folded matrix.
+    let cfg = ExperimentConfig {
+        mode: PipelineMode::RpEasi,
+        rot_warmup: 100,
+        train_classifier: false,
+        ..Default::default()
+    };
+    let mut t = Trainer::from_config(&cfg, None).unwrap();
+    t.step(&Batch::Full(first.clone())).unwrap();
+    t.step(&Batch::Full(second.clone())).unwrap();
+    let mut unit = DrUnit::new(DrUnitConfig {
+        input_dim: P,
+        output_dim: N,
+        mu_w: cfg.mu_w,
+        mu_rot: cfg.mu,
+        rotate: true,
+        rot_warmup: cfg.rot_warmup as u64,
+        seed: cfg.seed,
+    });
+    for batch in [&first, &second] {
+        unit.step_rows(&rp.apply_rows(batch));
+    }
+    let rp_dense = rp.to_dense();
+    let want = unit.effective_matrix().apply_rows(&rp_dense.apply_rows(&x));
+    let got = t.transform_rows(&x);
+    assert_eq!(got.as_slice(), want.as_slice(), "f32 trainer outputs diverged");
+}
+
+#[test]
+fn checkpoint_restore_continues_bit_exactly() {
+    // Stage-state save/restore: a graph restored from a mid-stream
+    // checkpoint must continue exactly where the saved one stopped —
+    // including STE shadow weights (the sub-LSB accumulation survives
+    // the round-trip).
+    let x = data(600, 31);
+    let first = Mat::from_vec(300, M, x.as_slice()[..300 * M].to_vec());
+    let second = Mat::from_vec(300, M, x.as_slice()[300 * M..].to_vec());
+    for prec in ["q4.12", "rp=q8.16,whiten=q4.12,rot=q4.12,qat=ste"] {
+        let gspec = GraphSpec {
+            input_dim: M,
+            output_dim: N,
+            stages: dimred::stage::spec::parse_stage_list("rp:ternary/16,whiten:gha,rot:easi")
+                .unwrap(),
+            seed: 3,
+            precision: Precision::parse(prec).unwrap(),
+            mu_w: 5e-3,
+            mu_rot: 1e-3,
+            rot_warmup: Some(50),
+            epochs: 1,
+        };
+        // Continuous run.
+        let mut full = gspec.build(None).unwrap();
+        full.step_rows(&first);
+        let snapshot = full.save_state();
+        full.step_rows(&second);
+        let want = full.transform_rows(&x);
+        // Restored run: fresh graph + checkpoint + the second half.
+        let mut resumed = gspec.build(None).unwrap();
+        resumed.restore_state(&snapshot).unwrap();
+        resumed.step_rows(&second);
+        let got = resumed.transform_rows(&x);
+        assert_eq!(
+            got.as_slice(),
+            want.as_slice(),
+            "checkpointed continuation diverged under {prec}"
+        );
+    }
+}
