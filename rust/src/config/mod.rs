@@ -140,6 +140,11 @@ pub struct ExperimentConfig {
     pub train_classifier: bool,
     /// Classifier epochs.
     pub mlp_epochs: usize,
+    /// Instrument the datapath: per-stage counters, fxp saturation
+    /// health, periodic JSONL events and an end-of-run snapshot.
+    pub telemetry: bool,
+    /// Where `train` writes the schema-validated telemetry snapshot.
+    pub telemetry_out: PathBuf,
 }
 
 impl Default for ExperimentConfig {
@@ -165,6 +170,8 @@ impl Default for ExperimentConfig {
             artifact_dir: PathBuf::from("artifacts"),
             train_classifier: true,
             mlp_epochs: 30,
+            telemetry: false,
+            telemetry_out: PathBuf::from("TELEMETRY_snapshot.json"),
         }
     }
 }
@@ -245,6 +252,12 @@ impl ExperimentConfig {
         if let Some(x) = v.get("mlp_epochs") {
             c.mlp_epochs = x.as_usize()?;
         }
+        if let Some(x) = v.get("telemetry") {
+            c.telemetry = x.as_bool()?;
+        }
+        if let Some(x) = v.get("telemetry_out") {
+            c.telemetry_out = PathBuf::from(x.as_str()?);
+        }
         c.validate()?;
         Ok(c)
     }
@@ -283,6 +296,14 @@ impl ExperimentConfig {
         }
         if args.flag("no-classifier") {
             self.train_classifier = false;
+        }
+        if args.flag("telemetry") {
+            self.telemetry = true;
+        }
+        if let Some(p) = args.opt_str("telemetry-out") {
+            // An explicit output path implies instrumentation.
+            self.telemetry = true;
+            self.telemetry_out = PathBuf::from(p);
         }
         self.validate()
     }
@@ -382,6 +403,7 @@ impl ExperimentConfig {
             ("batch", Json::num(self.batch as f64)),
             ("lanes", Json::num(self.lanes as f64)),
             ("seed", Json::num(self.seed as f64)),
+            ("telemetry", Json::Bool(self.telemetry)),
         ];
         if let Some(s) = &self.stages {
             fields.push(("stages", Json::str(s.clone())));

@@ -17,11 +17,13 @@
 //! unsupervised → transform → train MLP → evaluate).
 
 pub mod batcher;
-pub mod metrics;
 pub mod trainer;
 
 pub use batcher::{Batch, EpochSource, SampleSource};
-pub use metrics::Metrics;
+// Run metrics were absorbed into the telemetry layer (one home for
+// run- and stage-level instrumentation); re-exported here so
+// coordinator callers keep their import paths.
+pub use crate::telemetry::{LatencyHistogram, Metrics};
 pub use trainer::{ArtifactNames, Trainer};
 
 use crate::config::ExperimentConfig;
@@ -63,6 +65,9 @@ impl Default for StopRule {
 /// Outcome of a training run.
 pub struct TrainReport {
     pub metrics: Metrics,
+    /// Per-stage datapath telemetry, when the run was instrumented
+    /// (`cfg.telemetry` on a native-backend run).
+    pub telemetry: Option<crate::telemetry::TelemetrySnapshot>,
     /// Final separation matrix.
     pub separation: Mat,
     /// Dense RP matrix, if the mode used one.
@@ -116,6 +121,7 @@ impl<'rt> TrainingService<'rt> {
         );
         let mut trainer = Trainer::from_config(&self.cfg, self.runtime)?;
         let mut m = Metrics::new();
+        m.queue_depth = self.cfg.queue_depth;
 
         // Producer: epochs over the training matrix.
         let shared = Arc::new(data.train_x.clone());
@@ -150,6 +156,12 @@ impl<'rt> TrainingService<'rt> {
             if m.batches % 8 == 0 {
                 m.convergence_trace
                     .push((m.samples_in, trainer.update_magnitude()));
+            }
+            // Periodic JSONL telemetry events: one compact line every
+            // 32 batches, cheap enough to leave on for whole runs.
+            if self.cfg.telemetry && m.batches % 32 == 0 {
+                let ev = crate::telemetry::snapshot::progress_event(&m, trainer.update_magnitude());
+                println!("{}", ev.to_string());
             }
             if self.stop.threshold > 0.0
                 && m.samples_in >= self.stop.min_samples
@@ -199,6 +211,7 @@ impl<'rt> TrainingService<'rt> {
             separation: trainer.separation_matrix(),
             rp: trainer.rp_matrix().cloned(),
             test_accuracy,
+            telemetry: trainer.telemetry_snapshot(),
             metrics: m,
         })
     }

@@ -181,6 +181,16 @@ impl<'rt> Trainer<'rt> {
             Trainer::Pjrt(_) => "pjrt",
         }
     }
+
+    /// Point-in-time per-stage telemetry, when the backend is
+    /// instrumented (native with `cfg.telemetry` on; the PJRT datapath
+    /// runs inside compiled executables and exposes none).
+    pub fn telemetry_snapshot(&self) -> Option<crate::telemetry::TelemetrySnapshot> {
+        match self {
+            Trainer::Native(t) => t.graph.telemetry_snapshot(),
+            Trainer::Pjrt(_) => None,
+        }
+    }
 }
 
 fn rotation_active(mode: PipelineMode) -> Result<bool> {
@@ -223,6 +233,9 @@ impl NativeTrainer {
     pub fn new(cfg: &ExperimentConfig) -> Result<Self> {
         let gspec = cfg.graph_spec()?;
         let mut graph = gspec.build(None)?;
+        if cfg.telemetry {
+            graph.enable_telemetry();
+        }
         if cfg.stages.is_none() {
             // Legacy modes select the rotation mux (custom stage lists
             // start with every declared stage live).

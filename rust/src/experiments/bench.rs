@@ -22,6 +22,11 @@
 //! throughput the way `fxp-sweep`/`pareto` diff accuracy. CI runs
 //! `dimred bench --smoke` (tiny sample counts, same schema) and
 //! uploads the JSON as an artifact.
+//!
+//! Since schema v3 every stage-graph scenario also carries per-stage
+//! telemetry `health` rows (saturation rate, raw-word occupancy,
+//! headroom), collected on an untimed instrumented pass *after* the
+//! throughput measurement so the counters never pollute the timing.
 
 use crate::experiments::grid;
 use crate::fxp::{FxpDrUnit, FxpRp, FxpSpec, FxpUnitConfig, Precision, QuantMode, Scratch};
@@ -63,6 +68,23 @@ pub struct ScenarioPoint {
     pub precision: String,
     /// Whole-tile forward throughput.
     pub samples_per_s: f64,
+    /// Per-stage numeric health, collected on one *untimed* pass with
+    /// telemetry enabled after the throughput measurement (so the
+    /// instrumentation cannot pollute the timed numbers).
+    pub health: Vec<StageHealth>,
+}
+
+/// One stage's telemetry row in a bench scenario: the saturation /
+/// occupancy signal joined into the throughput trajectory.
+#[derive(Debug, Clone)]
+pub struct StageHealth {
+    pub stage: String,
+    /// Saturation events per forward sample (0 for f32 stages).
+    pub sat_per_sample: f64,
+    /// Highest occupied raw-word magnitude bit-length (0 for f32).
+    pub max_bits: u32,
+    /// Unused top magnitude bits vs the stage format (None for f32).
+    pub headroom_bits: Option<u32>,
 }
 
 /// All points for one dataset configuration, plus derived speedups.
@@ -474,10 +496,27 @@ pub fn run(opts: &BenchOptions) -> Result<Vec<BenchConfigResult>> {
             let tput = time_samples(reps, samples, || {
                 std::hint::black_box(graph.transform_rows(x));
             });
+            // Health join: instrument *after* timing, run one untimed
+            // pass, and read the per-stage saturation/occupancy signal.
+            graph.enable_telemetry();
+            graph.transform_rows(x);
+            let snap = graph
+                .telemetry_snapshot()
+                .context("telemetry enabled but no snapshot")?;
+            let health = snap
+                .all()
+                .map(|s| StageHealth {
+                    stage: s.name.clone(),
+                    sat_per_sample: s.sat_per_sample(),
+                    max_bits: s.max_bits(),
+                    headroom_bits: s.headroom_bits(),
+                })
+                .collect();
             scenarios.push(ScenarioPoint {
                 stages: gspec.stages_label(),
                 precision: prec.to_string(),
                 samples_per_s: tput,
+                health,
             });
         }
 
@@ -526,6 +565,16 @@ pub fn render(opts: &BenchOptions, results: &[BenchConfigResult]) -> String {
                 "  scenario {:<40} {:<10} {:>14.0}\n",
                 sc.stages, sc.precision, sc.samples_per_s
             ));
+            for h in &sc.health {
+                let headroom = h
+                    .headroom_bits
+                    .map(|b| format!("{b}b"))
+                    .unwrap_or_else(|| "-".into());
+                s.push_str(&format!(
+                    "    health {:<14} sat/smp={:<8.3} max_bits={:<3} headroom={}\n",
+                    h.stage, h.sat_per_sample, h.max_bits, headroom
+                ));
+            }
         }
     }
     s
@@ -536,7 +585,9 @@ pub fn to_json(opts: &BenchOptions, results: &[BenchConfigResult]) -> Json {
     Json::obj(vec![
         ("experiment", Json::str("bench_throughput")),
         // v2: per-config stage-graph `scenarios` rows joined the grid.
-        ("schema_version", Json::num(2.0)),
+        // v3: each scenario carries per-stage telemetry `health` rows
+        //     (saturation rate, raw-word occupancy, headroom).
+        ("schema_version", Json::num(3.0)),
         ("smoke", Json::Bool(opts.smoke)),
         ("tile", Json::num(opts.tile as f64)),
         ("lanes", Json::num(opts.lanes as f64)),
@@ -602,6 +653,48 @@ pub fn to_json(opts: &BenchOptions, results: &[BenchConfigResult]) -> Json {
                                                     "samples_per_s",
                                                     Json::num(sc.samples_per_s),
                                                 ),
+                                                (
+                                                    "health",
+                                                    Json::Arr(
+                                                        sc.health
+                                                            .iter()
+                                                            .map(|h| {
+                                                                Json::obj(vec![
+                                                                    (
+                                                                        "stage",
+                                                                        Json::str(
+                                                                            h.stage.clone(),
+                                                                        ),
+                                                                    ),
+                                                                    (
+                                                                        "sat_per_sample",
+                                                                        Json::num(
+                                                                            h.sat_per_sample,
+                                                                        ),
+                                                                    ),
+                                                                    (
+                                                                        "max_bits",
+                                                                        Json::num(
+                                                                            h.max_bits as f64,
+                                                                        ),
+                                                                    ),
+                                                                    (
+                                                                        "headroom_bits",
+                                                                        h.headroom_bits
+                                                                            .map(|b| {
+                                                                                Json::num(
+                                                                                    b as f64,
+                                                                                )
+                                                                            })
+                                                                            .unwrap_or(
+                                                                                Json::Null,
+                                                                            ),
+                                                                    ),
+                                                                ])
+                                                            })
+                                                            .collect(),
+                                                    ),
+                                                ),
                                             ])
                                         })
                                         .collect(),
@@ -624,7 +717,7 @@ pub fn validate(v: &Json) -> Result<()> {
         "wrong experiment tag"
     );
     ensure!(
-        v.field("schema_version")?.as_usize()? == 2,
+        v.field("schema_version")?.as_usize()? == 3,
         "unknown schema version"
     );
     v.field("smoke")?.as_bool().context("smoke flag")?;
@@ -670,6 +763,26 @@ pub fn validate(v: &Json) -> Result<()> {
                 tput.is_finite() && tput > 0.0,
                 "scenario samples_per_s must be positive, got {tput}"
             );
+            let health = sc.field("health")?.as_arr()?;
+            ensure!(!health.is_empty(), "scenario health must be non-empty");
+            for h in health {
+                h.field("stage")?.as_str()?;
+                let rate = h.field("sat_per_sample")?.as_f64()?;
+                ensure!(
+                    rate.is_finite() && rate >= 0.0,
+                    "sat_per_sample must be non-negative, got {rate}"
+                );
+                ensure!(
+                    h.field("max_bits")?.as_usize()? <= 32,
+                    "max_bits exceeds a raw word"
+                );
+                match h.field("headroom_bits")? {
+                    Json::Null => {}
+                    other => {
+                        other.as_usize().context("headroom_bits")?;
+                    }
+                }
+            }
         }
     }
     Ok(())
@@ -704,6 +817,18 @@ mod tests {
         // The three stage-graph scenarios ride along per config.
         assert_eq!(cfg.scenarios.len(), 3);
         assert!(cfg.scenarios.iter().all(|s| s.samples_per_s > 0.0));
+        // Every scenario carries at least one telemetry health row, and
+        // fixed-point scenarios report real occupancy + headroom.
+        assert!(cfg.scenarios.iter().all(|s| !s.health.is_empty()));
+        let fxp = cfg
+            .scenarios
+            .iter()
+            .find(|s| s.precision == "q4.12")
+            .unwrap();
+        assert!(fxp
+            .health
+            .iter()
+            .any(|h| h.max_bits > 0 && h.headroom_bits.is_some()));
         assert!(cfg
             .scenarios
             .iter()
@@ -736,6 +861,10 @@ mod tests {
         // Empty configs.
         let mut map = good.as_obj().unwrap().clone();
         map.insert("configs".into(), Json::Arr(vec![]));
+        assert!(validate(&Json::Obj(map)).is_err());
+        // Stale schema version (pre-health writers must not validate).
+        let mut map = good.as_obj().unwrap().clone();
+        map.insert("schema_version".into(), Json::num(2.0));
         assert!(validate(&Json::Obj(map)).is_err());
     }
 }

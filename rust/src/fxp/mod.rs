@@ -166,14 +166,30 @@ impl FxpSpec {
     }
 
     /// Fit a wide intermediate into the format per the overflow policy.
+    ///
+    /// This is the single overflow choke point of the datapath — every
+    /// quantize/add/sub/mul/dot funnels through it — so it is also
+    /// where telemetry observes numeric health: an actual overflow
+    /// bumps this thread's saturation/wrap counter
+    /// ([`crate::telemetry::events`]). In-range values pay nothing
+    /// beyond the range compare the policy already performs.
     #[inline]
     pub fn fit(&self, v: i64) -> i32 {
         let (lo, hi) = (self.format.min_raw() as i64, self.format.max_raw() as i64);
         match self.overflow {
-            Overflow::Saturate => v.clamp(lo, hi) as i32,
+            Overflow::Saturate => {
+                if v < lo || v > hi {
+                    crate::telemetry::events::note_sat();
+                }
+                v.clamp(lo, hi) as i32
+            }
             Overflow::Wrap => {
                 let w = self.format.width() as u32;
-                ((v << (64 - w)) >> (64 - w)) as i32
+                let wrapped = (v << (64 - w)) >> (64 - w);
+                if wrapped != v {
+                    crate::telemetry::events::note_wrap();
+                }
+                wrapped as i32
             }
         }
     }
@@ -208,6 +224,8 @@ impl FxpSpec {
             return 0;
         }
         if x.is_infinite() {
+            // An infinite input is a saturation by definition.
+            crate::telemetry::events::note_sat();
             return if x > 0.0 {
                 self.format.max_raw()
             } else {

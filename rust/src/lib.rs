@@ -20,7 +20,9 @@
 //!   (streaming training service), [`stage`] (the unified stage-graph
 //!   datapath: one `Stage` abstraction over f32 and fixed point),
 //!   [`pipeline`] (composed DR pipelines — thin façade over the stage
-//!   graph, f32 or fixed-point via [`fxp::Precision`]), [`config`]
+//!   graph, f32 or fixed-point via [`fxp::Precision`]), [`telemetry`]
+//!   (per-stage counters, fxp saturation health, run metrics and the
+//!   `dimred report` profiling surface), [`config`]
 
 pub mod config;
 pub mod coordinator;
@@ -38,6 +40,7 @@ pub mod rng;
 pub mod rp;
 pub mod runtime;
 pub mod stage;
+pub mod telemetry;
 pub mod util;
 
 /// Crate-wide result alias (anyhow-based, matches the binary's error style).

@@ -10,6 +10,8 @@
 //!   fxp-sweep    accuracy-vs-bitwidth sweep (quantized pipelines)
 //!   pareto       accuracy/cost Pareto frontier over precision plans
 //!                (mixed precision × bit-exact/STE training)
+//!   report       profile a training run: per-stage time share,
+//!                saturation rate, raw-word occupancy, headroom
 //!   artifacts    list the AOT artifacts the runtime can execute
 //!   timing       pipeline timing model (frequency / latency)
 //!
@@ -28,6 +30,8 @@
 //!   dimred fxp-sweep waveform --json sweep.json
 //!   dimred fxp-sweep waveform --stages whiten:gha
 //!   dimred pareto waveform --json pareto.json
+//!   dimred train --precision q4.12 --telemetry
+//!   dimred report --precision q4.12 --epochs 1 --json TELEMETRY_snapshot.json
 
 use anyhow::{bail, Context, Result};
 use dimred::config::{Backend, ExperimentConfig};
@@ -51,7 +55,7 @@ fn main() {
     }
 }
 
-const FLAGS: &[&str] = &["no-classifier", "help", "verbose", "smoke"];
+const FLAGS: &[&str] = &["no-classifier", "help", "verbose", "smoke", "telemetry"];
 
 fn run() -> Result<()> {
     let args = Args::from_env(FLAGS)?;
@@ -64,6 +68,7 @@ fn run() -> Result<()> {
         "fxp-sweep" => cmd_fxp_sweep(&args),
         "pareto" => cmd_pareto(&args),
         "bench" => cmd_bench(&args),
+        "report" => cmd_report(&args),
         "artifacts" => cmd_artifacts(&args),
         "timing" => cmd_timing(&args),
         "help" | "--help" => {
@@ -101,6 +106,11 @@ COMMANDS:
               --tile T (default 256) --lanes L (default 4) --seed S
               --json FILE (default BENCH_throughput.json) --smoke
               (tiny CI sizes, same schema)
+  report      profile a training run with telemetry forced on: per-stage
+              time share, samples/s, saturation rate, raw-word occupancy
+              histogram and a headroom recommendation per stage. Takes
+              the train options (classifier off by default); --json FILE
+              also writes the schema-validated telemetry snapshot
   artifacts   list AOT executables from the manifest
   timing      clock/latency model for EASI vs RP+EASI
 
@@ -139,6 +149,13 @@ TRAIN OPTIONS:
   --artifacts DIR                    (default artifacts/)
   --config FILE.json                 (load config, flags override)
   --no-classifier                    (skip the MLP stage)
+  --telemetry                        (instrument the datapath: per-stage
+                                      counters + fxp saturation health,
+                                      periodic JSONL progress events, and
+                                      a schema-validated snapshot written
+                                      at the end of the run)
+  --telemetry-out FILE               (snapshot path, implies --telemetry;
+                                      default TELEMETRY_snapshot.json)
 ";
 
 /// Load a dataset by CLI name, standardised (zero mean / unit variance
@@ -237,6 +254,82 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     if let Some(acc) = report.test_accuracy {
         println!("test_accuracy {:.4}", acc);
+    }
+    if cfg.telemetry {
+        let path = cfg.telemetry_out.clone();
+        write_telemetry_snapshot(&cfg, &report, &path)?;
+    }
+    Ok(())
+}
+
+/// Validate-then-write the end-of-run telemetry snapshot (the same
+/// golden-schema discipline as `BENCH_throughput.json`).
+fn write_telemetry_snapshot(
+    cfg: &ExperimentConfig,
+    report: &dimred::coordinator::TrainReport,
+    path: &Path,
+) -> Result<()> {
+    let snap = report
+        .telemetry
+        .as_ref()
+        .context("run was not instrumented (PJRT backend exposes no datapath telemetry)")?;
+    let json = dimred::telemetry::snapshot::to_json(cfg.to_json(), &report.metrics, snap);
+    let text = json.to_string_pretty();
+    dimred::telemetry::snapshot::validate(&dimred::util::json::Json::parse(&text)?)
+        .context("TELEMETRY_snapshot schema self-check")?;
+    std::fs::write(path, text).with_context(|| format!("writing {}", path.display()))?;
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let mut cfg = match args.opt_str("config") {
+        Some(path) => ExperimentConfig::from_file(Path::new(path))?,
+        None => ExperimentConfig {
+            // Profiling run: the DR datapath is the subject, the
+            // classifier is not (re-enable via a config file if wanted).
+            train_classifier: false,
+            ..Default::default()
+        },
+    };
+    cfg.apply_args(args)?;
+    cfg.telemetry = true;
+    anyhow::ensure!(
+        cfg.backend == Backend::Native,
+        "report instruments the native datapath (the PJRT executables expose no telemetry)"
+    );
+    let data = load_dataset(&cfg.dataset, cfg.seed)?;
+    anyhow::ensure!(
+        data.input_dim() == cfg.input_dim,
+        "dataset '{}' has m={}, but config says {} (pass --input-dim {})",
+        cfg.dataset,
+        data.input_dim(),
+        cfg.input_dim,
+        data.input_dim()
+    );
+    println!(
+        "# report: dataset={} mode={} precision={} m={} p={} n={} epochs={} batch={}",
+        cfg.dataset,
+        cfg.mode.label(),
+        cfg.precision.label(),
+        cfg.input_dim,
+        cfg.intermediate_dim,
+        cfg.output_dim,
+        cfg.epochs,
+        cfg.batch
+    );
+    if let Some(s) = &cfg.stages {
+        println!("# stages: {s}");
+    }
+    let mut svc = TrainingService::new(cfg.clone(), None);
+    let report = svc.run(&data)?;
+    let snap = report
+        .telemetry
+        .as_ref()
+        .context("instrumented run produced no telemetry")?;
+    println!("{}", dimred::telemetry::report::render(&report.metrics, snap));
+    if let Some(path) = args.opt_str("json") {
+        write_telemetry_snapshot(&cfg, &report, Path::new(path))?;
     }
     Ok(())
 }

@@ -36,6 +36,7 @@ use crate::fxp::kernels::resize_buf;
 use crate::fxp::{input_prescale, FxpSpec};
 use crate::linalg::Mat;
 use crate::rp::RandomProjection;
+use crate::telemetry::{Telemetry, TelemetrySnapshot};
 use anyhow::{ensure, Result};
 
 /// The numeric domain a graph computes in.
@@ -67,6 +68,9 @@ pub struct StageGraph {
     input_dim: usize,
     output_dim: usize,
     scratch: GraphScratch,
+    /// Per-stage instrumentation ([`Telemetry::Disabled`] by default:
+    /// one branch per stage call, nothing recorded, nothing allocated).
+    telemetry: Telemetry,
 }
 
 impl StageGraph {
@@ -104,11 +108,47 @@ impl StageGraph {
             input_dim,
             output_dim,
             scratch: GraphScratch::default(),
+            telemetry: Telemetry::Disabled,
         }
     }
 
     pub fn domain(&self) -> Domain {
         self.domain
+    }
+
+    /// Turn on per-stage instrumentation: preallocates one
+    /// [`crate::telemetry::StageStats`] slot per stage (plus the entry
+    /// quantizer), so recording is allocation-free from here on. Stage
+    /// formats are captured for occupancy/headroom reporting when the
+    /// graph runs fixed point.
+    pub fn enable_telemetry(&mut self) {
+        let fxp = matches!(self.domain, Domain::Fxp { .. });
+        let slots: Vec<(String, Option<FxpSpec>)> = self
+            .stages
+            .iter()
+            .map(|s| {
+                (
+                    s.name().to_string(),
+                    if fxp { s.output_spec() } else { None },
+                )
+            })
+            .collect();
+        let ingress = match self.domain {
+            Domain::Fxp { entry, .. } => Some(entry),
+            Domain::F32 => None,
+        };
+        self.telemetry = Telemetry::for_stages(slots, ingress);
+    }
+
+    /// The graph's instrumentation handle.
+    pub fn telemetry(&self) -> &Telemetry {
+        &self.telemetry
+    }
+
+    /// Point-in-time copy of the per-stage counters (None while
+    /// telemetry is disabled).
+    pub fn telemetry_snapshot(&self) -> Option<TelemetrySnapshot> {
+        self.telemetry.snapshot()
     }
 
     pub fn input_dim(&self) -> usize {
@@ -233,7 +273,10 @@ impl StageGraph {
 
     fn step_pass_f32(&mut self, x: &Mat, rows: usize) {
         let Self {
-            stages, scratch, ..
+            stages,
+            scratch,
+            telemetry,
+            ..
         } = self;
         let last = match stages
             .iter()
@@ -254,6 +297,7 @@ impl StageGraph {
                 continue;
             }
             let input: &[f32] = if have_cur { &cur } else { x.as_slice() };
+            let mark = telemetry.begin();
             if i == last {
                 stages[i].step_tile(input, rows, None);
             } else {
@@ -261,6 +305,7 @@ impl StageGraph {
                 std::mem::swap(&mut cur, &mut next);
                 have_cur = true;
             }
+            telemetry.record_step(Some(i), mark, rows, None);
         }
         advance_adaptive(stages, last + 1, rows);
         scratch.f_a = cur;
@@ -269,7 +314,10 @@ impl StageGraph {
 
     fn step_pass_raw(&mut self, x: &Mat, rows: usize, entry: FxpSpec, prescale: f32) {
         let Self {
-            stages, scratch, ..
+            stages,
+            scratch,
+            telemetry,
+            ..
         } = self;
         let last = match stages
             .iter()
@@ -284,16 +332,21 @@ impl StageGraph {
         let mut cur = std::mem::take(&mut scratch.raw_a);
         let mut next = std::mem::take(&mut scratch.raw_b);
         // Entry quantization — the shared-ingress arithmetic.
+        let mark = telemetry.begin();
         resize_buf(&mut cur, x.as_slice().len());
         for (q, &v) in cur.iter_mut().zip(x.as_slice()) {
             *q = entry.quantize(v * prescale);
         }
+        telemetry.record_step(None, mark, rows, Some(&cur));
         let mut cur_spec = entry;
         for i in 0..=last {
             if stages[i].bypassed() {
                 stages[i].advance(rows);
                 continue;
             }
+            // Begin before the boundary requantize: its cost and any
+            // overflow belong to the stage whose policy it applies.
+            let mark = telemetry.begin();
             let want = stages[i].input_spec().expect("fixed-point graph stage");
             if want.format != cur_spec.format {
                 for v in cur.iter_mut() {
@@ -302,10 +355,12 @@ impl StageGraph {
             }
             if i == last {
                 stages[i].step_tile_raw(&cur, rows, None);
+                telemetry.record_step(Some(i), mark, rows, None);
             } else {
                 stages[i].step_tile_raw(&cur, rows, Some(&mut next));
                 std::mem::swap(&mut cur, &mut next);
                 cur_spec = stages[i].output_spec().expect("fixed-point graph stage");
+                telemetry.record_step(Some(i), mark, rows, Some(&cur));
             }
         }
         advance_adaptive(stages, last + 1, rows);
@@ -334,10 +389,15 @@ impl StageGraph {
                 let mut cur: Vec<f32> = x.as_slice().to_vec();
                 let mut cur_dim = self.input_dim;
                 let mut next: Vec<f32> = Vec::new();
-                for s in self.stages.iter().filter(|s| !s.bypassed()) {
+                for (i, s) in self.stages.iter().enumerate() {
+                    if s.bypassed() {
+                        continue;
+                    }
+                    let mark = self.telemetry.begin();
                     s.transform_tile(&cur, rows, &mut next);
                     std::mem::swap(&mut cur, &mut next);
                     cur_dim = s.out_dim();
+                    self.telemetry.record_transform(Some(i), mark, rows, None);
                 }
                 Mat::from_vec(rows, cur_dim, cur)
             }
@@ -357,11 +417,17 @@ impl StageGraph {
         entry: FxpSpec,
         prescale: f32,
     ) -> (Vec<i32>, FxpSpec, usize) {
+        let mark = self.telemetry.begin();
         let mut cur: Vec<i32> = x.iter().map(|&v| entry.quantize(v * prescale)).collect();
+        self.telemetry.record_transform(None, mark, rows, Some(&cur));
         let mut cur_spec = entry;
         let mut cur_dim = self.input_dim;
         let mut next: Vec<i32> = Vec::new();
-        for s in self.stages.iter().filter(|s| !s.bypassed()) {
+        for (i, s) in self.stages.iter().enumerate() {
+            if s.bypassed() {
+                continue;
+            }
+            let mark = self.telemetry.begin();
             let want = s.input_spec().expect("fixed-point graph stage");
             if want.format != cur_spec.format {
                 for v in cur.iter_mut() {
@@ -372,6 +438,7 @@ impl StageGraph {
             std::mem::swap(&mut cur, &mut next);
             cur_spec = s.output_spec().expect("fixed-point graph stage");
             cur_dim = s.out_dim();
+            self.telemetry.record_transform(Some(i), mark, rows, Some(&cur));
         }
         (cur, cur_spec, cur_dim)
     }

@@ -1,0 +1,472 @@
+//! Telemetry — low-overhead instrumentation for the whole datapath.
+//!
+//! The one thing a fixed-point *training* datapath must expose to be
+//! trusted at scale is its numeric health: saturation, wrap, and
+//! raw-word occupancy per stage are exactly the signals that decide
+//! whether a Q-format plan is safe, and they are the search signal for
+//! the automated precision-plan search (ROADMAP item 3). This module
+//! provides that instrumentation in three layers:
+//!
+//! * [`events`] — thread-local saturation/wrap counters bumped on the
+//!   *cold* path of [`crate::fxp::FxpSpec::fit`] (only when a value
+//!   actually overflows). Because they are thread-local, a
+//!   snapshot/delta around a stage call attributes events to that stage
+//!   exactly, even inside the multi-lane forward's worker threads.
+//! * [`StageStats`] / [`Telemetry`] — a per-stage registry owned by
+//!   [`crate::stage::StageGraph`]: tiles, samples, cumulative step and
+//!   transform nanoseconds, saturation/wrap events, and a preallocated
+//!   power-of-two raw-word magnitude histogram (33 buckets, one per
+//!   magnitude bit-length) giving per-stage integer-bit occupancy. All
+//!   counters are relaxed atomics, so recording works through `&self`
+//!   on every path (sequential training, tiled forward, scoped lanes)
+//!   and allocates nothing in steady state. The [`Telemetry::Disabled`]
+//!   mode short-circuits to a single branch per stage call — nothing
+//!   measurable on the hot path (enforced by `tests/alloc_free.rs` and
+//!   the bench's bit-identity grid).
+//! * [`run`] — run-level metrics for the training service (samples,
+//!   batches, backpressure, step-latency reservoir, convergence trace,
+//!   reconfiguration events), absorbed here from the old
+//!   `coordinator::metrics` so datapath and coordinator telemetry live
+//!   in one module.
+//!
+//! Surfaces: `dimred train --telemetry[-out]` (periodic JSONL events +
+//! a schema-validated `TELEMETRY_snapshot.json`, see [`snapshot`]),
+//! `dimred report` (per-stage text table, see [`report`]), and
+//! per-scenario health rows in `dimred bench`.
+
+pub mod report;
+pub mod run;
+pub mod snapshot;
+
+pub use run::{LatencyHistogram, Metrics};
+
+use crate::fxp::FxpSpec;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Thread-local fixed-point overflow event counters. Bumped by
+/// [`crate::fxp::FxpSpec::fit`] (and the infinite-input branch of
+/// `quantize`) only when a value actually saturates or wraps, so the
+/// non-overflow fast path pays nothing beyond the range compare it
+/// already performed. Deliberate domain clamps (e.g. the whitener's
+/// ±4σ output clamp) are *not* counted — only format overflow.
+pub mod events {
+    use std::cell::Cell;
+
+    thread_local! {
+        static SAT: Cell<u64> = const { Cell::new(0) };
+        static WRAP: Cell<u64> = const { Cell::new(0) };
+    }
+
+    /// One saturation event (value clamped to the format range).
+    #[inline]
+    pub fn note_sat() {
+        SAT.with(|c| c.set(c.get() + 1));
+    }
+
+    /// One wrap event (value changed by keep-low-bits wraparound).
+    #[inline]
+    pub fn note_wrap() {
+        WRAP.with(|c| c.set(c.get() + 1));
+    }
+
+    /// Current (saturation, wrap) totals for this thread.
+    #[inline]
+    pub fn snapshot() -> (u64, u64) {
+        (SAT.with(Cell::get), WRAP.with(Cell::get))
+    }
+}
+
+/// Number of magnitude-histogram buckets: bucket `b` counts raw words
+/// whose absolute value has bit-length `b` (bucket 0 = zero words);
+/// an `i32` magnitude needs at most 32 bits.
+pub const OCCUPANCY_BUCKETS: usize = 33;
+
+/// Magnitude bit-length of a raw word — its histogram bucket.
+#[inline]
+fn bucket_of(raw: i32) -> usize {
+    (64 - (raw as i64).unsigned_abs().leading_zeros()) as usize
+}
+
+/// Start-of-stage-call marker: wall clock plus this thread's overflow
+/// counters, so the end-of-call delta is exactly the stage's own.
+#[derive(Debug, Clone, Copy)]
+pub struct StageMark {
+    t0: Instant,
+    sat0: u64,
+    wrap0: u64,
+}
+
+impl StageMark {
+    fn now() -> Self {
+        let (sat0, wrap0) = events::snapshot();
+        Self {
+            t0: Instant::now(),
+            sat0,
+            wrap0,
+        }
+    }
+}
+
+/// Which path a recording belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Kind {
+    Step,
+    Transform,
+}
+
+/// Per-stage counters. Everything is preallocated at
+/// [`Telemetry::for_stages`] time and updated with relaxed atomics, so
+/// steady-state recording is allocation-free and works through `&self`
+/// from lane threads.
+#[derive(Debug)]
+pub struct StageStats {
+    /// Stage name (graph order; `"ingress"` for the entry quantizer).
+    pub name: String,
+    /// The stage's output arithmetic, when running fixed point.
+    pub format: Option<FxpSpec>,
+    tiles: AtomicU64,
+    samples: AtomicU64,
+    step_ns: AtomicU64,
+    transform_ns: AtomicU64,
+    sat_events: AtomicU64,
+    wrap_events: AtomicU64,
+    words: AtomicU64,
+    occupancy: [AtomicU64; OCCUPANCY_BUCKETS],
+}
+
+impl StageStats {
+    fn new(name: String, format: Option<FxpSpec>) -> Self {
+        Self {
+            name,
+            format,
+            tiles: AtomicU64::new(0),
+            samples: AtomicU64::new(0),
+            step_ns: AtomicU64::new(0),
+            transform_ns: AtomicU64::new(0),
+            sat_events: AtomicU64::new(0),
+            wrap_events: AtomicU64::new(0),
+            words: AtomicU64::new(0),
+            occupancy: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    fn record(&self, kind: Kind, mark: StageMark, rows: usize, words: Option<&[i32]>) {
+        let ns = mark.t0.elapsed().as_nanos() as u64;
+        let (sat, wrap) = events::snapshot();
+        let r = Ordering::Relaxed;
+        self.tiles.fetch_add(1, r);
+        self.samples.fetch_add(rows as u64, r);
+        match kind {
+            Kind::Step => self.step_ns.fetch_add(ns, r),
+            Kind::Transform => self.transform_ns.fetch_add(ns, r),
+        };
+        self.sat_events.fetch_add(sat - mark.sat0, r);
+        self.wrap_events.fetch_add(wrap - mark.wrap0, r);
+        if let Some(w) = words {
+            self.words.fetch_add(w.len() as u64, r);
+            for &v in w {
+                self.occupancy[bucket_of(v)].fetch_add(1, r);
+            }
+        }
+    }
+
+    /// Plain-value copy for reporting.
+    pub fn snapshot(&self) -> StageSnapshot {
+        let r = Ordering::Relaxed;
+        StageSnapshot {
+            name: self.name.clone(),
+            format: self.format,
+            tiles: self.tiles.load(r),
+            samples: self.samples.load(r),
+            step_ns: self.step_ns.load(r),
+            transform_ns: self.transform_ns.load(r),
+            sat_events: self.sat_events.load(r),
+            wrap_events: self.wrap_events.load(r),
+            words: self.words.load(r),
+            occupancy: std::array::from_fn(|i| self.occupancy[i].load(r)),
+        }
+    }
+}
+
+/// A point-in-time copy of one stage's counters, plus the derived
+/// health signals the precision-plan search consumes.
+#[derive(Debug, Clone)]
+pub struct StageSnapshot {
+    pub name: String,
+    pub format: Option<FxpSpec>,
+    pub tiles: u64,
+    pub samples: u64,
+    pub step_ns: u64,
+    pub transform_ns: u64,
+    pub sat_events: u64,
+    pub wrap_events: u64,
+    /// Raw words histogrammed (fixed-point paths only).
+    pub words: u64,
+    /// Magnitude histogram: `occupancy[b]` = words of bit-length `b`.
+    pub occupancy: [u64; OCCUPANCY_BUCKETS],
+}
+
+impl StageSnapshot {
+    pub fn total_ns(&self) -> u64 {
+        self.step_ns + self.transform_ns
+    }
+
+    /// Saturation events per processed sample (events fire per scalar
+    /// op, so rates above 1.0 are possible and mean trouble).
+    pub fn sat_per_sample(&self) -> f64 {
+        self.sat_events as f64 / (self.samples.max(1)) as f64
+    }
+
+    /// Highest occupied magnitude bit-length (0 = all words were zero,
+    /// or no raw words seen).
+    pub fn max_bits(&self) -> u32 {
+        (1..OCCUPANCY_BUCKETS)
+            .rev()
+            .find(|&b| self.occupancy[b] > 0)
+            .unwrap_or(0) as u32
+    }
+
+    /// Unused top magnitude bits relative to the stage's format: the
+    /// number of integer bits the format could shed while still
+    /// representing every word observed. Negative is impossible (words
+    /// fit the format by construction); `None` without a format.
+    pub fn headroom_bits(&self) -> Option<u32> {
+        let f = self.format?;
+        let avail = f.format.width() as u32 - 1;
+        Some(avail.saturating_sub(self.max_bits()))
+    }
+}
+
+/// The registry a [`crate::stage::StageGraph`] owns: one slot per
+/// stage plus an `ingress` slot for the entry quantizer.
+#[derive(Debug)]
+pub struct TelemetryInner {
+    pub ingress: StageStats,
+    pub stages: Vec<StageStats>,
+}
+
+/// Graph-side instrumentation handle. `Disabled` short-circuits every
+/// recording call to one branch; `Enabled` records into preallocated
+/// atomic counters (no steady-state allocations, `&self` everywhere).
+#[derive(Debug, Default)]
+pub enum Telemetry {
+    #[default]
+    Disabled,
+    Enabled(TelemetryInner),
+}
+
+impl Telemetry {
+    /// Build an enabled registry for a stage cascade:
+    /// `(name, output format)` per stage, plus the entry format of the
+    /// ingress quantizer (None for f32 graphs).
+    pub fn for_stages(
+        stages: Vec<(String, Option<FxpSpec>)>,
+        ingress_format: Option<FxpSpec>,
+    ) -> Self {
+        Telemetry::Enabled(TelemetryInner {
+            ingress: StageStats::new("ingress".into(), ingress_format),
+            stages: stages
+                .into_iter()
+                .map(|(name, fmt)| StageStats::new(name, fmt))
+                .collect(),
+        })
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        matches!(self, Telemetry::Enabled(_))
+    }
+
+    /// Start a stage-call measurement. `None` when disabled — the hot
+    /// path pays exactly this one branch.
+    #[inline]
+    pub fn begin(&self) -> Option<StageMark> {
+        match self {
+            Telemetry::Disabled => None,
+            Telemetry::Enabled(_) => Some(StageMark::now()),
+        }
+    }
+
+    #[inline]
+    fn slot(&self, stage: Option<usize>) -> Option<&StageStats> {
+        match self {
+            Telemetry::Disabled => None,
+            Telemetry::Enabled(inner) => Some(match stage {
+                Some(i) => &inner.stages[i],
+                None => &inner.ingress,
+            }),
+        }
+    }
+
+    /// Record a training-path stage call (`stage = None` → ingress).
+    /// `words` is the stage's raw output tile, when one exists.
+    #[inline]
+    pub fn record_step(
+        &self,
+        stage: Option<usize>,
+        mark: Option<StageMark>,
+        rows: usize,
+        words: Option<&[i32]>,
+    ) {
+        if let (Some(slot), Some(m)) = (self.slot(stage), mark) {
+            slot.record(Kind::Step, m, rows, words);
+        }
+    }
+
+    /// Record a forward-path stage call (`stage = None` → ingress).
+    #[inline]
+    pub fn record_transform(
+        &self,
+        stage: Option<usize>,
+        mark: Option<StageMark>,
+        rows: usize,
+        words: Option<&[i32]>,
+    ) {
+        if let (Some(slot), Some(m)) = (self.slot(stage), mark) {
+            slot.record(Kind::Transform, m, rows, words);
+        }
+    }
+
+    /// Snapshot every slot (None when disabled).
+    pub fn snapshot(&self) -> Option<TelemetrySnapshot> {
+        match self {
+            Telemetry::Disabled => None,
+            Telemetry::Enabled(inner) => Some(TelemetrySnapshot {
+                ingress: inner.ingress.snapshot(),
+                stages: inner.stages.iter().map(StageStats::snapshot).collect(),
+            }),
+        }
+    }
+}
+
+/// Point-in-time copy of a whole registry — what reports, snapshots
+/// and bench health rows consume.
+#[derive(Debug, Clone)]
+pub struct TelemetrySnapshot {
+    pub ingress: StageSnapshot,
+    pub stages: Vec<StageSnapshot>,
+}
+
+impl TelemetrySnapshot {
+    /// Ingress + stages, in datapath order.
+    pub fn all(&self) -> impl Iterator<Item = &StageSnapshot> {
+        std::iter::once(&self.ingress).chain(self.stages.iter())
+    }
+
+    /// Total instrumented nanoseconds across all slots (time-share
+    /// denominator).
+    pub fn total_ns(&self) -> u64 {
+        self.all().map(StageSnapshot::total_ns).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fxp::{FxpSpec, Overflow};
+
+    #[test]
+    fn fit_overflow_bumps_thread_local_counters() {
+        let spec = FxpSpec::q(1, 15);
+        let (s0, w0) = events::snapshot();
+        // In-range ops leave the counters alone.
+        assert_eq!(spec.add(100, 200), 300);
+        assert_eq!(events::snapshot(), (s0, w0));
+        // Saturating add: one event.
+        let max = spec.format.max_raw();
+        assert_eq!(spec.add(max, max), max);
+        assert_eq!(events::snapshot(), (s0 + 1, w0));
+        // Infinite quantize counts as saturation too.
+        spec.quantize(f32::INFINITY);
+        assert_eq!(events::snapshot(), (s0 + 2, w0));
+        // Wrap mode counts wraps, not sats.
+        let mut wspec = FxpSpec::q(1, 7);
+        wspec.overflow = Overflow::Wrap;
+        assert_eq!(wspec.add(127, 1), -128);
+        assert_eq!(events::snapshot(), (s0 + 2, w0 + 1));
+        // A wrap-mode value that fits is not an event.
+        assert_eq!(wspec.add(1, 1), 2);
+        assert_eq!(events::snapshot(), (s0 + 2, w0 + 1));
+    }
+
+    #[test]
+    fn occupancy_buckets_by_bit_length() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(-1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(255), 8);
+        assert_eq!(bucket_of(256), 9);
+        assert_eq!(bucket_of(i32::MAX), 31);
+        assert_eq!(bucket_of(i32::MIN), 32);
+    }
+
+    #[test]
+    fn stage_stats_record_and_derive() {
+        let t = Telemetry::for_stages(
+            vec![("whiten:gha".into(), Some(FxpSpec::q(4, 12)))],
+            Some(FxpSpec::q(4, 12)),
+        );
+        let mark = t.begin();
+        assert!(mark.is_some());
+        // 4 words: 0, |1| (1 bit), |255| (8 bits), |-4096| (13 bits).
+        t.record_step(Some(0), mark, 2, Some(&[0, 1, 255, -4096]));
+        let mark = t.begin();
+        t.record_transform(Some(0), mark, 3, Some(&[7, -7]));
+        let snap = t.snapshot().unwrap();
+        let s = &snap.stages[0];
+        assert_eq!(s.tiles, 2);
+        assert_eq!(s.samples, 5);
+        assert_eq!(s.words, 6);
+        assert_eq!(s.occupancy[0], 1);
+        assert_eq!(s.occupancy[1], 1);
+        assert_eq!(s.occupancy[3], 2); // |7| twice
+        assert_eq!(s.occupancy[8], 1);
+        assert_eq!(s.occupancy[13], 1);
+        assert_eq!(s.max_bits(), 13);
+        // Q4.12: width 16, 15 magnitude bits, 13 used → 2 spare.
+        assert_eq!(s.headroom_bits(), Some(2));
+        assert_eq!(s.sat_events, 0);
+        // Ingress untouched.
+        assert_eq!(snap.ingress.tiles, 0);
+        assert_eq!(snap.ingress.name, "ingress");
+    }
+
+    #[test]
+    fn sat_events_attributed_to_the_recorded_stage() {
+        let spec = FxpSpec::q(1, 15);
+        let t = Telemetry::for_stages(
+            vec![("a".into(), Some(spec)), ("b".into(), Some(spec))],
+            None,
+        );
+        let mark = t.begin();
+        let max = spec.format.max_raw();
+        spec.add(max, max); // one saturation inside stage 1's window
+        t.record_step(Some(1), mark, 1, None);
+        let snap = t.snapshot().unwrap();
+        assert_eq!(snap.stages[0].sat_events, 0);
+        assert_eq!(snap.stages[1].sat_events, 1);
+        assert!(snap.stages[1].sat_per_sample() >= 1.0);
+    }
+
+    #[test]
+    fn disabled_mode_records_nothing() {
+        let t = Telemetry::default();
+        assert!(!t.is_enabled());
+        let mark = t.begin();
+        assert!(mark.is_none());
+        t.record_step(Some(0), mark, 8, Some(&[1, 2, 3]));
+        assert!(t.snapshot().is_none());
+    }
+
+    #[test]
+    fn headroom_without_format_is_none() {
+        let t = Telemetry::for_stages(vec![("rp".into(), None)], None);
+        t.record_step(Some(0), t.begin(), 1, None);
+        let snap = t.snapshot().unwrap();
+        assert_eq!(snap.stages[0].headroom_bits(), None);
+        assert_eq!(snap.stages[0].max_bits(), 0);
+    }
+}

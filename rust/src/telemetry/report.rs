@@ -1,0 +1,153 @@
+//! `dimred report` — the per-stage profiling table: time share,
+//! samples/s, saturation rate, raw-word occupancy, and a headroom
+//! recommendation per stage. Pure rendering over a
+//! [`TelemetrySnapshot`]; the CLI drives a telemetry-enabled training
+//! run and hands the snapshot here.
+
+use super::{Metrics, StageSnapshot, TelemetrySnapshot};
+
+/// Compact occupancy summary: the non-empty magnitude buckets as
+/// `bits:count` pairs (`-` when no raw words were histogrammed).
+fn occupancy_line(s: &StageSnapshot) -> String {
+    if s.words == 0 {
+        return "-".into();
+    }
+    s.occupancy
+        .iter()
+        .enumerate()
+        .filter(|(_, &c)| c > 0)
+        .map(|(b, &c)| format!("{b}:{c}"))
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+/// Per-stage health verdict for the table's last column.
+fn recommendation(s: &StageSnapshot) -> String {
+    if s.sat_events > 0 || s.wrap_events > 0 {
+        return format!(
+            "OVERFLOWING ({} sat, {} wrap) — widen int bits",
+            s.sat_events, s.wrap_events
+        );
+    }
+    match s.headroom_bits() {
+        Some(h) if h >= 2 && s.words > 0 => {
+            format!("{h} spare magnitude bits — int width could drop by {h}")
+        }
+        Some(_) if s.words > 0 => "healthy".into(),
+        _ => "-".into(),
+    }
+}
+
+fn samples_per_s(s: &StageSnapshot) -> String {
+    let ns = s.total_ns();
+    if ns == 0 {
+        return "-".into();
+    }
+    format!("{:.0}", s.samples as f64 / (ns as f64 * 1e-9))
+}
+
+/// Render the full profiling report: run summary, per-stage table,
+/// occupancy histograms, and headroom recommendations.
+pub fn render(m: &Metrics, t: &TelemetrySnapshot) -> String {
+    let mut out = String::from("dimred report — per-stage telemetry\n\n");
+    out.push_str(&format!("run: {}\n", m.summary()));
+    if let Some(mean) = m.step_latency.mean() {
+        out.push_str(&format!(
+            "step latency mean: {}\n",
+            crate::util::bench::fmt_duration(mean)
+        ));
+    }
+    out.push('\n');
+
+    let total_ns = t.total_ns().max(1);
+    out.push_str(&format!(
+        "{:<14} {:<8} {:>6} {:>9} {:>12} {:>12} {:>8} {:>9}\n",
+        "stage", "format", "time%", "tiles", "samples", "samples/s", "sat/smp", "headroom"
+    ));
+    for s in t.all() {
+        let fmt = s
+            .format
+            .map(|f| f.label())
+            .unwrap_or_else(|| "f32".into());
+        let share = 100.0 * s.total_ns() as f64 / total_ns as f64;
+        let headroom = s
+            .headroom_bits()
+            .map(|h| format!("{h}b"))
+            .unwrap_or_else(|| "-".into());
+        out.push_str(&format!(
+            "{:<14} {:<8} {:>6.1} {:>9} {:>12} {:>12} {:>8.3} {:>9}\n",
+            s.name,
+            fmt,
+            share,
+            s.tiles,
+            s.samples,
+            samples_per_s(s),
+            s.sat_per_sample(),
+            headroom
+        ));
+    }
+
+    out.push_str("\nraw-word occupancy (magnitude bit-length : words)\n");
+    for s in t.all() {
+        out.push_str(&format!("  {:<14} {}\n", s.name, occupancy_line(s)));
+    }
+
+    out.push_str("\nrecommendations\n");
+    for s in t.all() {
+        out.push_str(&format!("  {:<14} {}\n", s.name, recommendation(s)));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Telemetry;
+    use super::*;
+    use crate::fxp::FxpSpec;
+
+    #[test]
+    fn report_renders_share_saturation_and_occupancy() {
+        let mut m = Metrics::new();
+        m.samples_in = 256;
+        m.batches = 4;
+        let spec = FxpSpec::q(4, 12);
+        let t = Telemetry::for_stages(
+            vec![
+                ("whiten:gha".into(), Some(spec)),
+                ("rot:easi".into(), None),
+            ],
+            Some(spec),
+        );
+        t.record_step(None, t.begin(), 128, Some(&[0, 900, -4000]));
+        // One saturation inside the whitener's window.
+        let max = spec.format.max_raw();
+        let mark = t.begin();
+        spec.add(max, max);
+        t.record_step(Some(0), mark, 128, Some(&[12, -7000]));
+        t.record_step(Some(1), t.begin(), 128, None);
+        let snap = t.snapshot().unwrap();
+        let text = render(&m, &snap);
+        assert!(text.contains("ingress"), "{text}");
+        assert!(text.contains("whiten:gha"), "{text}");
+        assert!(text.contains("q4.12"), "{text}");
+        // The whitener saturated → flagged.
+        assert!(text.contains("OVERFLOWING"), "{text}");
+        // Occupancy buckets render as bits:count pairs (|-4000| = 12 bits).
+        assert!(text.contains("12:1"), "{text}");
+        // Stage without raw words shows a placeholder histogram.
+        assert!(text.contains("rot:easi       -"), "{text}");
+    }
+
+    #[test]
+    fn healthy_stage_gets_headroom_recommendation() {
+        let t = Telemetry::for_stages(
+            vec![("whiten:gha".into(), Some(FxpSpec::q(4, 12)))],
+            None,
+        );
+        // Max magnitude 5 bits on a 16-bit format → 10 spare bits.
+        t.record_step(Some(0), t.begin(), 64, Some(&[17, -20, 3]));
+        let snap = t.snapshot().unwrap();
+        let text = render(&Metrics::new(), &snap);
+        assert!(text.contains("int width could drop by 10"), "{text}");
+    }
+}

@@ -1,5 +1,7 @@
-//! Run-time metrics for the training service: counters, throughput and
-//! latency percentiles over a sliding reservoir.
+//! Run-level metrics for the training service: counters, throughput and
+//! latency percentiles over a sliding reservoir. Absorbed from the old
+//! `coordinator::metrics` module so run- and stage-level telemetry live
+//! side by side; `coordinator` re-exports these names for callers.
 
 use std::time::{Duration, Instant};
 
@@ -41,14 +43,20 @@ impl LatencyHistogram {
         let mut sorted = self.samples.clone();
         sorted.sort_unstable();
         let idx = ((sorted.len() as f64 - 1.0) * p / 100.0).round() as usize;
-        Some(sorted[idx])
+        Some(sorted[idx.min(sorted.len() - 1)])
     }
 
+    /// Mean of the retained window. Summed in u128 nanoseconds: the old
+    /// `sum::<Duration>() / len as u32` form could panic on `Duration`
+    /// sum overflow and truncated `len` through the `u32` cast.
     pub fn mean(&self) -> Option<Duration> {
         if self.samples.is_empty() {
             return None;
         }
-        Some(self.samples.iter().sum::<Duration>() / self.samples.len() as u32)
+        let total: u128 = self.samples.iter().map(Duration::as_nanos).sum();
+        Some(Duration::from_nanos(
+            (total / self.samples.len() as u128) as u64,
+        ))
     }
 }
 
@@ -60,6 +68,9 @@ pub struct Metrics {
     pub batches: u64,
     /// Batches the producer had to wait to enqueue (backpressure events).
     pub backpressure_waits: u64,
+    /// Bound of the producer→trainer queue, for reading the
+    /// backpressure count in context.
+    pub queue_depth: usize,
     /// Stream-tail samples processed through the b=1 executable.
     pub tail_samples: u64,
     pub step_latency: LatencyHistogram,
@@ -82,6 +93,7 @@ impl Metrics {
             samples_in: 0,
             batches: 0,
             backpressure_waits: 0,
+            queue_depth: 0,
             tail_samples: 0,
             step_latency: LatencyHistogram::new(4096),
             convergence_trace: Vec::new(),
@@ -148,6 +160,43 @@ mod tests {
         assert_eq!(h.count, 10);
         // Only the last 4 samples are retained; min is >= 6µs.
         assert!(h.percentile(0.0).unwrap() >= Duration::from_micros(6));
+    }
+
+    #[test]
+    fn wrapped_reservoir_mean_covers_retained_window_only() {
+        let mut h = LatencyHistogram::new(4);
+        for i in 0..10u64 {
+            h.record(Duration::from_micros(i));
+        }
+        // Retained: 6, 7, 8, 9 µs → mean 7.5µs.
+        assert_eq!(h.mean().unwrap(), Duration::from_nanos(7_500));
+    }
+
+    #[test]
+    fn percentile_edges_p0_p100_and_single_sample() {
+        let mut h = LatencyHistogram::new(16);
+        h.record(Duration::from_micros(42));
+        // A single sample is every percentile and the mean.
+        assert_eq!(h.percentile(0.0).unwrap(), Duration::from_micros(42));
+        assert_eq!(h.percentile(50.0).unwrap(), Duration::from_micros(42));
+        assert_eq!(h.percentile(100.0).unwrap(), Duration::from_micros(42));
+        assert_eq!(h.mean().unwrap(), Duration::from_micros(42));
+        for i in 1..=9u64 {
+            h.record(Duration::from_micros(i));
+        }
+        // p0 = min, p100 = max of the window.
+        assert_eq!(h.percentile(0.0).unwrap(), Duration::from_micros(1));
+        assert_eq!(h.percentile(100.0).unwrap(), Duration::from_micros(42));
+    }
+
+    #[test]
+    fn mean_is_exact_in_nanoseconds() {
+        let mut h = LatencyHistogram::new(8);
+        h.record(Duration::from_secs(1));
+        h.record(Duration::from_secs(2));
+        h.record(Duration::from_secs(4));
+        // 7s / 3 — exact integer-nanosecond division, no cast truncation.
+        assert_eq!(h.mean().unwrap(), Duration::from_nanos(2_333_333_333));
     }
 
     #[test]

@@ -1,0 +1,319 @@
+//! `TELEMETRY_snapshot.json` — end-of-run telemetry under a golden,
+//! validated schema, mirroring the `BENCH_throughput.json` pattern: the
+//! CLI validates its own output before writing, and CI validates the
+//! uploaded artifact, so a drifting writer can never silently break the
+//! cross-PR trajectory.
+
+use super::{Metrics, StageSnapshot, TelemetrySnapshot, OCCUPANCY_BUCKETS};
+use crate::util::json::Json;
+use anyhow::{ensure, Context, Result};
+
+fn stage_json(index: Option<usize>, s: &StageSnapshot) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(s.name.clone())),
+        (
+            "index",
+            match index {
+                Some(i) => Json::num(i as f64),
+                None => Json::Null,
+            },
+        ),
+        (
+            "format",
+            match &s.format {
+                Some(f) => Json::str(f.label()),
+                None => Json::Null,
+            },
+        ),
+        ("tiles", Json::num(s.tiles as f64)),
+        ("samples", Json::num(s.samples as f64)),
+        ("step_ns", Json::num(s.step_ns as f64)),
+        ("transform_ns", Json::num(s.transform_ns as f64)),
+        ("sat_events", Json::num(s.sat_events as f64)),
+        ("wrap_events", Json::num(s.wrap_events as f64)),
+        ("words", Json::num(s.words as f64)),
+        ("sat_per_sample", Json::num(s.sat_per_sample())),
+        (
+            "occupancy",
+            Json::Arr(s.occupancy.iter().map(|&c| Json::num(c as f64)).collect()),
+        ),
+        ("max_bits", Json::num(s.max_bits() as f64)),
+        (
+            "headroom_bits",
+            match s.headroom_bits() {
+                Some(h) => Json::num(h as f64),
+                None => Json::Null,
+            },
+        ),
+    ])
+}
+
+/// Serialise one run's telemetry. `config` is the run configuration as
+/// JSON (opaque here — whatever the experiment config serialises to).
+pub fn to_json(config: Json, m: &Metrics, t: &TelemetrySnapshot) -> Json {
+    let lat = &m.step_latency;
+    let ns = |d: std::time::Duration| d.as_nanos() as f64;
+    Json::obj(vec![
+        ("experiment", Json::str("telemetry_snapshot")),
+        ("schema_version", Json::num(1.0)),
+        ("config", config),
+        (
+            "run",
+            Json::obj(vec![
+                ("samples", Json::num(m.samples_in as f64)),
+                ("batches", Json::num(m.batches as f64)),
+                ("tail_samples", Json::num(m.tail_samples as f64)),
+                ("backpressure_waits", Json::num(m.backpressure_waits as f64)),
+                ("queue_depth", Json::num(m.queue_depth as f64)),
+                ("elapsed_s", Json::num(m.elapsed().as_secs_f64())),
+                ("throughput", Json::num(m.throughput())),
+                (
+                    "step_latency_ns",
+                    Json::obj(vec![
+                        ("count", Json::num(lat.count as f64)),
+                        ("mean", lat.mean().map(ns).map(Json::num).unwrap_or(Json::Null)),
+                        (
+                            "p50",
+                            lat.percentile(50.0)
+                                .map(ns)
+                                .map(Json::num)
+                                .unwrap_or(Json::Null),
+                        ),
+                        (
+                            "p99",
+                            lat.percentile(99.0)
+                                .map(ns)
+                                .map(Json::num)
+                                .unwrap_or(Json::Null),
+                        ),
+                    ]),
+                ),
+                (
+                    "reconfigurations",
+                    Json::Arr(
+                        m.reconfigurations
+                            .iter()
+                            .map(|(at, mode)| {
+                                Json::obj(vec![
+                                    ("at_samples", Json::num(*at as f64)),
+                                    ("mode", Json::str(mode.clone())),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+                (
+                    "convergence",
+                    Json::Arr(
+                        m.convergence_trace
+                            .iter()
+                            .map(|(at, mag)| {
+                                Json::Arr(vec![Json::num(*at as f64), Json::num(*mag)])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+        ),
+        ("ingress", stage_json(None, &t.ingress)),
+        (
+            "stages",
+            Json::Arr(
+                t.stages
+                    .iter()
+                    .enumerate()
+                    .map(|(i, s)| stage_json(Some(i), s))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn validate_stage(s: &Json) -> Result<()> {
+    s.field("name")?.as_str()?;
+    if !matches!(s.field("format")?, Json::Null) {
+        s.field("format")?.as_str().context("format")?;
+    }
+    for key in [
+        "tiles",
+        "samples",
+        "step_ns",
+        "transform_ns",
+        "sat_events",
+        "wrap_events",
+        "words",
+        "max_bits",
+    ] {
+        s.field(key)?.as_u64().with_context(|| key.to_string())?;
+    }
+    let rate = s.field("sat_per_sample")?.as_f64()?;
+    ensure!(
+        rate.is_finite() && rate >= 0.0,
+        "sat_per_sample must be a finite non-negative rate"
+    );
+    let occ = s.field("occupancy")?.as_arr()?;
+    ensure!(
+        occ.len() == OCCUPANCY_BUCKETS,
+        "occupancy must have {OCCUPANCY_BUCKETS} buckets, got {}",
+        occ.len()
+    );
+    for b in occ {
+        b.as_u64().context("occupancy bucket")?;
+    }
+    if !matches!(s.field("headroom_bits")?, Json::Null) {
+        s.field("headroom_bits")?.as_u64().context("headroom_bits")?;
+    }
+    Ok(())
+}
+
+/// Golden-schema check for `TELEMETRY_snapshot.json`.
+pub fn validate(v: &Json) -> Result<()> {
+    ensure!(
+        v.field("experiment")?.as_str()? == "telemetry_snapshot",
+        "wrong experiment tag"
+    );
+    ensure!(
+        v.field("schema_version")?.as_usize()? == 1,
+        "unknown schema version"
+    );
+    v.field("config")?.as_obj().context("config")?;
+    let run = v.field("run")?;
+    for key in [
+        "samples",
+        "batches",
+        "tail_samples",
+        "backpressure_waits",
+        "queue_depth",
+    ] {
+        run.field(key)?.as_u64().with_context(|| key.to_string())?;
+    }
+    run.field("elapsed_s")?.as_f64()?;
+    run.field("throughput")?.as_f64()?;
+    let lat = run.field("step_latency_ns")?;
+    lat.field("count")?.as_u64()?;
+    for key in ["mean", "p50", "p99"] {
+        if !matches!(lat.field(key)?, Json::Null) {
+            lat.field(key)?.as_f64().with_context(|| key.to_string())?;
+        }
+    }
+    for rc in run.field("reconfigurations")?.as_arr()? {
+        rc.field("at_samples")?.as_u64()?;
+        rc.field("mode")?.as_str()?;
+    }
+    run.field("convergence")?.as_arr()?;
+    validate_stage(v.field("ingress")?).context("ingress")?;
+    let stages = v.field("stages")?.as_arr()?;
+    ensure!(!stages.is_empty(), "stages must be non-empty");
+    for (i, s) in stages.iter().enumerate() {
+        validate_stage(s).with_context(|| format!("stage {i}"))?;
+        ensure!(
+            s.field("index")?.as_usize()? == i,
+            "stage index out of order"
+        );
+    }
+    Ok(())
+}
+
+/// One compact JSONL progress event, emitted periodically by the
+/// training service when `--telemetry` is on. Overflow totals are the
+/// training thread's cumulative counters — a cheap live health signal
+/// between snapshots.
+pub fn progress_event(m: &Metrics, update_magnitude: f64) -> Json {
+    let (sat, wrap) = super::events::snapshot();
+    Json::obj(vec![
+        ("event", Json::str("telemetry")),
+        ("samples", Json::num(m.samples_in as f64)),
+        ("batches", Json::num(m.batches as f64)),
+        ("throughput", Json::num(m.throughput())),
+        ("backpressure_waits", Json::num(m.backpressure_waits as f64)),
+        ("sat_events", Json::num(sat as f64)),
+        ("wrap_events", Json::num(wrap as f64)),
+        ("update_magnitude", Json::num(update_magnitude)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Telemetry;
+    use super::*;
+    use crate::fxp::FxpSpec;
+
+    fn sample_snapshot() -> (Metrics, TelemetrySnapshot) {
+        let mut m = Metrics::new();
+        m.samples_in = 128;
+        m.batches = 2;
+        m.queue_depth = 4;
+        m.step_latency.record(std::time::Duration::from_micros(80));
+        m.reconfigurations.push((64, "pca-whiten".into()));
+        m.convergence_trace.push((64, 0.5));
+        let t = Telemetry::for_stages(
+            vec![
+                ("rp".into(), Some(FxpSpec::q(4, 12))),
+                ("whiten:gha".into(), Some(FxpSpec::q(4, 12))),
+            ],
+            Some(FxpSpec::q(4, 12)),
+        );
+        t.record_step(None, t.begin(), 64, Some(&[1, -200, 4095]));
+        t.record_step(Some(0), t.begin(), 64, Some(&[5, 80]));
+        t.record_step(Some(1), t.begin(), 64, None);
+        (m, t.snapshot().unwrap())
+    }
+
+    #[test]
+    fn snapshot_round_trips_and_validates() {
+        let (m, snap) = sample_snapshot();
+        let cfg = Json::obj(vec![("mode", Json::str("rp-easi"))]);
+        let json = to_json(cfg, &m, &snap);
+        let parsed = Json::parse(&json.to_string_pretty()).unwrap();
+        validate(&parsed).unwrap();
+        // Spot-check derived fields survive serialisation.
+        let stages = parsed.field("stages").unwrap().as_arr().unwrap();
+        assert_eq!(stages.len(), 2);
+        assert_eq!(
+            parsed
+                .field("ingress")
+                .unwrap()
+                .field("max_bits")
+                .unwrap()
+                .as_usize()
+                .unwrap(),
+            12 // |4095| needs 12 bits
+        );
+        assert_eq!(
+            stages[1].field("format").unwrap().as_str().unwrap(),
+            "q4.12"
+        );
+    }
+
+    #[test]
+    fn validate_rejects_drifted_schema() {
+        let (m, snap) = sample_snapshot();
+        let good = to_json(Json::obj(vec![]), &m, &snap);
+        // Wrong tag.
+        let mut map = good.as_obj().unwrap().clone();
+        map.insert("experiment".into(), Json::str("bench_throughput"));
+        assert!(validate(&Json::Obj(map)).is_err());
+        // Missing stages.
+        let mut map = good.as_obj().unwrap().clone();
+        map.remove("stages");
+        assert!(validate(&Json::Obj(map)).is_err());
+        // Empty stages.
+        let mut map = good.as_obj().unwrap().clone();
+        map.insert("stages".into(), Json::Arr(vec![]));
+        assert!(validate(&Json::Obj(map)).is_err());
+        // Occupancy bucket count drifted.
+        let mut map = good.as_obj().unwrap().clone();
+        let mut ing = map["ingress"].as_obj().unwrap().clone();
+        ing.insert("occupancy".into(), Json::Arr(vec![Json::num(0.0)]));
+        map.insert("ingress".into(), Json::Obj(ing));
+        assert!(validate(&Json::Obj(map)).is_err());
+    }
+
+    #[test]
+    fn progress_event_is_compact_jsonl() {
+        let (m, _) = sample_snapshot();
+        let line = progress_event(&m, 0.25).to_string();
+        assert!(!line.contains('\n'));
+        assert!(line.contains("\"event\":"), "{line}");
+    }
+}

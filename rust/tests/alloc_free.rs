@@ -84,12 +84,13 @@ fn unit_is_allocation_free(quant: QuantMode) {
     );
 }
 
-fn trainer_is_allocation_free() {
+fn trainer_is_allocation_free(telemetry: bool) {
     let cfg = ExperimentConfig {
         mode: PipelineMode::RpEasi,
         precision: Precision::parse("q4.12").unwrap(),
         rot_warmup: 0,
         train_classifier: false,
+        telemetry,
         ..Default::default()
     };
     let mut t = Trainer::from_config(&cfg, None).unwrap();
@@ -105,13 +106,25 @@ fn trainer_is_allocation_free() {
     let delta = allocs() - before;
     assert_eq!(
         delta, 0,
-        "NativeTrainer fxp step allocated {delta} times on a warm 256-row batch"
+        "NativeTrainer fxp step (telemetry={telemetry}) allocated {delta} times \
+         on a warm 256-row batch"
     );
+    if telemetry {
+        // Prove the instrumented path was actually measured: the
+        // preallocated counters must have seen every stepped sample.
+        let snap = t.telemetry_snapshot().expect("telemetry enabled");
+        assert!(snap.all().any(|s| s.samples >= 3 * 256));
+    }
 }
 
 #[test]
 fn steady_state_fxp_training_is_allocation_free() {
     unit_is_allocation_free(QuantMode::BitExact);
     unit_is_allocation_free(QuantMode::Ste);
-    trainer_is_allocation_free();
+    // The telemetry contract is "zero-alloc in steady state" too: the
+    // atomic counters and occupancy histogram are preallocated at
+    // enable time, so instrumentation must not cost a single alloc on
+    // the hot path.
+    trainer_is_allocation_free(false);
+    trainer_is_allocation_free(true);
 }

@@ -1,0 +1,128 @@
+//! Integration contract for the telemetry layer.
+//!
+//! Two invariants ride above the unit tests inside `src/telemetry/`:
+//!
+//! 1. **Bit identity** — instrumentation observes the datapath, it
+//!    never participates in it. A trainer with telemetry enabled must
+//!    produce *exactly* the same outputs (raw-for-raw in fixed point,
+//!    bit-for-bit in f32) as an uninstrumented twin.
+//! 2. **End-to-end surface** — a `TrainingService` run with
+//!    `cfg.telemetry` yields a populated `TrainReport::telemetry`
+//!    whose JSON snapshot passes its own golden-schema validator.
+
+use dimred::config::{ExperimentConfig, PipelineMode};
+use dimred::coordinator::{Batch, Trainer, TrainingService};
+use dimred::datasets::waveform::WaveformConfig;
+use dimred::fxp::Precision;
+use dimred::linalg::Mat;
+use dimred::util::json::Json;
+
+fn fixed_batch(rows: usize, dim: usize) -> Batch {
+    Batch::Full(Mat::from_fn(rows, dim, |i, j| {
+        ((i * 31 + j * 7) % 23) as f32 / 23.0 - 0.5
+    }))
+}
+
+/// Train two trainers from the same config/seed — one instrumented,
+/// one not — and demand identical transforms.
+fn assert_bit_identity(mut cfg: ExperimentConfig) {
+    cfg.train_classifier = false;
+    let mut plain_cfg = cfg.clone();
+    plain_cfg.telemetry = false;
+    let mut instr_cfg = cfg;
+    instr_cfg.telemetry = true;
+
+    let mut plain = Trainer::from_config(&plain_cfg, None).unwrap();
+    let mut instr = Trainer::from_config(&instr_cfg, None).unwrap();
+    let batch = fixed_batch(192, plain_cfg.input_dim);
+    for _ in 0..6 {
+        plain.step(&batch).unwrap();
+        instr.step(&batch).unwrap();
+    }
+    let x = Mat::from_fn(64, plain_cfg.input_dim, |i, j| {
+        ((i * 13 + j * 5) % 19) as f32 / 19.0 - 0.5
+    });
+    let a = plain.transform_rows(&x);
+    let b = instr.transform_rows(&x);
+    assert_eq!(a.shape(), b.shape());
+    assert_eq!(
+        a.as_slice(),
+        b.as_slice(),
+        "telemetry changed the datapath output"
+    );
+
+    // The instrumented twin must actually have recorded the work.
+    let snap = instr.telemetry_snapshot().expect("snapshot");
+    assert!(snap.all().any(|s| s.samples > 0));
+    assert!(plain.telemetry_snapshot().is_none());
+}
+
+#[test]
+fn instrumented_fxp_trainer_is_bit_identical() {
+    assert_bit_identity(ExperimentConfig {
+        mode: PipelineMode::RpEasi,
+        precision: Precision::parse("q4.12").unwrap(),
+        rot_warmup: 0,
+        ..Default::default()
+    });
+}
+
+#[test]
+fn instrumented_f32_trainer_is_bit_identical() {
+    assert_bit_identity(ExperimentConfig {
+        mode: PipelineMode::RpEasi,
+        ..Default::default()
+    });
+}
+
+#[test]
+fn service_run_surfaces_validated_snapshot() {
+    let data = WaveformConfig {
+        samples: 600,
+        train: 500,
+        ..WaveformConfig::paper()
+    }
+    .generate();
+    let cfg = ExperimentConfig {
+        epochs: 2,
+        batch: 64,
+        train_classifier: false,
+        telemetry: true,
+        precision: Precision::parse("q4.12").unwrap(),
+        ..Default::default()
+    };
+    let report = TrainingService::new(cfg.clone(), None).run(&data).unwrap();
+    let snap = report.telemetry.as_ref().expect("telemetry requested");
+
+    // Per-stage slots exist, carry names, and saw the whole stream.
+    assert!(!snap.stages.is_empty());
+    assert!(snap.stages.iter().all(|s| !s.name.is_empty()));
+    assert!(snap.stages.iter().any(|s| s.samples >= 1000));
+    // Fixed-point run: the ingress quantizer histogrammed raw words.
+    assert!(snap.ingress.words > 0);
+    assert!(snap.ingress.max_bits() > 0);
+
+    // The serialized snapshot passes its own golden-schema validator
+    // after a parse round-trip (what `--telemetry-out` writes).
+    let json = dimred::telemetry::snapshot::to_json(cfg.to_json(), &report.metrics, snap);
+    let parsed = Json::parse(&json.to_string_pretty()).unwrap();
+    dimred::telemetry::snapshot::validate(&parsed).unwrap();
+}
+
+#[test]
+fn untelemetered_run_reports_none() {
+    let data = WaveformConfig {
+        samples: 240,
+        train: 200,
+        ..WaveformConfig::paper()
+    }
+    .generate();
+    let cfg = ExperimentConfig {
+        epochs: 1,
+        batch: 64,
+        train_classifier: false,
+        ..Default::default()
+    };
+    let report = TrainingService::new(cfg, None).run(&data).unwrap();
+    assert!(report.telemetry.is_none());
+}
