@@ -145,6 +145,11 @@ pub struct ExperimentConfig {
     pub telemetry: bool,
     /// Where `train` writes the schema-validated telemetry snapshot.
     pub telemetry_out: PathBuf,
+    /// Where periodic JSONL progress events go. `None` keeps the
+    /// historical behaviour (stdout) for a bare `--telemetry`; setting
+    /// `--telemetry-out` derives a sibling `.events.jsonl` path so the
+    /// events never interleave with report output on stdout.
+    pub telemetry_events: Option<PathBuf>,
 }
 
 impl Default for ExperimentConfig {
@@ -172,6 +177,7 @@ impl Default for ExperimentConfig {
             mlp_epochs: 30,
             telemetry: false,
             telemetry_out: PathBuf::from("TELEMETRY_snapshot.json"),
+            telemetry_events: None,
         }
     }
 }
@@ -258,6 +264,9 @@ impl ExperimentConfig {
         if let Some(x) = v.get("telemetry_out") {
             c.telemetry_out = PathBuf::from(x.as_str()?);
         }
+        if let Some(x) = v.get("telemetry_events") {
+            c.telemetry_events = Some(PathBuf::from(x.as_str()?));
+        }
         c.validate()?;
         Ok(c)
     }
@@ -301,9 +310,18 @@ impl ExperimentConfig {
             self.telemetry = true;
         }
         if let Some(p) = args.opt_str("telemetry-out") {
-            // An explicit output path implies instrumentation.
+            // An explicit output path implies instrumentation, and the
+            // periodic JSONL events move off stdout to a sibling file so
+            // they cannot interleave with report output.
             self.telemetry = true;
             self.telemetry_out = PathBuf::from(p);
+            if self.telemetry_events.is_none() {
+                self.telemetry_events = Some(self.telemetry_out.with_extension("events.jsonl"));
+            }
+        }
+        if let Some(p) = args.opt_str("telemetry-events") {
+            self.telemetry = true;
+            self.telemetry_events = Some(PathBuf::from(p));
         }
         self.validate()
     }
@@ -407,6 +425,9 @@ impl ExperimentConfig {
         ];
         if let Some(s) = &self.stages {
             fields.push(("stages", Json::str(s.clone())));
+        }
+        if let Some(p) = &self.telemetry_events {
+            fields.push(("telemetry_events", Json::str(p.display().to_string())));
         }
         Json::obj(fields)
     }
@@ -572,6 +593,41 @@ mod tests {
         .graph_spec()
         .unwrap();
         assert_eq!(g.stages_label(), "whiten:gha,rot:easi");
+    }
+
+    #[test]
+    fn telemetry_out_derives_events_path() {
+        // `--telemetry-out` moves periodic JSONL events off stdout to a
+        // sibling file (and implies instrumentation)…
+        let mut c = ExperimentConfig::default();
+        let args = Args::parse(
+            ["--telemetry-out", "runs/snap.json"].iter().map(|s| s.to_string()),
+            &[],
+        )
+        .unwrap();
+        c.apply_args(&args).unwrap();
+        assert!(c.telemetry);
+        assert_eq!(
+            c.telemetry_events.as_deref(),
+            Some(Path::new("runs/snap.events.jsonl"))
+        );
+        // …an explicit `--telemetry-events` wins over the derivation…
+        let mut c = ExperimentConfig::default();
+        let args = Args::parse(
+            ["--telemetry-events", "ev.jsonl", "--telemetry-out", "snap.json"]
+                .iter()
+                .map(|s| s.to_string()),
+            &[],
+        )
+        .unwrap();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.telemetry_events.as_deref(), Some(Path::new("ev.jsonl")));
+        // …and a bare `--telemetry` keeps the historical stdout route.
+        let mut c = ExperimentConfig::default();
+        let args = Args::parse(std::iter::once("--telemetry".to_string()), &["telemetry"]).unwrap();
+        c.apply_args(&args).unwrap();
+        assert!(c.telemetry);
+        assert!(c.telemetry_events.is_none());
     }
 
     #[test]

@@ -38,6 +38,13 @@ impl Batch {
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+
+    /// Tear down into the underlying matrix (for buffer recycling).
+    pub fn into_mat(self) -> Mat {
+        match self {
+            Batch::Full(m) | Batch::Tail(m) => m,
+        }
+    }
 }
 
 /// Anything that yields samples in order. Implemented for dataset
@@ -109,6 +116,19 @@ impl SampleSource for EpochSource {
 pub struct Producer {
     pub handle: JoinHandle<Result<()>>,
     pub backpressure_waits: Arc<AtomicU64>,
+    /// Return lane for drained batch buffers (see [`Producer::recycle`]).
+    recycle_tx: SyncSender<Vec<f32>>,
+}
+
+impl Producer {
+    /// Return a drained batch's buffer to the producer for reuse.
+    /// Best-effort and never blocking: if the return lane is full or the
+    /// producer has exited, the buffer is simply dropped. Once enough
+    /// buffers circulate to cover the queue depth, the producer stops
+    /// allocating entirely (steady state proven in `tests/alloc_free.rs`).
+    pub fn recycle(&self, batch: Batch) {
+        let _ = self.recycle_tx.try_send(batch.into_mat().into_vec());
+    }
 }
 
 /// Spawn a producer thread that chops `source` into `batch`-sized
@@ -122,6 +142,11 @@ pub fn spawn_producer(
     assert!(batch >= 1 && queue_depth >= 1);
     let (tx, rx): (SyncSender<Batch>, Receiver<Batch>) =
         std::sync::mpsc::sync_channel(queue_depth);
+    // Buffer-return lane. Capacity covers every buffer that can be in
+    // flight at once (producer's own + queue_depth queued + one at the
+    // consumer), so a diligent consumer's `recycle` never drops.
+    let (recycle_tx, recycle_rx): (SyncSender<Vec<f32>>, Receiver<Vec<f32>>) =
+        std::sync::mpsc::sync_channel(queue_depth + 2);
     let waits = Arc::new(AtomicU64::new(0));
     let waits_clone = waits.clone();
     let handle = std::thread::Builder::new()
@@ -145,9 +170,13 @@ pub fn spawn_producer(
                 }
             };
             // Fill row slots in place (`next_into`) — no per-sample
-            // vector, and the buffer is zeroed once per batch, not per
-            // sample. The batch buffer itself still allocates once per
-            // batch: ownership travels through the channel.
+            // vector. Ownership travels through the channel, so the
+            // outgoing buffer must be replaced; the replacement comes
+            // from the recycle lane when the consumer returns drained
+            // buffers, and is allocated fresh only on a recycle miss.
+            // Each miss adds one buffer to circulation, so a recycling
+            // consumer reaches an allocation-free steady state after at
+            // most queue_depth + 2 batches.
             loop {
                 if !source.next_into(&mut buf[rows * dim..(rows + 1) * dim]) {
                     buf.truncate(rows * dim);
@@ -155,7 +184,10 @@ pub fn spawn_producer(
                 }
                 rows += 1;
                 if rows == batch {
-                    let full = std::mem::replace(&mut buf, vec![0.0; batch * dim]);
+                    let mut fresh = recycle_rx.try_recv().unwrap_or_default();
+                    fresh.clear();
+                    fresh.resize(batch * dim, 0.0);
+                    let full = std::mem::replace(&mut buf, fresh);
                     send(&tx, Batch::Full(Mat::from_vec(rows, dim, full)), &waits_clone)?;
                     rows = 0;
                 }
@@ -172,6 +204,7 @@ pub fn spawn_producer(
         Producer {
             handle,
             backpressure_waits: waits,
+            recycle_tx,
         },
     )
 }
@@ -246,6 +279,28 @@ mod tests {
             prod.backpressure_waits.load(Ordering::Relaxed) > 0,
             "expected backpressure with a stalled consumer"
         );
+    }
+
+    #[test]
+    fn recycled_buffers_keep_stream_intact() {
+        // A consumer that returns every drained buffer must still see
+        // the exact stream: recycled storage is re-filled in place, so
+        // any stale-data bug would corrupt later batches.
+        let src = EpochSource::new(mat(40, 3), 2); // 80 rows → 20 batches
+        let (rx, prod) = spawn_producer(Box::new(src), 4, 2);
+        let mut seen = 0usize;
+        for b in rx.iter() {
+            for r in 0..b.len() {
+                let row = seen % 40;
+                for j in 0..3 {
+                    assert_eq!(b.rows().get(r, j), (row * 3 + j) as f32);
+                }
+                seen += 1;
+            }
+            prod.recycle(b);
+        }
+        prod.handle.join().unwrap().unwrap();
+        assert_eq!(seen, 80);
     }
 
     #[test]

@@ -17,6 +17,7 @@
 //! unsupervised → transform → train MLP → evaluate).
 
 pub mod batcher;
+pub mod session;
 pub mod trainer;
 
 pub use batcher::{Batch, EpochSource, SampleSource};
@@ -24,6 +25,7 @@ pub use batcher::{Batch, EpochSource, SampleSource};
 // run- and stage-level instrumentation); re-exported here so
 // coordinator callers keep their import paths.
 pub use crate::telemetry::{LatencyHistogram, Metrics};
+pub use session::{IngestOutcome, Session, SessionCheckpoint, SessionStatus, TelemetrySink};
 pub use trainer::{ArtifactNames, Trainer};
 
 use crate::config::ExperimentConfig;
@@ -31,10 +33,9 @@ use crate::datasets::Dataset;
 use crate::linalg::Mat;
 use crate::mlp::{Mlp, MlpConfig};
 use crate::runtime::Runtime;
-use anyhow::{Context, Result};
+use anyhow::Result;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
-use std::time::Instant;
 
 /// A scheduled reconfiguration: after `after_samples` samples, switch
 /// the datapath to `mode`.
@@ -112,6 +113,11 @@ impl<'rt> TrainingService<'rt> {
     /// Run the full paper protocol on a dataset: stream-train the DR
     /// stage, then (optionally) train the classifier on transformed
     /// features and evaluate on the transformed test set.
+    ///
+    /// This is now a thin single-session façade: all per-stream state
+    /// and logic (reconfig schedule, stop rule, metrics, telemetry
+    /// events) lives in [`Session`]; this method just pumps the
+    /// producer queue into it and runs the classifier stage.
     pub fn run(&mut self, data: &Dataset) -> Result<TrainReport> {
         anyhow::ensure!(
             data.input_dim() == self.cfg.input_dim,
@@ -119,9 +125,11 @@ impl<'rt> TrainingService<'rt> {
             data.input_dim(),
             self.cfg.input_dim
         );
-        let mut trainer = Trainer::from_config(&self.cfg, self.runtime)?;
-        let mut m = Metrics::new();
-        m.queue_depth = self.cfg.queue_depth;
+        let mut session = Session::new(&self.cfg, self.runtime)?;
+        for cmd in &self.reconfigs {
+            session.schedule_reconfig(cmd.clone());
+        }
+        session.stop_when(self.stop);
 
         // Producer: epochs over the training matrix.
         let shared = Arc::new(data.train_x.clone());
@@ -129,46 +137,13 @@ impl<'rt> TrainingService<'rt> {
         let (rx, producer) =
             batcher::spawn_producer(Box::new(source), self.cfg.batch, self.cfg.queue_depth);
 
-        let mut pending = self.reconfigs.clone();
-        'consume: for batch in rx.iter() {
-            // Reconfiguration controller.
-            while let Some(cmd) = pending.first() {
-                if m.samples_in >= cmd.after_samples {
-                    trainer
-                        .reconfigure(cmd.mode)
-                        .context("applying scheduled reconfiguration")?;
-                    m.reconfigurations
-                        .push((m.samples_in, cmd.mode.label().to_string()));
-                    pending.remove(0);
-                } else {
-                    break;
-                }
-            }
-
-            let t0 = Instant::now();
-            trainer.step(&batch)?;
-            m.step_latency.record(t0.elapsed());
-            m.samples_in += batch.len() as u64;
-            m.batches += 1;
-            if matches!(batch, Batch::Tail(_)) {
-                m.tail_samples += batch.len() as u64;
-            }
-            if m.batches % 8 == 0 {
-                m.convergence_trace
-                    .push((m.samples_in, trainer.update_magnitude()));
-            }
-            // Periodic JSONL telemetry events: one compact line every
-            // 32 batches, cheap enough to leave on for whole runs.
-            if self.cfg.telemetry && m.batches % 32 == 0 {
-                let ev = crate::telemetry::snapshot::progress_event(&m, trainer.update_magnitude());
-                println!("{}", ev.to_string());
-            }
-            if self.stop.threshold > 0.0
-                && m.samples_in >= self.stop.min_samples
-                && trainer.update_magnitude() < self.stop.threshold
-            {
+        for batch in rx.iter() {
+            let outcome = session.ingest(&batch)?;
+            // Return the drained buffer to the producer for reuse.
+            producer.recycle(batch);
+            if outcome.is_stopped() {
                 // Drain: drop the receiver so the producer unblocks.
-                break 'consume;
+                break;
             }
         }
         drop(rx);
@@ -178,7 +153,9 @@ impl<'rt> TrainingService<'rt> {
             Ok(_) => {}
             Err(p) => std::panic::resume_unwind(p),
         }
-        m.backpressure_waits = producer.backpressure_waits.load(Ordering::Relaxed);
+        session.metrics_mut().backpressure_waits =
+            producer.backpressure_waits.load(Ordering::Relaxed);
+        let (trainer, m) = session.into_parts();
 
         // Classifier stage (paper §V.B): train on transformed features.
         let test_accuracy = if self.cfg.train_classifier {

@@ -1,0 +1,442 @@
+//! One tenant's training session, extracted from the old monolithic
+//! `TrainingService::run` loop.
+//!
+//! A [`Session`] owns exactly the per-stream state the serving layer
+//! multiplexes: one trainer, the pending reconfiguration schedule, the
+//! stop rule and the run [`Metrics`]. Instead of a blocking
+//! consume-the-channel loop it exposes a non-blocking step API —
+//! [`Session::ingest`] consumes one [`Batch`] (firing due
+//! reconfigurations, stepping the trainer, recording latency and the
+//! convergence trace, evaluating the stop rule) and [`Session::poll`]
+//! reads progress without touching the datapath. `TrainingService` is
+//! now a thin single-session façade over this type; the multi-tenant
+//! registry in [`crate::serve`] owns many of them.
+//!
+//! Two satellite fixes live here:
+//!
+//! * The pending-reconfig queue is a `VecDeque` popped from the front,
+//!   ordered by `(after_samples, insertion index)` — two commands
+//!   scheduled for the same sample count fire in the order they were
+//!   scheduled, not in sort-implementation order.
+//! * Periodic `--telemetry` JSONL progress events go through a
+//!   [`TelemetrySink`]: stdout only when no output file is configured,
+//!   otherwise a JSONL file next to the snapshot — report output stays
+//!   clean.
+//!
+//! Sessions checkpoint: [`Session::checkpoint`] captures the stage
+//! graph's state (PR 5's `save_state`, bit-exact for fixed point), the
+//! run metrics and the remaining schedule; [`Session::restore`]
+//! rebuilds the trainer from the config and resumes — a restored
+//! fixed-point session continues bit-identically to an uninterrupted
+//! one (proven in `tests/serve.rs`).
+
+use super::batcher::Batch;
+use super::trainer::Trainer;
+use super::{ReconfigCommand, StopRule};
+use crate::config::{ExperimentConfig, PipelineMode};
+use crate::runtime::Runtime;
+use crate::stage::StageState;
+use crate::telemetry::Metrics;
+use anyhow::{Context, Result};
+use std::collections::VecDeque;
+use std::io::Write;
+use std::time::Instant;
+
+/// Where periodic JSONL progress events go. Chosen from the config:
+/// disabled without `--telemetry`; a JSONL file when an events path is
+/// configured (`--telemetry-out FILE` derives one next to the
+/// snapshot); stdout otherwise (the historical behaviour for a bare
+/// `--telemetry`).
+pub enum TelemetrySink {
+    Disabled,
+    Stdout,
+    File(std::io::BufWriter<std::fs::File>),
+}
+
+impl TelemetrySink {
+    pub fn for_config(cfg: &ExperimentConfig) -> Result<Self> {
+        if !cfg.telemetry {
+            return Ok(Self::Disabled);
+        }
+        match &cfg.telemetry_events {
+            Some(path) => {
+                let f = std::fs::File::create(path)
+                    .with_context(|| format!("creating telemetry events file {}", path.display()))?;
+                Ok(Self::File(std::io::BufWriter::new(f)))
+            }
+            None => Ok(Self::Stdout),
+        }
+    }
+
+    /// Emit one JSONL line. Flushed per event — events are rare (every
+    /// 32 batches) and a tail-loss on crash would defeat their purpose.
+    pub fn emit(&mut self, line: &str) -> Result<()> {
+        match self {
+            Self::Disabled => Ok(()),
+            Self::Stdout => {
+                println!("{line}");
+                Ok(())
+            }
+            Self::File(w) => {
+                writeln!(w, "{line}").context("writing telemetry event")?;
+                w.flush().context("flushing telemetry event")
+            }
+        }
+    }
+}
+
+/// A scheduled reconfiguration with its insertion index: the queue is
+/// ordered by `(after_samples, seq)` so equal-threshold commands fire
+/// in the order they were scheduled.
+#[derive(Debug, Clone)]
+struct Scheduled {
+    seq: u64,
+    cmd: ReconfigCommand,
+}
+
+/// What one [`Session::ingest`] call did.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IngestOutcome {
+    /// Batch consumed; the session wants more.
+    Active,
+    /// The stop rule fired (or had already fired): stream can end.
+    Stopped,
+}
+
+impl IngestOutcome {
+    pub fn is_stopped(&self) -> bool {
+        matches!(self, Self::Stopped)
+    }
+}
+
+/// Non-blocking progress read.
+#[derive(Debug, Clone, Copy)]
+pub struct SessionStatus {
+    pub samples_in: u64,
+    pub batches: u64,
+    pub update_magnitude: f64,
+    pub stopped: bool,
+}
+
+/// Everything needed to resume a session after eviction: the stage
+/// graph's saved state (raw words, accumulators, counters, STE shadows
+/// — bit-exact for fixed point), the active mode, the run metrics and
+/// the remaining reconfiguration schedule. The trainer itself is
+/// rebuilt from the config on restore (RP matrices and initial shapes
+/// are seed-deterministic), then overwritten with the saved state.
+#[derive(Debug, Clone)]
+pub struct SessionCheckpoint {
+    cfg: ExperimentConfig,
+    mode: PipelineMode,
+    stages: Vec<StageState>,
+    metrics: Metrics,
+    pending: VecDeque<Scheduled>,
+    next_seq: u64,
+    stop: StopRule,
+    stopped: bool,
+}
+
+impl SessionCheckpoint {
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    pub fn mode(&self) -> PipelineMode {
+        self.mode
+    }
+}
+
+/// One stream's training state with a non-blocking step API.
+pub struct Session<'rt> {
+    cfg: ExperimentConfig,
+    trainer: Trainer<'rt>,
+    pending: VecDeque<Scheduled>,
+    next_seq: u64,
+    stop: StopRule,
+    metrics: Metrics,
+    events: TelemetrySink,
+    stopped: bool,
+}
+
+impl<'rt> Session<'rt> {
+    pub fn new(cfg: &ExperimentConfig, runtime: Option<&'rt Runtime>) -> Result<Self> {
+        let trainer = Trainer::from_config(cfg, runtime)?;
+        let mut metrics = Metrics::new();
+        metrics.queue_depth = cfg.queue_depth;
+        let events = TelemetrySink::for_config(cfg)?;
+        Ok(Self {
+            cfg: cfg.clone(),
+            trainer,
+            pending: VecDeque::new(),
+            next_seq: 0,
+            stop: StopRule::default(),
+            metrics,
+            events,
+            stopped: false,
+        })
+    }
+
+    /// Replace the progress-event sink (the serving layer disables
+    /// per-session JSONL — interleaved events from many tenants on one
+    /// stdout would be noise — and reports through its own surface).
+    pub fn set_event_sink(&mut self, sink: TelemetrySink) {
+        self.events = sink;
+    }
+
+    /// Schedule a mid-stream reconfiguration. Stable: commands with
+    /// equal `after_samples` fire in scheduling order.
+    pub fn schedule_reconfig(&mut self, cmd: ReconfigCommand) {
+        self.pending.push_back(Scheduled {
+            seq: self.next_seq,
+            cmd,
+        });
+        self.next_seq += 1;
+        self.pending
+            .make_contiguous()
+            .sort_by_key(|s| (s.cmd.after_samples, s.seq));
+    }
+
+    pub fn stop_when(&mut self, rule: StopRule) {
+        self.stop = rule;
+    }
+
+    /// Consume one batch: fire due reconfigurations, step the trainer,
+    /// record metrics, emit a periodic progress event, evaluate the
+    /// stop rule. Never blocks. On an already-stopped session this is a
+    /// no-op returning [`IngestOutcome::Stopped`].
+    pub fn ingest(&mut self, batch: &Batch) -> Result<IngestOutcome> {
+        if self.stopped {
+            return Ok(IngestOutcome::Stopped);
+        }
+        // Reconfiguration controller: pop every command whose threshold
+        // has been reached, in (after_samples, insertion) order.
+        while let Some(next) = self.pending.front() {
+            if self.metrics.samples_in < next.cmd.after_samples {
+                break;
+            }
+            let cmd = self.pending.pop_front().expect("front exists").cmd;
+            self.trainer
+                .reconfigure(cmd.mode)
+                .context("applying scheduled reconfiguration")?;
+            self.metrics
+                .reconfigurations
+                .push((self.metrics.samples_in, cmd.mode.label().to_string()));
+        }
+
+        let t0 = Instant::now();
+        self.trainer.step(batch)?;
+        self.metrics.step_latency.record(t0.elapsed());
+        self.metrics.samples_in += batch.len() as u64;
+        self.metrics.batches += 1;
+        if matches!(batch, Batch::Tail(_)) {
+            self.metrics.tail_samples += batch.len() as u64;
+        }
+        if self.metrics.batches % 8 == 0 {
+            self.metrics
+                .convergence_trace
+                .push((self.metrics.samples_in, self.trainer.update_magnitude()));
+        }
+        // Periodic JSONL telemetry events: one compact line every 32
+        // batches, cheap enough to leave on for whole runs.
+        if self.cfg.telemetry && self.metrics.batches % 32 == 0 {
+            let ev = crate::telemetry::snapshot::progress_event(
+                &self.metrics,
+                self.trainer.update_magnitude(),
+            );
+            self.events.emit(&ev.to_string())?;
+        }
+        if self.stop.threshold > 0.0
+            && self.metrics.samples_in >= self.stop.min_samples
+            && self.trainer.update_magnitude() < self.stop.threshold
+        {
+            self.stopped = true;
+            return Ok(IngestOutcome::Stopped);
+        }
+        Ok(IngestOutcome::Active)
+    }
+
+    /// Progress without touching the datapath.
+    pub fn poll(&self) -> SessionStatus {
+        SessionStatus {
+            samples_in: self.metrics.samples_in,
+            batches: self.metrics.batches,
+            update_magnitude: self.trainer.update_magnitude(),
+            stopped: self.stopped,
+        }
+    }
+
+    pub fn config(&self) -> &ExperimentConfig {
+        &self.cfg
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    pub fn metrics_mut(&mut self) -> &mut Metrics {
+        &mut self.metrics
+    }
+
+    pub fn trainer(&self) -> &Trainer<'rt> {
+        &self.trainer
+    }
+
+    pub fn stopped(&self) -> bool {
+        self.stopped
+    }
+
+    /// Tear down into the trainer and metrics (for the classifier stage
+    /// and report assembly).
+    pub fn into_parts(self) -> (Trainer<'rt>, Metrics) {
+        (self.trainer, self.metrics)
+    }
+
+    /// Capture everything needed to resume later (native backend only:
+    /// PJRT state lives inside compiled executables). Fixed-point graph
+    /// state is saved as raw words — restoring continues bit-exactly.
+    pub fn checkpoint(&self) -> Result<SessionCheckpoint> {
+        let graph = self
+            .trainer
+            .stage_graph()
+            .context("only native-backend sessions checkpoint (PJRT state is opaque)")?;
+        Ok(SessionCheckpoint {
+            cfg: self.cfg.clone(),
+            mode: self.trainer.mode(),
+            stages: graph.save_state(),
+            metrics: self.metrics.clone(),
+            pending: self.pending.clone(),
+            next_seq: self.next_seq,
+            stop: self.stop,
+            stopped: self.stopped,
+        })
+    }
+
+    /// Rebuild a session from a checkpoint. The trainer is
+    /// reconstructed from the config (seed-deterministic RP and
+    /// shapes), switched to the checkpointed mode if a reconfiguration
+    /// had fired, then overwritten with the saved stage state.
+    pub fn restore(ck: SessionCheckpoint, runtime: Option<&'rt Runtime>) -> Result<Self> {
+        let mut s = Session::new(&ck.cfg, runtime)?;
+        if s.trainer.mode() != ck.mode {
+            s.trainer
+                .reconfigure(ck.mode)
+                .context("restoring checkpointed datapath mode")?;
+        }
+        s.trainer
+            .stage_graph_mut()
+            .context("only native-backend sessions restore")?
+            .restore_state(&ck.stages)
+            .context("restoring stage-graph state")?;
+        s.metrics = ck.metrics;
+        s.pending = ck.pending;
+        s.next_seq = ck.next_seq;
+        s.stop = ck.stop;
+        s.stopped = ck.stopped;
+        Ok(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    fn batch(rows: usize, dim: usize, salt: usize) -> Batch {
+        Batch::Full(Mat::from_fn(rows, dim, |i, j| {
+            ((i * 31 + j * 7 + salt * 13) % 17) as f32 / 17.0 - 0.5
+        }))
+    }
+
+    #[test]
+    fn equal_after_samples_reconfigs_fire_in_insertion_order() {
+        // The latent ordering bug: two commands with the same
+        // `after_samples` used to fire in sort-implementation order.
+        // The queue is now keyed by (after_samples, insertion index).
+        let cfg = ExperimentConfig {
+            mode: crate::config::PipelineMode::Easi,
+            train_classifier: false,
+            rot_warmup: 0,
+            ..Default::default()
+        };
+        let mut s = Session::new(&cfg, None).unwrap();
+        s.schedule_reconfig(ReconfigCommand {
+            after_samples: 150,
+            mode: PipelineMode::PcaWhiten,
+        });
+        s.schedule_reconfig(ReconfigCommand {
+            after_samples: 150,
+            mode: PipelineMode::Easi,
+        });
+        // An earlier threshold scheduled later still sorts first.
+        s.schedule_reconfig(ReconfigCommand {
+            after_samples: 50,
+            mode: PipelineMode::Easi,
+        });
+        for salt in 0..3 {
+            s.ingest(&batch(100, cfg.input_dim, salt)).unwrap();
+        }
+        let fired: Vec<&str> = s
+            .metrics()
+            .reconfigurations
+            .iter()
+            .map(|(_, label)| label.as_str())
+            .collect();
+        assert_eq!(fired, ["easi", "pca-whiten", "easi"]);
+        // Both equal-threshold commands fired at the same sample count,
+        // in scheduling order.
+        assert_eq!(
+            s.metrics().reconfigurations[1].0,
+            s.metrics().reconfigurations[2].0
+        );
+    }
+
+    #[test]
+    fn ingest_is_noop_after_stop() {
+        let cfg = ExperimentConfig {
+            train_classifier: false,
+            rot_warmup: 0,
+            ..Default::default()
+        };
+        let mut s = Session::new(&cfg, None).unwrap();
+        s.stop_when(StopRule {
+            threshold: 1e9, // fires immediately
+            min_samples: 0,
+        });
+        let b = batch(64, cfg.input_dim, 0);
+        assert!(s.ingest(&b).unwrap().is_stopped());
+        let frozen = s.poll();
+        assert!(frozen.stopped);
+        assert!(s.ingest(&b).unwrap().is_stopped());
+        assert_eq!(s.poll().samples_in, frozen.samples_in);
+    }
+
+    #[test]
+    fn telemetry_events_route_to_configured_file() {
+        let path = std::env::temp_dir().join(format!(
+            "dimred_events_{}_{:?}.jsonl",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let cfg = ExperimentConfig {
+            train_classifier: false,
+            rot_warmup: 0,
+            telemetry: true,
+            telemetry_events: Some(path.clone()),
+            ..Default::default()
+        };
+        let mut s = Session::new(&cfg, None).unwrap();
+        // 64 batches cross the every-32-batches event cadence twice.
+        for salt in 0..64 {
+            s.ingest(&batch(8, cfg.input_dim, salt)).unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2, "one event per 32 batches: {text}");
+        for line in lines {
+            let ev = crate::util::json::Json::parse(line).unwrap();
+            assert_eq!(ev.field("event").unwrap().as_str().unwrap(), "telemetry");
+            ev.field("samples").unwrap().as_u64().unwrap();
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -191,6 +191,26 @@ impl<'rt> Trainer<'rt> {
             Trainer::Pjrt(_) => None,
         }
     }
+
+    /// The underlying stage graph (native backend only) — the
+    /// checkpointing surface sessions evict/restore through. PJRT
+    /// state lives inside compiled executables and is not
+    /// checkpointable.
+    pub fn stage_graph(&self) -> Option<&StageGraph> {
+        match self {
+            Trainer::Native(t) => Some(t.graph()),
+            Trainer::Pjrt(_) => None,
+        }
+    }
+
+    /// Mutable stage-graph access (native backend only); see
+    /// [`Trainer::stage_graph`].
+    pub fn stage_graph_mut(&mut self) -> Option<&mut StageGraph> {
+        match self {
+            Trainer::Native(t) => Some(t.graph_mut()),
+            Trainer::Pjrt(_) => None,
+        }
+    }
 }
 
 fn rotation_active(mode: PipelineMode) -> Result<bool> {

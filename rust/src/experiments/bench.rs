@@ -27,12 +27,21 @@
 //! telemetry `health` rows (saturation rate, raw-word occupancy,
 //! headroom), collected on an untimed instrumented pass *after* the
 //! throughput measurement so the counters never pollute the timing.
+//!
+//! Since schema v4 the report also carries a `multi_tenant` scenario
+//! family: the serving layer's aggregate throughput (8 concurrent
+//! sessions sharded across 2 and 4 workers vs the single-session
+//! baseline), per-tenant p50/p99 step latency and the fairness spread —
+//! the scalability axis of the paper's pitch, measured through
+//! `serve::workload` with every tenant pinned to the same graph shape
+//! so the speedup isolates sharding, not precision mix.
 
 use crate::experiments::grid;
 use crate::fxp::{FxpDrUnit, FxpRp, FxpSpec, FxpUnitConfig, Precision, QuantMode, Scratch};
 use crate::linalg::Mat;
 use crate::pipeline::unit::{DrUnit, DrUnitConfig};
 use crate::rp::{RandomProjection, RpDistribution};
+use crate::serve::workload::{self, ArrivalPattern, ServeOptions};
 use crate::stage::spec::parse_stage_list;
 use crate::stage::GraphSpec;
 use crate::util::json::Json;
@@ -100,6 +109,35 @@ pub struct BenchConfigResult {
     pub speedups: Vec<(String, f64)>,
     /// Stage-graph scenarios (forward path, whole-tile).
     pub scenarios: Vec<ScenarioPoint>,
+}
+
+/// One multi-tenant serving measurement: aggregate samples/s for
+/// `tenants` concurrent sessions on `shards` workers, vs the
+/// single-session baseline row (tenants=1, shards=1).
+#[derive(Debug, Clone)]
+pub struct MultiTenantPoint {
+    pub tenants: usize,
+    pub shards: usize,
+    /// Rows per batch.
+    pub batch: usize,
+    pub batches_per_tenant: usize,
+    pub aggregate_samples_per_s: f64,
+    /// Worst per-tenant median step latency.
+    pub p50_ns: Option<f64>,
+    /// Worst per-tenant p99 step latency.
+    pub p99_ns: Option<f64>,
+    /// Slowest / fastest tenant completion (1.0 = perfectly fair).
+    pub fairness_spread: Option<f64>,
+    /// Aggregate throughput over the single-session baseline row.
+    pub speedup_over_single: f64,
+}
+
+/// Everything one bench run produces: the per-dataset kernel grid plus
+/// the multi-tenant serving family.
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    pub configs: Vec<BenchConfigResult>,
+    pub multi_tenant: Vec<MultiTenantPoint>,
 }
 
 /// Knobs for one bench run.
@@ -216,8 +254,9 @@ fn build_f32_unit(p: usize, n: usize, seed: u64) -> DrUnit {
     })
 }
 
-/// Run the bench over every requested dataset configuration.
-pub fn run(opts: &BenchOptions) -> Result<Vec<BenchConfigResult>> {
+/// Run the bench over every requested dataset configuration, then the
+/// multi-tenant serving family.
+pub fn run(opts: &BenchOptions) -> Result<BenchReport> {
     ensure!(opts.tile >= 1, "tile must be >= 1");
     ensure!(opts.lanes >= 1, "lanes must be >= 1");
     ensure!(!opts.datasets.is_empty(), "no datasets selected");
@@ -531,18 +570,71 @@ pub fn run(opts: &BenchOptions) -> Result<Vec<BenchConfigResult>> {
             scenarios,
         });
     }
-    Ok(out)
+    let multi_tenant = run_multi_tenant(opts)?;
+    Ok(BenchReport {
+        configs: out,
+        multi_tenant,
+    })
+}
+
+/// The multi-tenant serving family: a single-session baseline row
+/// (tenants=1, shards=1) followed by 8 sessions on 2 and 4 shards.
+/// Every tenant is pinned to the same f32 rp-easi graph so the measured
+/// speedup isolates sharding; mixed-precision traffic is covered by
+/// `dimred serve` itself.
+fn run_multi_tenant(opts: &BenchOptions) -> Result<Vec<MultiTenantPoint>> {
+    let batches_per_tenant = if opts.smoke { 32 } else { 128 };
+    let grid = [(1usize, 1usize), (8, 2), (8, 4)];
+    let mut rows = Vec::with_capacity(grid.len());
+    let mut baseline: Option<f64> = None;
+    for (tenants, shards) in grid {
+        let sopts = ServeOptions {
+            tenants,
+            shards,
+            batch: 256,
+            batches_per_tenant,
+            arrival: ArrivalPattern::Uniform,
+            stages: None,
+            precision: Some("f32".into()),
+            telemetry: false,
+            seed: opts.seed,
+            ..ServeOptions::default()
+        };
+        let report = workload::run(&sopts)?;
+        let agg = report.aggregate_samples_per_s;
+        let base = *baseline.get_or_insert(agg);
+        // Worst per-tenant latency: the row a latency SLO would look at.
+        let worst = |f: fn(&crate::serve::workload::TenantReport) -> Option<f64>| {
+            report
+                .tenants
+                .iter()
+                .filter_map(f)
+                .fold(None, |acc: Option<f64>, v| Some(acc.map_or(v, |a| a.max(v))))
+        };
+        rows.push(MultiTenantPoint {
+            tenants,
+            shards,
+            batch: sopts.batch,
+            batches_per_tenant,
+            aggregate_samples_per_s: agg,
+            p50_ns: worst(|t| t.p50_ns),
+            p99_ns: worst(|t| t.p99_ns),
+            fairness_spread: report.fairness_spread,
+            speedup_over_single: agg / base.max(1e-12),
+        });
+    }
+    Ok(rows)
 }
 
 /// Aligned text report.
-pub fn render(opts: &BenchOptions, results: &[BenchConfigResult]) -> String {
+pub fn render(opts: &BenchOptions, report: &BenchReport) -> String {
     let mut s = format!(
         "dimred bench — samples/s (tile={}, lanes={}{})\n",
         opts.tile,
         opts.lanes,
         if opts.smoke { ", smoke" } else { "" }
     );
-    for cfg in results {
+    for cfg in &report.configs {
         s.push_str(&format!(
             "\n[{} m={} p={} n={} samples={}]\n",
             cfg.dataset, cfg.m, cfg.p, cfg.n, cfg.samples
@@ -577,17 +669,47 @@ pub fn render(opts: &BenchOptions, results: &[BenchConfigResult]) -> String {
             }
         }
     }
+    if !report.multi_tenant.is_empty() {
+        s.push_str("\n[multi-tenant serving — f32 rp-easi, uniform arrival]\n");
+        s.push_str(&format!(
+            "{:>7} {:>6} {:>6} {:>8} {:>14} {:>10} {:>10} {:>8} {:>8}\n",
+            "tenants", "shards", "batch", "batches", "agg smp/s", "p50", "p99", "spread", "speedup"
+        ));
+        let fmt_ns = |v: Option<f64>| {
+            v.map(|ns| crate::util::bench::fmt_duration(std::time::Duration::from_nanos(ns as u64)))
+                .unwrap_or_else(|| "-".into())
+        };
+        for mt in &report.multi_tenant {
+            s.push_str(&format!(
+                "{:>7} {:>6} {:>6} {:>8} {:>14.0} {:>10} {:>10} {:>8} {:>7.2}x\n",
+                mt.tenants,
+                mt.shards,
+                mt.batch,
+                mt.batches_per_tenant,
+                mt.aggregate_samples_per_s,
+                fmt_ns(mt.p50_ns),
+                fmt_ns(mt.p99_ns),
+                mt.fairness_spread
+                    .map(|f| format!("{f:.2}x"))
+                    .unwrap_or_else(|| "-".into()),
+                mt.speedup_over_single
+            ));
+        }
+    }
     s
 }
 
 /// Serialise one run under the golden schema (see [`validate`]).
-pub fn to_json(opts: &BenchOptions, results: &[BenchConfigResult]) -> Json {
+pub fn to_json(opts: &BenchOptions, report: &BenchReport) -> Json {
     Json::obj(vec![
         ("experiment", Json::str("bench_throughput")),
         // v2: per-config stage-graph `scenarios` rows joined the grid.
         // v3: each scenario carries per-stage telemetry `health` rows
         //     (saturation rate, raw-word occupancy, headroom).
-        ("schema_version", Json::num(3.0)),
+        // v4: top-level `multi_tenant` serving family (aggregate
+        //     throughput vs the single-session baseline, worst-tenant
+        //     p50/p99, fairness spread).
+        ("schema_version", Json::num(4.0)),
         ("smoke", Json::Bool(opts.smoke)),
         ("tile", Json::num(opts.tile as f64)),
         ("lanes", Json::num(opts.lanes as f64)),
@@ -595,7 +717,8 @@ pub fn to_json(opts: &BenchOptions, results: &[BenchConfigResult]) -> Json {
         (
             "configs",
             Json::Arr(
-                results
+                report
+                    .configs
                     .iter()
                     .map(|cfg| {
                         Json::obj(vec![
@@ -705,6 +828,40 @@ pub fn to_json(opts: &BenchOptions, results: &[BenchConfigResult]) -> Json {
                     .collect(),
             ),
         ),
+        (
+            "multi_tenant",
+            Json::Arr(
+                report
+                    .multi_tenant
+                    .iter()
+                    .map(|mt| {
+                        Json::obj(vec![
+                            ("tenants", Json::num(mt.tenants as f64)),
+                            ("shards", Json::num(mt.shards as f64)),
+                            ("batch", Json::num(mt.batch as f64)),
+                            (
+                                "batches_per_tenant",
+                                Json::num(mt.batches_per_tenant as f64),
+                            ),
+                            (
+                                "aggregate_samples_per_s",
+                                Json::num(mt.aggregate_samples_per_s),
+                            ),
+                            ("p50_ns", mt.p50_ns.map(Json::num).unwrap_or(Json::Null)),
+                            ("p99_ns", mt.p99_ns.map(Json::num).unwrap_or(Json::Null)),
+                            (
+                                "fairness_spread",
+                                mt.fairness_spread.map(Json::num).unwrap_or(Json::Null),
+                            ),
+                            (
+                                "speedup_over_single",
+                                Json::num(mt.speedup_over_single),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
     ])
 }
 
@@ -717,7 +874,7 @@ pub fn validate(v: &Json) -> Result<()> {
         "wrong experiment tag"
     );
     ensure!(
-        v.field("schema_version")?.as_usize()? == 3,
+        v.field("schema_version")?.as_usize()? == 4,
         "unknown schema version"
     );
     v.field("smoke")?.as_bool().context("smoke flag")?;
@@ -785,6 +942,44 @@ pub fn validate(v: &Json) -> Result<()> {
             }
         }
     }
+    let mt = v.field("multi_tenant")?.as_arr()?;
+    ensure!(!mt.is_empty(), "multi_tenant must be non-empty");
+    let mut has_baseline = false;
+    let mut has_sharded = false;
+    for row in mt {
+        let tenants = row.field("tenants")?.as_usize()?;
+        let shards = row.field("shards")?.as_usize()?;
+        ensure!(tenants >= 1 && shards >= 1, "bad multi_tenant row shape");
+        has_baseline |= tenants == 1 && shards == 1;
+        has_sharded |= tenants >= 8 && shards >= 2;
+        row.field("batch")?.as_usize()?;
+        row.field("batches_per_tenant")?.as_usize()?;
+        let agg = row.field("aggregate_samples_per_s")?.as_f64()?;
+        ensure!(
+            agg.is_finite() && agg > 0.0,
+            "multi_tenant aggregate must be positive, got {agg}"
+        );
+        let speedup = row.field("speedup_over_single")?.as_f64()?;
+        ensure!(
+            speedup.is_finite() && speedup > 0.0,
+            "speedup_over_single must be positive, got {speedup}"
+        );
+        match row.field("fairness_spread")? {
+            Json::Null => {}
+            other => {
+                let s = other.as_f64()?;
+                ensure!(s >= 1.0, "fairness spread is slowest/fastest, got {s}");
+            }
+        }
+    }
+    ensure!(
+        has_baseline,
+        "multi_tenant needs a tenants=1/shards=1 baseline row"
+    );
+    ensure!(
+        has_sharded,
+        "multi_tenant needs a >=8-tenant row on >=2 shards"
+    );
     Ok(())
 }
 
@@ -805,9 +1000,9 @@ mod tests {
     #[test]
     fn smoke_run_produces_valid_schema() {
         let opts = smoke_opts();
-        let results = run(&opts).unwrap();
-        assert_eq!(results.len(), 1);
-        let cfg = &results[0];
+        let report = run(&opts).unwrap();
+        assert_eq!(report.configs.len(), 1);
+        let cfg = &report.configs[0];
         assert_eq!(cfg.dataset, "waveform");
         assert_eq!((cfg.m, cfg.p, cfg.n), (32, 16, 8));
         // The full grid: 2 train f32 + 2 train fxp + 2 forward f32 +
@@ -837,19 +1032,37 @@ mod tests {
             .scenarios
             .iter()
             .any(|s| s.stages == "whiten:gha" && s.precision == "q4.12"));
-        let json = to_json(&opts, &results);
+        // The multi-tenant serving family: a 1×1 baseline plus sharded
+        // rows. Speedup magnitudes depend on the host's core count and
+        // the test harness's own CPU contention, so assert structure
+        // and sanity, not the ratio — the real numbers ride the JSON.
+        assert_eq!(report.multi_tenant.len(), 3);
+        let base = &report.multi_tenant[0];
+        assert_eq!((base.tenants, base.shards), (1, 1));
+        assert!((base.speedup_over_single - 1.0).abs() < 1e-9);
+        assert!(report
+            .multi_tenant
+            .iter()
+            .any(|mt| mt.tenants >= 8 && mt.shards >= 2));
+        for mt in &report.multi_tenant {
+            assert!(mt.aggregate_samples_per_s > 0.0);
+            assert!(mt.speedup_over_single.is_finite() && mt.speedup_over_single > 0.0);
+            assert!(mt.p50_ns.is_some() && mt.p99_ns.is_some());
+        }
+        let json = to_json(&opts, &report);
         let parsed = Json::parse(&json.to_string_pretty()).unwrap();
         validate(&parsed).unwrap();
-        let table = render(&opts, &results);
+        let table = render(&opts, &report);
         assert!(table.contains("multilane"), "{table}");
         assert!(table.contains("scenario"), "{table}");
+        assert!(table.contains("multi-tenant serving"), "{table}");
     }
 
     #[test]
     fn validate_rejects_drifted_schema() {
         let opts = smoke_opts();
-        let results = run(&opts).unwrap();
-        let good = to_json(&opts, &results);
+        let report = run(&opts).unwrap();
+        let good = to_json(&opts, &report);
         // Drop a required field.
         let mut map = good.as_obj().unwrap().clone();
         map.remove("configs");
@@ -862,9 +1075,17 @@ mod tests {
         let mut map = good.as_obj().unwrap().clone();
         map.insert("configs".into(), Json::Arr(vec![]));
         assert!(validate(&Json::Obj(map)).is_err());
-        // Stale schema version (pre-health writers must not validate).
+        // Stale schema version (pre-multi-tenant writers must not
+        // validate).
         let mut map = good.as_obj().unwrap().clone();
-        map.insert("schema_version".into(), Json::num(2.0));
+        map.insert("schema_version".into(), Json::num(3.0));
+        assert!(validate(&Json::Obj(map)).is_err());
+        // Missing or empty multi_tenant family.
+        let mut map = good.as_obj().unwrap().clone();
+        map.remove("multi_tenant");
+        assert!(validate(&Json::Obj(map)).is_err());
+        let mut map = good.as_obj().unwrap().clone();
+        map.insert("multi_tenant".into(), Json::Arr(vec![]));
         assert!(validate(&Json::Obj(map)).is_err());
     }
 }

@@ -17,12 +17,15 @@
 //! * Hardware co-design: [`hwmodel`] (bitwidth-aware Arria-10 resource
 //!   + pipeline model, regenerates the paper's Table II)
 //! * System: [`runtime`] (PJRT artifact loader), [`coordinator`]
-//!   (streaming training service), [`stage`] (the unified stage-graph
-//!   datapath: one `Stage` abstraction over f32 and fixed point),
-//!   [`pipeline`] (composed DR pipelines — thin façade over the stage
-//!   graph, f32 or fixed-point via [`fxp::Precision`]), [`telemetry`]
-//!   (per-stage counters, fxp saturation health, run metrics and the
-//!   `dimred report` profiling surface), [`config`]
+//!   (streaming training service; per-stream [`coordinator::Session`]s
+//!   with checkpoint-based evict/restore), [`serve`] (multi-tenant
+//!   serving layer: tenant registry, shard scheduler, synthetic
+//!   workloads behind `dimred serve`), [`stage`] (the unified
+//!   stage-graph datapath: one `Stage` abstraction over f32 and fixed
+//!   point), [`pipeline`] (composed DR pipelines — thin façade over the
+//!   stage graph, f32 or fixed-point via [`fxp::Precision`]),
+//!   [`telemetry`] (per-stage counters, fxp saturation health, run
+//!   metrics and the `dimred report` profiling surface), [`config`]
 
 pub mod config;
 pub mod coordinator;
@@ -39,6 +42,7 @@ pub mod pipeline;
 pub mod rng;
 pub mod rp;
 pub mod runtime;
+pub mod serve;
 pub mod stage;
 pub mod telemetry;
 pub mod util;

@@ -12,6 +12,8 @@
 //!                (mixed precision × bit-exact/STE training)
 //!   report       profile a training run: per-stage time share,
 //!                saturation rate, raw-word occupancy, headroom
+//!   serve        multi-tenant serving layer: N training sessions
+//!                sharded across worker threads, per-tenant telemetry
 //!   artifacts    list the AOT artifacts the runtime can execute
 //!   timing       pipeline timing model (frequency / latency)
 //!
@@ -32,6 +34,8 @@
 //!   dimred pareto waveform --json pareto.json
 //!   dimred train --precision q4.12 --telemetry
 //!   dimred report --precision q4.12 --epochs 1 --json TELEMETRY_snapshot.json
+//!   dimred serve --tenants 16 --shards 4 --arrival skewed:10
+//!   dimred serve --smoke --json SERVE_report.json
 
 use anyhow::{bail, Context, Result};
 use dimred::config::{Backend, ExperimentConfig};
@@ -55,7 +59,14 @@ fn main() {
     }
 }
 
-const FLAGS: &[&str] = &["no-classifier", "help", "verbose", "smoke", "telemetry"];
+const FLAGS: &[&str] = &[
+    "no-classifier",
+    "help",
+    "verbose",
+    "smoke",
+    "telemetry",
+    "evict-idle",
+];
 
 fn run() -> Result<()> {
     let args = Args::from_env(FLAGS)?;
@@ -69,6 +80,7 @@ fn run() -> Result<()> {
         "pareto" => cmd_pareto(&args),
         "bench" => cmd_bench(&args),
         "report" => cmd_report(&args),
+        "serve" => cmd_serve(&args),
         "artifacts" => cmd_artifacts(&args),
         "timing" => cmd_timing(&args),
         "help" | "--help" => {
@@ -100,17 +112,24 @@ COMMANDS:
               (`;`-separated — the plan syntax itself uses commas);
               default grid mixes uniform/mixed and bit-exact/STE.
   bench       datapath throughput: f32 vs fixed point, per-sample vs
-              tiled vs multi-lane, train + forward paths. Proves
-              bit-identity before timing, writes the golden-schema'd
-              BENCH_throughput.json. Options: --datasets waveform,har
-              --tile T (default 256) --lanes L (default 4) --seed S
-              --json FILE (default BENCH_throughput.json) --smoke
-              (tiny CI sizes, same schema)
+              tiled vs multi-lane, train + forward paths, plus the
+              multi-tenant serving family (aggregate samples/s of 8
+              sessions on 2/4 shards vs the single-session baseline).
+              Proves bit-identity before timing, writes the
+              golden-schema'd BENCH_throughput.json. Options:
+              --datasets waveform,har --tile T (default 256)
+              --lanes L (default 4) --seed S --json FILE (default
+              BENCH_throughput.json) --smoke (tiny CI sizes, same
+              schema)
   report      profile a training run with telemetry forced on: per-stage
               time share, samples/s, saturation rate, raw-word occupancy
               histogram and a headroom recommendation per stage. Takes
               the train options (classifier off by default); --json FILE
               also writes the schema-validated telemetry snapshot
+  serve       run a synthetic multi-tenant workload through the serving
+              layer: one training session per tenant, sharded across
+              worker threads with per-tenant bounded queues, round-robin
+              quanta and shape-coalesced scheduling (see SERVE OPTIONS)
   artifacts   list AOT executables from the manifest
   timing      clock/latency model for EASI vs RP+EASI
 
@@ -155,7 +174,38 @@ TRAIN OPTIONS:
                                       a schema-validated snapshot written
                                       at the end of the run)
   --telemetry-out FILE               (snapshot path, implies --telemetry;
-                                      default TELEMETRY_snapshot.json)
+                                      default TELEMETRY_snapshot.json.
+                                      Also routes the periodic JSONL
+                                      progress events off stdout into a
+                                      sibling FILE with extension
+                                      .events.jsonl)
+  --telemetry-events FILE            (explicit JSONL event path, implies
+                                      --telemetry; overrides the sibling
+                                      derivation)
+
+SERVE OPTIONS:
+  --tenants N --shards S             (default 16 tenants on 4 shards)
+  --batch B --batches N              (rows per batch / batches per
+                                      tenant; default 256 x 32)
+  --arrival uniform|skewed[:R]|bursty[:B]
+                                     (traffic shape; skewed sends R x
+                                      the batches through tenant 0,
+                                      default uniform)
+  --stages LIST --precision P        (pin every tenant to one graph
+                                      shape; default cycles a mixed
+                                      f32/q4.12 preset)
+  --queue-depth Q --quantum K        (per-tenant ingress depth and
+                                      batches per scheduler round)
+  --evict-idle                       (checkpoint-evict sessions that saw
+                                      no traffic in a round; restores
+                                      are transparent and bit-exact)
+  --telemetry                        (per-tenant datapath telemetry in
+                                      the report and JSON)
+  --json FILE                        (write the schema-validated
+                                      SERVE_report.json)
+  --smoke                            (CI sizes: 8 tenants, 2 shards,
+                                      mixed graphs, telemetry on)
+  --seed S
 ";
 
 /// Load a dataset by CLI name, standardised (zero mean / unit variance
@@ -515,6 +565,62 @@ fn cmd_bench(args: &Args) -> Result<()> {
         .context("BENCH_throughput schema self-check")?;
     std::fs::write(&path, text).with_context(|| format!("writing {path}"))?;
     println!("wrote {path}");
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use dimred::serve::workload::{ArrivalPattern, ServeOptions};
+    let smoke = args.flag("smoke");
+    // Smoke: small enough for CI, mixed f32/fxp graphs (the preset),
+    // telemetry on so the report carries per-tenant health to validate.
+    let defaults = if smoke {
+        ServeOptions {
+            tenants: 8,
+            shards: 2,
+            batch: 64,
+            batches_per_tenant: 4,
+            telemetry: true,
+            ..ServeOptions::default()
+        }
+    } else {
+        ServeOptions::default()
+    };
+    let opts = ServeOptions {
+        tenants: args.usize_or("tenants", defaults.tenants)?,
+        shards: args.usize_or("shards", defaults.shards)?,
+        batch: args.usize_or("batch", defaults.batch)?,
+        batches_per_tenant: args.usize_or("batches", defaults.batches_per_tenant)?,
+        queue_depth: args.usize_or("queue-depth", defaults.queue_depth)?,
+        quantum: args.usize_or("quantum", defaults.quantum)?,
+        arrival: ArrivalPattern::parse(&args.str_or("arrival", "uniform"))?,
+        stages: args.opt_str("stages").map(str::to_string),
+        precision: args.opt_str("precision").map(str::to_string),
+        telemetry: defaults.telemetry || args.flag("telemetry"),
+        evict_idle: args.flag("evict-idle"),
+        seed: args.u64_or("seed", defaults.seed)?,
+    };
+    println!(
+        "# serve: tenants={} shards={} batch={} batches/tenant={} arrival={}{}",
+        opts.tenants,
+        opts.shards,
+        opts.batch,
+        opts.batches_per_tenant,
+        opts.arrival.label(),
+        if smoke { " (smoke)" } else { "" }
+    );
+    let report = dimred::serve::workload::run(&opts)?;
+    print!("{}", dimred::serve::report::render(&report));
+    if let Some(path) = args.opt_str("json") {
+        let json = dimred::serve::report::to_json(&opts, &report);
+        let text = json.to_string_pretty();
+        // Self-check against the golden schema — with telemetry on this
+        // also validates every tenant's health snapshot, which is what
+        // the CI smoke step relies on.
+        dimred::serve::report::validate(&dimred::util::json::Json::parse(&text)?, opts.telemetry)
+            .context("SERVE_report schema self-check")?;
+        std::fs::write(path, text).with_context(|| format!("writing {path}"))?;
+        println!("wrote {path}");
+    }
     Ok(())
 }
 

@@ -1,0 +1,37 @@
+//! L4 serving layer: many concurrent training sessions, sharded across
+//! worker threads.
+//!
+//! The paper's pitch is a *scalable* DR engine serving heavy traffic;
+//! the coordinator trains exactly one stream. This module multiplexes
+//! [`crate::coordinator::Session`]s across tenants:
+//!
+//! ```text
+//!   tenant producers ──► per-tenant bounded queues ──► shard workers
+//!        (ingress)            (backpressure)          (round-robin +
+//!                                                      shape-coalesced)
+//!                                   │
+//!              SessionRegistry ◄────┘  evict ⇄ restore (checkpoints)
+//! ```
+//!
+//! * [`registry`] — tenant-keyed session store with checkpoint-based
+//!   evict/restore (PR 5's stage-state save/restore; restored
+//!   fixed-point sessions continue bit-exactly).
+//! * [`shard`] — a worker owning a set of tenants: bounded ingress
+//!   queues generalizing the single-stream batcher, a round-robin
+//!   quantum so no tenant starves under skewed arrival, and per-round
+//!   coalescing of pending batches by graph shape so same-shape tiles
+//!   run back to back.
+//! * [`workload`] — synthetic multi-tenant drivers for `dimred serve`
+//!   and the bench `multi_tenant` scenario family (tenant count,
+//!   arrival pattern, per-tenant cascade/precision).
+//! * [`report`] — schema-validated JSON + text rendering of a serve
+//!   run, with per-tenant latency percentiles and telemetry health.
+
+pub mod registry;
+pub mod report;
+pub mod shard;
+pub mod workload;
+
+pub use registry::SessionRegistry;
+pub use shard::{RoundStats, Shard, ShardOptions, TenantIngress, TenantOutcome};
+pub use workload::{ArrivalPattern, ServeOptions, ServeReport, TenantReport};

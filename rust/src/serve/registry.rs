@@ -1,0 +1,192 @@
+//! Tenant-keyed session store with checkpoint-based evict/restore.
+//!
+//! Each tenant owns one [`Session`]. A session is either *live* (trainer
+//! resident in memory) or *evicted* (collapsed to a
+//! [`SessionCheckpoint`]: stage-graph raw words, metrics, remaining
+//! reconfig schedule). Eviction is how a serving host caps resident
+//! state under many tenants — and because fixed-point stage state is
+//! saved as raw words, a restored session continues **bit-exactly**
+//! where it left off (proven in `tests/serve.rs`).
+
+use crate::config::{Backend, ExperimentConfig};
+use crate::coordinator::{Session, SessionCheckpoint, TelemetrySink};
+use crate::telemetry::Metrics;
+use anyhow::{bail, ensure, Result};
+use std::collections::HashMap;
+
+enum TenantSlot {
+    Live(Box<Session<'static>>),
+    Evicted(SessionCheckpoint),
+}
+
+/// Session store keyed by tenant id.
+#[derive(Default)]
+pub struct SessionRegistry {
+    slots: HashMap<String, TenantSlot>,
+    restores: HashMap<String, u64>,
+}
+
+impl SessionRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a tenant with a fresh session. Serving is native-only
+    /// (checkpoints need the stage graph; PJRT state is opaque), and the
+    /// session's JSONL event sink is disabled — interleaved progress
+    /// lines from many tenants would be noise; the serving layer reports
+    /// through its own surface.
+    pub fn create(&mut self, tenant: &str, cfg: &ExperimentConfig) -> Result<()> {
+        ensure!(
+            cfg.backend == Backend::Native,
+            "serving sessions run on the native backend only"
+        );
+        ensure!(
+            !self.slots.contains_key(tenant),
+            "tenant '{tenant}' already registered"
+        );
+        let mut s = Session::new(cfg, None)?;
+        s.set_event_sink(TelemetrySink::Disabled);
+        self.slots
+            .insert(tenant.to_string(), TenantSlot::Live(Box::new(s)));
+        Ok(())
+    }
+
+    /// The tenant's live session, transparently restoring it from its
+    /// checkpoint if it was evicted.
+    pub fn session_mut(&mut self, tenant: &str) -> Result<&mut Session<'static>> {
+        if matches!(self.slots.get(tenant), Some(TenantSlot::Evicted(_))) {
+            let Some(TenantSlot::Evicted(ck)) = self.slots.remove(tenant) else {
+                unreachable!("checked evicted above");
+            };
+            // Keep the checkpoint if the rebuild fails, so a transient
+            // error does not lose the tenant's state.
+            match Session::restore(ck.clone(), None) {
+                Ok(mut s) => {
+                    s.set_event_sink(TelemetrySink::Disabled);
+                    self.slots
+                        .insert(tenant.to_string(), TenantSlot::Live(Box::new(s)));
+                    *self.restores.entry(tenant.to_string()).or_insert(0) += 1;
+                }
+                Err(e) => {
+                    self.slots
+                        .insert(tenant.to_string(), TenantSlot::Evicted(ck));
+                    return Err(e);
+                }
+            }
+        }
+        match self.slots.get_mut(tenant) {
+            Some(TenantSlot::Live(s)) => Ok(s),
+            Some(TenantSlot::Evicted(_)) => unreachable!("restored above"),
+            None => bail!("unknown tenant '{tenant}'"),
+        }
+    }
+
+    /// Collapse a live session to its checkpoint. Idempotent: evicting
+    /// an already-evicted tenant is a no-op.
+    pub fn evict(&mut self, tenant: &str) -> Result<()> {
+        match self.slots.get_mut(tenant) {
+            Some(slot) => {
+                if let TenantSlot::Live(s) = slot {
+                    let ck = s.checkpoint()?;
+                    *slot = TenantSlot::Evicted(ck);
+                }
+                Ok(())
+            }
+            None => bail!("unknown tenant '{tenant}'"),
+        }
+    }
+
+    pub fn is_live(&self, tenant: &str) -> bool {
+        matches!(self.slots.get(tenant), Some(TenantSlot::Live(_)))
+    }
+
+    /// How many times this tenant has been restored from a checkpoint.
+    pub fn restores(&self, tenant: &str) -> u64 {
+        self.restores.get(tenant).copied().unwrap_or(0)
+    }
+
+    /// The tenant's run metrics, live or evicted (checkpoints carry a
+    /// full metrics clone, reservoir included).
+    pub fn metrics_of(&self, tenant: &str) -> Option<&Metrics> {
+        match self.slots.get(tenant)? {
+            TenantSlot::Live(s) => Some(s.metrics()),
+            TenantSlot::Evicted(ck) => Some(ck.metrics()),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn tenants(&self) -> impl Iterator<Item = &str> {
+        self.slots.keys().map(String::as_str)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Batch;
+    use crate::linalg::Mat;
+
+    fn cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            train_classifier: false,
+            rot_warmup: 32,
+            ..Default::default()
+        }
+    }
+
+    fn batch(dim: usize, salt: usize) -> Batch {
+        Batch::Full(Mat::from_fn(64, dim, |i, j| {
+            ((i * 31 + j * 7 + salt * 13) % 17) as f32 / 17.0 - 0.5
+        }))
+    }
+
+    #[test]
+    fn create_evict_restore_roundtrip() {
+        let mut reg = SessionRegistry::new();
+        let c = cfg();
+        reg.create("t0", &c).unwrap();
+        assert!(reg.is_live("t0"));
+        for salt in 0..4 {
+            reg.session_mut("t0").unwrap().ingest(&batch(c.input_dim, salt)).unwrap();
+        }
+        reg.evict("t0").unwrap();
+        assert!(!reg.is_live("t0"));
+        // Metrics survive eviction.
+        assert_eq!(reg.metrics_of("t0").unwrap().samples_in, 256);
+        // Idempotent evict.
+        reg.evict("t0").unwrap();
+        // Touching the session transparently restores it.
+        reg.session_mut("t0").unwrap().ingest(&batch(c.input_dim, 4)).unwrap();
+        assert!(reg.is_live("t0"));
+        assert_eq!(reg.restores("t0"), 1);
+        assert_eq!(reg.metrics_of("t0").unwrap().samples_in, 320);
+    }
+
+    #[test]
+    fn duplicate_and_unknown_tenants_rejected() {
+        let mut reg = SessionRegistry::new();
+        reg.create("t0", &cfg()).unwrap();
+        assert!(reg.create("t0", &cfg()).is_err());
+        assert!(reg.session_mut("nope").is_err());
+        assert!(reg.evict("nope").is_err());
+        assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn pjrt_backend_rejected() {
+        let mut reg = SessionRegistry::new();
+        let c = ExperimentConfig {
+            backend: Backend::Pjrt,
+            ..cfg()
+        };
+        assert!(reg.create("t0", &c).is_err());
+    }
+}

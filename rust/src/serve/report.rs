@@ -1,0 +1,278 @@
+//! Serve-run reporting: schema-validated JSON (`SERVE_report.json`) and
+//! an aligned text table, following the bench/telemetry golden-schema
+//! discipline — the CLI validates its own output before writing, and CI
+//! validates the uploaded artifact.
+
+use super::workload::{ServeOptions, ServeReport};
+use crate::util::json::Json;
+use anyhow::{ensure, Context, Result};
+
+/// Serialise one serve run under the golden schema (see [`validate`]).
+pub fn to_json(opts: &ServeOptions, r: &ServeReport) -> Json {
+    Json::obj(vec![
+        ("experiment", Json::str("serve_report")),
+        ("schema_version", Json::num(1.0)),
+        ("tenants", Json::num(r.tenants.len() as f64)),
+        ("shards", Json::num(r.shards as f64)),
+        ("arrival", Json::str(r.arrival.clone())),
+        ("batch", Json::num(opts.batch as f64)),
+        ("batches_per_tenant", Json::num(opts.batches_per_tenant as f64)),
+        ("queue_depth", Json::num(opts.queue_depth as f64)),
+        ("quantum", Json::num(opts.quantum as f64)),
+        ("evict_idle", Json::Bool(opts.evict_idle)),
+        ("seed", Json::num(opts.seed as f64)),
+        ("elapsed_s", Json::num(r.elapsed_s)),
+        ("total_samples", Json::num(r.total_samples as f64)),
+        ("aggregate_samples_per_s", Json::num(r.aggregate_samples_per_s)),
+        (
+            "fairness_spread",
+            r.fairness_spread.map(Json::num).unwrap_or(Json::Null),
+        ),
+        (
+            "sessions",
+            Json::Arr(
+                r.tenants
+                    .iter()
+                    .map(|t| {
+                        let mut fields = vec![
+                            ("tenant", Json::str(t.tenant.clone())),
+                            ("shard", Json::num(t.shard as f64)),
+                            ("stages", Json::str(t.stages.clone())),
+                            ("precision", Json::str(t.precision.clone())),
+                            ("batches", Json::num(t.batches as f64)),
+                            ("samples", Json::num(t.samples as f64)),
+                            ("p50_ns", t.p50_ns.map(Json::num).unwrap_or(Json::Null)),
+                            ("p99_ns", t.p99_ns.map(Json::num).unwrap_or(Json::Null)),
+                            ("restores", Json::num(t.restores as f64)),
+                            (
+                                "completed_at_s",
+                                t.completed_at_s.map(Json::num).unwrap_or(Json::Null),
+                            ),
+                        ];
+                        if let Some(snap) = &t.telemetry {
+                            fields.push((
+                                "health",
+                                Json::Arr(
+                                    snap.all()
+                                        .map(|s| {
+                                            Json::obj(vec![
+                                                ("stage", Json::str(s.name.clone())),
+                                                (
+                                                    "sat_per_sample",
+                                                    Json::num(s.sat_per_sample()),
+                                                ),
+                                                ("max_bits", Json::num(s.max_bits() as f64)),
+                                                (
+                                                    "headroom_bits",
+                                                    s.headroom_bits()
+                                                        .map(|b| Json::num(b as f64))
+                                                        .unwrap_or(Json::Null),
+                                                ),
+                                                ("samples", Json::num(s.samples as f64)),
+                                            ])
+                                        })
+                                        .collect(),
+                                ),
+                            ));
+                        }
+                        Json::obj(fields)
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Golden-schema check for `SERVE_report.json`. With `expect_telemetry`
+/// every session must carry a non-empty per-tenant `health` block with
+/// sane counters — the CI smoke's validation of the per-tenant
+/// telemetry snapshot.
+pub fn validate(v: &Json, expect_telemetry: bool) -> Result<()> {
+    ensure!(
+        v.field("experiment")?.as_str()? == "serve_report",
+        "wrong experiment tag"
+    );
+    ensure!(
+        v.field("schema_version")?.as_usize()? == 1,
+        "unknown schema version"
+    );
+    let tenants = v.field("tenants")?.as_usize()?;
+    ensure!(tenants >= 1, "tenants must be >= 1");
+    ensure!(v.field("shards")?.as_usize()? >= 1, "shards must be >= 1");
+    v.field("arrival")?.as_str()?;
+    let total = v.field("total_samples")?.as_u64()?;
+    ensure!(total > 0, "total_samples must be positive");
+    let agg = v.field("aggregate_samples_per_s")?.as_f64()?;
+    ensure!(
+        agg.is_finite() && agg > 0.0,
+        "aggregate_samples_per_s must be positive, got {agg}"
+    );
+    match v.field("fairness_spread")? {
+        Json::Null => {}
+        other => {
+            let s = other.as_f64()?;
+            ensure!(s >= 1.0, "fairness spread is slowest/fastest, got {s}");
+        }
+    }
+    let sessions = v.field("sessions")?.as_arr()?;
+    ensure!(
+        sessions.len() == tenants,
+        "sessions count {} != tenants {}",
+        sessions.len(),
+        tenants
+    );
+    for s in sessions {
+        let tenant = s.field("tenant")?.as_str()?;
+        s.field("shard")?.as_usize()?;
+        s.field("stages")?.as_str()?;
+        s.field("precision")?.as_str()?;
+        let batches = s.field("batches")?.as_u64()?;
+        let samples = s.field("samples")?.as_u64()?;
+        ensure!(samples > 0, "tenant '{tenant}' processed no samples");
+        if batches > 0 {
+            s.field("p50_ns")?
+                .as_f64()
+                .with_context(|| format!("tenant '{tenant}' p50"))?;
+            s.field("p99_ns")?
+                .as_f64()
+                .with_context(|| format!("tenant '{tenant}' p99"))?;
+        }
+        s.field("restores")?.as_u64()?;
+        if expect_telemetry {
+            let health = s
+                .field("health")
+                .with_context(|| format!("tenant '{tenant}' missing telemetry health"))?
+                .as_arr()?;
+            ensure!(
+                !health.is_empty(),
+                "tenant '{tenant}' telemetry health is empty"
+            );
+            let mut seen_samples = 0u64;
+            for h in health {
+                h.field("stage")?.as_str()?;
+                let rate = h.field("sat_per_sample")?.as_f64()?;
+                ensure!(
+                    rate.is_finite() && rate >= 0.0,
+                    "sat_per_sample must be non-negative, got {rate}"
+                );
+                ensure!(
+                    h.field("max_bits")?.as_usize()? <= 32,
+                    "max_bits exceeds a raw word"
+                );
+                seen_samples += h.field("samples")?.as_u64()?;
+            }
+            ensure!(
+                seen_samples > 0,
+                "tenant '{tenant}' telemetry recorded no samples"
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Aligned text report.
+pub fn render(r: &ServeReport) -> String {
+    let mut s = format!(
+        "dimred serve — {} tenants on {} shards ({} arrival)\n",
+        r.tenants.len(),
+        r.shards,
+        r.arrival
+    );
+    s.push_str(&format!(
+        "aggregate: {:.0} samples/s over {:.3}s ({} samples)",
+        r.aggregate_samples_per_s, r.elapsed_s, r.total_samples
+    ));
+    if let Some(spread) = r.fairness_spread {
+        s.push_str(&format!("  fairness spread: {spread:.2}x"));
+    }
+    s.push('\n');
+    s.push_str(&format!(
+        "{:<6} {:>5} {:<34} {:<10} {:>7} {:>8} {:>10} {:>10} {:>8}\n",
+        "tenant", "shard", "stages", "precision", "batches", "samples", "p50", "p99", "restores"
+    ));
+    for t in &r.tenants {
+        let fmt_ns = |v: Option<f64>| {
+            v.map(|ns| crate::util::bench::fmt_duration(std::time::Duration::from_nanos(ns as u64)))
+                .unwrap_or_else(|| "-".into())
+        };
+        s.push_str(&format!(
+            "{:<6} {:>5} {:<34} {:<10} {:>7} {:>8} {:>10} {:>10} {:>8}\n",
+            t.tenant,
+            t.shard,
+            t.stages,
+            t.precision,
+            t.batches,
+            t.samples,
+            fmt_ns(t.p50_ns),
+            fmt_ns(t.p99_ns),
+            t.restores
+        ));
+        if let Some(snap) = &t.telemetry {
+            for h in snap.all() {
+                let headroom = h
+                    .headroom_bits()
+                    .map(|b| format!("{b}b"))
+                    .unwrap_or_else(|| "-".into());
+                s.push_str(&format!(
+                    "       health {:<14} sat/smp={:<8.3} max_bits={:<3} headroom={}\n",
+                    h.name,
+                    h.sat_per_sample(),
+                    h.max_bits(),
+                    headroom
+                ));
+            }
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::workload::{self, ArrivalPattern, ServeOptions};
+
+    fn tiny_opts(telemetry: bool) -> ServeOptions {
+        ServeOptions {
+            tenants: 2,
+            shards: 2,
+            batch: 16,
+            batches_per_tenant: 3,
+            arrival: ArrivalPattern::Uniform,
+            telemetry,
+            ..ServeOptions::default()
+        }
+    }
+
+    #[test]
+    fn report_roundtrips_and_validates() {
+        let opts = tiny_opts(true);
+        let r = workload::run(&opts).unwrap();
+        let json = to_json(&opts, &r);
+        let parsed = Json::parse(&json.to_string_pretty()).unwrap();
+        validate(&parsed, true).unwrap();
+        let table = render(&r);
+        assert!(table.contains("tenant"), "{table}");
+        assert!(table.contains("health"), "{table}");
+    }
+
+    #[test]
+    fn validate_rejects_drift_and_missing_telemetry() {
+        let opts = tiny_opts(false);
+        let r = workload::run(&opts).unwrap();
+        let good = to_json(&opts, &r);
+        // Without telemetry the relaxed check passes…
+        validate(&good, false).unwrap();
+        // …but the telemetry-expecting check fails (no health blocks).
+        assert!(validate(&good, true).is_err());
+        // Wrong tag / stale version / dropped sessions all fail.
+        let mut map = good.as_obj().unwrap().clone();
+        map.insert("experiment".into(), Json::str("something_else"));
+        assert!(validate(&Json::Obj(map), false).is_err());
+        let mut map = good.as_obj().unwrap().clone();
+        map.insert("schema_version".into(), Json::num(2.0));
+        assert!(validate(&Json::Obj(map), false).is_err());
+        let mut map = good.as_obj().unwrap().clone();
+        map.remove("sessions");
+        assert!(validate(&Json::Obj(map), false).is_err());
+    }
+}

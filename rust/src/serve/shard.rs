@@ -1,0 +1,255 @@
+//! A shard: one worker owning a set of tenants.
+//!
+//! Generalizes the single-stream batcher queue to N tenants: each
+//! tenant gets a bounded ingress queue (same backpressure contract —
+//! a full queue blocks that tenant's producer, nobody else's), and the
+//! shard drains them with a round-robin *quantum* so a tenant blasting
+//! batches cannot starve a trickling one. Within a round, pending
+//! batches are coalesced by graph shape (stage cascade + precision):
+//! same-shape tiles run back to back, which keeps the datapath's
+//! instruction/data locality under mixed-tenant traffic. The sort is
+//! stable, so each tenant's batches stay in FIFO order.
+
+use super::registry::SessionRegistry;
+use crate::config::ExperimentConfig;
+use crate::coordinator::Batch;
+use crate::telemetry::TelemetrySnapshot;
+use anyhow::{Context, Result};
+use std::sync::mpsc::{Receiver, SyncSender, TryRecvError};
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone, Copy)]
+pub struct ShardOptions {
+    /// Depth of each tenant's bounded ingress queue (batches).
+    pub queue_depth: usize,
+    /// Max batches drained per tenant per round-robin round — the
+    /// fairness knob: a backlogged tenant gets at most this much of the
+    /// shard per pass over the other tenants.
+    pub quantum: usize,
+    /// Evict live sessions that had no work this round (aggressive
+    /// memory cap; restores are transparent and bit-exact).
+    pub evict_idle: bool,
+}
+
+impl Default for ShardOptions {
+    fn default() -> Self {
+        Self {
+            queue_depth: 8,
+            quantum: 4,
+            evict_idle: false,
+        }
+    }
+}
+
+/// A tenant's ingress handle: producers push batches through it.
+/// Blocking send — a full queue is backpressure on that tenant only.
+pub struct TenantIngress {
+    pub tenant: String,
+    tx: SyncSender<Batch>,
+}
+
+impl TenantIngress {
+    pub fn send(&self, b: Batch) -> Result<()> {
+        self.tx
+            .send(b)
+            .map_err(|_| anyhow::anyhow!("shard hung up on tenant '{}'", self.tenant))
+    }
+}
+
+struct TenantQueue {
+    tenant: String,
+    /// Graph-shape key (stage cascade + precision label) — the
+    /// coalescing class.
+    shape: String,
+    rx: Receiver<Batch>,
+    /// Set when the producer hung up and the queue fully drained.
+    completed_at: Option<Duration>,
+}
+
+/// Per-round work summary.
+#[derive(Debug, Clone, Copy)]
+pub struct RoundStats {
+    pub batches: usize,
+    pub samples: u64,
+    /// Every tenant's producer has hung up and every queue is drained.
+    pub all_done: bool,
+}
+
+/// Final per-tenant summary a shard hands back to the workload driver.
+#[derive(Debug, Clone)]
+pub struct TenantOutcome {
+    pub tenant: String,
+    pub shard: usize,
+    pub shape: String,
+    pub batches: u64,
+    pub samples: u64,
+    pub p50_ns: Option<f64>,
+    pub p99_ns: Option<f64>,
+    pub restores: u64,
+    pub completed_at_s: Option<f64>,
+    pub telemetry: Option<TelemetrySnapshot>,
+}
+
+/// One worker: a registry of sessions plus their ingress queues.
+pub struct Shard {
+    pub id: usize,
+    registry: SessionRegistry,
+    queues: Vec<TenantQueue>,
+    opts: ShardOptions,
+    started: Instant,
+}
+
+impl Shard {
+    pub fn new(id: usize, opts: ShardOptions) -> Self {
+        Self {
+            id,
+            registry: SessionRegistry::new(),
+            queues: Vec::new(),
+            opts,
+            started: Instant::now(),
+        }
+    }
+
+    /// Register a tenant and hand back its ingress. The shape key
+    /// groups tenants whose batches can be coalesced.
+    pub fn add_tenant(&mut self, tenant: &str, cfg: &ExperimentConfig) -> Result<TenantIngress> {
+        let (tx, rx) = std::sync::mpsc::sync_channel(self.opts.queue_depth);
+        self.attach(tenant, cfg, rx)?;
+        Ok(TenantIngress {
+            tenant: tenant.to_string(),
+            tx,
+        })
+    }
+
+    /// Register a tenant draining an externally created queue (the
+    /// workload driver creates channels before moving the shard into
+    /// its worker thread).
+    pub fn attach(
+        &mut self,
+        tenant: &str,
+        cfg: &ExperimentConfig,
+        rx: Receiver<Batch>,
+    ) -> Result<()> {
+        let shape = format!(
+            "{}@{}",
+            cfg.graph_spec()
+                .with_context(|| format!("tenant '{tenant}' graph"))?
+                .stages_label(),
+            cfg.precision.label()
+        );
+        self.registry.create(tenant, cfg)?;
+        self.queues.push(TenantQueue {
+            tenant: tenant.to_string(),
+            shape,
+            rx,
+            completed_at: None,
+        });
+        Ok(())
+    }
+
+    pub fn registry(&self) -> &SessionRegistry {
+        &self.registry
+    }
+
+    pub fn registry_mut(&mut self) -> &mut SessionRegistry {
+        &mut self.registry
+    }
+
+    /// One scheduler round: drain up to `quantum` batches per tenant,
+    /// coalesce the round's worklist by graph shape (stable — per-tenant
+    /// FIFO preserved), ingest everything, then optionally evict
+    /// sessions that saw no traffic.
+    pub fn poll_round(&mut self) -> Result<RoundStats> {
+        let mut work: Vec<(usize, Batch)> = Vec::new();
+        for (qi, q) in self.queues.iter_mut().enumerate() {
+            if q.completed_at.is_some() {
+                continue;
+            }
+            for _ in 0..self.opts.quantum {
+                match q.rx.try_recv() {
+                    Ok(b) => work.push((qi, b)),
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        // Disconnected means drained AND hung up (mpsc
+                        // yields buffered messages first).
+                        q.completed_at = Some(self.started.elapsed());
+                        break;
+                    }
+                }
+            }
+        }
+        let mut had_work = vec![false; self.queues.len()];
+        for (qi, _) in &work {
+            had_work[*qi] = true;
+        }
+        // Coalesce: same-shape batches run back to back. Stable sort →
+        // each tenant's own batches keep their arrival order.
+        work.sort_by(|a, b| self.queues[a.0].shape.cmp(&self.queues[b.0].shape));
+
+        let batches = work.len();
+        let mut samples = 0u64;
+        for (qi, batch) in work {
+            let tenant = self.queues[qi].tenant.clone();
+            let session = self.registry.session_mut(&tenant)?;
+            session.ingest(&batch)?;
+            samples += batch.len() as u64;
+        }
+        if self.opts.evict_idle {
+            for qi in 0..self.queues.len() {
+                let q = &self.queues[qi];
+                if q.completed_at.is_none() && !had_work[qi] && self.registry.is_live(&q.tenant) {
+                    let tenant = q.tenant.clone();
+                    self.registry.evict(&tenant)?;
+                }
+            }
+        }
+        Ok(RoundStats {
+            batches,
+            samples,
+            all_done: self.queues.iter().all(|q| q.completed_at.is_some()),
+        })
+    }
+
+    /// Drive rounds until every tenant's stream completes. Sleeps
+    /// briefly on idle rounds so a waiting shard doesn't spin a core.
+    pub fn run_to_completion(&mut self) -> Result<()> {
+        loop {
+            let stats = self.poll_round()?;
+            if stats.all_done {
+                return Ok(());
+            }
+            if stats.batches == 0 {
+                std::thread::sleep(Duration::from_micros(50));
+            }
+        }
+    }
+
+    /// Final per-tenant summaries (restores evicted sessions to read
+    /// their telemetry snapshot).
+    pub fn tenant_outcomes(&mut self) -> Result<Vec<TenantOutcome>> {
+        let mut out = Vec::with_capacity(self.queues.len());
+        for qi in 0..self.queues.len() {
+            let (tenant, shape, completed_at) = {
+                let q = &self.queues[qi];
+                (q.tenant.clone(), q.shape.clone(), q.completed_at)
+            };
+            let shard = self.id;
+            let restores = self.registry.restores(&tenant);
+            let session = self.registry.session_mut(&tenant)?;
+            let m = session.metrics();
+            out.push(TenantOutcome {
+                tenant,
+                shard,
+                shape,
+                batches: m.batches,
+                samples: m.samples_in,
+                p50_ns: m.step_latency.percentile(50.0).map(|d| d.as_nanos() as f64),
+                p99_ns: m.step_latency.percentile(99.0).map(|d| d.as_nanos() as f64),
+                restores,
+                completed_at_s: completed_at.map(|d| d.as_secs_f64()),
+                telemetry: session.trainer().telemetry_snapshot(),
+            });
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,369 @@
+//! Synthetic multi-tenant workload driver: the engine behind
+//! `dimred serve` and the bench `multi_tenant` scenario family.
+//!
+//! Spins up one producer thread per tenant (arrival pattern: uniform,
+//! skewed or bursty), shards tenants round-robin across worker threads,
+//! and reports aggregate throughput, per-tenant latency percentiles,
+//! restore counts and a fairness spread (slowest / fastest tenant
+//! completion — 1.0 is perfectly fair).
+
+use super::shard::{Shard, ShardOptions, TenantOutcome};
+use crate::config::{ExperimentConfig, PipelineMode};
+use crate::coordinator::Batch;
+use crate::fxp::Precision;
+use crate::linalg::Mat;
+use crate::telemetry::TelemetrySnapshot;
+use anyhow::{bail, ensure, Context, Result};
+use std::time::{Duration, Instant};
+
+/// How tenant traffic arrives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArrivalPattern {
+    /// Every tenant sends the same batch count, as fast as accepted.
+    Uniform,
+    /// Tenant 0 sends `ratio`× the base batch count (a heavy tenant
+    /// leaning on everyone else's scheduler slots).
+    Skewed { ratio: usize },
+    /// Batches arrive in bursts of `burst` with pauses between.
+    Bursty { burst: usize },
+}
+
+impl ArrivalPattern {
+    pub fn parse(s: &str) -> Result<Self> {
+        let (head, arg) = match s.split_once(':') {
+            Some((h, a)) => (h, Some(a)),
+            None => (s, None),
+        };
+        let num = |default: usize| -> Result<usize> {
+            match arg {
+                None => Ok(default),
+                Some(a) => a
+                    .parse::<usize>()
+                    .ok()
+                    .filter(|&n| n >= 1)
+                    .with_context(|| format!("bad arrival parameter '{a}'")),
+            }
+        };
+        match head {
+            "uniform" => Ok(Self::Uniform),
+            "skewed" => Ok(Self::Skewed { ratio: num(10)? }),
+            "bursty" => Ok(Self::Bursty { burst: num(8)? }),
+            other => bail!("unknown arrival pattern '{other}' (uniform|skewed[:N]|bursty[:B])"),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Self::Uniform => "uniform".into(),
+            Self::Skewed { ratio } => format!("skewed:{ratio}"),
+            Self::Bursty { burst } => format!("bursty:{burst}"),
+        }
+    }
+}
+
+/// Knobs for one serve run.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    pub tenants: usize,
+    pub shards: usize,
+    /// Rows per batch.
+    pub batch: usize,
+    /// Base batches per tenant (the skewed pattern multiplies tenant
+    /// 0's count).
+    pub batches_per_tenant: usize,
+    pub queue_depth: usize,
+    pub quantum: usize,
+    pub arrival: ArrivalPattern,
+    /// Stage cascade for every tenant; `None` cycles the mixed preset
+    /// (f32 rp-easi / q4.12 rp-easi / q4.12 whiten-only).
+    pub stages: Option<String>,
+    /// Precision for every tenant; `None` cycles the mixed preset.
+    pub precision: Option<String>,
+    pub telemetry: bool,
+    pub evict_idle: bool,
+    pub seed: u64,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self {
+            tenants: 16,
+            shards: 4,
+            batch: 256,
+            batches_per_tenant: 32,
+            queue_depth: 8,
+            quantum: 4,
+            arrival: ArrivalPattern::Uniform,
+            stages: None,
+            precision: None,
+            telemetry: false,
+            evict_idle: false,
+            seed: 2018,
+        }
+    }
+}
+
+/// One tenant's final row in the report.
+#[derive(Debug, Clone)]
+pub struct TenantReport {
+    pub tenant: String,
+    pub shard: usize,
+    pub stages: String,
+    pub precision: String,
+    pub batches: u64,
+    pub samples: u64,
+    pub p50_ns: Option<f64>,
+    pub p99_ns: Option<f64>,
+    pub restores: u64,
+    pub completed_at_s: Option<f64>,
+    pub telemetry: Option<TelemetrySnapshot>,
+}
+
+/// Outcome of a serve run.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub tenants: Vec<TenantReport>,
+    pub shards: usize,
+    pub arrival: String,
+    pub elapsed_s: f64,
+    pub total_samples: u64,
+    pub aggregate_samples_per_s: f64,
+    /// Slowest / fastest tenant completion time (1.0 = perfectly fair).
+    pub fairness_spread: Option<f64>,
+}
+
+/// The per-tenant experiment config. With no stage/precision override
+/// the preset cycles three graph shapes so shards always carry mixed
+/// f32/fxp traffic: the interesting scheduling case.
+pub fn tenant_config(t: usize, opts: &ServeOptions) -> Result<ExperimentConfig> {
+    let mut cfg = ExperimentConfig {
+        dataset: format!("synthetic-t{t}"),
+        mode: PipelineMode::RpEasi,
+        rot_warmup: 64,
+        batch: opts.batch,
+        queue_depth: opts.queue_depth,
+        seed: opts.seed + t as u64,
+        train_classifier: false,
+        telemetry: opts.telemetry,
+        ..Default::default()
+    };
+    if opts.stages.is_some() || opts.precision.is_some() {
+        cfg.stages = opts.stages.clone();
+        if let Some(p) = &opts.precision {
+            cfg.precision = Precision::parse(p)?;
+        }
+    } else {
+        match t % 3 {
+            0 => {} // f32 rp-easi
+            1 => cfg.precision = Precision::parse("q4.12")?,
+            _ => {
+                cfg.stages = Some("whiten:gha".into());
+                cfg.precision = Precision::parse("q4.12")?;
+            }
+        }
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+/// Deterministic synthetic batch: varied across tenants and batch
+/// indices, bounded to ±0.5 so fixed-point tenants stay in range.
+fn synth_batch(tenant: usize, idx: usize, rows: usize, dim: usize) -> Batch {
+    Batch::Full(Mat::from_fn(rows, dim, |i, j| {
+        ((i * 31 + j * 7 + tenant * 13 + idx * 101) % 17) as f32 / 17.0 - 0.5
+    }))
+}
+
+/// Drive a full multi-tenant run: producers → shards → joined report.
+pub fn run(opts: &ServeOptions) -> Result<ServeReport> {
+    ensure!(opts.tenants >= 1, "need at least one tenant");
+    ensure!(opts.shards >= 1, "need at least one shard");
+    ensure!(opts.batches_per_tenant >= 1, "need at least one batch per tenant");
+    let shard_opts = ShardOptions {
+        queue_depth: opts.queue_depth,
+        quantum: opts.quantum,
+        evict_idle: opts.evict_idle,
+    };
+    let started = Instant::now();
+
+    // Tenants round-robin across shards; channels are created here so
+    // producer threads get the senders while receivers move into the
+    // shard workers (sessions are built inside the worker thread — they
+    // are not `Send`).
+    let mut per_shard: Vec<Vec<(String, ExperimentConfig, std::sync::mpsc::Receiver<Batch>)>> =
+        (0..opts.shards).map(|_| Vec::new()).collect();
+    let mut producers = Vec::with_capacity(opts.tenants);
+    for t in 0..opts.tenants {
+        let cfg = tenant_config(t, opts)?;
+        let (tx, rx) = std::sync::mpsc::sync_channel::<Batch>(opts.queue_depth);
+        per_shard[t % opts.shards].push((format!("t{t}"), cfg.clone(), rx));
+        let n_batches = match opts.arrival {
+            ArrivalPattern::Skewed { ratio } if t == 0 => opts.batches_per_tenant * ratio,
+            _ => opts.batches_per_tenant,
+        };
+        let (rows, dim, arrival) = (opts.batch, cfg.input_dim, opts.arrival);
+        let handle = std::thread::Builder::new()
+            .name(format!("serve-tenant-{t}"))
+            .spawn(move || -> Result<()> {
+                for i in 0..n_batches {
+                    if let ArrivalPattern::Bursty { burst } = arrival {
+                        if i > 0 && i % burst == 0 {
+                            std::thread::sleep(Duration::from_micros(200));
+                        }
+                    }
+                    tx.send(synth_batch(t, i, rows, dim))
+                        .map_err(|_| anyhow::anyhow!("shard hung up on tenant t{t}"))?;
+                }
+                Ok(())
+            })
+            .context("spawning tenant producer")?;
+        producers.push(handle);
+    }
+
+    let mut workers = Vec::with_capacity(opts.shards);
+    for (sid, tenants) in per_shard.into_iter().enumerate() {
+        let handle = std::thread::Builder::new()
+            .name(format!("serve-shard-{sid}"))
+            .spawn(move || -> Result<Vec<TenantOutcome>> {
+                let mut shard = Shard::new(sid, shard_opts);
+                for (name, cfg, rx) in tenants {
+                    shard.attach(&name, &cfg, rx)?;
+                }
+                shard.run_to_completion()?;
+                shard.tenant_outcomes()
+            })
+            .context("spawning shard worker")?;
+        workers.push(handle);
+    }
+
+    for p in producers {
+        match p.join() {
+            Ok(r) => r?,
+            Err(panic) => std::panic::resume_unwind(panic),
+        }
+    }
+    let mut outcomes: Vec<TenantOutcome> = Vec::with_capacity(opts.tenants);
+    for w in workers {
+        match w.join() {
+            Ok(r) => outcomes.extend(r?),
+            Err(panic) => std::panic::resume_unwind(panic),
+        }
+    }
+    let elapsed_s = started.elapsed().as_secs_f64().max(1e-9);
+
+    // "t2" before "t10": numeric order via (len, lexicographic).
+    outcomes.sort_by_key(|o| (o.tenant.len(), o.tenant.clone()));
+    let total_samples: u64 = outcomes.iter().map(|o| o.samples).sum();
+    let completions: Vec<f64> = outcomes.iter().filter_map(|o| o.completed_at_s).collect();
+    let fairness_spread = match (
+        completions.iter().cloned().fold(f64::INFINITY, f64::min),
+        completions.iter().cloned().fold(0.0f64, f64::max),
+    ) {
+        (min, max) if min.is_finite() && min > 0.0 => Some(max / min),
+        _ => None,
+    };
+    let tenants = outcomes
+        .into_iter()
+        .map(|o| {
+            let (stages, precision) = match o.shape.rsplit_once('@') {
+                Some((s, p)) => (s.to_string(), p.to_string()),
+                None => (o.shape.clone(), "f32".to_string()),
+            };
+            TenantReport {
+                tenant: o.tenant,
+                shard: o.shard,
+                stages,
+                precision,
+                batches: o.batches,
+                samples: o.samples,
+                p50_ns: o.p50_ns,
+                p99_ns: o.p99_ns,
+                restores: o.restores,
+                completed_at_s: o.completed_at_s,
+                telemetry: o.telemetry,
+            }
+        })
+        .collect();
+    Ok(ServeReport {
+        tenants,
+        shards: opts.shards,
+        arrival: opts.arrival.label(),
+        elapsed_s,
+        total_samples,
+        aggregate_samples_per_s: total_samples as f64 / elapsed_s,
+        fairness_spread,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrival_patterns_parse() {
+        assert_eq!(ArrivalPattern::parse("uniform").unwrap(), ArrivalPattern::Uniform);
+        assert_eq!(
+            ArrivalPattern::parse("skewed").unwrap(),
+            ArrivalPattern::Skewed { ratio: 10 }
+        );
+        assert_eq!(
+            ArrivalPattern::parse("skewed:3").unwrap(),
+            ArrivalPattern::Skewed { ratio: 3 }
+        );
+        assert_eq!(
+            ArrivalPattern::parse("bursty:4").unwrap(),
+            ArrivalPattern::Bursty { burst: 4 }
+        );
+        assert!(ArrivalPattern::parse("poisson").is_err());
+        assert!(ArrivalPattern::parse("skewed:0").is_err());
+        assert_eq!(ArrivalPattern::parse("skewed:3").unwrap().label(), "skewed:3");
+    }
+
+    #[test]
+    fn preset_cycles_mixed_graph_shapes() {
+        let opts = ServeOptions::default();
+        let c0 = tenant_config(0, &opts).unwrap();
+        let c1 = tenant_config(1, &opts).unwrap();
+        let c2 = tenant_config(2, &opts).unwrap();
+        assert!(!c0.precision.is_fixed());
+        assert!(c1.precision.is_fixed());
+        assert_eq!(c2.stages.as_deref(), Some("whiten:gha"));
+        // Distinct seeds decorrelate tenant initialisation.
+        assert_ne!(c0.seed, c1.seed);
+        // Overrides pin every tenant to one shape.
+        let opts = ServeOptions {
+            precision: Some("q8.16".into()),
+            ..ServeOptions::default()
+        };
+        assert_eq!(tenant_config(2, &opts).unwrap().precision.label(), "q8.16");
+        assert!(tenant_config(2, &opts).unwrap().stages.is_none());
+    }
+
+    #[test]
+    fn small_uniform_run_completes() {
+        let opts = ServeOptions {
+            tenants: 3,
+            shards: 2,
+            batch: 16,
+            batches_per_tenant: 4,
+            ..ServeOptions::default()
+        };
+        let r = run(&opts).unwrap();
+        assert_eq!(r.tenants.len(), 3);
+        assert_eq!(r.total_samples, 3 * 4 * 16);
+        for t in &r.tenants {
+            assert_eq!(t.batches, 4);
+            assert_eq!(t.samples, 64);
+            assert!(t.p50_ns.is_some());
+            assert!(t.completed_at_s.is_some());
+        }
+        assert!(r.aggregate_samples_per_s > 0.0);
+        let spread = r.fairness_spread.unwrap();
+        assert!(spread >= 1.0, "spread {spread}");
+        // Tenants land on both shards (round-robin: t0,t2 → shard 0,
+        // t1 → shard 1).
+        assert_eq!(r.tenants[0].shard, 0);
+        assert_eq!(r.tenants[1].shard, 1);
+        assert_eq!(r.tenants[2].shard, 0);
+    }
+}

@@ -60,8 +60,12 @@ impl LatencyHistogram {
     }
 }
 
-/// Aggregated metrics for one training run.
-#[derive(Debug)]
+/// Aggregated metrics for one training run. `Clone` so a session
+/// checkpoint can carry its counters and latency reservoir across an
+/// evict/restore cycle (the `started` instant is copied too: a restored
+/// session's elapsed time spans the whole logical run, eviction
+/// included).
+#[derive(Debug, Clone)]
 pub struct Metrics {
     started: Instant,
     pub samples_in: u64,

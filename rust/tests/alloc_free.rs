@@ -5,20 +5,23 @@
 //! allocations per sample** — including the periodic host-side cadences
 //! (whitening-coefficient refresh, rotation retraction), which reuse
 //! member buffers. This binary installs a counting global allocator and
-//! asserts the contract at two levels: the raw `FxpDrUnit` kernel loop
-//! (bit-exact and STE) and the coordinator's `NativeTrainer` consuming
-//! whole `Batch` tiles.
+//! asserts the contract at three levels: the raw `FxpDrUnit` kernel loop
+//! (bit-exact and STE), the coordinator's `NativeTrainer` consuming
+//! whole `Batch` tiles, and the batcher's producer thread once a
+//! recycling consumer has primed the buffer-return lane.
 //!
 //! Kept as a single `#[test]` on purpose: the counter is global, and a
 //! sibling test running on another harness thread would pollute the
 //! measurement window.
 
 use dimred::config::{ExperimentConfig, PipelineMode};
+use dimred::coordinator::batcher::{spawn_producer, EpochSource};
 use dimred::coordinator::{Batch, Trainer};
 use dimred::fxp::{FxpDrUnit, FxpSpec, FxpUnitConfig, Precision, QuantMode};
 use dimred::linalg::Mat;
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 struct CountingAlloc;
 
@@ -117,6 +120,73 @@ fn trainer_is_allocation_free(telemetry: bool) {
     }
 }
 
+fn producer_recycling_is_allocation_free() {
+    // 64 rows × 8 epochs = 512 rows → 64 full batches of 8, depth 2.
+    let data = Arc::new(Mat::from_fn(64, 8, |i, j| {
+        ((i * 31 + j * 7) % 17) as f32 / 17.0 - 0.5
+    }));
+    let src = EpochSource::new(data, 8);
+    let queue_depth = 2usize;
+    let (rx, prod) = spawn_producer(Box::new(src), 8, queue_depth);
+
+    // Prime the return lane by *withholding* recycling: while nothing
+    // has been returned, every batch boundary is a recycle miss, and
+    // each miss adds one buffer to circulation. queue_depth + 2 misses
+    // cover every buffer that can be in flight at once (producer's own
+    // + queued + one at the consumer), so after this no poll of the
+    // lane can ever come up empty again.
+    let held: Vec<Batch> = (0..queue_depth + 2).map(|_| rx.recv().unwrap()).collect();
+    // While the consumer sits on the held batches, the producer is
+    // guaranteed to find the queue full and take the blocking-send path
+    // at least once (the wait counter is bumped before the block) — so
+    // the channel's one-time waker registration is also paid for before
+    // the measured window opens.
+    while prod.backpressure_waits.load(Ordering::Relaxed) == 0 {
+        assert!(
+            !prod.handle.is_finished(),
+            "producer exited without ever blocking"
+        );
+        std::thread::yield_now();
+    }
+    std::thread::sleep(std::time::Duration::from_millis(25));
+    for b in held {
+        prod.recycle(b);
+    }
+
+    // Measured steady-state window: 50 batches through a non-blocking
+    // recv → recycle loop (try_recv never registers a waker, so the
+    // consumer side cannot allocate either). The window deliberately
+    // ends while the producer is still mid-stream (it runs at most
+    // queue_depth + 1 batches ahead of the consumer), so thread-exit
+    // bookkeeping cannot pollute the count.
+    let before = allocs();
+    for _ in 0..50 {
+        let b = loop {
+            match rx.try_recv() {
+                Ok(b) => break b,
+                Err(std::sync::mpsc::TryRecvError::Empty) => std::thread::yield_now(),
+                Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                    panic!("producer ended inside the measured window")
+                }
+            }
+        };
+        prod.recycle(b);
+    }
+    let delta = allocs() - before;
+
+    let mut tail = 0usize;
+    for b in rx.iter() {
+        tail += 1;
+        prod.recycle(b);
+    }
+    prod.handle.join().unwrap().unwrap();
+    assert!(tail > 0, "window must close before the stream ends");
+    assert_eq!(
+        delta, 0,
+        "recycling producer allocated {delta} times over 50 steady-state batches"
+    );
+}
+
 #[test]
 fn steady_state_fxp_training_is_allocation_free() {
     unit_is_allocation_free(QuantMode::BitExact);
@@ -127,4 +197,7 @@ fn steady_state_fxp_training_is_allocation_free() {
     // the hot path.
     trainer_is_allocation_free(false);
     trainer_is_allocation_free(true);
+    // And the producer side of the bounded queue: once the consumer
+    // returns drained buffers, batch production allocates nothing.
+    producer_recycling_is_allocation_free();
 }

@@ -1,0 +1,158 @@
+//! Integration tests for the multi-tenant serving layer.
+//!
+//! The load-bearing claim is the first test: a fixed-point session that
+//! is checkpoint-evicted mid-training and transparently restored
+//! continues **bit-exactly** — its forward transform and separation
+//! matrix equal an uninterrupted oracle run word for word, across
+//! uniform and mixed precision plans and both quantization modes
+//! (bit-exact and STE). That is what makes eviction a safe memory cap
+//! rather than a numerics event.
+
+use dimred::config::ExperimentConfig;
+use dimred::coordinator::{Batch, Session};
+use dimred::fxp::Precision;
+use dimred::linalg::Mat;
+use dimred::serve::workload::{self, ArrivalPattern, ServeOptions};
+use dimred::serve::{SessionRegistry, Shard, ShardOptions};
+
+fn cfg(precision: &str) -> ExperimentConfig {
+    ExperimentConfig {
+        precision: Precision::parse(precision).unwrap(),
+        rot_warmup: 32,
+        train_classifier: false,
+        ..Default::default()
+    }
+}
+
+fn batch(dim: usize, salt: usize) -> Batch {
+    Batch::Full(Mat::from_fn(64, dim, |i, j| {
+        ((i * 31 + j * 7 + salt * 13) % 17) as f32 / 17.0 - 0.5
+    }))
+}
+
+#[test]
+fn evicted_sessions_restore_bit_exactly() {
+    // Uniform bit-exact, uniform STE, and a mixed-width plan with STE:
+    // every checkpointed quantity is raw fixed-point words, so restore
+    // must be exact in all three.
+    for precision in [
+        "q4.12",
+        "rp=q4.12,whiten=q4.12,rot=q4.12,qat=ste",
+        "rp=q8.16,whiten=q4.12,rot=q4.12,qat=ste",
+    ] {
+        let c = cfg(precision);
+        let probe = Mat::from_fn(48, c.input_dim, |i, j| {
+            ((i * 13 + j * 5) % 23) as f32 / 23.0 - 0.5
+        });
+
+        // Oracle: one uninterrupted session over 8 batches.
+        let mut oracle = Session::new(&c, None).unwrap();
+        for salt in 0..8 {
+            oracle.ingest(&batch(c.input_dim, salt)).unwrap();
+        }
+
+        // Test path: same stream, but collapsed to a checkpoint after
+        // batch 4 and transparently restored by the next touch.
+        let mut reg = SessionRegistry::new();
+        reg.create("t", &c).unwrap();
+        for salt in 0..4 {
+            let s = reg.session_mut("t").unwrap();
+            s.ingest(&batch(c.input_dim, salt)).unwrap();
+        }
+        reg.evict("t").unwrap();
+        assert!(!reg.is_live("t"));
+        for salt in 4..8 {
+            let s = reg.session_mut("t").unwrap();
+            s.ingest(&batch(c.input_dim, salt)).unwrap();
+        }
+        assert_eq!(reg.restores("t"), 1);
+
+        let restored = reg.session_mut("t").unwrap();
+        assert_eq!(
+            oracle.metrics().samples_in,
+            restored.metrics().samples_in,
+            "metrics diverged for {precision}"
+        );
+        let a = oracle.trainer().transform_rows(&probe);
+        let b = restored.trainer().transform_rows(&probe);
+        assert_eq!(
+            a.as_slice(),
+            b.as_slice(),
+            "forward transform diverged after evict/restore for {precision}"
+        );
+        assert_eq!(
+            oracle.trainer().separation_matrix().as_slice(),
+            restored.trainer().separation_matrix().as_slice(),
+            "separation matrix diverged after evict/restore for {precision}"
+        );
+    }
+}
+
+#[test]
+fn round_robin_quantum_prevents_starvation() {
+    // A heavy tenant with a 10:1 backlog must not starve the light one:
+    // the per-round quantum hands each live tenant the same share.
+    let c = cfg("f32");
+    let mut shard = Shard::new(
+        0,
+        ShardOptions {
+            queue_depth: 128,
+            quantum: 2,
+            evict_idle: false,
+        },
+    );
+    let heavy = shard.add_tenant("heavy", &c).unwrap();
+    let light = shard.add_tenant("light", &c).unwrap();
+    for i in 0..100 {
+        heavy.send(batch(c.input_dim, i)).unwrap();
+    }
+    for i in 0..10 {
+        light.send(batch(c.input_dim, i)).unwrap();
+    }
+    drop(heavy);
+    drop(light);
+
+    for round in 0..5 {
+        let stats = shard.poll_round().unwrap();
+        assert!(stats.batches > 0, "round {round} did no work");
+    }
+    // 5 rounds × quantum 2: perfectly even shares, despite the 10:1
+    // backlog skew.
+    assert_eq!(shard.registry().metrics_of("heavy").unwrap().batches, 10);
+    assert_eq!(shard.registry().metrics_of("light").unwrap().batches, 10);
+
+    shard.run_to_completion().unwrap();
+    assert_eq!(shard.registry().metrics_of("heavy").unwrap().batches, 100);
+    assert_eq!(shard.registry().metrics_of("light").unwrap().batches, 10);
+}
+
+#[test]
+fn multi_tenant_workload_reports_and_validates() {
+    // Threaded end-to-end pass: 8 tenants (mixed f32/fxp preset) on 2
+    // shards, skewed arrivals, per-tenant telemetry — and the report
+    // must survive its own golden-schema validation.
+    let opts = ServeOptions {
+        tenants: 8,
+        shards: 2,
+        batch: 32,
+        batches_per_tenant: 3,
+        arrival: ArrivalPattern::Skewed { ratio: 3 },
+        telemetry: true,
+        ..ServeOptions::default()
+    };
+    let r = workload::run(&opts).unwrap();
+    assert_eq!(r.tenants.len(), 8);
+    assert_eq!(r.shards, 2);
+    // Tenant 0 carried the skew; everyone else sent the base count.
+    assert_eq!(r.tenants[0].batches, 9);
+    assert!(r.tenants[1..].iter().all(|t| t.batches == 3));
+    // The preset really does put mixed graph shapes in flight at once.
+    assert!(r.tenants.iter().any(|t| t.precision == "f32"));
+    assert!(r.tenants.iter().any(|t| t.precision != "f32"));
+    assert!(r.tenants.iter().all(|t| t.telemetry.is_some()));
+    assert!(r.aggregate_samples_per_s > 0.0);
+
+    let json = dimred::serve::report::to_json(&opts, &r);
+    let parsed = dimred::util::json::Json::parse(&json.to_string_pretty()).unwrap();
+    dimred::serve::report::validate(&parsed, true).unwrap();
+}
