@@ -129,11 +129,19 @@ pub struct ExperimentConfig {
     pub queue_depth: usize,
     /// Forward-path lanes for the *fixed-point* engine: its bulk
     /// transforms shard a tile's rows across this many threads
-    /// (deterministic merge, bit-identical outputs). Training updates
-    /// stay sequential regardless (the Sanger/EASI recursions are
-    /// order-dependent), and the f32 engine's bulk transform is a
-    /// single dense matmul, which ignores this knob. 1 = single-lane.
+    /// (deterministic merge, bit-identical outputs). The f32 engine's
+    /// bulk transform is a single dense matmul, which ignores this
+    /// knob. Training parallelism is governed separately by
+    /// `train_lanes`. 1 = single-lane.
     pub lanes: usize,
+    /// Training-path lanes for the fixed-point engine: shards the
+    /// entry quantizer's tile and the EASI STE shadow backward pass
+    /// across this many threads (those updates commute on disjoint
+    /// row blocks, so training stays bit-identical — see
+    /// `StageGraph::set_train_lanes`). Bit-exact integer updates and
+    /// the GHA STE prefix recursion remain sequential regardless.
+    /// 1 = sequential (never spawns).
+    pub train_lanes: usize,
     pub seed: u64,
     pub artifact_dir: PathBuf,
     /// Train the downstream classifier and report accuracy.
@@ -171,6 +179,7 @@ impl Default for ExperimentConfig {
             batch: 256,
             queue_depth: 4,
             lanes: 1,
+            train_lanes: 1,
             seed: 2018,
             artifact_dir: PathBuf::from("artifacts"),
             train_classifier: true,
@@ -246,6 +255,9 @@ impl ExperimentConfig {
         if let Some(x) = v.get("lanes") {
             c.lanes = x.as_usize()?;
         }
+        if let Some(x) = v.get("train_lanes") {
+            c.train_lanes = x.as_usize()?;
+        }
         if let Some(x) = v.get("seed") {
             c.seed = x.as_u64()?;
         }
@@ -298,6 +310,7 @@ impl ExperimentConfig {
         self.batch = args.usize_or("batch", self.batch)?;
         self.queue_depth = args.usize_or("queue-depth", self.queue_depth)?;
         self.lanes = args.usize_or("lanes", self.lanes)?;
+        self.train_lanes = args.usize_or("train-lanes", self.train_lanes)?;
         self.seed = args.u64_or("seed", self.seed)?;
         self.mlp_epochs = args.usize_or("mlp-epochs", self.mlp_epochs)?;
         if let Some(dir) = args.opt_str("artifacts") {
@@ -342,6 +355,7 @@ impl ExperimentConfig {
         anyhow::ensure!(self.batch >= 1, "batch must be >= 1");
         anyhow::ensure!(self.queue_depth >= 1, "queue_depth must be >= 1");
         anyhow::ensure!(self.lanes >= 1, "lanes must be >= 1");
+        anyhow::ensure!(self.train_lanes >= 1, "train_lanes must be >= 1");
         anyhow::ensure!(
             !(self.precision.is_fixed() && self.backend == Backend::Pjrt),
             "fixed-point precision runs on the native backend only \
@@ -420,6 +434,7 @@ impl ExperimentConfig {
             ("epochs", Json::num(self.epochs as f64)),
             ("batch", Json::num(self.batch as f64)),
             ("lanes", Json::num(self.lanes as f64)),
+            ("train_lanes", Json::num(self.train_lanes as f64)),
             ("seed", Json::num(self.seed as f64)),
             ("telemetry", Json::Bool(self.telemetry)),
         ];

@@ -244,8 +244,10 @@ pub struct NativeTrainer {
     graph: StageGraph,
     /// Dense scaled RP matrix for reports, whatever the backend.
     rp_dense: Option<Mat>,
-    /// Forward-path lanes for bulk transforms (training updates stay
-    /// sequential — the Sanger/EASI recursions are order-dependent).
+    /// Forward-path lanes for bulk transforms. Training-path sharding
+    /// is configured separately on the graph via `train_lanes` (the
+    /// commuting STE shadow pass shards; order-dependent recursions
+    /// stay sequential).
     lanes: usize,
 }
 
@@ -256,6 +258,7 @@ impl NativeTrainer {
         if cfg.telemetry {
             graph.enable_telemetry();
         }
+        graph.set_train_lanes(cfg.train_lanes.max(1));
         if cfg.stages.is_none() {
             // Legacy modes select the rotation mux (custom stage lists
             // start with every declared stage live).
@@ -569,6 +572,32 @@ mod tests {
         let one = run(1);
         for lanes in [2usize, 5, 64] {
             assert_eq!(one.as_slice(), run(lanes).as_slice(), "lanes={lanes}");
+        }
+    }
+
+    #[test]
+    fn fxp_training_bit_identical_across_train_lane_counts() {
+        // The sharded training paths (entry quantization, STE shadow
+        // backward) commute on disjoint row blocks: any train-lane
+        // count must reproduce the sequential fit exactly.
+        let data = Mat::from_fn(200, 32, |i, j| ((i * 17 + j * 3) % 29) as f32 / 29.0 - 0.5);
+        let run = |train_lanes: usize| {
+            let cfg = ExperimentConfig {
+                mode: PipelineMode::RpEasi,
+                precision: Precision::parse("q4.12").unwrap(),
+                train_lanes,
+                train_classifier: false,
+                ..Default::default()
+            };
+            let mut t = Trainer::from_config(&cfg, None).unwrap();
+            t.step(&Batch::Full(data.clone())).unwrap();
+            (t.separation_matrix(), t.transform_rows(&data))
+        };
+        let (sep1, y1) = run(1);
+        for lanes in [2usize, 7, 64] {
+            let (sep, y) = run(lanes);
+            assert_eq!(sep1.as_slice(), sep.as_slice(), "train_lanes={lanes}");
+            assert_eq!(y1.as_slice(), y.as_slice(), "train_lanes={lanes}");
         }
     }
 

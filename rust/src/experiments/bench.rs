@@ -35,6 +35,15 @@
 //! the scalability axis of the paper's pitch, measured through
 //! `serve::workload` with every tenant pinned to the same graph shape
 //! so the speedup isolates sharding, not precision mix.
+//!
+//! Since schema v5 every point carries a `simd` flag (whether the
+//! vectorized fixed-point dispatch was live for that measurement), and
+//! the fixed-point tiled cells come as explicit scalar-vs-simd row
+//! pairs: the same kernel timed with the dispatch forced off and in its
+//! natural state, preceded by a bit-identity preflight so the recorded
+//! `*_simd_over_scalar` speedups can only ever measure speed, never
+//! changed arithmetic. With the `simd` cargo feature off both rows of a
+//! pair time the scalar path and the speedup sits at ~1.
 
 use crate::experiments::grid;
 use crate::fxp::{FxpDrUnit, FxpRp, FxpSpec, FxpUnitConfig, Precision, QuantMode, Scratch};
@@ -59,6 +68,10 @@ pub struct BenchPoint {
     pub mode: &'static str,
     /// Lanes used (1 except for multilane).
     pub lanes: usize,
+    /// Whether the vectorized fixed-point dispatch was live for this
+    /// measurement (always false for f32 rows and for the forced-scalar
+    /// half of a scalar-vs-simd pair).
+    pub simd: bool,
     /// Samples processed per measured repetition.
     pub samples: usize,
     /// Best-of-reps throughput.
@@ -295,6 +308,7 @@ pub fn run(opts: &BenchOptions) -> Result<BenchReport> {
             precision: "f32".into(),
             mode: "per-sample",
             lanes: 1,
+            simd: false,
             samples,
             samples_per_s: t_f32_per_sample,
         });
@@ -316,9 +330,36 @@ pub fn run(opts: &BenchOptions) -> Result<BenchReport> {
             precision: "f32".into(),
             mode: "tiled",
             lanes: 1,
+            simd: false,
             samples,
             samples_per_s: t_f32_tiled,
         });
+
+        // --------------------------------- simd bit-identity preflight
+        // Train a fresh unit over the whole tile and transform it back,
+        // once with the vectorized dispatch forced off and once in its
+        // natural state. The raw words must match exactly *before* any
+        // scalar-vs-simd pair is timed, so the recorded speedups can
+        // only ever measure speed, never changed arithmetic. With the
+        // `simd` feature off both runs take the scalar path and the
+        // check is trivially true.
+        let train_and_forward_words = |force_scalar: bool| -> Vec<i32> {
+            crate::fxp::simd::set_force_scalar(force_scalar);
+            let mut u = build_fxp_unit(p, n, opts.seed);
+            let ws = u.config.whiten_spec;
+            let mut s = Scratch::new();
+            ingress_tile(&frp, &entry, &ws, prescale, x.as_slice(), rows, &mut s);
+            u.step_tile_raw(&s.stage, rows);
+            let stage = s.stage.clone();
+            let mut out = Vec::new();
+            u.transform_tile_raw(&stage, rows, &mut s, &mut out);
+            crate::fxp::simd::set_force_scalar(false);
+            out
+        };
+        ensure!(
+            train_and_forward_words(true) == train_and_forward_words(false),
+            "vectorized dispatch diverged from the scalar kernels ({name})"
+        );
 
         // ------------------------------------------------- train, fxp
         let mut unit = build_fxp_unit(p, n, opts.seed);
@@ -334,11 +375,33 @@ pub fn run(opts: &BenchOptions) -> Result<BenchReport> {
             precision: precision_label.clone(),
             mode: "per-sample",
             lanes: 1,
+            simd: crate::fxp::simd::enabled(),
             samples,
             samples_per_s: t_fxp_per_sample,
         });
+        // Scalar half of the train scalar-vs-simd pair: the same tiled
+        // kernel with the vectorized dispatch forced off.
         let mut unit = build_fxp_unit(p, n, opts.seed);
         let mut scratch = Scratch::new();
+        crate::fxp::simd::set_force_scalar(true);
+        let t_fxp_tiled_scalar = time_samples(reps, samples, || {
+            for tile_rows in x.as_slice().chunks(opts.tile * m) {
+                let r = tile_rows.len() / m;
+                ingress_tile(&frp, &entry, &wspec, prescale, tile_rows, r, &mut scratch);
+                unit.step_tile_raw(&scratch.stage, r);
+            }
+        });
+        crate::fxp::simd::set_force_scalar(false);
+        points.push(BenchPoint {
+            path: "train",
+            precision: precision_label.clone(),
+            mode: "tiled",
+            lanes: 1,
+            simd: false,
+            samples,
+            samples_per_s: t_fxp_tiled_scalar,
+        });
+        let mut unit = build_fxp_unit(p, n, opts.seed);
         let t_fxp_tiled = time_samples(reps, samples, || {
             // Tile-at-a-time, like the trainer: whole batches through
             // reusable workspaces.
@@ -353,6 +416,7 @@ pub fn run(opts: &BenchOptions) -> Result<BenchReport> {
             precision: precision_label.clone(),
             mode: "tiled",
             lanes: 1,
+            simd: crate::fxp::simd::enabled(),
             samples,
             samples_per_s: t_fxp_tiled,
         });
@@ -374,6 +438,7 @@ pub fn run(opts: &BenchOptions) -> Result<BenchReport> {
             precision: "f32".into(),
             mode: "per-sample",
             lanes: 1,
+            simd: false,
             samples,
             samples_per_s: f_f32_per_sample,
         });
@@ -399,6 +464,7 @@ pub fn run(opts: &BenchOptions) -> Result<BenchReport> {
             precision: "f32".into(),
             mode: "tiled",
             lanes: 1,
+            simd: false,
             samples,
             samples_per_s: f_f32_tiled,
         });
@@ -452,10 +518,31 @@ pub fn run(opts: &BenchOptions) -> Result<BenchReport> {
             precision: precision_label.clone(),
             mode: "per-sample",
             lanes: 1,
+            simd: crate::fxp::simd::enabled(),
             samples,
             samples_per_s: f_fxp_per_sample,
         });
+        // Scalar half of the forward scalar-vs-simd pair.
         let mut out_raw = Vec::new();
+        crate::fxp::simd::set_force_scalar(true);
+        let f_fxp_tiled_scalar = time_samples(reps, samples, || {
+            for (start, r) in tile_ranges(rows, opts.tile) {
+                let xs = &x.as_slice()[start * m..(start + r) * m];
+                ingress_tile(&frp, &entry, &wspec, prescale, xs, r, &mut scratch);
+                unit.transform_tile_raw(&scratch.stage, r, &mut s2, &mut out_raw);
+                std::hint::black_box(&out_raw);
+            }
+        });
+        crate::fxp::simd::set_force_scalar(false);
+        points.push(BenchPoint {
+            path: "forward",
+            precision: precision_label.clone(),
+            mode: "tiled",
+            lanes: 1,
+            simd: false,
+            samples,
+            samples_per_s: f_fxp_tiled_scalar,
+        });
         let f_fxp_tiled = time_samples(reps, samples, || {
             for (start, r) in tile_ranges(rows, opts.tile) {
                 let xs = &x.as_slice()[start * m..(start + r) * m];
@@ -469,6 +556,7 @@ pub fn run(opts: &BenchOptions) -> Result<BenchReport> {
             precision: precision_label.clone(),
             mode: "tiled",
             lanes: 1,
+            simd: crate::fxp::simd::enabled(),
             samples,
             samples_per_s: f_fxp_tiled,
         });
@@ -485,6 +573,7 @@ pub fn run(opts: &BenchOptions) -> Result<BenchReport> {
             precision: precision_label.clone(),
             mode: "multilane",
             lanes: opts.lanes,
+            simd: crate::fxp::simd::enabled(),
             samples,
             samples_per_s: f_fxp_multilane,
         });
@@ -505,6 +594,14 @@ pub fn run(opts: &BenchOptions) -> Result<BenchReport> {
             (
                 "forward_fxp_multilane_over_per_sample".to_string(),
                 f_fxp_multilane / f_fxp_per_sample.max(1e-12),
+            ),
+            (
+                "train_fxp_tiled_simd_over_scalar".to_string(),
+                t_fxp_tiled / t_fxp_tiled_scalar.max(1e-12),
+            ),
+            (
+                "forward_fxp_tiled_simd_over_scalar".to_string(),
+                f_fxp_tiled / f_fxp_tiled_scalar.max(1e-12),
             ),
         ];
         // ------------------------------------------- graph scenarios
@@ -640,13 +737,18 @@ pub fn render(opts: &BenchOptions, report: &BenchReport) -> String {
             cfg.dataset, cfg.m, cfg.p, cfg.n, cfg.samples
         ));
         s.push_str(&format!(
-            "{:<9} {:<10} {:<11} {:>6} {:>14}\n",
-            "path", "precision", "mode", "lanes", "samples/s"
+            "{:<9} {:<10} {:<11} {:>6} {:>5} {:>14}\n",
+            "path", "precision", "mode", "lanes", "simd", "samples/s"
         ));
         for pt in &cfg.points {
             s.push_str(&format!(
-                "{:<9} {:<10} {:<11} {:>6} {:>14.0}\n",
-                pt.path, pt.precision, pt.mode, pt.lanes, pt.samples_per_s
+                "{:<9} {:<10} {:<11} {:>6} {:>5} {:>14.0}\n",
+                pt.path,
+                pt.precision,
+                pt.mode,
+                pt.lanes,
+                if pt.simd { "yes" } else { "-" },
+                pt.samples_per_s
             ));
         }
         for (label, ratio) in &cfg.speedups {
@@ -709,7 +811,10 @@ pub fn to_json(opts: &BenchOptions, report: &BenchReport) -> Json {
         // v4: top-level `multi_tenant` serving family (aggregate
         //     throughput vs the single-session baseline, worst-tenant
         //     p50/p99, fairness spread).
-        ("schema_version", Json::num(4.0)),
+        // v5: per-point `simd` flag plus scalar-vs-simd row pairs for
+        //     the fixed-point tiled cells (and the matching
+        //     `*_simd_over_scalar` speedups).
+        ("schema_version", Json::num(5.0)),
         ("smoke", Json::Bool(opts.smoke)),
         ("tile", Json::num(opts.tile as f64)),
         ("lanes", Json::num(opts.lanes as f64)),
@@ -741,6 +846,7 @@ pub fn to_json(opts: &BenchOptions, report: &BenchReport) -> Json {
                                                 ),
                                                 ("mode", Json::str(pt.mode)),
                                                 ("lanes", Json::num(pt.lanes as f64)),
+                                                ("simd", Json::Bool(pt.simd)),
                                                 ("samples", Json::num(pt.samples as f64)),
                                                 (
                                                     "samples_per_s",
@@ -874,7 +980,7 @@ pub fn validate(v: &Json) -> Result<()> {
         "wrong experiment tag"
     );
     ensure!(
-        v.field("schema_version")?.as_usize()? == 4,
+        v.field("schema_version")?.as_usize()? == 5,
         "unknown schema version"
     );
     v.field("smoke")?.as_bool().context("smoke flag")?;
@@ -902,6 +1008,7 @@ pub fn validate(v: &Json) -> Result<()> {
                 "unknown mode '{mode}'"
             );
             ensure!(pt.field("lanes")?.as_usize()? >= 1, "lanes must be >= 1");
+            pt.field("simd")?.as_bool().context("simd flag")?;
             pt.field("samples")?.as_usize()?;
             let tput = pt.field("samples_per_s")?.as_f64()?;
             ensure!(
@@ -987,6 +1094,11 @@ pub fn validate(v: &Json) -> Result<()> {
 mod tests {
     use super::*;
 
+    /// `run` toggles the process-global scalar-force flag for the
+    /// scalar-vs-simd pairs; serialize the tests that invoke it so a
+    /// concurrent run can never misattribute a row's `simd` flag.
+    static BENCH_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
     fn smoke_opts() -> BenchOptions {
         BenchOptions {
             datasets: vec!["waveform".into()],
@@ -999,16 +1111,48 @@ mod tests {
 
     #[test]
     fn smoke_run_produces_valid_schema() {
+        let _serial = BENCH_LOCK.lock().unwrap();
         let opts = smoke_opts();
         let report = run(&opts).unwrap();
         assert_eq!(report.configs.len(), 1);
         let cfg = &report.configs[0];
         assert_eq!(cfg.dataset, "waveform");
         assert_eq!((cfg.m, cfg.p, cfg.n), (32, 16, 8));
-        // The full grid: 2 train f32 + 2 train fxp + 2 forward f32 +
-        // 3 forward fxp.
-        assert_eq!(cfg.points.len(), 9);
+        // The full grid: 2 train f32 + 3 train fxp (per-sample +
+        // scalar/simd tiled pair) + 2 forward f32 + 4 forward fxp
+        // (per-sample + scalar/simd tiled pair + multilane).
+        assert_eq!(cfg.points.len(), 11);
         assert!(cfg.points.iter().all(|p| p.samples_per_s > 0.0));
+        // The scalar-vs-simd pairs: two fxp tiled rows per path, the
+        // scalar half always with simd=false, and no f32 row ever
+        // claims the vectorized dispatch.
+        for path in ["train", "forward"] {
+            let pair: Vec<_> = cfg
+                .points
+                .iter()
+                .filter(|p| p.path == path && p.mode == "tiled" && p.precision != "f32")
+                .collect();
+            assert_eq!(pair.len(), 2, "{path} fxp tiled pair");
+            assert!(!pair[0].simd, "{path} scalar half must come first");
+            assert_eq!(pair[1].simd, crate::fxp::simd::enabled());
+        }
+        assert!(cfg
+            .points
+            .iter()
+            .filter(|p| p.precision == "f32")
+            .all(|p| !p.simd));
+        // The simd speedup labels ride along whatever the feature set.
+        for key in [
+            "train_fxp_tiled_simd_over_scalar",
+            "forward_fxp_tiled_simd_over_scalar",
+        ] {
+            let (_, ratio) = cfg
+                .speedups
+                .iter()
+                .find(|(k, _)| k == key)
+                .unwrap_or_else(|| panic!("missing speedup {key}"));
+            assert!(ratio.is_finite() && *ratio > 0.0);
+        }
         // The three stage-graph scenarios ride along per config.
         assert_eq!(cfg.scenarios.len(), 3);
         assert!(cfg.scenarios.iter().all(|s| s.samples_per_s > 0.0));
@@ -1060,6 +1204,7 @@ mod tests {
 
     #[test]
     fn validate_rejects_drifted_schema() {
+        let _serial = BENCH_LOCK.lock().unwrap();
         let opts = smoke_opts();
         let report = run(&opts).unwrap();
         let good = to_json(&opts, &report);
@@ -1075,10 +1220,9 @@ mod tests {
         let mut map = good.as_obj().unwrap().clone();
         map.insert("configs".into(), Json::Arr(vec![]));
         assert!(validate(&Json::Obj(map)).is_err());
-        // Stale schema version (pre-multi-tenant writers must not
-        // validate).
+        // Stale schema version (pre-simd writers must not validate).
         let mut map = good.as_obj().unwrap().clone();
-        map.insert("schema_version".into(), Json::num(3.0));
+        map.insert("schema_version".into(), Json::num(4.0));
         assert!(validate(&Json::Obj(map)).is_err());
         // Missing or empty multi_tenant family.
         let mut map = good.as_obj().unwrap().clone();

@@ -219,9 +219,7 @@ pub fn ingress_tile(
     }
     if let Some(f) = rp {
         f.apply_tile_raw(&scratch.xq, rows, &mut scratch.stage);
-        for v in scratch.stage.iter_mut() {
-            *v = stage_spec.requantize_from(*v, entry_spec);
-        }
+        stage_spec.requantize_slice_from(&mut scratch.stage, entry_spec);
     }
 }
 
@@ -403,6 +401,12 @@ impl FxpGha {
                 // shadow; the datapath weights are then the shadow
                 // requantized. Sub-LSB updates accumulate instead of
                 // rounding to zero.
+                //
+                // Unlike the EASI STE pass, this backward pass canNOT be
+                // sharded across rows: `cum_f[j]` is a running prefix
+                // sum over rows i (Sanger's lower-triangular deflation),
+                // so row i's delta depends on every row before it. It
+                // stays a single sequential lane by construction.
                 let shadow = self
                     .shadow
                     .as_mut()
@@ -589,6 +593,14 @@ pub struct FxpEasiRot {
     /// v = Bᵀg share one contiguous walk over B).
     acc_u: Vec<i128>,
     acc_v: Vec<i128>,
+    /// `i64` lane accumulators for the blocked u/v fast path (exact
+    /// whenever `output_dim ≤ `[`super::simd::block_len`], which is
+    /// every format narrower than 32 bits at realistic dims).
+    part_u: Vec<i64>,
+    part_v: Vec<i64>,
+    /// Lanes for the sharded STE backward pass (1 = sequential; see
+    /// [`FxpEasiRot::set_train_lanes`]).
+    train_lanes: usize,
     /// Host-side f32 view of `b` for the bit-exact retraction, reused
     /// so the periodic dequantize→MGS→requantize stays off the heap.
     host_buf: Mat,
@@ -630,8 +642,26 @@ impl FxpEasiRot {
             v: vec![0; input_dim],
             acc_u: vec![0; input_dim],
             acc_v: vec![0; input_dim],
+            part_u: vec![0; input_dim],
+            part_v: vec![0; input_dim],
+            train_lanes: 1,
             host_buf: Mat::zeros(output_dim, input_dim),
         }
+    }
+
+    /// Shard the STE backward pass across `lanes` scoped threads, each
+    /// owning a disjoint block of shadow rows. The per-element shadow
+    /// update depends only on that element and the shared (y, g, u, v)
+    /// forward values, so the updates commute and the sharded shadow —
+    /// hence the requantized datapath matrix — is bit-identical to the
+    /// sequential pass for every lane count. Only the f64 ‖ΔB‖/‖B‖
+    /// monitor sums in lane order (a host-side observability counter,
+    /// not datapath state). [`QuantMode::BitExact`] ignores this and
+    /// stays sequential: its update writes `b` through the saturating
+    /// integer pipeline in row-major order, and we keep that order the
+    /// single source of truth. `lanes = 1` (the default) never spawns.
+    pub fn set_train_lanes(&mut self, lanes: usize) {
+        self.train_lanes = lanes.max(1);
     }
 
     /// The training mode this rotation was built with.
@@ -710,25 +740,58 @@ impl FxpEasiRot {
         // B feeds both wide accumulators; integer sums are exact in any
         // order, so the raw words are bit-identical to two separate
         // `matvec_t_raw` passes.
-        for a in self.acc_u.iter_mut() {
-            *a = 0;
-        }
-        for a in self.acc_v.iter_mut() {
-            *a = 0;
-        }
-        for i in 0..n {
-            let (yi, gi) = (self.y[i] as i128, self.g[i] as i128);
-            let row = self.b.row(i);
-            for j in 0..m {
-                let bij = row[j] as i128;
-                self.acc_u[j] += yi * bij;
-                self.acc_v[j] += gi * bij;
-            }
-        }
         let shift = spec.format.frac_bits as u32;
-        for j in 0..m {
-            self.u[j] = spec.fit(spec.rescale_wide(self.acc_u[j], shift));
-            self.v[j] = spec.fit(spec.rescale_wide(self.acc_v[j], shift));
+        if super::simd::enabled()
+            && n <= super::simd::block_len(spec.format.width() as u32)
+        {
+            // All n products per column fit one i64 lane exactly (the
+            // same width bound as `simd::dot_acc`), so the whole pass
+            // runs in vectorizable i64 MACs and converts to i128 only
+            // at the rescale — bit-identical to the wide walk below.
+            for p in self.part_u.iter_mut() {
+                *p = 0;
+            }
+            for p in self.part_v.iter_mut() {
+                *p = 0;
+            }
+            for i in 0..n {
+                let (yi, gi) = (self.y[i] as i64, self.g[i] as i64);
+                let row = self.b.row(i);
+                for ((pu, pv), &w) in self
+                    .part_u
+                    .iter_mut()
+                    .zip(self.part_v.iter_mut())
+                    .zip(row)
+                {
+                    let bij = w as i64;
+                    *pu += yi * bij;
+                    *pv += gi * bij;
+                }
+            }
+            for j in 0..m {
+                self.u[j] = spec.fit(spec.rescale_wide(self.part_u[j] as i128, shift));
+                self.v[j] = spec.fit(spec.rescale_wide(self.part_v[j] as i128, shift));
+            }
+        } else {
+            for a in self.acc_u.iter_mut() {
+                *a = 0;
+            }
+            for a in self.acc_v.iter_mut() {
+                *a = 0;
+            }
+            for i in 0..n {
+                let (yi, gi) = (self.y[i] as i128, self.g[i] as i128);
+                let row = self.b.row(i);
+                for j in 0..m {
+                    let bij = row[j] as i128;
+                    self.acc_u[j] += yi * bij;
+                    self.acc_v[j] += gi * bij;
+                }
+            }
+            for j in 0..m {
+                self.u[j] = spec.fit(spec.rescale_wide(self.acc_u[j], shift));
+                self.v[j] = spec.fit(spec.rescale_wide(self.acc_v[j], shift));
+            }
         }
         let rel = match self.quant {
             QuantMode::BitExact => {
@@ -755,21 +818,68 @@ impl FxpEasiRot {
                     .shadow
                     .as_mut()
                     .expect("STE mode keeps shadow weights");
-                let mut delta2 = 0.0f64;
-                let mut b_norm2 = 0.0f64;
-                for i in 0..n {
-                    let yf = spec.dequantize(self.y[i]);
-                    let gf = spec.dequantize(self.g[i]);
-                    for j in 0..m {
-                        let d = self.mu_f
-                            * (gf * spec.dequantize(self.u[j])
-                                - yf * spec.dequantize(self.v[j]));
-                        let s = shadow.as_slice()[i * m + j];
-                        delta2 += (d as f64) * (d as f64);
-                        b_norm2 += (s as f64) * (s as f64);
-                        shadow.as_mut_slice()[i * m + j] = s - d;
+                let lanes = self.train_lanes.clamp(1, n);
+                let (delta2, b_norm2) = if lanes > 1 {
+                    // Sharded backward pass: each lane owns a disjoint
+                    // contiguous block of shadow rows; every (i, j)
+                    // update reads only the shared forward values and
+                    // its own element, so the updates commute and the
+                    // shadow words are bit-identical to the sequential
+                    // walk for every lane count. The f64 monitor
+                    // partials are reduced in lane order, deterministic
+                    // per lane count.
+                    let chunk = (n + lanes - 1) / lanes;
+                    let (y, g, u, v) = (&self.y, &self.g, &self.u, &self.v);
+                    let mu_f = self.mu_f;
+                    std::thread::scope(|s| {
+                        let mut handles = Vec::with_capacity(lanes);
+                        for (lane, sh_chunk) in
+                            shadow.as_mut_slice().chunks_mut(chunk * m).enumerate()
+                        {
+                            let i0 = lane * chunk;
+                            handles.push(s.spawn(move || {
+                                let (mut d2, mut b2) = (0.0f64, 0.0f64);
+                                for (r, sh_row) in sh_chunk.chunks_mut(m).enumerate() {
+                                    let yf = spec.dequantize(y[i0 + r]);
+                                    let gf = spec.dequantize(g[i0 + r]);
+                                    for (sv, (&uj, &vj)) in
+                                        sh_row.iter_mut().zip(u.iter().zip(v))
+                                    {
+                                        let d = mu_f
+                                            * (gf * spec.dequantize(uj)
+                                                - yf * spec.dequantize(vj));
+                                        let sv0 = *sv;
+                                        d2 += (d as f64) * (d as f64);
+                                        b2 += (sv0 as f64) * (sv0 as f64);
+                                        *sv = sv0 - d;
+                                    }
+                                }
+                                (d2, b2)
+                            }));
+                        }
+                        handles.into_iter().fold((0.0f64, 0.0f64), |(a, b), h| {
+                            let (d2, b2) = h.join().expect("STE lane panicked");
+                            (a + d2, b + b2)
+                        })
+                    })
+                } else {
+                    let mut delta2 = 0.0f64;
+                    let mut b_norm2 = 0.0f64;
+                    for i in 0..n {
+                        let yf = spec.dequantize(self.y[i]);
+                        let gf = spec.dequantize(self.g[i]);
+                        for j in 0..m {
+                            let d = self.mu_f
+                                * (gf * spec.dequantize(self.u[j])
+                                    - yf * spec.dequantize(self.v[j]));
+                            let s = shadow.as_slice()[i * m + j];
+                            delta2 += (d as f64) * (d as f64);
+                            b_norm2 += (s as f64) * (s as f64);
+                            shadow.as_mut_slice()[i * m + j] = s - d;
+                        }
                     }
-                }
+                    (delta2, b_norm2)
+                };
                 self.b.quantize_from(shadow);
                 delta2.sqrt() / (b_norm2.sqrt() + 1e-30)
             }
@@ -1008,9 +1118,7 @@ impl FxpDrUnit {
             resize_buf(&mut scratch.stage, n);
             self.gha.whiten_into(x, &mut scratch.stage);
             let (wspec, rspec) = (self.config.whiten_spec, self.config.rot_spec);
-            for v in scratch.stage.iter_mut() {
-                *v = rspec.requantize_from(*v, &wspec);
-            }
+            rspec.requantize_slice_from(&mut scratch.stage, &wspec);
             self.rot.transform_into(&scratch.stage, out);
         } else {
             self.gha.whiten_into(x, out);
@@ -1069,8 +1177,12 @@ impl FxpDrUnit {
         if rows == 0 {
             return;
         }
-        let lanes = lanes.clamp(1, rows);
-        if lanes == 1 {
+        // Lane counts the tile cannot feed short-circuit to the
+        // sequential kernel without spawning a single thread: one lane
+        // is sequential by definition, and more lanes than rows would
+        // degenerate to one thread per row — pure scheduling overhead
+        // for the same bit-identical words.
+        if lanes <= 1 || lanes > rows {
             let mut scratch = Scratch::new();
             self.transform_tile_into(x, rows, &mut scratch, out);
             return;
@@ -1096,6 +1208,15 @@ impl FxpDrUnit {
     pub fn transform(&self, x: &[f32]) -> Vec<f32> {
         let xq = self.quantize_input(x);
         self.output_spec().dequantize_vec(&self.transform_raw(&xq))
+    }
+
+    /// Shard the rotation's STE backward pass across `lanes` (see
+    /// [`FxpEasiRot::set_train_lanes`]). The whitener's STE pass is a
+    /// sequential prefix recursion (see the comment in
+    /// [`FxpGha::step_raw`]) and always stays on one lane, as does
+    /// every bit-exact update.
+    pub fn set_train_lanes(&mut self, lanes: usize) {
+        self.rot.set_train_lanes(lanes);
     }
 
     /// Toggle the rotation stage (the paper's reconfiguration mux).
@@ -1904,6 +2025,89 @@ mod tests {
         let mut got = Vec::new();
         unit.transform_tile_raw_multilane(&tile, 1, 16, &mut got);
         assert_eq!(got, unit.transform_raw(&tile));
+    }
+
+    #[test]
+    fn multilane_lane_count_edge_cases() {
+        // lanes == 1 and lanes > rows both take the sequential
+        // short-circuit (no threads) and must emit exactly the tiled
+        // kernel's words; lanes == rows still shards (one row per lane).
+        let spec = FxpSpec::q(4, 12);
+        let (m, n, rows) = (6usize, 2usize, 5usize);
+        let unit = FxpDrUnit::new(FxpUnitConfig {
+            input_dim: m,
+            output_dim: n,
+            mu_w: 5e-3,
+            mu_rot: 1e-3,
+            rotate: true,
+            rot_warmup: 0,
+            seed: 1,
+            whiten_spec: spec,
+            rot_spec: spec,
+            quant: QuantMode::BitExact,
+        });
+        let tile: Vec<i32> = (0..rows * m)
+            .map(|i| spec.quantize(((i * 7 % 13) as f32 - 6.0) * 0.1))
+            .collect();
+        let mut scratch = Scratch::new();
+        let mut want = Vec::new();
+        unit.transform_tile_raw(&tile, rows, &mut scratch, &mut want);
+        for lanes in [1usize, rows, rows + 1, 64] {
+            let mut got = Vec::new();
+            unit.transform_tile_raw_multilane(&tile, rows, lanes, &mut got);
+            assert_eq!(got, want, "lanes={lanes}");
+        }
+    }
+
+    #[test]
+    fn ste_sharded_backward_pass_bit_identical() {
+        // The sharded STE shadow update must leave the rotation in
+        // exactly the sequential state for every lane count (including
+        // lanes > rows, which clamps), on uniform and mixed plans.
+        let spec = FxpSpec::q(4, 8);
+        let (m, rows) = (6usize, 300usize);
+        let x = bounded_data(rows, m, 131);
+        let tile: Vec<i32> = x.as_slice().iter().map(|&v| spec.quantize(v)).collect();
+        let mut seq = FxpEasiRot::new(m, m, 1e-3, None, spec, QuantMode::Ste);
+        seq.step_tile_raw(&tile, rows);
+        for lanes in [2usize, 3, m, m + 5] {
+            let mut sharded = FxpEasiRot::new(m, m, 1e-3, None, spec, QuantMode::Ste);
+            sharded.set_train_lanes(lanes);
+            sharded.step_tile_raw(&tile, rows);
+            assert_eq!(
+                seq.matrix().as_slice(),
+                sharded.matrix().as_slice(),
+                "lanes={lanes}"
+            );
+            // Forward path after training matches too.
+            for r in 0..5 {
+                let zr = &tile[r * m..(r + 1) * m];
+                assert_eq!(seq.transform_raw(zr), sharded.transform_raw(zr));
+            }
+        }
+        // And through the composed unit's knob.
+        let cfg = FxpUnitConfig {
+            input_dim: 8,
+            output_dim: 3,
+            mu_w: 5e-3,
+            mu_rot: 1e-3,
+            rotate: true,
+            rot_warmup: 50,
+            seed: 9,
+            whiten_spec: FxpSpec::q(8, 16),
+            rot_spec: FxpSpec::q(1, 15),
+            quant: QuantMode::Ste,
+        };
+        let xu = bounded_data(400, 8, 137);
+        let mut a = FxpDrUnit::new(cfg);
+        let mut b = FxpDrUnit::new(cfg);
+        b.set_train_lanes(3);
+        a.step_rows(&xu);
+        b.step_rows(&xu);
+        assert_eq!(
+            a.effective_matrix().as_slice(),
+            b.effective_matrix().as_slice()
+        );
     }
 
     #[test]

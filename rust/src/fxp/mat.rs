@@ -136,20 +136,69 @@ impl FxpMat {
         out
     }
 
-    /// [`FxpMat::matvec_t_raw`] into a caller-owned buffer. Walks the
-    /// matrix column-wise so no accumulator vector is needed; integer
-    /// sums are exact in any order, so the raw words are bit-identical
-    /// to the row-streamed form.
+    /// [`FxpMat::matvec_t_raw`] into a caller-owned buffer. The scalar
+    /// reference walks the matrix column-wise with one `i128`
+    /// accumulator; the `simd` path walks **row-major** over contiguous
+    /// row segments with a stack tile of per-column `i64` partials
+    /// ([`FxpMat::matvec_t_raw_blocked`]). Integer sums are exact in
+    /// any order, so both forms — and the row-streamed oracle — produce
+    /// bit-identical raw words.
     pub fn matvec_t_raw_into(&self, x: &[i32], out: &mut [i32]) {
         assert_eq!(x.len(), self.rows, "fxp matvec_t shape mismatch");
         assert_eq!(out.len(), self.cols, "fxp matvec_t out shape mismatch");
         let shift = self.spec.format.frac_bits as u32;
+        if super::simd::enabled() {
+            self.matvec_t_raw_blocked(x, out, shift);
+            return;
+        }
         for (j, o) in out.iter_mut().enumerate() {
             let mut acc: i128 = 0;
             for (i, &xi) in x.iter().enumerate() {
                 acc += xi as i128 * self.raw[i * self.cols + j] as i128;
             }
             *o = self.spec.fit(self.spec.rescale_wide(acc, shift));
+        }
+    }
+
+    /// Row-major `Mᵀx` on a stack tile of column accumulators: each
+    /// input row contributes a contiguous segment (unit-stride loads,
+    /// vectorizable i64 MACs), and the per-column partials spill into
+    /// `i128` every [`super::simd::block_len`] rows, so no lane can
+    /// overflow whatever the word width. Allocation-free (the tiles
+    /// live on the stack).
+    fn matvec_t_raw_blocked(&self, x: &[i32], out: &mut [i32], shift: u32) {
+        const TILE: usize = 64;
+        let cap = super::simd::block_len(self.spec.format.width() as u32);
+        let cols = self.cols;
+        for (t, out_tile) in out.chunks_mut(TILE).enumerate() {
+            let j0 = t * TILE;
+            let tw = out_tile.len();
+            let mut acc = [0i128; TILE];
+            let mut part = [0i64; TILE];
+            let mut pending = 0usize;
+            for (i, &xi) in x.iter().enumerate() {
+                let seg = &self.raw[i * cols + j0..i * cols + j0 + tw];
+                let xi = xi as i64;
+                for (p, &w) in part[..tw].iter_mut().zip(seg) {
+                    *p += xi * w as i64;
+                }
+                pending += 1;
+                if pending == cap {
+                    for (a, p) in acc[..tw].iter_mut().zip(part[..tw].iter_mut()) {
+                        *a += *p as i128;
+                        *p = 0;
+                    }
+                    pending = 0;
+                }
+            }
+            if pending > 0 {
+                for (a, &p) in acc[..tw].iter_mut().zip(part[..tw].iter()) {
+                    *a += p as i128;
+                }
+            }
+            for (o, &a) in out_tile.iter_mut().zip(acc[..tw].iter()) {
+                *o = self.spec.fit(self.spec.rescale_wide(a, shift));
+            }
         }
     }
 }
@@ -198,6 +247,49 @@ mod tests {
         let oracle = mt.matvec_raw(&x);
         for (a, b) in direct.iter().zip(&oracle) {
             assert!((a - b).abs() <= 1, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn matvec_t_blocked_bit_identical_to_column_walk() {
+        // Direct comparison of the two matvec_t kernels, independent of
+        // dispatch state — including q16.16-class 32-bit words where
+        // the spill threshold is 1 and every row boundary spills.
+        for spec in [FxpSpec::q(4, 12), FxpSpec::q(16, 16), FxpSpec::q(1, 15)] {
+            let (rows, cols) = (37, 130); // non-multiples of tile/lane widths
+            let mut m = FxpMat::zeros(rows, cols, spec);
+            for i in 0..rows {
+                for j in 0..cols {
+                    let v = ((i * 131 + j * 17) as i64 * 2654435761 % (1 << 31)) as i32;
+                    m.set_raw(i, j, spec.fit(v as i64));
+                }
+            }
+            // Adversarial extremal stripe: whole rows at min_raw.
+            for j in 0..cols {
+                m.set_raw(0, j, spec.format.min_raw());
+                m.set_raw(rows - 1, j, spec.format.min_raw());
+            }
+            let x: Vec<i32> = (0..rows)
+                .map(|i| {
+                    if i % 3 == 0 {
+                        spec.format.min_raw()
+                    } else {
+                        spec.format.max_raw() - i as i32
+                    }
+                })
+                .collect();
+            let shift = spec.format.frac_bits as u32;
+            let mut scalar = vec![0i32; cols];
+            for (j, o) in scalar.iter_mut().enumerate() {
+                let mut acc: i128 = 0;
+                for (i, &xi) in x.iter().enumerate() {
+                    acc += xi as i128 * m.get_raw(i, j) as i128;
+                }
+                *o = spec.fit(spec.rescale_wide(acc, shift));
+            }
+            let mut blocked = vec![0i32; cols];
+            m.matvec_t_raw_blocked(&x, &mut blocked, shift);
+            assert_eq!(blocked, scalar, "{}", spec.label());
         }
     }
 

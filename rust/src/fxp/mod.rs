@@ -65,6 +65,7 @@
 
 pub mod kernels;
 pub mod mat;
+pub mod simd;
 
 pub use kernels::{FxpDrUnit, FxpEasiRot, FxpGha, FxpRp, FxpUnitConfig, Scratch};
 pub use mat::FxpMat;
@@ -291,14 +292,23 @@ impl FxpSpec {
     }
 
     /// Dot product with a wide accumulator (the DSP-cascade model):
-    /// every product is kept at full precision, summed in 128 bits, and
-    /// rounded/saturated exactly once at the end.
+    /// every product is kept at full precision, summed exactly, and
+    /// rounded/saturated exactly once at the end. With the `simd`
+    /// feature the sum runs in width-aware blocked `i64` lanes
+    /// ([`simd::dot_acc`]) — bit-identical to the scalar `i128` walk,
+    /// including every telemetry saturation/wrap event, because only
+    /// this single final `fit` observes the (identical) sum.
     pub fn dot_raw(&self, a: &[i32], b: &[i32]) -> i32 {
         debug_assert_eq!(a.len(), b.len());
-        let mut acc: i128 = 0;
-        for (&x, &y) in a.iter().zip(b) {
-            acc += x as i128 * y as i128;
-        }
+        let acc: i128 = if simd::enabled() {
+            simd::dot_acc(a, b, self.format.width() as u32)
+        } else {
+            let mut acc: i128 = 0;
+            for (&x, &y) in a.iter().zip(b) {
+                acc += x as i128 * y as i128;
+            }
+            acc
+        };
         self.fit(self.rescale_wide(acc, self.format.frac_bits as u32))
     }
 
@@ -323,6 +333,33 @@ impl FxpSpec {
     /// [`FxpSpec::requantize_from`] over a slice.
     pub fn requantize_vec_from(&self, raw: &[i32], from: &FxpSpec) -> Vec<i32> {
         raw.iter().map(|&r| self.requantize_from(r, from)).collect()
+    }
+
+    /// [`FxpSpec::requantize_from`] in place over a slice — the hot-path
+    /// form of a stage boundary: a matching format is a whole-slice
+    /// no-op, otherwise one tight shift+fit loop the compiler can
+    /// vectorize. Allocation-free.
+    pub fn requantize_slice_from(&self, words: &mut [i32], from: &FxpSpec) {
+        if self.format == from.format {
+            return;
+        }
+        for v in words.iter_mut() {
+            *v = self.requantize_from(*v, from);
+        }
+    }
+
+    /// [`FxpSpec::requantize_vec_from`] into a caller-owned buffer
+    /// (resized without shrinking capacity) — zero allocations once the
+    /// buffer has grown to the tile size.
+    pub fn requantize_vec_from_into(&self, raw: &[i32], from: &FxpSpec, out: &mut Vec<i32>) {
+        kernels::resize_buf(out, raw.len());
+        if self.format == from.format {
+            out.copy_from_slice(raw);
+            return;
+        }
+        for (o, &r) in out.iter_mut().zip(raw) {
+            *o = self.requantize_from(r, from);
+        }
     }
 
     /// Parse `"qI.F"` with optional policy suffixes: `:wrap` / `:sat`
@@ -998,6 +1035,30 @@ mod tests {
         let tie = wide.quantize(narrow.format.resolution() * 0.5); // half a narrow LSB
         assert_eq!(narrow.requantize_from(tie, &wide), 1); // nearest: up
         assert_eq!(trunc.requantize_from(tie, &wide), 0); // trunc: down
+    }
+
+    #[test]
+    fn requantize_slice_and_into_match_vec_form() {
+        let wide = FxpSpec::q(8, 16);
+        let narrow = FxpSpec::q(4, 12);
+        let raw: Vec<i32> = (0..300)
+            .map(|i| ((i * 7919) % 200001) as i32 - 100000)
+            .collect();
+        let want = narrow.requantize_vec_from(&raw, &wide);
+        // In place.
+        let mut inplace = raw.clone();
+        narrow.requantize_slice_from(&mut inplace, &wide);
+        assert_eq!(inplace, want);
+        // Caller-owned buffer, including reuse from a larger prior size.
+        let mut buf = vec![0i32; 1024];
+        narrow.requantize_vec_from_into(&raw, &wide, &mut buf);
+        assert_eq!(buf, want);
+        // Matching formats are a pure copy / no-op.
+        let mut same = raw.clone();
+        wide.requantize_slice_from(&mut same, &wide);
+        assert_eq!(same, raw);
+        wide.requantize_vec_from_into(&raw, &wide, &mut buf);
+        assert_eq!(buf, raw);
     }
 
     #[test]

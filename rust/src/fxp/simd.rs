@@ -1,0 +1,160 @@
+//! Width-aware blocked accumulation for the fixed-point hot path —
+//! the software analogue of the paper's DSP-cascade dot products.
+//!
+//! The scalar reference kernels ([`super::FxpSpec::dot_raw`], the
+//! [`super::FxpMat`] matvecs, the EASI gradient pass) accumulate every
+//! product in `i128`: exact, but each MAC is a wide multiword add the
+//! compiler cannot vectorize. This module exploits the Q-format width
+//! bound instead: raw words are `B ≤ 32` bits, so every product fits in
+//! `2B − 1` bits and up to [`block_len`]`(B)` of them sum *exactly* in
+//! an `i64` lane. The kernels therefore run the multiply-accumulate in
+//! plain `i64` lanes — which LLVM keeps in integer vector registers —
+//! and spill into the `i128` accumulator only once per block.
+//!
+//! **Bit-identity.** Every partial is exact (no lane can overflow by
+//! construction) and integer addition is associative, so the final
+//! `i128` sum — and hence the rounded, fitted word, and every
+//! saturation/wrap telemetry event — is identical to the scalar walk
+//! for all formats, overflow policies, and rounding modes. The grid in
+//! `tests/simd_identity.rs` and `tests/stage_graph_identity.rs` proves
+//! it, and the bench's preflight re-proves it before timing anything.
+//!
+//! **Dispatch.** The blocked kernels are compiled in only with the
+//! `simd` cargo feature; [`set_force_scalar`] additionally lets a
+//! `simd` build select the scalar reference at run time, so one process
+//! can measure scalar-vs-simd pairs (`dimred bench`) or cross-check the
+//! two paths against each other.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Unrolled lane count of the inner loop. Eight `i64` lanes span two
+/// AVX2 / four NEON vector registers — wide enough to saturate the
+/// integer multiply pipes, small enough to leave room for the per-row
+/// blocking above it.
+pub(crate) const LANES: usize = 8;
+
+static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+
+/// Whether the crate was built with the `simd` feature.
+#[inline]
+pub fn available() -> bool {
+    cfg!(feature = "simd")
+}
+
+/// Whether dispatch selects the blocked kernels right now (feature
+/// compiled in and not overridden by [`set_force_scalar`]).
+#[inline]
+pub fn enabled() -> bool {
+    available() && !FORCE_SCALAR.load(Ordering::Relaxed)
+}
+
+/// Force the scalar reference kernels even in a `simd` build — the
+/// bench uses this to time scalar-vs-simd row pairs and to run the
+/// bit-identity preflight inside one process. No-op (already scalar)
+/// without the feature. Global: flip it only from single-threaded
+/// control code, never mid-tile.
+pub fn set_force_scalar(on: bool) {
+    FORCE_SCALAR.store(on, Ordering::Relaxed);
+}
+
+/// How many products of `width`-bit words one `i64` lane can sum
+/// exactly: |a·b| ≤ 2^(2B−2) (the −2^(B−1) · −2^(B−1) corner), so the
+/// lane holds `⌊i64::MAX / 2^(2B−2)⌋` of them before any spill is
+/// needed. For B = 32 (`q16.16`-class words) that is exactly 1 — every
+/// product spills — and for B ≤ 16 it is astronomically large, clamped
+/// to 2^16 so blocks stay cache-resident.
+#[inline]
+pub(crate) fn block_len(width: u32) -> usize {
+    let shift = (2 * width).saturating_sub(2).min(126);
+    (((i64::MAX as u128) >> shift) as usize).clamp(1, 1 << 16)
+}
+
+/// Exact Σ aᵢ·bᵢ as `i128`, computed in blocked `i64` lanes.
+/// Bit-identical to the scalar `i128` walk (every partial is exact and
+/// integer addition is associative); the caller applies the same
+/// rescale/fit epilogue either way, so rounding and telemetry events
+/// are untouched.
+pub(crate) fn dot_acc(a: &[i32], b: &[i32], width: u32) -> i128 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let main = n - n % LANES;
+    let block = block_len(width) * LANES;
+    let mut acc: i128 = 0;
+    let mut lanes = [0i64; LANES];
+    let mut start = 0usize;
+    while start < main {
+        let end = (start + block).min(main);
+        let mut j = start;
+        while j < end {
+            for l in 0..LANES {
+                lanes[l] += a[j + l] as i64 * b[j + l] as i64;
+            }
+            j += LANES;
+        }
+        for l in lanes.iter_mut() {
+            acc += *l as i128;
+            *l = 0;
+        }
+        start = end;
+    }
+    for j in main..n {
+        acc += a[j] as i128 * b[j] as i128;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scalar_acc(a: &[i32], b: &[i32]) -> i128 {
+        a.iter()
+            .zip(b)
+            .map(|(&x, &y)| x as i128 * y as i128)
+            .sum()
+    }
+
+    #[test]
+    fn block_len_matches_width_bound() {
+        // B = 32: |product| can be 2^62, so one product per lane.
+        assert_eq!(block_len(32), 1);
+        // B = 24: 2^46 per product → ⌊(2^63−1)/2^46⌋ = 2^17 − 1,
+        // clamped to 2^16.
+        assert_eq!(block_len(24), 1 << 16);
+        // Narrow words hit the cache clamp.
+        assert_eq!(block_len(16), 1 << 16);
+        assert_eq!(block_len(8), 1 << 16);
+    }
+
+    #[test]
+    fn blocked_sum_is_exact_at_the_extremes() {
+        // All-extremal 32-bit words: every product is 2^62, the corner
+        // the block bound exists for. 1000 of them overflow i64 by a
+        // factor of ~250 — only exact blocking survives.
+        let a = vec![i32::MIN; 1000];
+        let b = vec![i32::MIN; 1000];
+        assert_eq!(dot_acc(&a, &b, 32), scalar_acc(&a, &b));
+        let c = vec![i32::MAX; 1000];
+        assert_eq!(dot_acc(&a, &c, 32), scalar_acc(&a, &c));
+    }
+
+    #[test]
+    fn blocked_sum_matches_scalar_across_lengths() {
+        // Lengths straddling every lane/tail boundary.
+        for n in [0usize, 1, 7, 8, 9, 15, 16, 17, 63, 64, 65, 257] {
+            let a: Vec<i32> = (0..n)
+                .map(|i| ((i as i64 * 2654435761 + 12345) as i32).wrapping_mul(31))
+                .collect();
+            let b: Vec<i32> = (0..n)
+                .map(|i| ((i as i64 * 40503 + 99) as i32).wrapping_mul(-17))
+                .collect();
+            for width in [8u32, 16, 24, 32] {
+                assert_eq!(
+                    dot_acc(&a, &b, width),
+                    scalar_acc(&a, &b),
+                    "n={n} width={width}"
+                );
+            }
+        }
+    }
+}

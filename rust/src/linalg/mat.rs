@@ -123,11 +123,42 @@ impl Mat {
 
     /// [`Mat::matvec`] into a caller-owned buffer — the allocation-free
     /// form the tiled datapath runs on (identical arithmetic).
+    ///
+    /// Register-blocked four rows at a time: `x` is loaded once per
+    /// quad instead of once per row, and each row keeps the exact
+    /// 4-lane accumulation order of [`dot`] (same partials, same final
+    /// combine), so the outputs are bit-identical to the per-row form
+    /// whatever the blocking.
     pub fn matvec_into(&self, x: &[f32], out: &mut [f32]) {
         assert_eq!(x.len(), self.cols, "matvec shape mismatch");
         assert_eq!(out.len(), self.rows, "matvec out shape mismatch");
-        for (r, o) in self.rows().zip(out.iter_mut()) {
-            *o = dot(r, x);
+        let cols = self.cols;
+        let chunks = cols / 4;
+        let mut r = 0usize;
+        while r + 4 <= self.rows {
+            let rows = [self.row(r), self.row(r + 1), self.row(r + 2), self.row(r + 3)];
+            let mut acc = [[0.0f32; 4]; 4];
+            for c in 0..chunks {
+                let j = c * 4;
+                for (a, row) in acc.iter_mut().zip(&rows) {
+                    a[0] += row[j] * x[j];
+                    a[1] += row[j + 1] * x[j + 1];
+                    a[2] += row[j + 2] * x[j + 2];
+                    a[3] += row[j + 3] * x[j + 3];
+                }
+            }
+            for (k, (a, row)) in acc.iter().zip(&rows).enumerate() {
+                let mut s = (a[0] + a[1]) + (a[2] + a[3]);
+                for j in chunks * 4..cols {
+                    s += row[j] * x[j];
+                }
+                out[r + k] = s;
+            }
+            r += 4;
+        }
+        while r < self.rows {
+            out[r] = dot(self.row(r), x);
+            r += 1;
         }
     }
 
@@ -273,12 +304,11 @@ impl Mat {
     pub fn apply_rows_into(&self, x: &Mat, out: &mut Mat) {
         assert_eq!(self.cols, x.cols, "apply_rows shape mismatch");
         assert_eq!(out.shape(), (x.rows, self.rows), "apply_rows out shape");
+        // One blocked matvec per sample row (bit-identical to the
+        // per-(row, output) dot loop — see `matvec_into`).
         for i in 0..x.rows {
             let xr = x.row(i);
-            let orow = out.row_mut(i);
-            for (j, o) in orow.iter_mut().enumerate() {
-                *o = dot(self.row(j), xr);
-            }
+            self.matvec_into(xr, out.row_mut(i));
         }
     }
 }
@@ -305,6 +335,21 @@ mod tests {
         let m = Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
         let x = [2.0, -1.0];
         assert_eq!(m.matvec_t(&x), m.transpose().matvec(&x));
+    }
+
+    #[test]
+    fn matvec_blocked_bit_identical_to_per_row_dot() {
+        // The 4-row register blocking must keep each row's accumulation
+        // order exactly `dot`'s — bitwise, not approximately.
+        for (rows, cols) in [(1usize, 1usize), (3, 5), (4, 8), (7, 33), (18, 19)] {
+            let m = Mat::from_fn(rows, cols, |i, j| ((i * 31 + j * 17) as f32 * 0.37).sin());
+            let x: Vec<f32> = (0..cols).map(|j| ((j * 13) as f32 * 0.11).cos()).collect();
+            let mut blocked = vec![0.0f32; rows];
+            m.matvec_into(&x, &mut blocked);
+            for i in 0..rows {
+                assert_eq!(blocked[i].to_bits(), dot(m.row(i), &x).to_bits(), "row {i}");
+            }
+        }
     }
 
     #[test]

@@ -165,6 +165,13 @@ TRAIN OPTIONS:
                                       merge, default 1. The f32 engine
                                       transforms via one dense matmul
                                       and ignores this)
+  --train-lanes L                    (training-path lanes for fixed
+                                      point: shards the entry quantizer
+                                      and the EASI STE shadow backward
+                                      pass, bit-identical to sequential;
+                                      order-dependent recursions stay
+                                      sequential. Default 1, never
+                                      spawns)
   --artifacts DIR                    (default artifacts/)
   --config FILE.json                 (load config, flags override)
   --no-classifier                    (skip the MLP stage)

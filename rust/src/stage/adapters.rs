@@ -810,6 +810,10 @@ impl Stage for FxpEasiStage {
         self.seen += rows as u64;
     }
 
+    fn set_train_lanes(&mut self, lanes: usize) {
+        self.rot.set_train_lanes(lanes);
+    }
+
     fn input_spec(&self) -> Option<FxpSpec> {
         Some(self.rot.spec)
     }

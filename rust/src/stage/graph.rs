@@ -68,6 +68,10 @@ pub struct StageGraph {
     input_dim: usize,
     output_dim: usize,
     scratch: GraphScratch,
+    /// Lanes for the training pass's embarrassingly-parallel work
+    /// (entry quantization; forwarded to stages whose backward pass
+    /// commutes). 1 = sequential, never spawns.
+    train_lanes: usize,
     /// Per-stage instrumentation ([`Telemetry::Disabled`] by default:
     /// one branch per stage call, nothing recorded, nothing allocated).
     telemetry: Telemetry,
@@ -108,7 +112,24 @@ impl StageGraph {
             input_dim,
             output_dim,
             scratch: GraphScratch::default(),
+            train_lanes: 1,
             telemetry: Telemetry::Disabled,
+        }
+    }
+
+    /// Shard lane-parallel *training* work across `lanes` (the forward
+    /// path has its own `lanes` knob on [`StageGraph::forward_rows`]):
+    /// the entry quantizer shards its tile into contiguous row chunks,
+    /// and the hint is forwarded to every stage so the ones whose
+    /// backward pass commutes (the EASI STE shadow update — see
+    /// [`Stage::set_train_lanes`]) shard too. Training stays
+    /// bit-identical for every lane count; `1` (the default) keeps the
+    /// whole pass sequential and spawn-free.
+    pub fn set_train_lanes(&mut self, lanes: usize) {
+        let lanes = lanes.max(1);
+        self.train_lanes = lanes;
+        for s in self.stages.iter_mut() {
+            s.set_train_lanes(lanes);
         }
     }
 
@@ -317,6 +338,8 @@ impl StageGraph {
             stages,
             scratch,
             telemetry,
+            train_lanes,
+            input_dim,
             ..
         } = self;
         let last = match stages
@@ -331,13 +354,46 @@ impl StageGraph {
         };
         let mut cur = std::mem::take(&mut scratch.raw_a);
         let mut next = std::mem::take(&mut scratch.raw_b);
-        // Entry quantization — the shared-ingress arithmetic.
-        let mark = telemetry.begin();
+        // Entry quantization — the shared-ingress arithmetic. Rows are
+        // independent, so with `train_lanes > 1` the tile shards into
+        // contiguous row chunks across scoped threads. Each worker
+        // opens and closes its *own* telemetry window: the overflow
+        // counters are thread-local, so the per-chunk deltas attribute
+        // every saturation to the ingress slot exactly as the
+        // sequential walk does (and the recorded row counts sum to the
+        // tile's).
         resize_buf(&mut cur, x.as_slice().len());
-        for (q, &v) in cur.iter_mut().zip(x.as_slice()) {
-            *q = entry.quantize(v * prescale);
+        let lanes = (*train_lanes).min(rows).max(1);
+        if lanes > 1 {
+            let cols = *input_dim;
+            let chunk = rows.div_ceil(lanes);
+            let xs = x.as_slice();
+            let tel = &*telemetry;
+            std::thread::scope(|s| {
+                for (lane, out_chunk) in cur.chunks_mut(chunk * cols).enumerate() {
+                    let start = lane * chunk * cols;
+                    let src = &xs[start..start + out_chunk.len()];
+                    s.spawn(move || {
+                        let wmark = tel.begin();
+                        for (q, &v) in out_chunk.iter_mut().zip(src) {
+                            *q = entry.quantize(v * prescale);
+                        }
+                        tel.record_step(
+                            None,
+                            wmark,
+                            out_chunk.len() / cols,
+                            Some(out_chunk),
+                        );
+                    });
+                }
+            });
+        } else {
+            let mark = telemetry.begin();
+            for (q, &v) in cur.iter_mut().zip(x.as_slice()) {
+                *q = entry.quantize(v * prescale);
+            }
+            telemetry.record_step(None, mark, rows, Some(&cur));
         }
-        telemetry.record_step(None, mark, rows, Some(&cur));
         let mut cur_spec = entry;
         for i in 0..=last {
             if stages[i].bypassed() {
@@ -348,11 +404,7 @@ impl StageGraph {
             // overflow belong to the stage whose policy it applies.
             let mark = telemetry.begin();
             let want = stages[i].input_spec().expect("fixed-point graph stage");
-            if want.format != cur_spec.format {
-                for v in cur.iter_mut() {
-                    *v = want.requantize_from(*v, &cur_spec);
-                }
-            }
+            want.requantize_slice_from(&mut cur, &cur_spec);
             if i == last {
                 stages[i].step_tile_raw(&cur, rows, None);
                 telemetry.record_step(Some(i), mark, rows, None);
@@ -429,11 +481,7 @@ impl StageGraph {
             }
             let mark = self.telemetry.begin();
             let want = s.input_spec().expect("fixed-point graph stage");
-            if want.format != cur_spec.format {
-                for v in cur.iter_mut() {
-                    *v = want.requantize_from(*v, &cur_spec);
-                }
-            }
+            want.requantize_slice_from(&mut cur, &cur_spec);
             s.transform_tile_raw(&cur, rows, &mut next);
             std::mem::swap(&mut cur, &mut next);
             cur_spec = s.output_spec().expect("fixed-point graph stage");
@@ -469,7 +517,20 @@ impl StageGraph {
                 if rows == 0 {
                     return Mat::zeros(0, n);
                 }
-                let lanes = lanes.clamp(1, rows);
+                // Lane counts the tile cannot feed run the sequential
+                // chain without spawning a single thread (mirrors
+                // `FxpDrUnit::transform_tile_raw_multilane`): one lane
+                // is sequential by definition, and more lanes than rows
+                // would degenerate to one thread per row.
+                if lanes <= 1 || lanes > rows {
+                    let (raw, _, _) =
+                        self.forward_chunk_raw(x.as_slice(), rows, entry, prescale);
+                    return Mat::from_vec(
+                        rows,
+                        n,
+                        raw.iter().map(|&w| out_spec.dequantize(w)).collect(),
+                    );
+                }
                 let m = self.input_dim;
                 let mut raw = vec![0i32; rows * n];
                 // Ceil-divide so every lane gets a contiguous run of

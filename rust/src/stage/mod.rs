@@ -121,6 +121,13 @@ pub trait Stage: Send + Sync {
     /// sample count.
     fn advance(&mut self, _rows: usize) {}
 
+    /// Hint how many lanes the stage may use for its *training* work
+    /// (the forward path has its own `lanes` knob). Default: no-op —
+    /// most stages are order-dependent recursions that must stay
+    /// sequential; stages whose backward pass commutes (the STE shadow
+    /// update on disjoint row blocks) override this.
+    fn set_train_lanes(&mut self, _lanes: usize) {}
+
     // ------------------------------------------------------------ f32
 
     /// One streaming training pass over a row-major tile

@@ -1,0 +1,136 @@
+//! Scalar-vs-vectorized identity properties for the fixed-point core.
+//!
+//! The vectorized backend (`fxp::simd`) promises *bit-identical* raw
+//! words — its width-aware block accumulation regroups an exact integer
+//! sum, so no format, overflow policy, rounding mode, vector length or
+//! adversarial input may ever produce a different word than the scalar
+//! reference, and the telemetry saturation/wrap counters must agree
+//! event-for-event (only the single final `fit` observes overflow on
+//! either path).
+//!
+//! Everything lives in ONE `#[test]`: the dispatch toggle
+//! (`simd::set_force_scalar`) is process-global, so concurrent tests
+//! flipping it could leave a measurement on an unintended backend.
+//! (Results would still match — that is the point of the identity — but
+//! the test would no longer be exercising both paths deliberately.)
+//! A dedicated integration-test binary keeps the toggle isolated from
+//! the library's unit tests, mirroring `tests/alloc_free.rs`.
+
+use dimred::fxp::{simd, FxpMat, FxpSpec, Overflow, Rounding};
+use dimred::linalg::Mat;
+use dimred::telemetry::events;
+
+/// Deterministic raw-word generator spanning the format's full range,
+/// with a bias toward the extremes (the words that stress carries,
+/// saturation and the blocked spill points).
+fn words(spec: &FxpSpec, n: usize, seed: u64) -> Vec<i32> {
+    let (lo, hi) = (spec.format.min_raw() as i64, spec.format.max_raw() as i64);
+    let span = (hi - lo + 1) as u64;
+    let mut state = seed.wrapping_mul(0x9e37_79b9_7f4a_7c15).wrapping_add(1);
+    (0..n)
+        .map(|_| {
+            state = state
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            let r = state >> 33;
+            match r % 8 {
+                0 => lo as i32,
+                1 => hi as i32,
+                2 => 0,
+                _ => (lo + (r % span) as i64) as i32,
+            }
+        })
+        .collect()
+}
+
+/// Run `f` with the vectorized dispatch forced off, then in its natural
+/// state; assert the outputs and the per-thread (sat, wrap) telemetry
+/// deltas match exactly. Returns the scalar run's output and deltas.
+fn assert_both_paths<T: PartialEq + std::fmt::Debug>(
+    ctx: &str,
+    mut f: impl FnMut() -> T,
+) -> (T, (u64, u64)) {
+    let mut run = |f: &mut dyn FnMut() -> T| {
+        let (s0, w0) = events::snapshot();
+        let out = f();
+        let (s1, w1) = events::snapshot();
+        (out, (s1 - s0, w1 - w0))
+    };
+    simd::set_force_scalar(true);
+    let (s_out, s_ev) = run(&mut f);
+    simd::set_force_scalar(false);
+    let (v_out, v_ev) = run(&mut f);
+    assert_eq!(s_out, v_out, "raw words diverged scalar vs simd: {ctx}");
+    assert_eq!(s_ev, v_ev, "telemetry counts diverged scalar vs simd: {ctx}");
+    (s_out, s_ev)
+}
+
+#[test]
+fn vectorized_core_is_bit_identical_to_scalar() {
+    // Width grid: narrow (q8.8), the deployment formats (q4.12, q1.15),
+    // and the wide words whose products leave no i64 lane headroom
+    // (q16.16, q8.24 — 32-bit, where the blocked path must spill every
+    // element).
+    let formats = [(8u8, 8u8), (4, 12), (1, 15), (16, 16), (8, 24)];
+    let policies = [Overflow::Saturate, Overflow::Wrap];
+    let roundings = [Rounding::Nearest, Rounding::Truncate];
+    // Lengths straddling the 8-lane boundary, the block spill cadence
+    // and a long tail.
+    let lengths = [0usize, 1, 7, 8, 9, 63, 64, 65, 257, 1000];
+
+    for (ib, fb) in formats {
+        for overflow in policies {
+            for rounding in roundings {
+                let mut spec = FxpSpec::q(ib, fb);
+                spec.overflow = overflow;
+                spec.rounding = rounding;
+                let ctx = format!("q{ib}.{fb} {overflow:?} {rounding:?}");
+                for (k, &n) in lengths.iter().enumerate() {
+                    let seed = ((ib as u64) << 24) | ((fb as u64) << 16) | (k as u64);
+                    let a = words(&spec, n, seed);
+                    let b = words(&spec, n, seed ^ 0x5eed);
+                    assert_both_paths(&format!("dot n={n} {ctx}"), || spec.dot_raw(&a, &b));
+
+                    // Adversarial: every word at the same extreme — the
+                    // worst case for accumulator growth (all products
+                    // at ±2^(2B-2)) and for the saturating fit.
+                    let lo = vec![spec.format.min_raw(); n];
+                    let hi = vec![spec.format.max_raw(); n];
+                    for (x, y) in [(&lo, &lo), (&lo, &hi), (&hi, &hi)] {
+                        assert_both_paths(&format!("extremal dot n={n} {ctx}"), || {
+                            spec.dot_raw(x, y)
+                        });
+                    }
+                }
+
+                // Matrix kernels on the same spec: matvec (row dots)
+                // and the blocked transposed matvec, against an
+                // extremal-striped matrix.
+                let (rows, cols) = (37usize, 130usize);
+                let mut m = FxpMat::quantize(&Mat::zeros(rows, cols), spec);
+                let stripe = words(&spec, rows * cols, ((ib as u64) << 8) | (fb as u64));
+                m.as_raw_mut().copy_from_slice(&stripe);
+                let x_cols = words(&spec, cols, 0xc01);
+                let x_rows = words(&spec, rows, 0xc02);
+                assert_both_paths(&format!("matvec {ctx}"), || {
+                    let mut out = vec![0i32; rows];
+                    m.matvec_raw_into(&x_cols, &mut out);
+                    out
+                });
+                assert_both_paths(&format!("matvec_t {ctx}"), || {
+                    let mut out = vec![0i32; cols];
+                    m.matvec_t_raw_into(&x_rows, &mut out);
+                    out
+                });
+            }
+        }
+    }
+
+    // Make the telemetry half of the contract non-vacuous: an extremal
+    // saturating dot must actually overflow, and both paths counted it.
+    let spec = FxpSpec::q(4, 12);
+    let hi = vec![spec.format.max_raw(); 64];
+    let (word, (sat, _wrap)) = assert_both_paths("saturating q4.12 dot", || spec.dot_raw(&hi, &hi));
+    assert_eq!(word, spec.format.max_raw(), "extremal dot should clamp");
+    assert!(sat > 0, "extremal q4.12 dot should saturate");
+}
