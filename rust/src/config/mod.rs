@@ -148,6 +148,11 @@ pub struct ExperimentConfig {
     pub train_classifier: bool,
     /// Classifier epochs.
     pub mlp_epochs: usize,
+    /// Validate batches at the ingest boundary (reject empty,
+    /// wrong-dimension and non-finite payloads before they reach
+    /// trainer state). Default on; `--no-validate-ingest` disables the
+    /// per-batch scan for callers that already guarantee clean input.
+    pub validate_ingest: bool,
     /// Instrument the datapath: per-stage counters, fxp saturation
     /// health, periodic JSONL events and an end-of-run snapshot.
     pub telemetry: bool,
@@ -184,6 +189,7 @@ impl Default for ExperimentConfig {
             artifact_dir: PathBuf::from("artifacts"),
             train_classifier: true,
             mlp_epochs: 30,
+            validate_ingest: true,
             telemetry: false,
             telemetry_out: PathBuf::from("TELEMETRY_snapshot.json"),
             telemetry_events: None,
@@ -270,6 +276,9 @@ impl ExperimentConfig {
         if let Some(x) = v.get("mlp_epochs") {
             c.mlp_epochs = x.as_usize()?;
         }
+        if let Some(x) = v.get("validate_ingest") {
+            c.validate_ingest = x.as_bool()?;
+        }
         if let Some(x) = v.get("telemetry") {
             c.telemetry = x.as_bool()?;
         }
@@ -318,6 +327,9 @@ impl ExperimentConfig {
         }
         if args.flag("no-classifier") {
             self.train_classifier = false;
+        }
+        if args.flag("no-validate-ingest") {
+            self.validate_ingest = false;
         }
         if args.flag("telemetry") {
             self.telemetry = true;
@@ -436,6 +448,7 @@ impl ExperimentConfig {
             ("lanes", Json::num(self.lanes as f64)),
             ("train_lanes", Json::num(self.train_lanes as f64)),
             ("seed", Json::num(self.seed as f64)),
+            ("validate_ingest", Json::Bool(self.validate_ingest)),
             ("telemetry", Json::Bool(self.telemetry)),
         ];
         if let Some(s) = &self.stages {

@@ -24,6 +24,24 @@ pub enum Batch {
     Tail(Mat),
 }
 
+/// A batch refused at the ingest boundary: empty, wrong feature
+/// dimension, or carrying non-finite values. A typed error (not just an
+/// `anyhow` message) so the serving layer's circuit breaker can tell
+/// "this batch was garbage — drop it" apart from "this tenant's session
+/// failed — retry it".
+#[derive(Debug, Clone)]
+pub struct BatchRejected {
+    pub reason: String,
+}
+
+impl std::fmt::Display for BatchRejected {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "batch rejected: {}", self.reason)
+    }
+}
+
+impl std::error::Error for BatchRejected {}
+
 impl Batch {
     pub fn rows(&self) -> &Mat {
         match self {
@@ -44,6 +62,36 @@ impl Batch {
         match self {
             Batch::Full(m) | Batch::Tail(m) => m,
         }
+    }
+
+    /// Ingest-boundary validation: reject empty batches, wrong feature
+    /// dimensions and non-finite payloads *before* any value reaches
+    /// trainer state. One NaN through a fixed-point quantizer would
+    /// saturate into a legal-looking raw word and silently corrupt the
+    /// whitening statistics — rejection here is what keeps a poisoned
+    /// tenant a scheduling event instead of a numerics event.
+    pub fn validate(&self, expected_dim: usize) -> Result<(), BatchRejected> {
+        let m = self.rows();
+        if m.rows_count() == 0 {
+            return Err(BatchRejected {
+                reason: "empty batch".into(),
+            });
+        }
+        if m.cols_count() != expected_dim {
+            return Err(BatchRejected {
+                reason: format!(
+                    "dimension mismatch: got {} columns, expected {expected_dim}",
+                    m.cols_count()
+                ),
+            });
+        }
+        if let Some(i) = m.as_slice().iter().position(|v| !v.is_finite()) {
+            let (r, c) = (i / m.cols_count(), i % m.cols_count());
+            return Err(BatchRejected {
+                reason: format!("non-finite value {} at row {r}, col {c}", m.as_slice()[i]),
+            });
+        }
+        Ok(())
     }
 }
 
@@ -301,6 +349,28 @@ mod tests {
         }
         prod.handle.join().unwrap().unwrap();
         assert_eq!(seen, 80);
+    }
+
+    #[test]
+    fn validate_rejects_bad_batches_with_reasons() {
+        let good = Batch::Full(Mat::from_fn(4, 3, |i, j| (i + j) as f32));
+        good.validate(3).unwrap();
+        // Wrong dimension.
+        let err = good.validate(5).unwrap_err();
+        assert!(err.reason.contains("got 3"), "{err}");
+        assert!(err.reason.contains("expected 5"), "{err}");
+        // Empty.
+        let empty = Batch::Full(Mat::from_vec(0, 3, Vec::new()));
+        assert!(empty.validate(3).unwrap_err().reason.contains("empty"));
+        // NaN / Inf, with the offending coordinate named.
+        let mut m = Mat::from_fn(4, 3, |i, j| (i + j) as f32);
+        m.set(2, 1, f32::NAN);
+        let err = Batch::Tail(m).validate(3).unwrap_err();
+        assert!(err.reason.contains("row 2"), "{err}");
+        assert!(err.reason.contains("col 1"), "{err}");
+        let mut m = Mat::from_fn(4, 3, |i, j| (i + j) as f32);
+        m.set(0, 0, f32::NEG_INFINITY);
+        assert!(Batch::Full(m).validate(3).is_err());
     }
 
     #[test]

@@ -20,7 +20,7 @@ pub mod batcher;
 pub mod session;
 pub mod trainer;
 
-pub use batcher::{Batch, EpochSource, SampleSource};
+pub use batcher::{Batch, BatchRejected, EpochSource, SampleSource};
 // Run metrics were absorbed into the telemetry layer (one home for
 // run- and stage-level instrumentation); re-exported here so
 // coordinator callers keep their import paths.

@@ -130,6 +130,10 @@ pub struct SessionCheckpoint {
     mode: PipelineMode,
     stages: Vec<StageState>,
     metrics: Metrics,
+    /// Telemetry snapshot at checkpoint time, so reporting on an
+    /// evicted tenant never has to rebuild a trainer just to read its
+    /// counters (and a failed restore cannot take the report down).
+    telemetry: Option<crate::telemetry::TelemetrySnapshot>,
     pending: VecDeque<Scheduled>,
     next_seq: u64,
     stop: StopRule,
@@ -143,6 +147,11 @@ impl SessionCheckpoint {
 
     pub fn mode(&self) -> PipelineMode {
         self.mode
+    }
+
+    /// The datapath telemetry as of checkpoint time.
+    pub fn telemetry(&self) -> Option<&crate::telemetry::TelemetrySnapshot> {
+        self.telemetry.as_ref()
     }
 }
 
@@ -207,6 +216,18 @@ impl<'rt> Session<'rt> {
     pub fn ingest(&mut self, batch: &Batch) -> Result<IngestOutcome> {
         if self.stopped {
             return Ok(IngestOutcome::Stopped);
+        }
+        // Ingest-boundary validation (default on; `--no-validate-ingest`
+        // disables): a rejected batch leaves every piece of session
+        // state — trainer words, schedule, counters — untouched, except
+        // for the rejection tally itself. The typed `BatchRejected`
+        // error lets the serving layer's circuit breaker distinguish
+        // bad input (drop the batch) from a failing tenant (retry it).
+        if self.cfg.validate_ingest {
+            if let Err(e) = batch.validate(self.cfg.input_dim) {
+                self.metrics.rejected_batches += 1;
+                return Err(anyhow::Error::new(e));
+            }
         }
         // Reconfiguration controller: pop every command whose threshold
         // has been reached, in (after_samples, insertion) order.
@@ -304,6 +325,7 @@ impl<'rt> Session<'rt> {
             mode: self.trainer.mode(),
             stages: graph.save_state(),
             metrics: self.metrics.clone(),
+            telemetry: self.trainer.telemetry_snapshot(),
             pending: self.pending.clone(),
             next_seq: self.next_seq,
             stop: self.stop,

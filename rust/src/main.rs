@@ -36,6 +36,7 @@
 //!   dimred report --precision q4.12 --epochs 1 --json TELEMETRY_snapshot.json
 //!   dimred serve --tenants 16 --shards 4 --arrival skewed:10
 //!   dimred serve --smoke --json SERVE_report.json
+//!   dimred serve --smoke --inject-faults "t1:nan,t3:ingest@0.5"
 
 use anyhow::{bail, Context, Result};
 use dimred::config::{Backend, ExperimentConfig};
@@ -66,6 +67,7 @@ const FLAGS: &[&str] = &[
     "smoke",
     "telemetry",
     "evict-idle",
+    "no-validate-ingest",
 ];
 
 fn run() -> Result<()> {
@@ -189,6 +191,11 @@ TRAIN OPTIONS:
   --telemetry-events FILE            (explicit JSONL event path, implies
                                       --telemetry; overrides the sibling
                                       derivation)
+  --no-validate-ingest               (skip the ingest boundary checks —
+                                      empty / wrong-dimension /
+                                      non-finite batches; on by default
+                                      so bad values never reach
+                                      fixed-point state)
 
 SERVE OPTIONS:
   --tenants N --shards S             (default 16 tenants on 4 shards)
@@ -208,6 +215,15 @@ SERVE OPTIONS:
                                       are transparent and bit-exact)
   --telemetry                        (per-tenant datapath telemetry in
                                       the report and JSON)
+  --inject-faults SPEC               (deterministic fault injection:
+                                      comma-separated tenant:kind[@rate]
+                                      with kind nan|inf|dim|empty|stall|
+                                      ingest|restore and tenant t<N> or
+                                      `*`; e.g. \"t1:nan,t3:ingest@0.5\".
+                                      Faulting tenants are retried with
+                                      bounded backoff, then quarantined
+                                      on their last-good checkpoint —
+                                      other tenants are unaffected)
   --json FILE                        (write the schema-validated
                                       SERVE_report.json)
   --smoke                            (CI sizes: 8 tenants, 2 shards,
@@ -605,14 +621,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
         telemetry: defaults.telemetry || args.flag("telemetry"),
         evict_idle: args.flag("evict-idle"),
         seed: args.u64_or("seed", defaults.seed)?,
+        faults: args.opt_str("inject-faults").map(str::to_string),
     };
     println!(
-        "# serve: tenants={} shards={} batch={} batches/tenant={} arrival={}{}",
+        "# serve: tenants={} shards={} batch={} batches/tenant={} arrival={}{}{}",
         opts.tenants,
         opts.shards,
         opts.batch,
         opts.batches_per_tenant,
         opts.arrival.label(),
+        opts.faults
+            .as_deref()
+            .map(|f| format!(" faults={f}"))
+            .unwrap_or_default(),
         if smoke { " (smoke)" } else { "" }
     );
     let report = dimred::serve::workload::run(&opts)?;

@@ -1,0 +1,391 @@
+//! Deterministic fault injection for the serving layer.
+//!
+//! The paper's pitch is *always-on* training in hardware; a serving
+//! host only honours that claim if one tenant's garbage cannot take
+//! the others down — and that property is untestable without a way to
+//! produce the garbage on demand. This module is that way: a
+//! [`FaultPlan`] parsed from a compact spec string
+//! (`t1:nan@0.5,t3:ingest@0.25,t5:restore`) drives per-tenant
+//! [`TenantInjector`]s that poison batches (NaN / Inf /
+//! dimension-mismatch / empty), stall producers, and force synthetic
+//! ingest and restore failures at configurable rates.
+//!
+//! Everything is seeded through [`crate::rng::derive_seed`]: each
+//! `(tenant, kind)` pair owns an independent [`Pcg64`] stream, so a
+//! given spec + seed produces the same fault sequence per tenant on
+//! every run regardless of how the scheduler interleaves tenants. The
+//! chaos suite (`tests/chaos.rs`) leans on that determinism to prove
+//! that tenants *outside* the blast radius stay bit-identical to a
+//! fault-free oracle run.
+
+use crate::coordinator::Batch;
+use crate::linalg::Mat;
+use crate::rng::{derive_seed, Pcg64, RngExt};
+use anyhow::{bail, Context, Result};
+
+/// One kind of injected misbehaviour.
+///
+/// The first four corrupt a batch on the producer side (exercising the
+/// ingest validator); `Stall` delays a producer (exercising scheduler
+/// fairness); `Ingest` and `Restore` fail shard-side operations
+/// (exercising the retry / quarantine circuit breaker).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Overwrite a few batch entries with NaN.
+    Nan,
+    /// Overwrite a few batch entries with +/-Inf.
+    Inf,
+    /// Widen the batch to the wrong feature dimension.
+    DimMismatch,
+    /// Replace the batch with a zero-row one.
+    Empty,
+    /// Producer sleeps before sending (slow-tenant simulation).
+    Stall,
+    /// Shard-side synthetic ingest error (before the session is touched).
+    Ingest,
+    /// Shard-side synthetic `Session::restore` failure for an evicted
+    /// tenant.
+    Restore,
+}
+
+impl FaultKind {
+    /// Every kind, in spec order (also the poison precedence order).
+    pub const ALL: [FaultKind; 7] = [
+        FaultKind::Nan,
+        FaultKind::Inf,
+        FaultKind::DimMismatch,
+        FaultKind::Empty,
+        FaultKind::Stall,
+        FaultKind::Ingest,
+        FaultKind::Restore,
+    ];
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "nan" => Ok(Self::Nan),
+            "inf" => Ok(Self::Inf),
+            "dim" => Ok(Self::DimMismatch),
+            "empty" => Ok(Self::Empty),
+            "stall" => Ok(Self::Stall),
+            "ingest" => Ok(Self::Ingest),
+            "restore" => Ok(Self::Restore),
+            other => bail!("unknown fault kind '{other}' (nan|inf|dim|empty|stall|ingest|restore)"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Nan => "nan",
+            Self::Inf => "inf",
+            Self::DimMismatch => "dim",
+            Self::Empty => "empty",
+            Self::Stall => "stall",
+            Self::Ingest => "ingest",
+            Self::Restore => "restore",
+        }
+    }
+
+    /// Corrupts the batch payload on the producer side (vs failing a
+    /// shard-side operation).
+    pub fn poisons_batch(&self) -> bool {
+        matches!(self, Self::Nan | Self::Inf | Self::DimMismatch | Self::Empty)
+    }
+
+    /// Seed-stream tag: each kind draws from its own decorrelated RNG.
+    fn tag(&self) -> u64 {
+        match self {
+            Self::Nan => 1,
+            Self::Inf => 2,
+            Self::DimMismatch => 3,
+            Self::Empty => 4,
+            Self::Stall => 5,
+            Self::Ingest => 6,
+            Self::Restore => 7,
+        }
+    }
+}
+
+/// One spec entry: inject `kind` faults into `tenant`'s traffic at
+/// `rate` (probability per opportunity). `tenant == "*"` matches every
+/// tenant.
+#[derive(Debug, Clone)]
+pub struct FaultEntry {
+    pub tenant: String,
+    pub kind: FaultKind,
+    pub rate: f64,
+}
+
+/// A parsed `--inject-faults` spec: which tenants get which faults at
+/// which rates.
+///
+/// Spec grammar: comma-separated `tenant:kind[@rate]` items, e.g.
+/// `t1:nan@0.5,t3:ingest@0.25,t5:restore` (rate defaults to 1.0).
+/// Duplicate `(tenant, kind)` pairs are rejected naming the offending
+/// token, following the stage-list parser's convention.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    pub entries: Vec<FaultEntry>,
+}
+
+impl FaultPlan {
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut entries: Vec<FaultEntry> = Vec::new();
+        for item in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (target, rate) = match item.split_once('@') {
+                Some((t, r)) => {
+                    let rate: f64 = r
+                        .parse()
+                        .ok()
+                        .filter(|&x: &f64| (0.0..=1.0).contains(&x))
+                        .with_context(|| format!("bad fault rate in '{item}' (want 0..=1)"))?;
+                    (t, rate)
+                }
+                None => (item, 1.0),
+            };
+            let (tenant, kind) = target
+                .split_once(':')
+                .with_context(|| format!("bad fault item '{item}' (want tenant:kind[@rate])"))?;
+            anyhow::ensure!(!tenant.is_empty(), "empty tenant in fault item '{item}'");
+            let kind = FaultKind::parse(kind)?;
+            if entries.iter().any(|e| e.tenant == tenant && e.kind == kind) {
+                bail!("duplicate fault entry '{item}'");
+            }
+            entries.push(FaultEntry {
+                tenant: tenant.to_string(),
+                kind,
+                rate,
+            });
+        }
+        anyhow::ensure!(!entries.is_empty(), "empty fault spec");
+        Ok(Self { entries })
+    }
+
+    /// Canonical spec string (round-trips through [`FaultPlan::parse`]).
+    pub fn label(&self) -> String {
+        self.entries
+            .iter()
+            .map(|e| format!("{}:{}@{}", e.tenant, e.kind.label(), e.rate))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// Build the injector for one tenant, or `None` if no entry matches
+    /// it. Each `(tenant, kind)` gate draws from its own RNG stream
+    /// derived from `seed`, so fault sequences are per-tenant
+    /// deterministic no matter how tenants interleave.
+    pub fn injector_for(&self, tenant: &str, seed: u64) -> Option<TenantInjector> {
+        let gates: Vec<(FaultKind, RateGate)> = self
+            .entries
+            .iter()
+            .filter(|e| e.tenant == "*" || e.tenant == tenant)
+            .map(|e| {
+                let stream = derive_seed(derive_seed(seed, tenant_tag(tenant)), e.kind.tag());
+                (e.kind, RateGate::new(e.rate, stream))
+            })
+            .collect();
+        (!gates.is_empty()).then_some(TenantInjector { gates })
+    }
+}
+
+/// FNV-1a over the tenant name: a stable per-tenant seed tag.
+fn tenant_tag(tenant: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in tenant.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// A seeded Bernoulli gate: fires with probability `rate` per draw.
+#[derive(Debug)]
+struct RateGate {
+    rate: f64,
+    rng: Pcg64,
+}
+
+impl RateGate {
+    fn new(rate: f64, seed: u64) -> Self {
+        Self {
+            rate,
+            rng: Pcg64::seed(seed),
+        }
+    }
+
+    fn fire(&mut self) -> bool {
+        // rate 1.0 always fires (next_f64 < 1.0 by construction).
+        self.rng.next_f64() < self.rate
+    }
+}
+
+/// One tenant's fault source. The producer side calls
+/// [`TenantInjector::poison`] / [`TenantInjector::stall_fault`]; the
+/// shard side calls [`TenantInjector::ingest_fault`] /
+/// [`TenantInjector::restore_fault`]. The two sides draw from disjoint
+/// kind streams, so a plan can safely be instantiated on both.
+#[derive(Debug)]
+pub struct TenantInjector {
+    gates: Vec<(FaultKind, RateGate)>,
+}
+
+impl TenantInjector {
+    fn fire(&mut self, kind: FaultKind) -> bool {
+        self.gates
+            .iter_mut()
+            .find(|(k, _)| *k == kind)
+            .map(|(_, g)| g.fire())
+            .unwrap_or(false)
+    }
+
+    /// Maybe corrupt an outgoing batch. At most one poison kind applies
+    /// per batch, in [`FaultKind::ALL`] precedence order; returns the
+    /// (possibly corrupted) batch and which kind fired.
+    pub fn poison(&mut self, batch: Batch) -> (Batch, Option<FaultKind>) {
+        for kind in FaultKind::ALL {
+            if kind.poisons_batch() && self.fire(kind) {
+                return (corrupt(batch, kind), Some(kind));
+            }
+        }
+        (batch, None)
+    }
+
+    /// Should the producer stall before this send?
+    pub fn stall_fault(&mut self) -> bool {
+        self.fire(FaultKind::Stall)
+    }
+
+    /// Should this shard-side ingest attempt fail synthetically?
+    pub fn ingest_fault(&mut self) -> bool {
+        self.fire(FaultKind::Ingest)
+    }
+
+    /// Should this restore of an evicted session fail synthetically?
+    pub fn restore_fault(&mut self) -> bool {
+        self.fire(FaultKind::Restore)
+    }
+}
+
+/// Apply one poison kind to a batch. Public so the chaos suite can
+/// craft the exact corrupted payloads the workload driver would send.
+pub fn corrupt(batch: Batch, kind: FaultKind) -> Batch {
+    let m = batch.into_mat();
+    let (rows, cols) = m.shape();
+    match kind {
+        FaultKind::Nan | FaultKind::Inf => {
+            let v = if kind == FaultKind::Nan {
+                f32::NAN
+            } else {
+                f32::INFINITY
+            };
+            let mut m = m;
+            if rows > 0 && cols > 0 {
+                // First and middle entries: corruption a validator that
+                // only samples the batch head would still catch.
+                m.set(0, 0, v);
+                m.set(rows / 2, cols / 2, -v);
+            }
+            Batch::Full(m)
+        }
+        FaultKind::DimMismatch => Batch::Full(Mat::from_fn(rows.max(1), cols + 1, |i, j| {
+            if j < cols && i < rows {
+                m.get(i, j)
+            } else {
+                0.0
+            }
+        })),
+        FaultKind::Empty => Batch::Full(Mat::from_vec(0, cols, Vec::new())),
+        // Non-poison kinds never reach here (see `poison`).
+        FaultKind::Stall | FaultKind::Ingest | FaultKind::Restore => Batch::Full(m),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn batch(rows: usize, dim: usize) -> Batch {
+        Batch::Full(Mat::from_fn(rows, dim, |i, j| (i * dim + j) as f32 * 0.01))
+    }
+
+    #[test]
+    fn spec_parses_and_round_trips() {
+        let p = FaultPlan::parse("t1:nan@0.5, t3:ingest@0.25 ,t5:restore").unwrap();
+        assert_eq!(p.entries.len(), 3);
+        assert_eq!(p.entries[0].kind, FaultKind::Nan);
+        assert_eq!(p.entries[2].rate, 1.0);
+        let back = FaultPlan::parse(&p.label()).unwrap();
+        assert_eq!(back.label(), p.label());
+    }
+
+    #[test]
+    fn spec_rejects_bad_items() {
+        for bad in [
+            "",
+            "t1",               // no kind
+            "t1:frobnicate",    // unknown kind
+            "t1:nan@1.5",       // rate out of range
+            "t1:nan@x",         // non-numeric rate
+            ":nan",             // empty tenant
+            "t1:nan,t1:nan@0.5", // duplicate (tenant, kind)
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn wildcard_matches_every_tenant_and_misses_none() {
+        let p = FaultPlan::parse("*:stall@0.5").unwrap();
+        assert!(p.injector_for("t0", 1).is_some());
+        assert!(p.injector_for("anything", 1).is_some());
+        let p = FaultPlan::parse("t0:nan").unwrap();
+        assert!(p.injector_for("t1", 1).is_none());
+    }
+
+    #[test]
+    fn injection_is_deterministic_per_seed_and_tenant() {
+        let p = FaultPlan::parse("t0:ingest@0.5,t0:nan@0.3").unwrap();
+        let fire = |seed: u64| -> (Vec<bool>, Vec<bool>) {
+            let mut inj = p.injector_for("t0", seed).unwrap();
+            let ing: Vec<bool> = (0..32).map(|_| inj.ingest_fault()).collect();
+            let poi: Vec<bool> = (0..32).map(|_| inj.poison(batch(4, 3)).1.is_some()).collect();
+            (ing, poi)
+        };
+        assert_eq!(fire(2018), fire(2018));
+        assert_ne!(fire(2018), fire(2019), "seeds must decorrelate");
+        // The two kinds draw from independent streams: consuming one
+        // does not shift the other.
+        let mut a = p.injector_for("t0", 2018).unwrap();
+        let mut b = p.injector_for("t0", 2018).unwrap();
+        for _ in 0..16 {
+            b.ingest_fault();
+        }
+        let pa: Vec<bool> = (0..16).map(|_| a.poison(batch(4, 3)).1.is_some()).collect();
+        let pb: Vec<bool> = (0..16).map(|_| b.poison(batch(4, 3)).1.is_some()).collect();
+        assert_eq!(pa, pb);
+    }
+
+    #[test]
+    fn rate_one_always_fires_rate_zero_never() {
+        let p = FaultPlan::parse("t0:ingest@1,t0:restore@0").unwrap();
+        let mut inj = p.injector_for("t0", 7).unwrap();
+        for _ in 0..64 {
+            assert!(inj.ingest_fault());
+            assert!(!inj.restore_fault());
+        }
+    }
+
+    #[test]
+    fn corrupt_produces_each_poison_shape() {
+        let b = batch(8, 4);
+        let (rows, cols) = (8, 4);
+        let nan = corrupt(b.clone(), FaultKind::Nan);
+        assert!(nan.rows().get(0, 0).is_nan());
+        assert_eq!(nan.rows().shape(), (rows, cols));
+        let inf = corrupt(b.clone(), FaultKind::Inf);
+        assert!(inf.rows().get(0, 0).is_infinite());
+        let dim = corrupt(b.clone(), FaultKind::DimMismatch);
+        assert_eq!(dim.rows().cols_count(), cols + 1);
+        let empty = corrupt(b, FaultKind::Empty);
+        assert!(empty.is_empty());
+    }
+}

@@ -25,13 +25,22 @@
 //!   and the bench `multi_tenant` scenario family (tenant count,
 //!   arrival pattern, per-tenant cascade/precision).
 //! * [`report`] — schema-validated JSON + text rendering of a serve
-//!   run, with per-tenant latency percentiles and telemetry health.
+//!   run, with per-tenant latency percentiles, telemetry health and
+//!   fault-containment counters.
+//! * [`faults`] — deterministic, seeded fault injection (poisoned
+//!   batches, producer stalls, synthetic ingest/restore failures) that
+//!   the shard's per-tenant circuit breaker is tested against: a
+//!   faulting tenant is retried with bounded backoff, then quarantined
+//!   on its last-good checkpoint while every other tenant keeps its
+//!   bit-exact stream (proven in `tests/chaos.rs`).
 
+pub mod faults;
 pub mod registry;
 pub mod report;
 pub mod shard;
 pub mod workload;
 
+pub use faults::{FaultKind, FaultPlan, TenantInjector};
 pub use registry::SessionRegistry;
-pub use shard::{RoundStats, Shard, ShardOptions, TenantIngress, TenantOutcome};
+pub use shard::{RoundStats, Shard, ShardOptions, TenantHealth, TenantIngress, TenantOutcome};
 pub use workload::{ArrivalPattern, ServeOptions, ServeReport, TenantReport};

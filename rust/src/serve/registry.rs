@@ -115,6 +115,17 @@ impl SessionRegistry {
         }
     }
 
+    /// The tenant's datapath telemetry, live or evicted. Checkpoints
+    /// carry the snapshot taken at eviction time, so reading an evicted
+    /// tenant's telemetry never rebuilds a trainer — and a tenant whose
+    /// restore would fail still reports.
+    pub fn telemetry_of(&self, tenant: &str) -> Option<crate::telemetry::TelemetrySnapshot> {
+        match self.slots.get(tenant)? {
+            TenantSlot::Live(s) => s.trainer().telemetry_snapshot(),
+            TenantSlot::Evicted(ck) => ck.telemetry().cloned(),
+        }
+    }
+
     pub fn len(&self) -> usize {
         self.slots.len()
     }
@@ -155,7 +166,8 @@ mod tests {
         reg.create("t0", &c).unwrap();
         assert!(reg.is_live("t0"));
         for salt in 0..4 {
-            reg.session_mut("t0").unwrap().ingest(&batch(c.input_dim, salt)).unwrap();
+            let s = reg.session_mut("t0").unwrap();
+            s.ingest(&batch(c.input_dim, salt)).unwrap();
         }
         reg.evict("t0").unwrap();
         assert!(!reg.is_live("t0"));
@@ -164,7 +176,8 @@ mod tests {
         // Idempotent evict.
         reg.evict("t0").unwrap();
         // Touching the session transparently restores it.
-        reg.session_mut("t0").unwrap().ingest(&batch(c.input_dim, 4)).unwrap();
+        let s = reg.session_mut("t0").unwrap();
+        s.ingest(&batch(c.input_dim, 4)).unwrap();
         assert!(reg.is_live("t0"));
         assert_eq!(reg.restores("t0"), 1);
         assert_eq!(reg.metrics_of("t0").unwrap().samples_in, 320);
@@ -178,6 +191,49 @@ mod tests {
         assert!(reg.session_mut("nope").is_err());
         assert!(reg.evict("nope").is_err());
         assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn rejected_batch_leaves_session_state_untouched() {
+        // The ingest-boundary guarantee at registry level: a poisoned
+        // batch errors out *before* any value reaches trainer state, so
+        // the forward transform and every counter except the rejection
+        // tally are exactly what they were.
+        let mut reg = SessionRegistry::new();
+        let c = ExperimentConfig {
+            precision: crate::fxp::Precision::parse("q4.12").unwrap(),
+            ..cfg()
+        };
+        reg.create("t0", &c).unwrap();
+        for salt in 0..3 {
+            let s = reg.session_mut("t0").unwrap();
+            s.ingest(&batch(c.input_dim, salt)).unwrap();
+        }
+        let probe = Mat::from_fn(16, c.input_dim, |i, j| ((i * 5 + j) % 11) as f32 / 11.0);
+        let before = reg.session_mut("t0").unwrap().trainer().transform_rows(&probe);
+        let samples_before = reg.metrics_of("t0").unwrap().samples_in;
+
+        let mut poisoned = Mat::from_fn(64, c.input_dim, |_, _| 0.1);
+        poisoned.set(7, 3, f32::NAN);
+        let err = reg
+            .session_mut("t0")
+            .unwrap()
+            .ingest(&Batch::Full(poisoned))
+            .unwrap_err();
+        let rejected = err.downcast_ref::<crate::coordinator::BatchRejected>();
+        assert!(rejected.is_some(), "expected a typed rejection, got {err:#}");
+
+        let s = reg.session_mut("t0").unwrap();
+        assert_eq!(s.metrics().samples_in, samples_before);
+        assert_eq!(s.metrics().rejected_batches, 1);
+        assert_eq!(
+            s.trainer().transform_rows(&probe).as_slice(),
+            before.as_slice(),
+            "trainer state moved on a rejected batch"
+        );
+        // The session still accepts clean traffic afterwards.
+        s.ingest(&batch(c.input_dim, 9)).unwrap();
+        assert_eq!(reg.metrics_of("t0").unwrap().samples_in, samples_before + 64);
     }
 
     #[test]

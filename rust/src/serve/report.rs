@@ -2,6 +2,12 @@
 //! an aligned text table, following the bench/telemetry golden-schema
 //! discipline — the CLI validates its own output before writing, and CI
 //! validates the uploaded artifact.
+//!
+//! Schema v2 adds the fault-containment surface: a top-level `faults`
+//! object (injection totals, producer hang-ups, quarantine count) and a
+//! per-session `faults` block mirroring
+//! [`crate::serve::TenantHealth`]. Clean runs carry the same shape with
+//! all counters at zero, so consumers never branch on schema presence.
 
 use super::workload::{ServeOptions, ServeReport};
 use crate::util::json::Json;
@@ -9,9 +15,10 @@ use anyhow::{ensure, Context, Result};
 
 /// Serialise one serve run under the golden schema (see [`validate`]).
 pub fn to_json(opts: &ServeOptions, r: &ServeReport) -> Json {
+    let quarantined = r.tenants.iter().filter(|t| t.health.quarantined).count();
     Json::obj(vec![
         ("experiment", Json::str("serve_report")),
-        ("schema_version", Json::num(1.0)),
+        ("schema_version", Json::num(2.0)),
         ("tenants", Json::num(r.tenants.len() as f64)),
         ("shards", Json::num(r.shards as f64)),
         ("arrival", Json::str(r.arrival.clone())),
@@ -27,6 +34,42 @@ pub fn to_json(opts: &ServeOptions, r: &ServeReport) -> Json {
         (
             "fairness_spread",
             r.fairness_spread.map(Json::num).unwrap_or(Json::Null),
+        ),
+        (
+            "faults",
+            Json::obj(vec![
+                (
+                    "spec",
+                    r.faults_spec
+                        .clone()
+                        .map(Json::str)
+                        .unwrap_or(Json::Null),
+                ),
+                ("injected_batches", Json::num(r.injected_batches as f64)),
+                ("injected_stalls", Json::num(r.injected_stalls as f64)),
+                ("producer_hangups", Json::num(r.producer_hangups as f64)),
+                (
+                    "total_faults",
+                    Json::num(r.tenants.iter().map(|t| t.health.faults).sum::<u64>() as f64),
+                ),
+                (
+                    "retries",
+                    Json::num(r.tenants.iter().map(|t| t.health.retries).sum::<u64>() as f64),
+                ),
+                (
+                    "rejected_batches",
+                    Json::num(
+                        r.tenants.iter().map(|t| t.health.rejected_batches).sum::<u64>() as f64,
+                    ),
+                ),
+                (
+                    "dropped_batches",
+                    Json::num(
+                        r.tenants.iter().map(|t| t.health.dropped_batches).sum::<u64>() as f64,
+                    ),
+                ),
+                ("quarantined", Json::num(quarantined as f64)),
+            ]),
         ),
         (
             "sessions",
@@ -47,6 +90,30 @@ pub fn to_json(opts: &ServeOptions, r: &ServeReport) -> Json {
                             (
                                 "completed_at_s",
                                 t.completed_at_s.map(Json::num).unwrap_or(Json::Null),
+                            ),
+                            (
+                                "faults",
+                                Json::obj(vec![
+                                    ("total", Json::num(t.health.faults as f64)),
+                                    ("retries", Json::num(t.health.retries as f64)),
+                                    (
+                                        "rejected_batches",
+                                        Json::num(t.health.rejected_batches as f64),
+                                    ),
+                                    (
+                                        "dropped_batches",
+                                        Json::num(t.health.dropped_batches as f64),
+                                    ),
+                                    ("quarantined", Json::Bool(t.health.quarantined)),
+                                    (
+                                        "last_error",
+                                        t.health
+                                            .last_error
+                                            .clone()
+                                            .map(Json::str)
+                                            .unwrap_or(Json::Null),
+                                    ),
+                                ]),
                             ),
                         ];
                         if let Some(snap) = &t.telemetry {
@@ -84,16 +151,18 @@ pub fn to_json(opts: &ServeOptions, r: &ServeReport) -> Json {
 }
 
 /// Golden-schema check for `SERVE_report.json`. With `expect_telemetry`
-/// every session must carry a non-empty per-tenant `health` block with
-/// sane counters — the CI smoke's validation of the per-tenant
-/// telemetry snapshot.
+/// every non-quarantined session must carry a non-empty per-tenant
+/// `health` block with sane counters — the CI smoke's validation of the
+/// per-tenant telemetry snapshot. Quarantined sessions are held to a
+/// weaker contract (their numbers are a frozen last-good checkpoint,
+/// which may legitimately be empty).
 pub fn validate(v: &Json, expect_telemetry: bool) -> Result<()> {
     ensure!(
         v.field("experiment")?.as_str()? == "serve_report",
         "wrong experiment tag"
     );
     ensure!(
-        v.field("schema_version")?.as_usize()? == 1,
+        v.field("schema_version")?.as_usize()? == 2,
         "unknown schema version"
     );
     let tenants = v.field("tenants")?.as_usize()?;
@@ -114,6 +183,26 @@ pub fn validate(v: &Json, expect_telemetry: bool) -> Result<()> {
             ensure!(s >= 1.0, "fairness spread is slowest/fastest, got {s}");
         }
     }
+    let faults = v.field("faults").context("missing faults section")?;
+    match faults.field("spec")? {
+        Json::Null => {}
+        other => {
+            other.as_str()?;
+        }
+    }
+    for key in [
+        "injected_batches",
+        "injected_stalls",
+        "producer_hangups",
+        "total_faults",
+        "retries",
+        "rejected_batches",
+        "dropped_batches",
+    ] {
+        faults.field(key)?.as_u64()?;
+    }
+    let quarantined_total = faults.field("quarantined")?.as_u64()?;
+
     let sessions = v.field("sessions")?.as_arr()?;
     ensure!(
         sessions.len() == tenants,
@@ -121,6 +210,7 @@ pub fn validate(v: &Json, expect_telemetry: bool) -> Result<()> {
         sessions.len(),
         tenants
     );
+    let mut quarantined_seen = 0u64;
     for s in sessions {
         let tenant = s.field("tenant")?.as_str()?;
         s.field("shard")?.as_usize()?;
@@ -128,7 +218,31 @@ pub fn validate(v: &Json, expect_telemetry: bool) -> Result<()> {
         s.field("precision")?.as_str()?;
         let batches = s.field("batches")?.as_u64()?;
         let samples = s.field("samples")?.as_u64()?;
-        ensure!(samples > 0, "tenant '{tenant}' processed no samples");
+        let f = s
+            .field("faults")
+            .with_context(|| format!("tenant '{tenant}' missing faults block"))?;
+        let fault_total = f.field("total")?.as_u64()?;
+        let retries = f.field("retries")?.as_u64()?;
+        let rejected = f.field("rejected_batches")?.as_u64()?;
+        f.field("dropped_batches")?.as_u64()?;
+        ensure!(
+            retries + rejected <= fault_total,
+            "tenant '{tenant}' fault counters inconsistent"
+        );
+        let quarantined = f.field("quarantined")?.as_bool()?;
+        quarantined_seen += u64::from(quarantined);
+        if quarantined {
+            ensure!(
+                !matches!(f.field("last_error")?, Json::Null),
+                "tenant '{tenant}' quarantined without a last_error"
+            );
+            ensure!(
+                matches!(s.field("completed_at_s")?, Json::Null),
+                "tenant '{tenant}' both quarantined and completed"
+            );
+        } else {
+            ensure!(samples > 0, "tenant '{tenant}' processed no samples");
+        }
         if batches > 0 {
             s.field("p50_ns")?
                 .as_f64()
@@ -138,7 +252,7 @@ pub fn validate(v: &Json, expect_telemetry: bool) -> Result<()> {
                 .with_context(|| format!("tenant '{tenant}' p99"))?;
         }
         s.field("restores")?.as_u64()?;
-        if expect_telemetry {
+        if expect_telemetry && !quarantined {
             let health = s
                 .field("health")
                 .with_context(|| format!("tenant '{tenant}' missing telemetry health"))?
@@ -167,6 +281,10 @@ pub fn validate(v: &Json, expect_telemetry: bool) -> Result<()> {
             );
         }
     }
+    ensure!(
+        quarantined_seen == quarantined_total,
+        "faults.quarantined {quarantined_total} != {quarantined_seen} quarantined sessions"
+    );
     Ok(())
 }
 
@@ -186,6 +304,13 @@ pub fn render(r: &ServeReport) -> String {
         s.push_str(&format!("  fairness spread: {spread:.2}x"));
     }
     s.push('\n');
+    if let Some(spec) = &r.faults_spec {
+        let quarantined = r.tenants.iter().filter(|t| t.health.quarantined).count();
+        s.push_str(&format!(
+            "faults: spec={spec} injected={} stalls={} hangups={} quarantined={quarantined}\n",
+            r.injected_batches, r.injected_stalls, r.producer_hangups
+        ));
+    }
     s.push_str(&format!(
         "{:<6} {:>5} {:<34} {:<10} {:>7} {:>8} {:>10} {:>10} {:>8}\n",
         "tenant", "shard", "stages", "precision", "batches", "samples", "p50", "p99", "restores"
@@ -207,6 +332,21 @@ pub fn render(r: &ServeReport) -> String {
             fmt_ns(t.p99_ns),
             t.restores
         ));
+        let h = &t.health;
+        if h.faults > 0 || h.quarantined {
+            s.push_str(&format!(
+                "       faults {:<3} retries={} rejected={} dropped={}{}{}\n",
+                h.faults,
+                h.retries,
+                h.rejected_batches,
+                h.dropped_batches,
+                if h.quarantined { "  QUARANTINED" } else { "" },
+                h.last_error
+                    .as_deref()
+                    .map(|e| format!("  last: {e}"))
+                    .unwrap_or_default(),
+            ));
+        }
         if let Some(snap) = &t.telemetry {
             for h in snap.all() {
                 let headroom = h
@@ -253,6 +393,9 @@ mod tests {
         let table = render(&r);
         assert!(table.contains("tenant"), "{table}");
         assert!(table.contains("health"), "{table}");
+        // A clean run still carries the (all-zero) faults section.
+        let faults = parsed.field("faults").unwrap();
+        assert_eq!(faults.field("quarantined").unwrap().as_u64().unwrap(), 0);
     }
 
     #[test]
@@ -264,15 +407,39 @@ mod tests {
         validate(&good, false).unwrap();
         // …but the telemetry-expecting check fails (no health blocks).
         assert!(validate(&good, true).is_err());
-        // Wrong tag / stale version / dropped sessions all fail.
+        // Wrong tag / stale version / dropped sections all fail.
         let mut map = good.as_obj().unwrap().clone();
         map.insert("experiment".into(), Json::str("something_else"));
         assert!(validate(&Json::Obj(map), false).is_err());
         let mut map = good.as_obj().unwrap().clone();
-        map.insert("schema_version".into(), Json::num(2.0));
+        map.insert("schema_version".into(), Json::num(1.0));
         assert!(validate(&Json::Obj(map), false).is_err());
         let mut map = good.as_obj().unwrap().clone();
         map.remove("sessions");
         assert!(validate(&Json::Obj(map), false).is_err());
+        let mut map = good.as_obj().unwrap().clone();
+        map.remove("faults");
+        assert!(validate(&Json::Obj(map), false).is_err());
+    }
+
+    #[test]
+    fn faulted_run_reports_quarantine_and_validates() {
+        // t1 sends pure NaN traffic → quarantined; everyone else clean.
+        // Enough batches that the breaker (max_retries consecutive
+        // failures) trips before the stream runs dry.
+        let opts = ServeOptions {
+            faults: Some("t1:nan".into()),
+            batches_per_tenant: 8,
+            ..tiny_opts(true)
+        };
+        let r = workload::run(&opts).unwrap();
+        let json = to_json(&opts, &r);
+        let parsed = Json::parse(&json.to_string_pretty()).unwrap();
+        validate(&parsed, true).unwrap();
+        let faults = parsed.field("faults").unwrap();
+        assert_eq!(faults.field("quarantined").unwrap().as_u64().unwrap(), 1);
+        assert!(faults.field("injected_batches").unwrap().as_u64().unwrap() >= 1);
+        let table = render(&r);
+        assert!(table.contains("QUARANTINED"), "{table}");
     }
 }

@@ -9,12 +9,23 @@
 //! same-shape tiles run back to back, which keeps the datapath's
 //! instruction/data locality under mixed-tenant traffic. The sort is
 //! stable, so each tenant's batches stay in FIFO order.
+//!
+//! Failures are contained per tenant by a circuit breaker: an erroring
+//! ingest halts only that tenant's round, the failed batch is requeued
+//! (transient errors) or dropped (typed [`BatchRejected`] payload
+//! errors), and the tenant backs off for exponentially growing round
+//! counts. After `max_retries` consecutive failures the tenant is
+//! *quarantined*: its last-good checkpoint stays in the registry for
+//! reporting, its queue is torn down so the producer observes the
+//! hang-up, and every other tenant keeps draining untouched.
 
+use super::faults::{FaultPlan, TenantInjector};
 use super::registry::SessionRegistry;
 use crate::config::ExperimentConfig;
-use crate::coordinator::Batch;
+use crate::coordinator::{Batch, BatchRejected};
 use crate::telemetry::TelemetrySnapshot;
 use anyhow::{Context, Result};
+use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{Receiver, SyncSender, TryRecvError};
 use std::time::{Duration, Instant};
 
@@ -29,6 +40,11 @@ pub struct ShardOptions {
     /// Evict live sessions that had no work this round (aggressive
     /// memory cap; restores are transparent and bit-exact).
     pub evict_idle: bool,
+    /// Consecutive ingest failures a tenant may accumulate before it is
+    /// quarantined (its last-good checkpoint is preserved).
+    pub max_retries: u32,
+    /// Cap on the exponential retry backoff, in scheduler rounds.
+    pub backoff_cap_rounds: u64,
 }
 
 impl Default for ShardOptions {
@@ -37,6 +53,8 @@ impl Default for ShardOptions {
             queue_depth: 8,
             quantum: 4,
             evict_idle: false,
+            max_retries: 3,
+            backoff_cap_rounds: 8,
         }
     }
 }
@@ -56,12 +74,42 @@ impl TenantIngress {
     }
 }
 
+/// Per-tenant fault-containment state, reported through
+/// [`TenantOutcome`] into the serve report's `faults` section.
+#[derive(Debug, Clone, Default)]
+pub struct TenantHealth {
+    /// Ingest attempts that failed (any cause).
+    pub faults: u64,
+    /// Failed batches requeued for another attempt.
+    pub retries: u64,
+    /// Batches refused by ingest validation (poisoned payloads; never
+    /// retried — garbage stays garbage).
+    pub rejected_batches: u64,
+    /// Batches discarded at quarantine (in-flight + queued backlog).
+    pub dropped_batches: u64,
+    /// Circuit breaker open: the tenant is out of the scheduler and its
+    /// last-good checkpoint is frozen in the registry.
+    pub quarantined: bool,
+    /// Most recent failure, for the report.
+    pub last_error: Option<String>,
+    /// Consecutive failures so far (resets on success).
+    consecutive: u32,
+    /// Scheduler round before which this tenant is skipped (backoff).
+    backoff_until: u64,
+}
+
 struct TenantQueue {
     tenant: String,
     /// Graph-shape key (stage cascade + precision label) — the
     /// coalescing class.
     shape: String,
-    rx: Receiver<Batch>,
+    /// `None` once the producer side hung up (or the tenant was
+    /// quarantined and the shard dropped its end).
+    rx: Option<Receiver<Batch>>,
+    /// Drained-but-unprocessed batches: retry requeues land at the
+    /// front so per-tenant FIFO order survives a failure.
+    backlog: VecDeque<Batch>,
+    health: TenantHealth,
     /// Set when the producer hung up and the queue fully drained.
     completed_at: Option<Duration>,
 }
@@ -69,9 +117,12 @@ struct TenantQueue {
 /// Per-round work summary.
 #[derive(Debug, Clone, Copy)]
 pub struct RoundStats {
+    /// Batches ingested successfully this round.
     pub batches: usize,
     pub samples: u64,
-    /// Every tenant's producer has hung up and every queue is drained.
+    /// Ingest attempts that failed this round (contained per tenant).
+    pub faults: usize,
+    /// Every tenant either completed its stream or is quarantined.
     pub all_done: bool,
 }
 
@@ -88,6 +139,7 @@ pub struct TenantOutcome {
     pub restores: u64,
     pub completed_at_s: Option<f64>,
     pub telemetry: Option<TelemetrySnapshot>,
+    pub health: TenantHealth,
 }
 
 /// One worker: a registry of sessions plus their ingress queues.
@@ -97,6 +149,10 @@ pub struct Shard {
     queues: Vec<TenantQueue>,
     opts: ShardOptions,
     started: Instant,
+    round: u64,
+    plan: Option<FaultPlan>,
+    fault_seed: u64,
+    injectors: HashMap<String, TenantInjector>,
 }
 
 impl Shard {
@@ -107,7 +163,25 @@ impl Shard {
             queues: Vec::new(),
             opts,
             started: Instant::now(),
+            round: 0,
+            plan: None,
+            fault_seed: 0,
+            injectors: HashMap::new(),
         }
+    }
+
+    /// Arm shard-side fault injection (synthetic ingest / restore
+    /// failures) for current and future tenants. Injector streams are
+    /// derived from `seed` per `(tenant, kind)`, so the fault sequence
+    /// each tenant sees is deterministic.
+    pub fn set_fault_plan(&mut self, plan: FaultPlan, seed: u64) {
+        for q in &self.queues {
+            if let Some(inj) = plan.injector_for(&q.tenant, seed) {
+                self.injectors.insert(q.tenant.clone(), inj);
+            }
+        }
+        self.plan = Some(plan);
+        self.fault_seed = seed;
     }
 
     /// Register a tenant and hand back its ingress. The shape key
@@ -138,10 +212,17 @@ impl Shard {
             cfg.precision.label()
         );
         self.registry.create(tenant, cfg)?;
+        if let Some(plan) = &self.plan {
+            if let Some(inj) = plan.injector_for(tenant, self.fault_seed) {
+                self.injectors.insert(tenant.to_string(), inj);
+            }
+        }
         self.queues.push(TenantQueue {
             tenant: tenant.to_string(),
             shape,
-            rx,
+            rx: Some(rx),
+            backlog: VecDeque::new(),
+            health: TenantHealth::default(),
             completed_at: None,
         });
         Ok(())
@@ -155,26 +236,69 @@ impl Shard {
         &mut self.registry
     }
 
-    /// One scheduler round: drain up to `quantum` batches per tenant,
-    /// coalesce the round's worklist by graph shape (stable — per-tenant
-    /// FIFO preserved), ingest everything, then optionally evict
-    /// sessions that saw no traffic.
+    /// One ingest attempt for one tenant, with shard-side fault
+    /// injection applied before the session is touched.
+    fn try_ingest(&mut self, tenant: &str, batch: &Batch) -> Result<u64> {
+        if let Some(inj) = self.injectors.get_mut(tenant) {
+            if !self.registry.is_live(tenant) && inj.restore_fault() {
+                anyhow::bail!("injected fault: restore failed for tenant '{tenant}'");
+            }
+            if inj.ingest_fault() {
+                anyhow::bail!("injected fault: ingest error for tenant '{tenant}'");
+            }
+        }
+        let session = self
+            .registry
+            .session_mut(tenant)
+            .with_context(|| format!("session lookup for tenant '{tenant}'"))?;
+        session
+            .ingest(batch)
+            .with_context(|| format!("ingest for tenant '{tenant}'"))?;
+        Ok(batch.len() as u64)
+    }
+
+    /// One scheduler round: drain up to `quantum` batches per tenant
+    /// (skipping quarantined and backing-off tenants), coalesce the
+    /// round's worklist by graph shape (stable — per-tenant FIFO
+    /// preserved), ingest everything with per-tenant error containment,
+    /// then optionally evict sessions that saw no traffic.
+    ///
+    /// An ingest failure never propagates out of the round: the tenant
+    /// is halted for the rest of the round (its remaining batches go
+    /// back to the front of its backlog in order), charged a fault, and
+    /// either backed off for retry or quarantined once it exceeds
+    /// `max_retries` consecutive failures.
     pub fn poll_round(&mut self) -> Result<RoundStats> {
+        self.round += 1;
         let mut work: Vec<(usize, Batch)> = Vec::new();
         for (qi, q) in self.queues.iter_mut().enumerate() {
-            if q.completed_at.is_some() {
+            if q.completed_at.is_some() || q.health.quarantined {
                 continue;
             }
-            for _ in 0..self.opts.quantum {
-                match q.rx.try_recv() {
-                    Ok(b) => work.push((qi, b)),
-                    Err(TryRecvError::Empty) => break,
-                    Err(TryRecvError::Disconnected) => {
-                        // Disconnected means drained AND hung up (mpsc
-                        // yields buffered messages first).
-                        q.completed_at = Some(self.started.elapsed());
-                        break;
+            if self.round < q.health.backoff_until {
+                continue;
+            }
+            // Top the backlog up from the wire, then take this round's
+            // quantum from the backlog front (retries sit ahead of
+            // newer traffic there).
+            if let Some(rx) = &q.rx {
+                while q.backlog.len() < self.opts.quantum {
+                    match rx.try_recv() {
+                        Ok(b) => q.backlog.push_back(b),
+                        Err(TryRecvError::Empty) => break,
+                        Err(TryRecvError::Disconnected) => {
+                            // Disconnected means drained AND hung up
+                            // (mpsc yields buffered messages first).
+                            q.rx = None;
+                            break;
+                        }
                     }
+                }
+            }
+            for _ in 0..self.opts.quantum {
+                match q.backlog.pop_front() {
+                    Some(b) => work.push((qi, b)),
+                    None => break,
                 }
             }
         }
@@ -186,18 +310,106 @@ impl Shard {
         // each tenant's own batches keep their arrival order.
         work.sort_by(|a, b| self.queues[a.0].shape.cmp(&self.queues[b.0].shape));
 
-        let batches = work.len();
+        let mut batches = 0usize;
+        let mut faults = 0usize;
         let mut samples = 0u64;
+        let mut halted = vec![false; self.queues.len()];
+        let mut requeue: Vec<Vec<Batch>> = (0..self.queues.len()).map(|_| Vec::new()).collect();
         for (qi, batch) in work {
+            if self.queues[qi].health.quarantined {
+                self.queues[qi].health.dropped_batches += 1;
+                continue;
+            }
+            if halted[qi] {
+                requeue[qi].push(batch);
+                continue;
+            }
             let tenant = self.queues[qi].tenant.clone();
-            let session = self.registry.session_mut(&tenant)?;
-            session.ingest(&batch)?;
-            samples += batch.len() as u64;
+            match self.try_ingest(&tenant, &batch) {
+                Ok(n) => {
+                    batches += 1;
+                    samples += n;
+                    let h = &mut self.queues[qi].health;
+                    h.consecutive = 0;
+                    h.backoff_until = 0;
+                }
+                Err(err) => {
+                    faults += 1;
+                    halted[qi] = true;
+                    // A typed rejection means the payload itself is
+                    // garbage: never retried (garbage stays garbage);
+                    // anything else is treated as transient.
+                    let rejected = err.downcast_ref::<BatchRejected>().is_some();
+                    let (quarantine, retry) = {
+                        let h = &mut self.queues[qi].health;
+                        h.faults += 1;
+                        h.consecutive += 1;
+                        h.last_error = Some(format!("{err:#}"));
+                        if rejected {
+                            h.rejected_batches += 1;
+                        }
+                        if h.consecutive > self.opts.max_retries {
+                            h.quarantined = true;
+                            if !rejected {
+                                h.dropped_batches += 1;
+                            }
+                            (true, false)
+                        } else {
+                            let delay =
+                                (1u64 << (h.consecutive - 1)).min(self.opts.backoff_cap_rounds);
+                            h.backoff_until = self.round + delay;
+                            if !rejected {
+                                h.retries += 1;
+                            }
+                            (false, !rejected)
+                        }
+                    };
+                    if quarantine {
+                        // Freeze the last-good checkpoint for
+                        // reporting. May fail or be a no-op (already
+                        // evicted on the restore-fault path) — either
+                        // way the tenant is out of the scheduler.
+                        let _ = self.registry.evict(&tenant);
+                    }
+                    if retry {
+                        requeue[qi].push(batch);
+                    }
+                }
+            }
+        }
+        // Settle each queue: quarantined tenants shed everything and
+        // drop their receiver (the producer's next send observes the
+        // hang-up); healthy tenants get their halted remainder back in
+        // FIFO order and complete once wire + backlog are empty.
+        let elapsed = self.started.elapsed();
+        for (qi, rq) in requeue.into_iter().enumerate() {
+            let q = &mut self.queues[qi];
+            if q.health.quarantined {
+                let mut dropped = (rq.len() + q.backlog.len()) as u64;
+                q.backlog.clear();
+                if let Some(rx) = q.rx.take() {
+                    while rx.try_recv().is_ok() {
+                        dropped += 1;
+                    }
+                }
+                q.health.dropped_batches += dropped;
+            } else {
+                for b in rq.into_iter().rev() {
+                    q.backlog.push_front(b);
+                }
+                if q.rx.is_none() && q.backlog.is_empty() && q.completed_at.is_none() {
+                    q.completed_at = Some(elapsed);
+                }
+            }
         }
         if self.opts.evict_idle {
             for qi in 0..self.queues.len() {
                 let q = &self.queues[qi];
-                if q.completed_at.is_none() && !had_work[qi] && self.registry.is_live(&q.tenant) {
+                if q.completed_at.is_none()
+                    && !q.health.quarantined
+                    && !had_work[qi]
+                    && self.registry.is_live(&q.tenant)
+                {
                     let tenant = q.tenant.clone();
                     self.registry.evict(&tenant)?;
                 }
@@ -206,12 +418,17 @@ impl Shard {
         Ok(RoundStats {
             batches,
             samples,
-            all_done: self.queues.iter().all(|q| q.completed_at.is_some()),
+            faults,
+            all_done: self
+                .queues
+                .iter()
+                .all(|q| q.completed_at.is_some() || q.health.quarantined),
         })
     }
 
-    /// Drive rounds until every tenant's stream completes. Sleeps
-    /// briefly on idle rounds so a waiting shard doesn't spin a core.
+    /// Drive rounds until every tenant's stream completes (or is
+    /// quarantined). Sleeps briefly on idle rounds so a waiting shard
+    /// doesn't spin a core.
     pub fn run_to_completion(&mut self) -> Result<()> {
         loop {
             let stats = self.poll_round()?;
@@ -224,32 +441,204 @@ impl Shard {
         }
     }
 
-    /// Final per-tenant summaries (restores evicted sessions to read
-    /// their telemetry snapshot).
-    pub fn tenant_outcomes(&mut self) -> Result<Vec<TenantOutcome>> {
-        let mut out = Vec::with_capacity(self.queues.len());
-        for qi in 0..self.queues.len() {
-            let (tenant, shape, completed_at) = {
-                let q = &self.queues[qi];
-                (q.tenant.clone(), q.shape.clone(), q.completed_at)
-            };
-            let shard = self.id;
-            let restores = self.registry.restores(&tenant);
-            let session = self.registry.session_mut(&tenant)?;
-            let m = session.metrics();
-            out.push(TenantOutcome {
-                tenant,
-                shard,
-                shape,
-                batches: m.batches,
-                samples: m.samples_in,
-                p50_ns: m.step_latency.percentile(50.0).map(|d| d.as_nanos() as f64),
-                p99_ns: m.step_latency.percentile(99.0).map(|d| d.as_nanos() as f64),
-                restores,
-                completed_at_s: completed_at.map(|d| d.as_secs_f64()),
-                telemetry: session.trainer().telemetry_snapshot(),
-            });
+    /// Final per-tenant summaries. Reads metrics and telemetry straight
+    /// from the registry slot — checkpoints carry both, so no evicted
+    /// session is rebuilt and a tenant whose restore would fail still
+    /// reports (its numbers are the last-good checkpoint's).
+    pub fn tenant_outcomes(&self) -> Vec<TenantOutcome> {
+        self.queues
+            .iter()
+            .map(|q| {
+                let m = self.registry.metrics_of(&q.tenant);
+                TenantOutcome {
+                    tenant: q.tenant.clone(),
+                    shard: self.id,
+                    shape: q.shape.clone(),
+                    batches: m.map_or(0, |m| m.batches),
+                    samples: m.map_or(0, |m| m.samples_in),
+                    p50_ns: m
+                        .and_then(|m| m.step_latency.percentile(50.0))
+                        .map(|d| d.as_nanos() as f64),
+                    p99_ns: m
+                        .and_then(|m| m.step_latency.percentile(99.0))
+                        .map(|d| d.as_nanos() as f64),
+                    restores: self.registry.restores(&q.tenant),
+                    completed_at_s: q.completed_at.map(|d| d.as_secs_f64()),
+                    telemetry: self.registry.telemetry_of(&q.tenant),
+                    health: q.health.clone(),
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    fn cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            train_classifier: false,
+            rot_warmup: 32,
+            telemetry: true,
+            ..Default::default()
         }
-        Ok(out)
+    }
+
+    fn batch(dim: usize, salt: usize) -> Batch {
+        Batch::Full(Mat::from_fn(64, dim, |i, j| {
+            ((i * 31 + j * 7 + salt * 13) % 17) as f32 / 17.0 - 0.5
+        }))
+    }
+
+    #[test]
+    fn synthetic_ingest_faults_trip_quarantine_without_aborting_the_shard() {
+        let c = cfg();
+        let opts = ShardOptions {
+            queue_depth: 32,
+            quantum: 2,
+            max_retries: 2,
+            ..Default::default()
+        };
+        let mut shard = Shard::new(0, opts);
+        let bad = shard.add_tenant("t_bad", &c).unwrap();
+        let good = shard.add_tenant("t_good", &c).unwrap();
+        shard.set_fault_plan(FaultPlan::parse("t_bad:ingest@1").unwrap(), 2018);
+        for salt in 0..6 {
+            bad.send(batch(c.input_dim, salt)).unwrap();
+            good.send(batch(c.input_dim, salt)).unwrap();
+        }
+        drop(bad);
+        drop(good);
+        shard.run_to_completion().unwrap();
+
+        let by_tenant: HashMap<String, TenantOutcome> = shard
+            .tenant_outcomes()
+            .into_iter()
+            .map(|o| (o.tenant.clone(), o))
+            .collect();
+        let bad = &by_tenant["t_bad"];
+        assert!(bad.health.quarantined);
+        // max_retries failed attempts were retried, the breaker opened
+        // on attempt max_retries + 1.
+        assert_eq!(bad.health.faults, u64::from(opts.max_retries) + 1);
+        assert_eq!(bad.health.retries, u64::from(opts.max_retries));
+        // Everything the tenant ever sent was shed (the retried batch
+        // plus the rest of the stream), nothing ingested.
+        assert_eq!(bad.health.dropped_batches, 6);
+        assert_eq!(bad.samples, 0);
+        assert!(bad.completed_at_s.is_none(), "quarantine is not completion");
+        let good = &by_tenant["t_good"];
+        assert!(!good.health.quarantined);
+        assert_eq!(good.health.faults, 0);
+        assert_eq!(good.samples, 6 * 64);
+        assert!(good.completed_at_s.is_some());
+    }
+
+    #[test]
+    fn backoff_skips_rounds_between_retries() {
+        let c = cfg();
+        let mut shard = Shard::new(
+            0,
+            ShardOptions {
+                queue_depth: 8,
+                quantum: 1,
+                max_retries: 3,
+                ..Default::default()
+            },
+        );
+        let ing = shard.add_tenant("t0", &c).unwrap();
+        shard.set_fault_plan(FaultPlan::parse("t0:ingest@1").unwrap(), 7);
+        ing.send(batch(c.input_dim, 0)).unwrap();
+        drop(ing);
+        // After the failure on round r, backoff_until = r + delay and the
+        // tenant is skipped while round < backoff_until, so with delays
+        // 1, 2, 4 the attempts land on rounds 1, 2, 4, 8 — the fourth
+        // attempt exceeds max_retries = 3 and trips the breaker.
+        let mut attempt_rounds = Vec::new();
+        for round in 1..=20u64 {
+            let stats = shard.poll_round().unwrap();
+            if stats.faults > 0 {
+                attempt_rounds.push(round);
+            }
+            if stats.all_done {
+                break;
+            }
+        }
+        assert_eq!(attempt_rounds, vec![1, 2, 4, 8]);
+        let out = &shard.tenant_outcomes()[0];
+        assert!(out.health.quarantined);
+        assert_eq!(out.health.faults, 4);
+    }
+
+    #[test]
+    fn poisoned_batches_are_rejected_not_retried_and_state_is_preserved() {
+        let c = cfg();
+        let mut shard = Shard::new(
+            0,
+            ShardOptions {
+                queue_depth: 32,
+                quantum: 4,
+                max_retries: 2,
+                ..Default::default()
+            },
+        );
+        let ing = shard.add_tenant("t0", &c).unwrap();
+        // Two clean batches first, so the last-good checkpoint has real
+        // samples, then a stream of NaN batches.
+        ing.send(batch(c.input_dim, 0)).unwrap();
+        ing.send(batch(c.input_dim, 1)).unwrap();
+        for salt in 2..8 {
+            ing.send(super::super::faults::corrupt(
+                batch(c.input_dim, salt),
+                super::super::faults::FaultKind::Nan,
+            ))
+            .unwrap();
+        }
+        drop(ing);
+        shard.run_to_completion().unwrap();
+        let out = &shard.tenant_outcomes()[0];
+        assert!(out.health.quarantined);
+        // Rejections are counted as rejections, not retries.
+        assert_eq!(out.health.rejected_batches, 3);
+        assert_eq!(out.health.retries, 0);
+        // The clean samples survive in the frozen checkpoint.
+        assert_eq!(out.samples, 2 * 64);
+        assert!(!shard.registry().is_live("t0"), "quarantine evicts");
+        assert!(out.telemetry.is_some(), "checkpoint still reports telemetry");
+    }
+
+    #[test]
+    fn restore_faults_on_evicted_tenant_quarantine_but_keep_the_checkpoint() {
+        let c = cfg();
+        let mut shard = Shard::new(
+            0,
+            ShardOptions {
+                queue_depth: 32,
+                quantum: 4,
+                evict_idle: true,
+                max_retries: 1,
+                ..Default::default()
+            },
+        );
+        let ing = shard.add_tenant("t0", &c).unwrap();
+        shard.set_fault_plan(FaultPlan::parse("t0:restore@1").unwrap(), 11);
+        ing.send(batch(c.input_dim, 0)).unwrap();
+        shard.poll_round().unwrap();
+        assert_eq!(shard.registry().metrics_of("t0").unwrap().samples_in, 64);
+        // Idle round → evicted.
+        shard.poll_round().unwrap();
+        assert!(!shard.registry().is_live("t0"));
+        // Every later batch needs a restore, which is forced to fail.
+        ing.send(batch(c.input_dim, 1)).unwrap();
+        drop(ing);
+        shard.run_to_completion().unwrap();
+        let out = &shard.tenant_outcomes()[0];
+        assert!(out.health.quarantined);
+        let last = out.health.last_error.as_deref().unwrap();
+        assert!(last.contains("restore failed"), "got: {last}");
+        // The checkpoint (and its 64 pre-fault samples) still reports.
+        assert_eq!(out.samples, 64);
     }
 }

@@ -7,7 +7,8 @@
 //! restore counts and a fairness spread (slowest / fastest tenant
 //! completion — 1.0 is perfectly fair).
 
-use super::shard::{Shard, ShardOptions, TenantOutcome};
+use super::faults::FaultPlan;
+use super::shard::{Shard, ShardOptions, TenantHealth, TenantOutcome};
 use crate::config::{ExperimentConfig, PipelineMode};
 use crate::coordinator::Batch;
 use crate::fxp::Precision;
@@ -82,6 +83,10 @@ pub struct ServeOptions {
     pub telemetry: bool,
     pub evict_idle: bool,
     pub seed: u64,
+    /// Fault-injection spec (`tenant:kind[@rate],...`), `None` for a
+    /// clean run. Parsed by [`FaultPlan::parse`]; injector streams are
+    /// seeded from `seed`.
+    pub faults: Option<String>,
 }
 
 impl Default for ServeOptions {
@@ -99,6 +104,7 @@ impl Default for ServeOptions {
             telemetry: false,
             evict_idle: false,
             seed: 2018,
+            faults: None,
         }
     }
 }
@@ -117,6 +123,8 @@ pub struct TenantReport {
     pub restores: u64,
     pub completed_at_s: Option<f64>,
     pub telemetry: Option<TelemetrySnapshot>,
+    /// Fault-containment counters (all zero on a clean run).
+    pub health: TenantHealth,
 }
 
 /// Outcome of a serve run.
@@ -129,7 +137,26 @@ pub struct ServeReport {
     pub total_samples: u64,
     pub aggregate_samples_per_s: f64,
     /// Slowest / fastest tenant completion time (1.0 = perfectly fair).
+    /// Quarantined tenants never complete and are excluded.
     pub fairness_spread: Option<f64>,
+    /// Canonical fault spec this run was driven with, if any.
+    pub faults_spec: Option<String>,
+    /// Producers that observed a shard hang-up (their tenant was
+    /// quarantined mid-stream) and exited cleanly.
+    pub producer_hangups: u64,
+    /// Batches the producers poisoned before sending.
+    pub injected_batches: u64,
+    /// Producer-side stalls injected.
+    pub injected_stalls: u64,
+}
+
+/// What one producer thread reports back: not a `Result` — a shard
+/// hanging up on a quarantined tenant is an observation, not an error
+/// that should tear the whole run down.
+struct ProducerOutcome {
+    hung_up: bool,
+    injected_batches: u64,
+    injected_stalls: u64,
 }
 
 /// The per-tenant experiment config. With no stage/precision override
@@ -179,10 +206,12 @@ pub fn run(opts: &ServeOptions) -> Result<ServeReport> {
     ensure!(opts.tenants >= 1, "need at least one tenant");
     ensure!(opts.shards >= 1, "need at least one shard");
     ensure!(opts.batches_per_tenant >= 1, "need at least one batch per tenant");
+    let plan = opts.faults.as_deref().map(FaultPlan::parse).transpose()?;
     let shard_opts = ShardOptions {
         queue_depth: opts.queue_depth,
         quantum: opts.quantum,
         evict_idle: opts.evict_idle,
+        ..Default::default()
     };
     let started = Instant::now();
 
@@ -202,19 +231,43 @@ pub fn run(opts: &ServeOptions) -> Result<ServeReport> {
             _ => opts.batches_per_tenant,
         };
         let (rows, dim, arrival) = (opts.batch, cfg.input_dim, opts.arrival);
+        let mut injector = plan
+            .as_ref()
+            .and_then(|p| p.injector_for(&format!("t{t}"), opts.seed));
         let handle = std::thread::Builder::new()
             .name(format!("serve-tenant-{t}"))
-            .spawn(move || -> Result<()> {
+            .spawn(move || -> ProducerOutcome {
+                let mut out = ProducerOutcome {
+                    hung_up: false,
+                    injected_batches: 0,
+                    injected_stalls: 0,
+                };
                 for i in 0..n_batches {
                     if let ArrivalPattern::Bursty { burst } = arrival {
                         if i > 0 && i % burst == 0 {
                             std::thread::sleep(Duration::from_micros(200));
                         }
                     }
-                    tx.send(synth_batch(t, i, rows, dim))
-                        .map_err(|_| anyhow::anyhow!("shard hung up on tenant t{t}"))?;
+                    let mut b = synth_batch(t, i, rows, dim);
+                    if let Some(inj) = injector.as_mut() {
+                        if inj.stall_fault() {
+                            out.injected_stalls += 1;
+                            std::thread::sleep(Duration::from_micros(500));
+                        }
+                        let (poisoned, kind) = inj.poison(b);
+                        b = poisoned;
+                        if kind.is_some() {
+                            out.injected_batches += 1;
+                        }
+                    }
+                    if tx.send(b).is_err() {
+                        // The shard quarantined this tenant and dropped
+                        // its queue: record the hang-up, stop producing.
+                        out.hung_up = true;
+                        break;
+                    }
                 }
-                Ok(())
+                out
             })
             .context("spawning tenant producer")?;
         producers.push(handle);
@@ -222,23 +275,35 @@ pub fn run(opts: &ServeOptions) -> Result<ServeReport> {
 
     let mut workers = Vec::with_capacity(opts.shards);
     for (sid, tenants) in per_shard.into_iter().enumerate() {
+        let shard_plan = plan.clone();
+        let seed = opts.seed;
         let handle = std::thread::Builder::new()
             .name(format!("serve-shard-{sid}"))
             .spawn(move || -> Result<Vec<TenantOutcome>> {
                 let mut shard = Shard::new(sid, shard_opts);
+                if let Some(p) = shard_plan {
+                    shard.set_fault_plan(p, seed);
+                }
                 for (name, cfg, rx) in tenants {
                     shard.attach(&name, &cfg, rx)?;
                 }
                 shard.run_to_completion()?;
-                shard.tenant_outcomes()
+                Ok(shard.tenant_outcomes())
             })
             .context("spawning shard worker")?;
         workers.push(handle);
     }
 
+    let mut producer_hangups = 0u64;
+    let mut injected_batches = 0u64;
+    let mut injected_stalls = 0u64;
     for p in producers {
         match p.join() {
-            Ok(r) => r?,
+            Ok(o) => {
+                producer_hangups += u64::from(o.hung_up);
+                injected_batches += o.injected_batches;
+                injected_stalls += o.injected_stalls;
+            }
             Err(panic) => std::panic::resume_unwind(panic),
         }
     }
@@ -281,6 +346,7 @@ pub fn run(opts: &ServeOptions) -> Result<ServeReport> {
                 restores: o.restores,
                 completed_at_s: o.completed_at_s,
                 telemetry: o.telemetry,
+                health: o.health,
             }
         })
         .collect();
@@ -292,6 +358,10 @@ pub fn run(opts: &ServeOptions) -> Result<ServeReport> {
         total_samples,
         aggregate_samples_per_s: total_samples as f64 / elapsed_s,
         fairness_spread,
+        faults_spec: plan.as_ref().map(FaultPlan::label),
+        producer_hangups,
+        injected_batches,
+        injected_stalls,
     })
 }
 

@@ -77,6 +77,9 @@ pub struct Metrics {
     pub queue_depth: usize,
     /// Stream-tail samples processed through the b=1 executable.
     pub tail_samples: u64,
+    /// Batches refused by ingest validation (empty / wrong dimension /
+    /// non-finite payload) before touching trainer state.
+    pub rejected_batches: u64,
     pub step_latency: LatencyHistogram,
     /// Convergence signal snapshots: (samples_seen, update_magnitude).
     pub convergence_trace: Vec<(u64, f64)>,
@@ -99,6 +102,7 @@ impl Metrics {
             backpressure_waits: 0,
             queue_depth: 0,
             tail_samples: 0,
+            rejected_batches: 0,
             step_latency: LatencyHistogram::new(4096),
             convergence_trace: Vec::new(),
             reconfigurations: Vec::new(),
@@ -127,13 +131,14 @@ impl Metrics {
             .map(crate::util::bench::fmt_duration)
             .unwrap_or_else(|| "-".into());
         format!(
-            "samples={} batches={} throughput={:.0}/s step_p50={} step_p99={} backpressure={} reconfigs={}",
+            "samples={} batches={} throughput={:.0}/s step_p50={} step_p99={} backpressure={} rejected={} reconfigs={}",
             self.samples_in,
             self.batches,
             self.throughput(),
             p50,
             p99,
             self.backpressure_waits,
+            self.rejected_batches,
             self.reconfigurations.len()
         )
     }

@@ -98,7 +98,7 @@ fn round_robin_quantum_prevents_starvation() {
         ShardOptions {
             queue_depth: 128,
             quantum: 2,
-            evict_idle: false,
+            ..Default::default()
         },
     );
     let heavy = shard.add_tenant("heavy", &c).unwrap();
