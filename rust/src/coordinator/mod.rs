@@ -25,7 +25,10 @@ pub use batcher::{Batch, BatchRejected, EpochSource, SampleSource};
 // run- and stage-level instrumentation); re-exported here so
 // coordinator callers keep their import paths.
 pub use crate::telemetry::{LatencyHistogram, Metrics};
-pub use session::{IngestOutcome, Session, SessionCheckpoint, SessionStatus, TelemetrySink};
+pub use session::{
+    stage_batch, IngestOutcome, Session, SessionCheckpoint, SessionStatus, StagePlan, StagedMark,
+    TelemetrySink,
+};
 pub use trainer::{ArtifactNames, Trainer};
 
 use crate::config::ExperimentConfig;

@@ -30,17 +30,18 @@
 //! fixed-point session continues bit-identically to an uninterrupted
 //! one (proven in `tests/serve.rs`).
 
-use super::batcher::Batch;
+use super::batcher::{Batch, BatchRejected};
 use super::trainer::Trainer;
 use super::{ReconfigCommand, StopRule};
 use crate::config::{ExperimentConfig, PipelineMode};
+use crate::fxp::FxpSpec;
 use crate::runtime::Runtime;
-use crate::stage::StageState;
+use crate::stage::{Domain, StageState, StagedInput};
 use crate::telemetry::Metrics;
 use anyhow::{Context, Result};
 use std::collections::VecDeque;
 use std::io::Write;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Where periodic JSONL progress events go. Chosen from the config:
 /// disabled without `--telemetry`; a JSONL file when an events path is
@@ -107,6 +108,69 @@ impl IngestOutcome {
     pub fn is_stopped(&self) -> bool {
         matches!(self, Self::Stopped)
     }
+}
+
+/// The `Send + Copy` recipe for staging a batch *off* the session
+/// thread: everything [`Session::ingest`]'s pre-trainer phase needs
+/// (validation shape, entry arithmetic) without touching the session.
+/// Static over a session's lifetime — reconfiguration toggles stages
+/// but never changes the entry domain.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StagePlan {
+    pub input_dim: usize,
+    pub validate: bool,
+    /// Entry quantizer `(spec, prescale)` for fixed-point graphs;
+    /// `None` for f32 graphs (staging is validation only).
+    pub entry: Option<(FxpSpec, f32)>,
+}
+
+/// Timing and overflow deltas captured around one off-thread staging
+/// pass, replayed into the session's ingress telemetry at commit.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StagedMark {
+    pub ns: u64,
+    pub sat: u64,
+    pub wrap: u64,
+}
+
+impl StagedMark {
+    /// Fold another staged batch's deltas in (fused commits attribute
+    /// the whole run's staging to one ingress record).
+    pub fn merge(&mut self, other: &StagedMark) {
+        self.ns += other.ns;
+        self.sat += other.sat;
+        self.wrap += other.wrap;
+    }
+}
+
+/// Validate and (for fixed-point plans) entry-quantize one batch,
+/// appending the raw words to `out`. Pure and session-free, so it runs
+/// on a stager thread while the session commits earlier work. The
+/// quantization is per-sample deterministic — committing the staged
+/// words is bit-identical to quantizing inline.
+pub fn stage_batch(
+    plan: &StagePlan,
+    batch: &Batch,
+    out: &mut Vec<i32>,
+) -> std::result::Result<StagedMark, BatchRejected> {
+    let t0 = Instant::now();
+    let (sat0, wrap0) = crate::telemetry::events::snapshot();
+    if plan.validate {
+        batch.validate(plan.input_dim)?;
+    }
+    if let Some((entry, prescale)) = plan.entry {
+        let xs = batch.rows().as_slice();
+        out.reserve(xs.len());
+        for &v in xs {
+            out.push(entry.quantize(v * prescale));
+        }
+    }
+    let (sat, wrap) = crate::telemetry::events::snapshot();
+    Ok(StagedMark {
+        ns: t0.elapsed().as_nanos() as u64,
+        sat: sat - sat0,
+        wrap: wrap - wrap0,
+    })
 }
 
 /// Non-blocking progress read.
@@ -229,8 +293,15 @@ impl<'rt> Session<'rt> {
                 return Err(anyhow::Error::new(e));
             }
         }
-        // Reconfiguration controller: pop every command whose threshold
-        // has been reached, in (after_samples, insertion) order.
+        self.fire_due_reconfigs()?;
+        let t0 = Instant::now();
+        self.trainer.step(batch)?;
+        self.absorb_step(batch, t0.elapsed())
+    }
+
+    /// Reconfiguration controller: pop every command whose threshold
+    /// has been reached, in (after_samples, insertion) order.
+    fn fire_due_reconfigs(&mut self) -> Result<()> {
         while let Some(next) = self.pending.front() {
             if self.metrics.samples_in < next.cmd.after_samples {
                 break;
@@ -243,10 +314,14 @@ impl<'rt> Session<'rt> {
                 .reconfigurations
                 .push((self.metrics.samples_in, cmd.mode.label().to_string()));
         }
+        Ok(())
+    }
 
-        let t0 = Instant::now();
-        self.trainer.step(batch)?;
-        self.metrics.step_latency.record(t0.elapsed());
+    /// The post-step bookkeeping shared by [`Session::ingest`] and
+    /// [`Session::commit_staged`]: latency, sample/batch counters, the
+    /// convergence trace, periodic telemetry events and the stop rule.
+    fn absorb_step(&mut self, batch: &Batch, dur: Duration) -> Result<IngestOutcome> {
+        self.metrics.step_latency.record(dur);
         self.metrics.samples_in += batch.len() as u64;
         self.metrics.batches += 1;
         if matches!(batch, Batch::Tail(_)) {
@@ -274,6 +349,99 @@ impl<'rt> Session<'rt> {
             return Ok(IngestOutcome::Stopped);
         }
         Ok(IngestOutcome::Active)
+    }
+
+    /// The staging recipe matching this session (see [`StagePlan`]).
+    pub fn stage_plan(&self) -> StagePlan {
+        let entry = self.trainer.stage_graph().and_then(|g| match g.domain() {
+            Domain::Fxp { entry, prescale } => Some((entry, prescale)),
+            Domain::F32 => None,
+        });
+        StagePlan {
+            input_dim: self.cfg.input_dim,
+            validate: self.cfg.validate_ingest,
+            entry,
+        }
+    }
+
+    /// Whether fusing *multiple* batches into one trainer call is
+    /// currently indistinguishable from committing them one at a time:
+    /// no pending reconfiguration may fire at an intra-run batch
+    /// boundary, no stop rule can trip mid-run, and the trainer accepts
+    /// staged tiles (native backend, batch stages fitted).
+    pub fn fusion_ready(&self) -> bool {
+        !self.stopped
+            && self.pending.is_empty()
+            && self.stop.threshold == 0.0
+            && self.trainer.staged_ready()
+    }
+
+    /// Charge a staging-time rejection to this session exactly as
+    /// [`Session::ingest`] would have: the rejection tally moves,
+    /// nothing else does (and an already-stopped session stays a
+    /// no-op, as in `ingest`).
+    pub fn commit_rejected(&mut self, err: BatchRejected) -> Result<IngestOutcome> {
+        if self.stopped {
+            return Ok(IngestOutcome::Stopped);
+        }
+        self.metrics.rejected_batches += 1;
+        Err(anyhow::Error::new(err))
+    }
+
+    /// Commit a staged run of `k ≥ 1` already-validated batches from
+    /// one stream, in FIFO order. For fixed-point sessions `raw`
+    /// carries the fused entry-quantized tile plus the staging
+    /// telemetry deltas; f32 sessions commit from the batches
+    /// themselves. With `k = 1` this is bit- and metrics-identical to
+    /// [`Session::ingest`] (validation already ran at staging); `k > 1`
+    /// fuses the run into one mega-tile trainer call — callers gate
+    /// that on [`Session::fusion_ready`]. Per-batch metrics are
+    /// attributed through the row map (each batch charged `dur / k`).
+    pub fn commit_staged(
+        &mut self,
+        batches: &[&Batch],
+        raw: Option<(&[i32], StagedMark)>,
+    ) -> Result<IngestOutcome> {
+        assert!(!batches.is_empty(), "staged commit needs at least one batch");
+        debug_assert!(batches.len() == 1 || self.fusion_ready());
+        if self.stopped {
+            return Ok(IngestOutcome::Stopped);
+        }
+        self.fire_due_reconfigs()?;
+        let rows: usize = batches.iter().map(|b| b.len()).sum();
+        let t0 = Instant::now();
+        match raw {
+            Some((words, mark)) => {
+                self.trainer.step_staged(
+                    StagedInput::Raw {
+                        words,
+                        ns: mark.ns,
+                        sat: mark.sat,
+                        wrap: mark.wrap,
+                    },
+                    rows,
+                )?;
+            }
+            None if batches.len() == 1 => {
+                // Single f32 batch: the exact serial trainer path (it
+                // also covers the batch-stage streaming bootstrap).
+                self.trainer.step(batches[0])?;
+            }
+            None => {
+                let segs: Vec<&[f32]> = batches.iter().map(|b| b.rows().as_slice()).collect();
+                self.trainer
+                    .step_staged(StagedInput::F32 { segments: &segs }, rows)?;
+            }
+        }
+        let per = t0.elapsed() / batches.len() as u32;
+        let mut out = IngestOutcome::Active;
+        for b in batches {
+            out = self.absorb_step(b, per)?;
+            if out.is_stopped() {
+                break;
+            }
+        }
+        Ok(out)
     }
 
     /// Progress without touching the datapath.

@@ -114,6 +114,28 @@ impl<'rt> Trainer<'rt> {
         }
     }
 
+    /// Consume one *pre-staged* tile (native backend only — the
+    /// serving layer's pipelined shard stages validation and entry
+    /// quantization off the compute path, then commits here).
+    pub fn step_staged(&mut self, input: crate::stage::StagedInput<'_>, rows: usize) -> Result<()> {
+        match self {
+            Trainer::Native(t) => {
+                t.graph.step_staged(input, rows);
+                Ok(())
+            }
+            Trainer::Pjrt(_) => bail!("staged commits run on the native backend only"),
+        }
+    }
+
+    /// Whether pre-staged (and fused multi-batch) commits are safe for
+    /// this trainer: native backend with every batch stage fitted.
+    pub fn staged_ready(&self) -> bool {
+        match self {
+            Trainer::Native(t) => t.graph.staged_ready(),
+            Trainer::Pjrt(_) => false,
+        }
+    }
+
     /// The fitted DR stage as one dense matrix (n × stage_input_dim):
     /// the fold of every trained stage behind the RP front end. For
     /// fixed-point precision this is the dequantized composition.

@@ -134,6 +134,11 @@ pub struct MultiTenantPoint {
     /// Rows per batch.
     pub batch: usize,
     pub batches_per_tenant: usize,
+    /// Precision label every tenant ran at, or `"mixed"` for the
+    /// cycling f32/q4.12 preset rows.
+    pub precision: String,
+    /// Whether the shards ran the two-slot stage/commit pipeline.
+    pub pipelined: bool,
     pub aggregate_samples_per_s: f64,
     /// Worst per-tenant median step latency.
     pub p50_ns: Option<f64>,
@@ -143,6 +148,11 @@ pub struct MultiTenantPoint {
     pub fairness_spread: Option<f64>,
     /// Aggregate throughput over the single-session baseline row.
     pub speedup_over_single: f64,
+    /// Pipelined aggregate over its serial twin (same workload, serial
+    /// scheduler), present only on pipelined rows — and only after the
+    /// bit-identity preflight proved the two schedulers produce
+    /// word-for-word identical trainer state.
+    pub pipelined_over_serial: Option<f64>,
 }
 
 /// Everything one bench run produces: the per-dataset kernel grid plus
@@ -674,15 +684,32 @@ pub fn run(opts: &BenchOptions) -> Result<BenchReport> {
     })
 }
 
+/// Worst per-tenant latency: the row a latency SLO would look at.
+fn worst_tenant_ns(
+    report: &crate::serve::workload::ServeReport,
+    f: fn(&crate::serve::workload::TenantReport) -> Option<f64>,
+) -> Option<f64> {
+    report
+        .tenants
+        .iter()
+        .filter_map(f)
+        .fold(None, |acc: Option<f64>, v| Some(acc.map_or(v, |a| a.max(v))))
+}
+
 /// The multi-tenant serving family: a single-session baseline row
-/// (tenants=1, shards=1) followed by 8 sessions on 2 and 4 shards.
-/// Every tenant is pinned to the same f32 rp-easi graph so the measured
-/// speedup isolates sharding; mixed-precision traffic is covered by
-/// `dimred serve` itself.
+/// (tenants=1, shards=1) followed by 8 sessions on 2 and 4 shards,
+/// every tenant pinned to the same f32 rp-easi graph so the measured
+/// speedup isolates sharding — then a serial-vs-pipelined pair on the
+/// mixed f32/q4.12 preset at 8 tenants on 2 shards (the pipeline's
+/// target case: per-tenant same-plan batches fuse into mega-tiles while
+/// staging overlaps commits). The pipelined row's `pipelined_over_serial`
+/// is recorded only after [`workload::pipeline_identity_check`] proves
+/// both schedulers produce word-for-word identical trainer state — a
+/// speedup from changed arithmetic is not a speedup.
 fn run_multi_tenant(opts: &BenchOptions) -> Result<Vec<MultiTenantPoint>> {
     let batches_per_tenant = if opts.smoke { 32 } else { 128 };
     let grid = [(1usize, 1usize), (8, 2), (8, 4)];
-    let mut rows = Vec::with_capacity(grid.len());
+    let mut rows = Vec::with_capacity(grid.len() + 2);
     let mut baseline: Option<f64> = None;
     for (tenants, shards) in grid {
         let sopts = ServeOptions {
@@ -700,24 +727,59 @@ fn run_multi_tenant(opts: &BenchOptions) -> Result<Vec<MultiTenantPoint>> {
         let report = workload::run(&sopts)?;
         let agg = report.aggregate_samples_per_s;
         let base = *baseline.get_or_insert(agg);
-        // Worst per-tenant latency: the row a latency SLO would look at.
-        let worst = |f: fn(&crate::serve::workload::TenantReport) -> Option<f64>| {
-            report
-                .tenants
-                .iter()
-                .filter_map(f)
-                .fold(None, |acc: Option<f64>, v| Some(acc.map_or(v, |a| a.max(v))))
-        };
         rows.push(MultiTenantPoint {
             tenants,
             shards,
             batch: sopts.batch,
             batches_per_tenant,
+            precision: "f32".into(),
+            pipelined: false,
             aggregate_samples_per_s: agg,
-            p50_ns: worst(|t| t.p50_ns),
-            p99_ns: worst(|t| t.p99_ns),
+            p50_ns: worst_tenant_ns(&report, |t| t.p50_ns),
+            p99_ns: worst_tenant_ns(&report, |t| t.p99_ns),
             fairness_spread: report.fairness_spread,
             speedup_over_single: agg / base.max(1e-12),
+            pipelined_over_serial: None,
+        });
+    }
+    let base = baseline.expect("grid is non-empty").max(1e-12);
+
+    // The serial-vs-pipelined pair on the mixed preset.
+    let mixed = |pipeline: bool| ServeOptions {
+        tenants: 8,
+        shards: 2,
+        batch: 256,
+        batches_per_tenant,
+        arrival: ArrivalPattern::Uniform,
+        stages: None,
+        precision: None,
+        telemetry: false,
+        pipeline,
+        seed: opts.seed,
+        ..ServeOptions::default()
+    };
+    ensure!(
+        workload::pipeline_identity_check(&mixed(true))?,
+        "pipelined scheduler diverged from the serial oracle; refusing to record a speedup"
+    );
+    let serial = workload::run(&mixed(false))?;
+    let piped = workload::run(&mixed(true))?;
+    for (report, pipelined) in [(&serial, false), (&piped, true)] {
+        let agg = report.aggregate_samples_per_s;
+        rows.push(MultiTenantPoint {
+            tenants: 8,
+            shards: 2,
+            batch: 256,
+            batches_per_tenant,
+            precision: "mixed".into(),
+            pipelined,
+            aggregate_samples_per_s: agg,
+            p50_ns: worst_tenant_ns(report, |t| t.p50_ns),
+            p99_ns: worst_tenant_ns(report, |t| t.p99_ns),
+            fairness_spread: report.fairness_spread,
+            speedup_over_single: agg / base,
+            pipelined_over_serial: pipelined
+                .then(|| agg / serial.aggregate_samples_per_s.max(1e-12)),
         });
     }
     Ok(rows)
@@ -772,10 +834,21 @@ pub fn render(opts: &BenchOptions, report: &BenchReport) -> String {
         }
     }
     if !report.multi_tenant.is_empty() {
-        s.push_str("\n[multi-tenant serving — f32 rp-easi, uniform arrival]\n");
+        s.push_str("\n[multi-tenant serving — uniform arrival]\n");
         s.push_str(&format!(
-            "{:>7} {:>6} {:>6} {:>8} {:>14} {:>10} {:>10} {:>8} {:>8}\n",
-            "tenants", "shards", "batch", "batches", "agg smp/s", "p50", "p99", "spread", "speedup"
+            "{:>7} {:>6} {:>6} {:>8} {:>9} {:>5} {:>14} {:>10} {:>10} {:>8} {:>8} {:>9}\n",
+            "tenants",
+            "shards",
+            "batch",
+            "batches",
+            "precision",
+            "pipe",
+            "agg smp/s",
+            "p50",
+            "p99",
+            "spread",
+            "speedup",
+            "pipe/ser"
         ));
         let fmt_ns = |v: Option<f64>| {
             v.map(|ns| crate::util::bench::fmt_duration(std::time::Duration::from_nanos(ns as u64)))
@@ -783,18 +856,23 @@ pub fn render(opts: &BenchOptions, report: &BenchReport) -> String {
         };
         for mt in &report.multi_tenant {
             s.push_str(&format!(
-                "{:>7} {:>6} {:>6} {:>8} {:>14.0} {:>10} {:>10} {:>8} {:>7.2}x\n",
+                "{:>7} {:>6} {:>6} {:>8} {:>9} {:>5} {:>14.0} {:>10} {:>10} {:>8} {:>7.2}x {:>9}\n",
                 mt.tenants,
                 mt.shards,
                 mt.batch,
                 mt.batches_per_tenant,
+                mt.precision,
+                if mt.pipelined { "yes" } else { "-" },
                 mt.aggregate_samples_per_s,
                 fmt_ns(mt.p50_ns),
                 fmt_ns(mt.p99_ns),
                 mt.fairness_spread
                     .map(|f| format!("{f:.2}x"))
                     .unwrap_or_else(|| "-".into()),
-                mt.speedup_over_single
+                mt.speedup_over_single,
+                mt.pipelined_over_serial
+                    .map(|r| format!("{r:.2}x"))
+                    .unwrap_or_else(|| "-".into())
             ));
         }
     }
@@ -814,7 +892,11 @@ pub fn to_json(opts: &BenchOptions, report: &BenchReport) -> Json {
         // v5: per-point `simd` flag plus scalar-vs-simd row pairs for
         //     the fixed-point tiled cells (and the matching
         //     `*_simd_over_scalar` speedups).
-        ("schema_version", Json::num(5.0)),
+        // v6: multi_tenant rows carry `precision` and `pipelined`, and
+        //     the family gains a serial-vs-pipelined pair on the mixed
+        //     preset with the `pipelined_over_serial` speedup (gated on
+        //     the scheduler bit-identity preflight).
+        ("schema_version", Json::num(6.0)),
         ("smoke", Json::Bool(opts.smoke)),
         ("tile", Json::num(opts.tile as f64)),
         ("lanes", Json::num(opts.lanes as f64)),
@@ -949,6 +1031,8 @@ pub fn to_json(opts: &BenchOptions, report: &BenchReport) -> Json {
                                 "batches_per_tenant",
                                 Json::num(mt.batches_per_tenant as f64),
                             ),
+                            ("precision", Json::str(mt.precision.clone())),
+                            ("pipelined", Json::Bool(mt.pipelined)),
                             (
                                 "aggregate_samples_per_s",
                                 Json::num(mt.aggregate_samples_per_s),
@@ -962,6 +1046,12 @@ pub fn to_json(opts: &BenchOptions, report: &BenchReport) -> Json {
                             (
                                 "speedup_over_single",
                                 Json::num(mt.speedup_over_single),
+                            ),
+                            (
+                                "pipelined_over_serial",
+                                mt.pipelined_over_serial
+                                    .map(Json::num)
+                                    .unwrap_or(Json::Null),
                             ),
                         ])
                     })
@@ -980,7 +1070,7 @@ pub fn validate(v: &Json) -> Result<()> {
         "wrong experiment tag"
     );
     ensure!(
-        v.field("schema_version")?.as_usize()? == 5,
+        v.field("schema_version")?.as_usize()? == 6,
         "unknown schema version"
     );
     v.field("smoke")?.as_bool().context("smoke flag")?;
@@ -1053,6 +1143,7 @@ pub fn validate(v: &Json) -> Result<()> {
     ensure!(!mt.is_empty(), "multi_tenant must be non-empty");
     let mut has_baseline = false;
     let mut has_sharded = false;
+    let mut has_pipelined = false;
     for row in mt {
         let tenants = row.field("tenants")?.as_usize()?;
         let shards = row.field("shards")?.as_usize()?;
@@ -1061,6 +1152,8 @@ pub fn validate(v: &Json) -> Result<()> {
         has_sharded |= tenants >= 8 && shards >= 2;
         row.field("batch")?.as_usize()?;
         row.field("batches_per_tenant")?.as_usize()?;
+        row.field("precision")?.as_str()?;
+        let pipelined = row.field("pipelined")?.as_bool()?;
         let agg = row.field("aggregate_samples_per_s")?.as_f64()?;
         ensure!(
             agg.is_finite() && agg > 0.0,
@@ -1071,6 +1164,21 @@ pub fn validate(v: &Json) -> Result<()> {
             speedup.is_finite() && speedup > 0.0,
             "speedup_over_single must be positive, got {speedup}"
         );
+        match row.field("pipelined_over_serial")? {
+            Json::Null => {}
+            other => {
+                ensure!(
+                    pipelined,
+                    "pipelined_over_serial on a serial multi_tenant row"
+                );
+                let r = other.as_f64()?;
+                ensure!(
+                    r.is_finite() && r > 0.0,
+                    "pipelined_over_serial must be positive, got {r}"
+                );
+                has_pipelined = true;
+            }
+        }
         match row.field("fairness_spread")? {
             Json::Null => {}
             other => {
@@ -1086,6 +1194,10 @@ pub fn validate(v: &Json) -> Result<()> {
     ensure!(
         has_sharded,
         "multi_tenant needs a >=8-tenant row on >=2 shards"
+    );
+    ensure!(
+        has_pipelined,
+        "multi_tenant needs a pipelined row with pipelined_over_serial"
     );
     Ok(())
 }
@@ -1177,10 +1289,11 @@ mod tests {
             .iter()
             .any(|s| s.stages == "whiten:gha" && s.precision == "q4.12"));
         // The multi-tenant serving family: a 1×1 baseline plus sharded
-        // rows. Speedup magnitudes depend on the host's core count and
-        // the test harness's own CPU contention, so assert structure
-        // and sanity, not the ratio — the real numbers ride the JSON.
-        assert_eq!(report.multi_tenant.len(), 3);
+        // rows, then the mixed-preset serial-vs-pipelined pair. Speedup
+        // magnitudes depend on the host's core count and the test
+        // harness's own CPU contention, so assert structure and sanity,
+        // not the ratio — the real numbers ride the JSON.
+        assert_eq!(report.multi_tenant.len(), 5);
         let base = &report.multi_tenant[0];
         assert_eq!((base.tenants, base.shards), (1, 1));
         assert!((base.speedup_over_single - 1.0).abs() < 1e-9);
@@ -1193,6 +1306,20 @@ mod tests {
             assert!(mt.speedup_over_single.is_finite() && mt.speedup_over_single > 0.0);
             assert!(mt.p50_ns.is_some() && mt.p99_ns.is_some());
         }
+        // The pair: same shape and workload, serial first (no ratio),
+        // pipelined second carrying pipelined_over_serial.
+        let mixed_serial = &report.multi_tenant[3];
+        let mixed_piped = &report.multi_tenant[4];
+        assert_eq!(mixed_serial.precision, "mixed");
+        assert!(!mixed_serial.pipelined);
+        assert!(mixed_serial.pipelined_over_serial.is_none());
+        assert_eq!(mixed_piped.precision, "mixed");
+        assert!(mixed_piped.pipelined);
+        let ratio = mixed_piped.pipelined_over_serial.unwrap();
+        assert!(ratio.is_finite() && ratio > 0.0);
+        assert!(report.multi_tenant[..3]
+            .iter()
+            .all(|mt| mt.precision == "f32" && !mt.pipelined));
         let json = to_json(&opts, &report);
         let parsed = Json::parse(&json.to_string_pretty()).unwrap();
         validate(&parsed).unwrap();
@@ -1220,9 +1347,9 @@ mod tests {
         let mut map = good.as_obj().unwrap().clone();
         map.insert("configs".into(), Json::Arr(vec![]));
         assert!(validate(&Json::Obj(map)).is_err());
-        // Stale schema version (pre-simd writers must not validate).
+        // Stale schema version (pre-pipeline writers must not validate).
         let mut map = good.as_obj().unwrap().clone();
-        map.insert("schema_version".into(), Json::num(4.0));
+        map.insert("schema_version".into(), Json::num(5.0));
         assert!(validate(&Json::Obj(map)).is_err());
         // Missing or empty multi_tenant family.
         let mut map = good.as_obj().unwrap().clone();

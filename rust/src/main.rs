@@ -68,6 +68,8 @@ const FLAGS: &[&str] = &[
     "telemetry",
     "evict-idle",
     "no-validate-ingest",
+    "pipeline",
+    "no-pipeline",
 ];
 
 fn run() -> Result<()> {
@@ -213,6 +215,15 @@ SERVE OPTIONS:
   --evict-idle                       (checkpoint-evict sessions that saw
                                       no traffic in a round; restores
                                       are transparent and bit-exact)
+  --pipeline / --no-pipeline         (two-slot stage/commit pipeline per
+                                      shard: next round's validation +
+                                      entry quantization overlaps this
+                                      round's trainer commits, and
+                                      same-plan batches fuse into
+                                      mega-tile commits. Bit-identical
+                                      to the serial scheduler; default
+                                      off, on under --smoke unless
+                                      --no-pipeline)
   --telemetry                        (per-tenant datapath telemetry in
                                       the report and JSON)
   --inject-faults SPEC               (deterministic fault injection:
@@ -620,16 +631,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
         precision: args.opt_str("precision").map(str::to_string),
         telemetry: defaults.telemetry || args.flag("telemetry"),
         evict_idle: args.flag("evict-idle"),
+        // Smoke runs default to the pipelined scheduler so CI exercises
+        // the stage/commit overlap path; --no-pipeline always wins.
+        pipeline: (smoke || args.flag("pipeline")) && !args.flag("no-pipeline"),
         seed: args.u64_or("seed", defaults.seed)?,
         faults: args.opt_str("inject-faults").map(str::to_string),
     };
     println!(
-        "# serve: tenants={} shards={} batch={} batches/tenant={} arrival={}{}{}",
+        "# serve: tenants={} shards={} batch={} batches/tenant={} arrival={}{}{}{}",
         opts.tenants,
         opts.shards,
         opts.batch,
         opts.batches_per_tenant,
         opts.arrival.label(),
+        if opts.pipeline { " pipeline" } else { "" },
         opts.faults
             .as_deref()
             .map(|f| format!(" faults={f}"))

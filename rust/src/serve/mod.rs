@@ -20,7 +20,11 @@
 //!   queues generalizing the single-stream batcher, a round-robin
 //!   quantum so no tenant starves under skewed arrival, and per-round
 //!   coalescing of pending batches by graph shape so same-shape tiles
-//!   run back to back.
+//!   run back to back. With `--pipeline` each shard runs a bounded
+//!   two-slot stage/commit pipeline: round N+1's validation + entry
+//!   quantization overlaps round N's trainer commits on a staging
+//!   thread, and consecutive same-plan batches fuse into mega-tile
+//!   commits — bit-identical to the serial schedule.
 //! * [`workload`] — synthetic multi-tenant drivers for `dimred serve`
 //!   and the bench `multi_tenant` scenario family (tenant count,
 //!   arrival pattern, per-tenant cascade/precision).
@@ -42,5 +46,10 @@ pub mod workload;
 
 pub use faults::{FaultKind, FaultPlan, TenantInjector};
 pub use registry::SessionRegistry;
-pub use shard::{RoundStats, Shard, ShardOptions, TenantHealth, TenantIngress, TenantOutcome};
-pub use workload::{ArrivalPattern, ServeOptions, ServeReport, TenantReport};
+pub use shard::{
+    PipelineStats, RoundStats, Shard, ShardOptions, TenantHealth, TenantIngress, TenantOutcome,
+};
+pub use workload::{
+    pipeline_identity_check, ArrivalPattern, ServeOptions, ServeReport, ShardPipeline,
+    TenantReport,
+};

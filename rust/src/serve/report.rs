@@ -8,6 +8,13 @@
 //! per-session `faults` block mirroring
 //! [`crate::serve::TenantHealth`]. Clean runs carry the same shape with
 //! all counters at zero, so consumers never branch on schema presence.
+//!
+//! Schema v3 adds the `pipeline` section: whether the shards ran the
+//! two-slot stage/commit pipeline and, per shard, the staging/fusion
+//! counters ([`crate::serve::PipelineStats`]) plus the overlap ratio
+//! (fraction of staging cost hidden behind commits). Serial runs carry
+//! the section with `enabled: false` and all-zero rows — same
+//! no-branching contract as `faults`.
 
 use super::workload::{ServeOptions, ServeReport};
 use crate::util::json::Json;
@@ -18,7 +25,7 @@ pub fn to_json(opts: &ServeOptions, r: &ServeReport) -> Json {
     let quarantined = r.tenants.iter().filter(|t| t.health.quarantined).count();
     Json::obj(vec![
         ("experiment", Json::str("serve_report")),
-        ("schema_version", Json::num(2.0)),
+        ("schema_version", Json::num(3.0)),
         ("tenants", Json::num(r.tenants.len() as f64)),
         ("shards", Json::num(r.shards as f64)),
         ("arrival", Json::str(r.arrival.clone())),
@@ -69,6 +76,35 @@ pub fn to_json(opts: &ServeOptions, r: &ServeReport) -> Json {
                     ),
                 ),
                 ("quarantined", Json::num(quarantined as f64)),
+            ]),
+        ),
+        (
+            "pipeline",
+            Json::obj(vec![
+                ("enabled", Json::Bool(r.pipeline)),
+                (
+                    "shards",
+                    Json::Arr(
+                        r.pipeline_shards
+                            .iter()
+                            .map(|p| {
+                                let st = &p.stats;
+                                Json::obj(vec![
+                                    ("shard", Json::num(p.shard as f64)),
+                                    ("staged_rounds", Json::num(st.staged_rounds as f64)),
+                                    ("staged_batches", Json::num(st.staged_batches as f64)),
+                                    ("fused_tiles", Json::num(st.fused_tiles as f64)),
+                                    ("fused_batches", Json::num(st.fused_batches as f64)),
+                                    ("max_fused_rows", Json::num(st.max_fused_rows as f64)),
+                                    ("stage_ns", Json::num(st.stage_ns as f64)),
+                                    ("commit_ns", Json::num(st.commit_ns as f64)),
+                                    ("stage_wait_ns", Json::num(st.stage_wait_ns as f64)),
+                                    ("overlap_ratio", Json::num(st.overlap_ratio())),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
             ]),
         ),
         (
@@ -162,7 +198,7 @@ pub fn validate(v: &Json, expect_telemetry: bool) -> Result<()> {
         "wrong experiment tag"
     );
     ensure!(
-        v.field("schema_version")?.as_usize()? == 2,
+        v.field("schema_version")?.as_usize()? == 3,
         "unknown schema version"
     );
     let tenants = v.field("tenants")?.as_usize()?;
@@ -202,6 +238,53 @@ pub fn validate(v: &Json, expect_telemetry: bool) -> Result<()> {
         faults.field(key)?.as_u64()?;
     }
     let quarantined_total = faults.field("quarantined")?.as_u64()?;
+
+    let pipeline = v.field("pipeline").context("missing pipeline section")?;
+    let pipelined = pipeline.field("enabled")?.as_bool()?;
+    let shard_rows = pipeline.field("shards")?.as_arr()?;
+    ensure!(
+        shard_rows.len() == v.field("shards")?.as_usize()?,
+        "pipeline shard rows {} != shards",
+        shard_rows.len()
+    );
+    let mut staged_total = 0u64;
+    for row in shard_rows {
+        row.field("shard")?.as_usize()?;
+        let staged = row.field("staged_batches")?.as_u64()?;
+        staged_total += staged;
+        let fused_tiles = row.field("fused_tiles")?.as_u64()?;
+        let fused_batches = row.field("fused_batches")?.as_u64()?;
+        ensure!(
+            fused_batches >= 2 * fused_tiles,
+            "a mega-tile fuses at least two batches"
+        );
+        ensure!(
+            fused_batches <= staged,
+            "fused batches exceed staged batches"
+        );
+        ensure!(
+            row.field("staged_rounds")?.as_u64()? <= staged,
+            "every staged round carries at least one batch"
+        );
+        row.field("max_fused_rows")?.as_u64()?;
+        row.field("stage_ns")?.as_u64()?;
+        row.field("commit_ns")?.as_u64()?;
+        row.field("stage_wait_ns")?.as_u64()?;
+        let overlap = row.field("overlap_ratio")?.as_f64()?;
+        ensure!(
+            (0.0..=1.0).contains(&overlap),
+            "overlap_ratio must be in [0, 1], got {overlap}"
+        );
+        if !pipelined {
+            ensure!(staged == 0, "serial run reports staged batches");
+        }
+    }
+    if pipelined {
+        ensure!(
+            staged_total > 0,
+            "pipelined run staged no batches"
+        );
+    }
 
     let sessions = v.field("sessions")?.as_arr()?;
     ensure!(
@@ -311,6 +394,20 @@ pub fn render(r: &ServeReport) -> String {
             r.injected_batches, r.injected_stalls, r.producer_hangups
         ));
     }
+    if r.pipeline {
+        for p in &r.pipeline_shards {
+            let st = &p.stats;
+            s.push_str(&format!(
+                "pipeline shard {}: staged={} fused={}x{} (max {} rows) overlap={:.0}%\n",
+                p.shard,
+                st.staged_batches,
+                st.fused_tiles,
+                st.fused_batches,
+                st.max_fused_rows,
+                st.overlap_ratio() * 100.0
+            ));
+        }
+    }
     s.push_str(&format!(
         "{:<6} {:>5} {:<34} {:<10} {:>7} {:>8} {:>10} {:>10} {:>8}\n",
         "tenant", "shard", "stages", "precision", "batches", "samples", "p50", "p99", "restores"
@@ -412,7 +509,7 @@ mod tests {
         map.insert("experiment".into(), Json::str("something_else"));
         assert!(validate(&Json::Obj(map), false).is_err());
         let mut map = good.as_obj().unwrap().clone();
-        map.insert("schema_version".into(), Json::num(1.0));
+        map.insert("schema_version".into(), Json::num(2.0));
         assert!(validate(&Json::Obj(map), false).is_err());
         let mut map = good.as_obj().unwrap().clone();
         map.remove("sessions");
@@ -420,6 +517,35 @@ mod tests {
         let mut map = good.as_obj().unwrap().clone();
         map.remove("faults");
         assert!(validate(&Json::Obj(map), false).is_err());
+        let mut map = good.as_obj().unwrap().clone();
+        map.remove("pipeline");
+        assert!(validate(&Json::Obj(map), false).is_err());
+    }
+
+    #[test]
+    fn pipelined_report_roundtrips_and_validates() {
+        let opts = ServeOptions {
+            pipeline: true,
+            batches_per_tenant: 6,
+            ..tiny_opts(true)
+        };
+        let r = workload::run(&opts).unwrap();
+        let json = to_json(&opts, &r);
+        let parsed = Json::parse(&json.to_string_pretty()).unwrap();
+        validate(&parsed, true).unwrap();
+        let pipeline = parsed.field("pipeline").unwrap();
+        assert!(pipeline.field("enabled").unwrap().as_bool().unwrap());
+        let staged: u64 = pipeline
+            .field("shards")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|row| row.field("staged_batches").unwrap().as_u64().unwrap())
+            .sum();
+        assert_eq!(staged, 2 * 6, "every batch staged exactly once");
+        let table = render(&r);
+        assert!(table.contains("pipeline shard"), "{table}");
     }
 
     #[test]

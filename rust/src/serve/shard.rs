@@ -7,8 +7,25 @@
 //! batches cannot starve a trickling one. Within a round, pending
 //! batches are coalesced by graph shape (stage cascade + precision):
 //! same-shape tiles run back to back, which keeps the datapath's
-//! instruction/data locality under mixed-tenant traffic. The sort is
-//! stable, so each tenant's batches stay in FIFO order.
+//! instruction/data locality under mixed-tenant traffic. The sort key
+//! includes the drain sequence, so each tenant's batches stay in FIFO
+//! order (an allocation-free equivalent of the old stable sort).
+//!
+//! With [`ShardOptions::pipeline`] on, each round runs a bounded
+//! two-slot pipeline instead of the serial loop: round N's batches are
+//! dispatched to a long-lived *stager* thread (validation + entry
+//! quantization — the ingress work [`Session::ingest`] would do before
+//! touching the trainer) while the shard thread *commits* round N−1's
+//! already-staged tiles through the stage graphs, hiding ingress cost
+//! behind compute. The stager also fuses consecutive same-plan batches
+//! into one contiguous raw buffer, and the commit path turns maximal
+//! clean same-tenant runs into **mega-tile** commits — one trainer call
+//! per run, attributed per batch through the row-range map. Both are
+//! bit-identical to the serial path: entry quantization is per-sample
+//! deterministic, commit order is unchanged, and stage warm-up gates
+//! count global rows, not tile boundaries (fusion is additionally
+//! gated on [`Session::fusion_ready`] and never applied to tenants
+//! with fault injectors, whose streams must draw once per batch).
 //!
 //! Failures are contained per tenant by a circuit breaker: an erroring
 //! ingest halts only that tenant's round, the failed batch is requeued
@@ -17,16 +34,27 @@
 //! counts. After `max_retries` consecutive failures the tenant is
 //! *quarantined*: its last-good checkpoint stays in the registry for
 //! reporting, its queue is torn down so the producer observes the
-//! hang-up, and every other tenant keeps draining untouched.
+//! hang-up, and every other tenant keeps draining untouched. In the
+//! pipelined engine a staging-time rejection is charged through
+//! [`Session::commit_rejected`] — the same typed path — and a commit
+//! failure strips the tenant's in-flight staged batches back to the
+//! backlog front *behind* the retried remainder, so per-tenant FIFO
+//! survives the pipeline.
+//!
+//! [`Session::ingest`]: crate::coordinator::Session::ingest
+//! [`Session::fusion_ready`]: crate::coordinator::Session::fusion_ready
+//! [`Session::commit_rejected`]: crate::coordinator::Session::commit_rejected
 
 use super::faults::{FaultPlan, TenantInjector};
 use super::registry::SessionRegistry;
 use crate::config::ExperimentConfig;
-use crate::coordinator::{Batch, BatchRejected};
+use crate::coordinator::{stage_batch, Batch, BatchRejected, StagePlan, StagedMark};
 use crate::telemetry::TelemetrySnapshot;
 use anyhow::{Context, Result};
 use std::collections::{HashMap, VecDeque};
-use std::sync::mpsc::{Receiver, SyncSender, TryRecvError};
+use std::ops::Range;
+use std::sync::mpsc::{Receiver, Sender, SyncSender, TryRecvError};
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 #[derive(Debug, Clone, Copy)]
@@ -45,6 +73,9 @@ pub struct ShardOptions {
     pub max_retries: u32,
     /// Cap on the exponential retry backoff, in scheduler rounds.
     pub backoff_cap_rounds: u64,
+    /// Run the two-slot stage/commit pipeline with mega-tile fusion
+    /// (see module docs) instead of the serial round loop.
+    pub pipeline: bool,
 }
 
 impl Default for ShardOptions {
@@ -55,6 +86,7 @@ impl Default for ShardOptions {
             evict_idle: false,
             max_retries: 3,
             backoff_cap_rounds: 8,
+            pipeline: false,
         }
     }
 }
@@ -103,6 +135,11 @@ struct TenantQueue {
     /// Graph-shape key (stage cascade + precision label) — the
     /// coalescing class.
     shape: String,
+    /// The `Send + Copy` staging recipe for this tenant's session
+    /// (static over the session's lifetime — captured at attach so the
+    /// pipelined path never restores an evicted session just to read
+    /// its plan).
+    plan: StagePlan,
     /// `None` once the producer side hung up (or the tenant was
     /// quarantined and the shard dropped its end).
     rx: Option<Receiver<Batch>>,
@@ -122,7 +159,8 @@ pub struct RoundStats {
     pub samples: u64,
     /// Ingest attempts that failed this round (contained per tenant).
     pub faults: usize,
-    /// Every tenant either completed its stream or is quarantined.
+    /// Every tenant either completed its stream or is quarantined (and
+    /// no staged work is still in flight).
     pub all_done: bool,
 }
 
@@ -142,6 +180,170 @@ pub struct TenantOutcome {
     pub health: TenantHealth,
 }
 
+/// Per-shard pipeline counters (all zeros while the shard runs the
+/// serial scheduler).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PipelineStats {
+    /// Rounds that dispatched work to the stager.
+    pub staged_rounds: u64,
+    /// Batches staged off the compute path.
+    pub staged_batches: u64,
+    /// Mega-tile commits (fused runs of ≥ 2 batches).
+    pub fused_tiles: u64,
+    /// Batches committed through mega-tiles.
+    pub fused_batches: u64,
+    /// Largest mega-tile committed, in rows.
+    pub max_fused_rows: u64,
+    /// Stager-thread busy time (validate + entry-quantize), ns.
+    pub stage_ns: u64,
+    /// Shard-thread commit time (trainer calls), ns.
+    pub commit_ns: u64,
+    /// Shard-thread time blocked waiting on the stager — the staging
+    /// tail the commits could not hide, ns.
+    pub stage_wait_ns: u64,
+}
+
+impl PipelineStats {
+    /// Fraction of staging cost hidden behind commits: 1.0 = fully
+    /// overlapped, 0.0 = every staged nanosecond stalled the shard.
+    pub fn overlap_ratio(&self) -> f64 {
+        if self.stage_ns == 0 {
+            return 1.0;
+        }
+        (self.stage_ns.saturating_sub(self.stage_wait_ns) as f64 / self.stage_ns as f64)
+            .clamp(0.0, 1.0)
+    }
+}
+
+/// One staging work item: queue index, plan, batch.
+type StageItem = (usize, StagePlan, Batch);
+
+/// A round's staging job — the drained, shape-sorted worklist.
+struct StageJob {
+    items: Vec<StageItem>,
+}
+
+/// One staged batch: validated and (for raw plans) entry-quantized into
+/// its group's fused buffer, or failed validation (`err`).
+struct StagedItem {
+    qi: usize,
+    batch: Batch,
+    /// This item's words inside the group buffer (empty for f32 plans
+    /// and for rejected items) — the fused tile's row-range map.
+    seg: Range<usize>,
+    err: Option<BatchRejected>,
+    mark: StagedMark,
+}
+
+/// Consecutive same-plan items staged into one contiguous buffer.
+struct StagedGroup {
+    plan: StagePlan,
+    buf: Vec<i32>,
+    items: Vec<StagedItem>,
+}
+
+/// One fully staged round, ready to commit next round.
+struct StagedRound {
+    groups: Vec<StagedGroup>,
+    /// Stager busy time for this round, ns.
+    ns: u64,
+}
+
+/// Run one staging job: group consecutive same-plan items, validate
+/// and entry-quantize each batch into its group's fused buffer. Runs
+/// on the stager thread; [`stage_batch`] is pure and session-free.
+fn stage_job(job: StageJob) -> StagedRound {
+    let mut groups: Vec<StagedGroup> = Vec::new();
+    for (qi, plan, batch) in job.items {
+        let need_new = match groups.last() {
+            Some(g) => g.plan != plan,
+            None => true,
+        };
+        if need_new {
+            groups.push(StagedGroup {
+                plan,
+                buf: Vec::new(),
+                items: Vec::new(),
+            });
+        }
+        let g = groups.last_mut().expect("group pushed above");
+        let start = g.buf.len();
+        let (seg, err, mark) = match stage_batch(&plan, &batch, &mut g.buf) {
+            Ok(mark) => (start..g.buf.len(), None, mark),
+            Err(e) => {
+                g.buf.truncate(start);
+                (start..start, Some(e), StagedMark::default())
+            }
+        };
+        g.items.push(StagedItem {
+            qi,
+            batch,
+            seg,
+            err,
+            mark,
+        });
+    }
+    StagedRound { groups, ns: 0 }
+}
+
+/// The shard's staging worker: one long-lived thread receiving round
+/// jobs and sending back staged rounds. Dropping the job sender ends
+/// the thread; [`Stager`]'s `Drop` joins it.
+struct Stager {
+    jobs: Option<Sender<StageJob>>,
+    done: Receiver<StagedRound>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Stager {
+    fn spawn() -> Self {
+        let (jobs_tx, jobs_rx) = std::sync::mpsc::channel::<StageJob>();
+        let (done_tx, done_rx) = std::sync::mpsc::channel::<StagedRound>();
+        let handle = std::thread::Builder::new()
+            .name("dimred-stager".into())
+            .spawn(move || {
+                for job in jobs_rx.iter() {
+                    let t0 = Instant::now();
+                    let mut round = stage_job(job);
+                    round.ns = t0.elapsed().as_nanos() as u64;
+                    if done_tx.send(round).is_err() {
+                        return;
+                    }
+                }
+            })
+            .expect("spawning shard stager thread");
+        Self {
+            jobs: Some(jobs_tx),
+            done: done_rx,
+            handle: Some(handle),
+        }
+    }
+
+    fn submit(&self, job: StageJob) -> Result<()> {
+        match &self.jobs {
+            Some(tx) => tx
+                .send(job)
+                .map_err(|_| anyhow::anyhow!("shard stager thread died")),
+            None => anyhow::bail!("shard stager already shut down"),
+        }
+    }
+
+    fn recv(&self) -> Result<StagedRound> {
+        self.done
+            .recv()
+            .map_err(|_| anyhow::anyhow!("shard stager thread died"))
+    }
+}
+
+impl Drop for Stager {
+    fn drop(&mut self) {
+        self.jobs.take();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
 /// One worker: a registry of sessions plus their ingress queues.
 pub struct Shard {
     pub id: usize,
@@ -153,6 +355,22 @@ pub struct Shard {
     plan: Option<FaultPlan>,
     fault_seed: u64,
     injectors: HashMap<String, TenantInjector>,
+    /// Lazily spawned staging thread (pipelined scheduler only).
+    stager: Option<Stager>,
+    /// The in-flight staged round: its staging overlapped the previous
+    /// round's commits; it commits next round.
+    slot: Option<StagedRound>,
+    pstats: PipelineStats,
+    // Round-scoped scratch hoisted out of `poll_round` so steady-state
+    // rounds allocate nothing (proven in `tests/alloc_free.rs`).
+    /// This round's worklist: (drain seq, queue index, batch). The seq
+    /// breaks shape ties in the unstable sort (stable-equivalent), and
+    /// `None` marks a consumed item; leftovers requeue in order.
+    work: Vec<(usize, usize, Option<Batch>)>,
+    had_work: Vec<bool>,
+    halted: Vec<bool>,
+    /// Queues with batches in the staged slot (blocks completion).
+    staged_pending: Vec<bool>,
 }
 
 impl Shard {
@@ -167,6 +385,13 @@ impl Shard {
             plan: None,
             fault_seed: 0,
             injectors: HashMap::new(),
+            stager: None,
+            slot: None,
+            pstats: PipelineStats::default(),
+            work: Vec::new(),
+            had_work: Vec::new(),
+            halted: Vec::new(),
+            staged_pending: Vec::new(),
         }
     }
 
@@ -212,14 +437,20 @@ impl Shard {
             cfg.precision.label()
         );
         self.registry.create(tenant, cfg)?;
-        if let Some(plan) = &self.plan {
-            if let Some(inj) = plan.injector_for(tenant, self.fault_seed) {
+        let plan = self
+            .registry
+            .session_mut(tenant)
+            .with_context(|| format!("stage plan for tenant '{tenant}'"))?
+            .stage_plan();
+        if let Some(fp) = &self.plan {
+            if let Some(inj) = fp.injector_for(tenant, self.fault_seed) {
                 self.injectors.insert(tenant.to_string(), inj);
             }
         }
         self.queues.push(TenantQueue {
             tenant: tenant.to_string(),
             shape,
+            plan,
             rx: Some(rx),
             backlog: VecDeque::new(),
             health: TenantHealth::default(),
@@ -236,32 +467,26 @@ impl Shard {
         &mut self.registry
     }
 
-    /// One ingest attempt for one tenant, with shard-side fault
-    /// injection applied before the session is touched.
-    fn try_ingest(&mut self, tenant: &str, batch: &Batch) -> Result<u64> {
-        if let Some(inj) = self.injectors.get_mut(tenant) {
-            if !self.registry.is_live(tenant) && inj.restore_fault() {
-                anyhow::bail!("injected fault: restore failed for tenant '{tenant}'");
-            }
-            if inj.ingest_fault() {
-                anyhow::bail!("injected fault: ingest error for tenant '{tenant}'");
-            }
-        }
-        let session = self
-            .registry
-            .session_mut(tenant)
-            .with_context(|| format!("session lookup for tenant '{tenant}'"))?;
-        session
-            .ingest(batch)
-            .with_context(|| format!("ingest for tenant '{tenant}'"))?;
-        Ok(batch.len() as u64)
+    /// Pipeline counters (zeros unless [`ShardOptions::pipeline`]).
+    pub fn pipeline_stats(&self) -> PipelineStats {
+        self.pstats
+    }
+
+    #[cfg(test)]
+    fn backlog_len(&self, tenant: &str) -> usize {
+        self.queues
+            .iter()
+            .find(|q| q.tenant == tenant)
+            .map_or(0, |q| q.backlog.len())
     }
 
     /// One scheduler round: drain up to `quantum` batches per tenant
     /// (skipping quarantined and backing-off tenants), coalesce the
-    /// round's worklist by graph shape (stable — per-tenant FIFO
-    /// preserved), ingest everything with per-tenant error containment,
-    /// then optionally evict sessions that saw no traffic.
+    /// round's worklist by graph shape (per-tenant FIFO preserved),
+    /// ingest everything with per-tenant error containment, then
+    /// optionally evict sessions that saw no traffic. With
+    /// [`ShardOptions::pipeline`] the ingest half runs the two-slot
+    /// stage/commit pipeline instead (see module docs).
     ///
     /// An ingest failure never propagates out of the round: the tenant
     /// is halted for the rest of the round (its remaining batches go
@@ -270,122 +495,390 @@ impl Shard {
     /// `max_retries` consecutive failures.
     pub fn poll_round(&mut self) -> Result<RoundStats> {
         self.round += 1;
-        let mut work: Vec<(usize, Batch)> = Vec::new();
-        for (qi, q) in self.queues.iter_mut().enumerate() {
+        self.drain_round();
+        self.sort_work();
+        let (batches, samples, faults) = if self.opts.pipeline {
+            self.pipeline_round()?
+        } else {
+            self.commit_serial()
+        };
+        self.requeue_work();
+        self.note_staged_pending();
+        self.settle_round()?;
+        Ok(RoundStats {
+            batches,
+            samples,
+            faults,
+            all_done: self.slot.is_none()
+                && self
+                    .queues
+                    .iter()
+                    .all(|q| q.completed_at.is_some() || q.health.quarantined),
+        })
+    }
+
+    /// Fill the round worklist: top each eligible tenant's backlog up
+    /// from the wire, then take this round's quantum from the backlog
+    /// front (retries sit ahead of newer traffic there).
+    fn drain_round(&mut self) {
+        let Self {
+            queues,
+            work,
+            had_work,
+            halted,
+            staged_pending,
+            opts,
+            round,
+            ..
+        } = self;
+        if had_work.len() != queues.len() {
+            had_work.resize(queues.len(), false);
+            halted.resize(queues.len(), false);
+            staged_pending.resize(queues.len(), false);
+        }
+        had_work.fill(false);
+        halted.fill(false);
+        debug_assert!(work.is_empty(), "worklist not drained last round");
+        for (qi, q) in queues.iter_mut().enumerate() {
             if q.completed_at.is_some() || q.health.quarantined {
                 continue;
             }
-            if self.round < q.health.backoff_until {
+            if *round < q.health.backoff_until {
                 continue;
             }
-            // Top the backlog up from the wire, then take this round's
-            // quantum from the backlog front (retries sit ahead of
-            // newer traffic there).
-            if let Some(rx) = &q.rx {
-                while q.backlog.len() < self.opts.quantum {
-                    match rx.try_recv() {
-                        Ok(b) => q.backlog.push_back(b),
-                        Err(TryRecvError::Empty) => break,
-                        Err(TryRecvError::Disconnected) => {
-                            // Disconnected means drained AND hung up
-                            // (mpsc yields buffered messages first).
-                            q.rx = None;
-                            break;
+            // Don't read the wire while a failure streak is live with
+            // retried batches parked in the backlog: the retries must
+            // run first, and pulling fresh traffic now would bury them
+            // behind reads this round cannot use yet (it also hides
+            // backpressure from the producer).
+            let retrying = q.health.consecutive > 0 && !q.backlog.is_empty();
+            if !retrying {
+                if let Some(rx) = &q.rx {
+                    while q.backlog.len() < opts.quantum {
+                        match rx.try_recv() {
+                            Ok(b) => q.backlog.push_back(b),
+                            Err(TryRecvError::Empty) => break,
+                            Err(TryRecvError::Disconnected) => {
+                                // Disconnected means drained AND hung up
+                                // (mpsc yields buffered messages first).
+                                q.rx = None;
+                                break;
+                            }
                         }
                     }
                 }
             }
-            for _ in 0..self.opts.quantum {
+            for _ in 0..opts.quantum {
                 match q.backlog.pop_front() {
-                    Some(b) => work.push((qi, b)),
+                    Some(b) => {
+                        work.push((work.len(), qi, Some(b)));
+                        had_work[qi] = true;
+                    }
                     None => break,
                 }
             }
         }
-        let mut had_work = vec![false; self.queues.len()];
-        for (qi, _) in &work {
-            had_work[*qi] = true;
-        }
-        // Coalesce: same-shape batches run back to back. Stable sort →
-        // each tenant's own batches keep their arrival order.
-        work.sort_by(|a, b| self.queues[a.0].shape.cmp(&self.queues[b.0].shape));
+    }
 
+    /// Coalesce: same-shape batches run back to back. The key includes
+    /// the drain sequence, so the in-place unstable sort reproduces the
+    /// stable order without allocating.
+    fn sort_work(&mut self) {
+        let Self { queues, work, .. } = self;
+        work.sort_unstable_by(|a, b| {
+            queues[a.1]
+                .shape
+                .cmp(&queues[b.1].shape)
+                .then(a.0.cmp(&b.0))
+        });
+    }
+
+    /// The serial ingest half of a round: one attempt per work item,
+    /// consuming successes and leaving halted remainders in place for
+    /// the requeue pass. Returns (batches, samples, faults).
+    fn commit_serial(&mut self) -> (usize, u64, usize) {
+        let Self {
+            queues,
+            registry,
+            injectors,
+            work,
+            halted,
+            opts,
+            round,
+            ..
+        } = self;
         let mut batches = 0usize;
-        let mut faults = 0usize;
         let mut samples = 0u64;
-        let mut halted = vec![false; self.queues.len()];
-        let mut requeue: Vec<Vec<Batch>> = (0..self.queues.len()).map(|_| Vec::new()).collect();
-        for (qi, batch) in work {
-            if self.queues[qi].health.quarantined {
-                self.queues[qi].health.dropped_batches += 1;
+        let mut faults = 0usize;
+        for i in 0..work.len() {
+            let qi = work[i].1;
+            if queues[qi].health.quarantined {
+                queues[qi].health.dropped_batches += 1;
+                work[i].2 = None;
                 continue;
             }
             if halted[qi] {
-                requeue[qi].push(batch);
-                continue;
+                continue; // stays parked for the requeue pass
             }
-            let tenant = self.queues[qi].tenant.clone();
-            match self.try_ingest(&tenant, &batch) {
+            let batch = work[i].2.take().expect("unprocessed work item");
+            match try_ingest(registry, injectors, &queues[qi].tenant, &batch) {
                 Ok(n) => {
                     batches += 1;
                     samples += n;
-                    let h = &mut self.queues[qi].health;
+                    let h = &mut queues[qi].health;
                     h.consecutive = 0;
                     h.backoff_until = 0;
                 }
                 Err(err) => {
                     faults += 1;
                     halted[qi] = true;
-                    // A typed rejection means the payload itself is
-                    // garbage: never retried (garbage stays garbage);
-                    // anything else is treated as transient.
-                    let rejected = err.downcast_ref::<BatchRejected>().is_some();
-                    let (quarantine, retry) = {
-                        let h = &mut self.queues[qi].health;
-                        h.faults += 1;
-                        h.consecutive += 1;
-                        h.last_error = Some(format!("{err:#}"));
-                        if rejected {
-                            h.rejected_batches += 1;
-                        }
-                        if h.consecutive > self.opts.max_retries {
-                            h.quarantined = true;
-                            if !rejected {
-                                h.dropped_batches += 1;
-                            }
-                            (true, false)
-                        } else {
-                            let delay =
-                                (1u64 << (h.consecutive - 1)).min(self.opts.backoff_cap_rounds);
-                            h.backoff_until = self.round + delay;
-                            if !rejected {
-                                h.retries += 1;
-                            }
-                            (false, !rejected)
-                        }
-                    };
-                    if quarantine {
-                        // Freeze the last-good checkpoint for
-                        // reporting. May fail or be a no-op (already
-                        // evicted on the restore-fault path) — either
-                        // way the tenant is out of the scheduler.
-                        let _ = self.registry.evict(&tenant);
-                    }
-                    if retry {
-                        requeue[qi].push(batch);
+                    if charge_failure(queues, registry, opts, *round, qi, &err) {
+                        work[i].2 = Some(batch);
                     }
                 }
             }
         }
-        // Settle each queue: quarantined tenants shed everything and
-        // drop their receiver (the producer's next send observes the
-        // hang-up); healthy tenants get their halted remainder back in
-        // FIFO order and complete once wire + backlog are empty.
+        (batches, samples, faults)
+    }
+
+    /// The pipelined ingest half of a round: dispatch this round's
+    /// worklist to the stager, commit the *previous* round's staged
+    /// tiles while it runs (the overlap), then receive this round's
+    /// staging into the slot, stripping batches whose tenants failed
+    /// during the commit so retries keep FIFO order.
+    fn pipeline_round(&mut self) -> Result<(usize, u64, usize)> {
+        let dispatched = !self.work.is_empty();
+        if dispatched {
+            let items: Vec<StageItem> = {
+                let Self { queues, work, .. } = self;
+                work.drain(..)
+                    .map(|(_, qi, b)| (qi, queues[qi].plan, b.expect("drained work item")))
+                    .collect()
+            };
+            self.pstats.staged_rounds += 1;
+            self.pstats.staged_batches += items.len() as u64;
+            if self.stager.is_none() {
+                self.stager = Some(Stager::spawn());
+            }
+            self.stager
+                .as_ref()
+                .expect("stager spawned above")
+                .submit(StageJob { items })?;
+        }
+        let mut totals = (0usize, 0u64, 0usize);
+        if let Some(prev) = self.slot.take() {
+            let t0 = Instant::now();
+            totals = self.commit_staged_round(prev);
+            self.pstats.commit_ns += t0.elapsed().as_nanos() as u64;
+        }
+        if dispatched {
+            let t0 = Instant::now();
+            let staged = self.stager.as_ref().expect("stager running").recv()?;
+            self.pstats.stage_wait_ns += t0.elapsed().as_nanos() as u64;
+            self.pstats.stage_ns += staged.ns;
+            self.slot = self.strip_round(staged);
+        }
+        Ok(totals)
+    }
+
+    /// Commit one staged round: walk its groups in order, turning
+    /// maximal clean same-tenant runs of seg-contiguous items into one
+    /// mega-tile commit each when the session allows it. Failures feed
+    /// the same per-tenant circuit breaker as the serial path;
+    /// uncommitted batches park on the worklist (in round order) for
+    /// the shared requeue pass.
+    fn commit_staged_round(&mut self, staged: StagedRound) -> (usize, u64, usize) {
+        let Self {
+            queues,
+            registry,
+            injectors,
+            work,
+            halted,
+            opts,
+            round,
+            pstats,
+            ..
+        } = self;
+        let mut batches = 0usize;
+        let mut samples = 0u64;
+        let mut faults = 0usize;
+        for group in staged.groups {
+            let raw_group = group.plan.entry.is_some();
+            let buf = group.buf;
+            let mut items: Vec<Option<StagedItem>> = group.items.into_iter().map(Some).collect();
+            let n = items.len();
+            let mut i = 0;
+            while i < n {
+                let qi = items[i].as_ref().expect("unprocessed staged item").qi;
+                if queues[qi].health.quarantined {
+                    queues[qi].health.dropped_batches += 1;
+                    items[i] = None;
+                    i += 1;
+                    continue;
+                }
+                if halted[qi] {
+                    i += 1; // parked below
+                    continue;
+                }
+                let has_err = items[i].as_ref().expect("staged item").err.is_some();
+                // Maximal fusable run: same tenant, clean, contiguous
+                // buffer segments, session fusion-ready, and no fault
+                // injector (injector streams draw once per *batch*,
+                // exactly like the serial path).
+                let mut j = i + 1;
+                if !has_err && fusable(registry, injectors, &queues[qi].tenant) {
+                    while j < n {
+                        let prev_end = items[j - 1].as_ref().expect("staged item").seg.end;
+                        let it = items[j].as_ref().expect("staged item");
+                        if it.qi != qi
+                            || it.err.is_some()
+                            || (raw_group && it.seg.start != prev_end)
+                        {
+                            break;
+                        }
+                        j += 1;
+                    }
+                }
+                let (res, rows) = {
+                    let run: Vec<&StagedItem> = items[i..j]
+                        .iter()
+                        .map(|o| o.as_ref().expect("staged item"))
+                        .collect();
+                    let batch_refs: Vec<&Batch> = run.iter().map(|it| &it.batch).collect();
+                    let rows: u64 = run.iter().map(|it| it.batch.len() as u64).sum();
+                    let raw = if raw_group && !has_err {
+                        let mut mark = StagedMark::default();
+                        for it in &run {
+                            mark.merge(&it.mark);
+                        }
+                        let first = run.first().expect("non-empty run");
+                        let last = run.last().expect("non-empty run");
+                        Some((&buf[first.seg.start..last.seg.end], mark))
+                    } else {
+                        None
+                    };
+                    let staged_err = run.first().expect("non-empty run").err.as_ref();
+                    let res = try_commit(
+                        registry,
+                        injectors,
+                        &queues[qi].tenant,
+                        &batch_refs,
+                        raw,
+                        staged_err,
+                    );
+                    (res, rows)
+                };
+                match res {
+                    Ok(_) => {
+                        batches += j - i;
+                        samples += rows;
+                        let h = &mut queues[qi].health;
+                        h.consecutive = 0;
+                        h.backoff_until = 0;
+                        if j - i > 1 {
+                            pstats.fused_tiles += 1;
+                            pstats.fused_batches += (j - i) as u64;
+                            pstats.max_fused_rows = pstats.max_fused_rows.max(rows);
+                        }
+                        for it in &mut items[i..j] {
+                            *it = None;
+                        }
+                    }
+                    Err(err) => {
+                        faults += 1;
+                        halted[qi] = true;
+                        if !charge_failure(queues, registry, opts, *round, qi, &err) {
+                            // Rejected or quarantining: the failed
+                            // batch is consumed; any fused remainder
+                            // parks for requeue-or-shed below.
+                            items[i] = None;
+                        }
+                    }
+                }
+                i = j;
+            }
+            // Park leftovers (halted remainders) on the worklist in
+            // round order for the shared requeue pass.
+            for it in items.into_iter().flatten() {
+                work.push((work.len(), it.qi, Some(it.batch)));
+            }
+        }
+        (batches, samples, faults)
+    }
+
+    /// Drop a freshly staged round's dead weight: quarantined tenants'
+    /// items are shed (dropped-batch accounting), and items of tenants
+    /// that failed during this round's commit park on the worklist —
+    /// *after* the commit's own leftovers, so the requeue pass puts
+    /// them behind the retried remainder and per-tenant FIFO holds.
+    fn strip_round(&mut self, staged: StagedRound) -> Option<StagedRound> {
+        let Self {
+            queues,
+            work,
+            halted,
+            ..
+        } = self;
+        let mut groups = Vec::with_capacity(staged.groups.len());
+        for mut g in staged.groups {
+            let mut kept = Vec::with_capacity(g.items.len());
+            for it in g.items {
+                if queues[it.qi].health.quarantined {
+                    queues[it.qi].health.dropped_batches += 1;
+                } else if halted[it.qi] {
+                    work.push((work.len(), it.qi, Some(it.batch)));
+                } else {
+                    kept.push(it);
+                }
+            }
+            if !kept.is_empty() {
+                g.items = kept;
+                groups.push(g);
+            }
+        }
+        if groups.is_empty() {
+            None
+        } else {
+            Some(StagedRound {
+                groups,
+                ns: staged.ns,
+            })
+        }
+    }
+
+    /// Requeue every still-parked work item at the front of its
+    /// tenant's backlog, preserving order (reverse iteration +
+    /// push_front).
+    fn requeue_work(&mut self) {
+        let Self { queues, work, .. } = self;
+        for (_, qi, b) in work.drain(..).rev() {
+            if let Some(b) = b {
+                queues[qi].backlog.push_front(b);
+            }
+        }
+    }
+
+    /// Record which queues still have batches in the staged slot —
+    /// those streams are not complete even if wire + backlog are empty.
+    fn note_staged_pending(&mut self) {
+        self.staged_pending.fill(false);
+        if let Some(slot) = &self.slot {
+            for g in &slot.groups {
+                for it in &g.items {
+                    self.staged_pending[it.qi] = true;
+                }
+            }
+        }
+    }
+
+    /// Settle each queue: quarantined tenants shed everything and drop
+    /// their receiver (the producer's next send observes the hang-up);
+    /// healthy tenants complete once wire, backlog and staged slot are
+    /// all empty. Optionally evicts idle sessions.
+    fn settle_round(&mut self) -> Result<()> {
         let elapsed = self.started.elapsed();
-        for (qi, rq) in requeue.into_iter().enumerate() {
-            let q = &mut self.queues[qi];
+        for (qi, q) in self.queues.iter_mut().enumerate() {
             if q.health.quarantined {
-                let mut dropped = (rq.len() + q.backlog.len()) as u64;
+                let mut dropped = q.backlog.len() as u64;
                 q.backlog.clear();
                 if let Some(rx) = q.rx.take() {
                     while rx.try_recv().is_ok() {
@@ -393,49 +886,44 @@ impl Shard {
                     }
                 }
                 q.health.dropped_batches += dropped;
-            } else {
-                for b in rq.into_iter().rev() {
-                    q.backlog.push_front(b);
-                }
-                if q.rx.is_none() && q.backlog.is_empty() && q.completed_at.is_none() {
-                    q.completed_at = Some(elapsed);
-                }
+            } else if q.rx.is_none()
+                && q.backlog.is_empty()
+                && !self.staged_pending[qi]
+                && q.completed_at.is_none()
+            {
+                q.completed_at = Some(elapsed);
             }
         }
         if self.opts.evict_idle {
-            for qi in 0..self.queues.len() {
-                let q = &self.queues[qi];
+            let Self {
+                queues,
+                registry,
+                had_work,
+                ..
+            } = self;
+            for (qi, q) in queues.iter().enumerate() {
                 if q.completed_at.is_none()
                     && !q.health.quarantined
                     && !had_work[qi]
-                    && self.registry.is_live(&q.tenant)
+                    && registry.is_live(&q.tenant)
                 {
-                    let tenant = q.tenant.clone();
-                    self.registry.evict(&tenant)?;
+                    registry.evict(&q.tenant)?;
                 }
             }
         }
-        Ok(RoundStats {
-            batches,
-            samples,
-            faults,
-            all_done: self
-                .queues
-                .iter()
-                .all(|q| q.completed_at.is_some() || q.health.quarantined),
-        })
+        Ok(())
     }
 
     /// Drive rounds until every tenant's stream completes (or is
     /// quarantined). Sleeps briefly on idle rounds so a waiting shard
-    /// doesn't spin a core.
+    /// doesn't spin a core (never while staged work is in flight).
     pub fn run_to_completion(&mut self) -> Result<()> {
         loop {
             let stats = self.poll_round()?;
             if stats.all_done {
                 return Ok(());
             }
-            if stats.batches == 0 {
+            if stats.batches == 0 && self.slot.is_none() {
                 std::thread::sleep(Duration::from_micros(50));
             }
         }
@@ -470,6 +958,135 @@ impl Shard {
             })
             .collect()
     }
+}
+
+/// One ingest attempt for one tenant, with shard-side fault injection
+/// applied before the session is touched. Free function so the round
+/// loop can borrow the tenant id out of its queue (no per-batch clone).
+fn try_ingest(
+    registry: &mut SessionRegistry,
+    injectors: &mut HashMap<String, TenantInjector>,
+    tenant: &str,
+    batch: &Batch,
+) -> Result<u64> {
+    if let Some(inj) = injectors.get_mut(tenant) {
+        if !registry.is_live(tenant) && inj.restore_fault() {
+            anyhow::bail!("injected fault: restore failed for tenant '{tenant}'");
+        }
+        if inj.ingest_fault() {
+            anyhow::bail!("injected fault: ingest error for tenant '{tenant}'");
+        }
+    }
+    let session = registry
+        .session_mut(tenant)
+        .with_context(|| format!("session lookup for tenant '{tenant}'"))?;
+    session
+        .ingest(batch)
+        .with_context(|| format!("ingest for tenant '{tenant}'"))?;
+    Ok(batch.len() as u64)
+}
+
+/// One *commit* attempt for a staged run: same injector order as
+/// [`try_ingest`] (restore fault when the session is evicted, then the
+/// ingest fault, both before the session is touched), then either the
+/// typed rejection replay (`staged_err`) or the staged commit itself.
+fn try_commit(
+    registry: &mut SessionRegistry,
+    injectors: &mut HashMap<String, TenantInjector>,
+    tenant: &str,
+    batches: &[&Batch],
+    raw: Option<(&[i32], StagedMark)>,
+    staged_err: Option<&BatchRejected>,
+) -> Result<u64> {
+    if let Some(inj) = injectors.get_mut(tenant) {
+        if !registry.is_live(tenant) && inj.restore_fault() {
+            anyhow::bail!("injected fault: restore failed for tenant '{tenant}'");
+        }
+        if inj.ingest_fault() {
+            anyhow::bail!("injected fault: ingest error for tenant '{tenant}'");
+        }
+    }
+    let session = registry
+        .session_mut(tenant)
+        .with_context(|| format!("session lookup for tenant '{tenant}'"))?;
+    if let Some(err) = staged_err {
+        session
+            .commit_rejected(err.clone())
+            .with_context(|| format!("ingest for tenant '{tenant}'"))?;
+        return Ok(0);
+    }
+    session
+        .commit_staged(batches, raw)
+        .with_context(|| format!("ingest for tenant '{tenant}'"))?;
+    Ok(batches.iter().map(|b| b.len() as u64).sum())
+}
+
+/// Whether a tenant's consecutive staged batches may fuse into one
+/// mega-tile commit: live session (fusing must never force a restore
+/// outside the injector-guarded attempt path), fusion-ready, and no
+/// fault injector registered.
+fn fusable(
+    registry: &mut SessionRegistry,
+    injectors: &HashMap<String, TenantInjector>,
+    tenant: &str,
+) -> bool {
+    !injectors.contains_key(tenant)
+        && registry.is_live(tenant)
+        && registry
+            .session_mut(tenant)
+            .map(|s| s.fusion_ready())
+            .unwrap_or(false)
+}
+
+/// Charge one failed attempt to `qi`'s circuit breaker: fault tally,
+/// last-error, rejection accounting, and either backoff-for-retry or
+/// quarantine (evicting to the last-good checkpoint). Returns whether
+/// the failed batch should be requeued (transient, not quarantined).
+fn charge_failure(
+    queues: &mut [TenantQueue],
+    registry: &mut SessionRegistry,
+    opts: &ShardOptions,
+    round: u64,
+    qi: usize,
+    err: &anyhow::Error,
+) -> bool {
+    // A typed rejection means the payload itself is garbage: never
+    // retried (garbage stays garbage); anything else is transient.
+    let rejected = err.downcast_ref::<BatchRejected>().is_some();
+    let quarantine;
+    let retry;
+    {
+        let h = &mut queues[qi].health;
+        h.faults += 1;
+        h.consecutive += 1;
+        h.last_error = Some(format!("{err:#}"));
+        if rejected {
+            h.rejected_batches += 1;
+        }
+        if h.consecutive > opts.max_retries {
+            h.quarantined = true;
+            if !rejected {
+                h.dropped_batches += 1;
+            }
+            quarantine = true;
+            retry = false;
+        } else {
+            let delay = (1u64 << (h.consecutive - 1)).min(opts.backoff_cap_rounds);
+            h.backoff_until = round + delay;
+            if !rejected {
+                h.retries += 1;
+            }
+            quarantine = false;
+            retry = !rejected;
+        }
+    }
+    if quarantine {
+        // Freeze the last-good checkpoint for reporting. May fail or
+        // be a no-op (already evicted on the restore-fault path) —
+        // either way the tenant is out of the scheduler.
+        let _ = registry.evict(&queues[qi].tenant);
+    }
+    retry
 }
 
 #[cfg(test)]
@@ -640,5 +1257,114 @@ mod tests {
         assert!(last.contains("restore failed"), "got: {last}");
         // The checkpoint (and its 64 pre-fault samples) still reports.
         assert_eq!(out.samples, 64);
+    }
+
+    #[test]
+    fn retry_rounds_leave_fresh_traffic_on_the_wire() {
+        // While a failure streak is live and its retried batches sit in
+        // the backlog, the scheduler must not top the backlog up from
+        // the wire: fresh traffic pulled early would queue behind
+        // retries the round cannot use — and it hides backpressure from
+        // the producer, who sees queue capacity that isn't real.
+        let c = cfg();
+        let mut shard = Shard::new(
+            0,
+            ShardOptions {
+                queue_depth: 2,
+                quantum: 4,
+                max_retries: 10,
+                ..Default::default()
+            },
+        );
+        let ing = shard.add_tenant("t0", &c).unwrap();
+        shard.set_fault_plan(FaultPlan::parse("t0:ingest@1").unwrap(), 5);
+        ing.send(batch(c.input_dim, 0)).unwrap();
+        ing.send(batch(c.input_dim, 1)).unwrap();
+        // Round 1 drains the wire, fails the first attempt, requeues
+        // both drained batches at the backlog front.
+        let stats = shard.poll_round().unwrap();
+        assert_eq!(stats.faults, 1);
+        assert_eq!(shard.backlog_len("t0"), 2);
+        // Refill the wire to capacity while the streak is live.
+        ing.send(batch(c.input_dim, 2)).unwrap();
+        ing.send(batch(c.input_dim, 3)).unwrap();
+        // Round 2 retries (backoff delay 1). The backlog holds fewer
+        // batches than the quantum, but the wire must stay untouched:
+        // only the parked retries are attempted.
+        let stats = shard.poll_round().unwrap();
+        assert_eq!(stats.faults, 1);
+        assert_eq!(shard.backlog_len("t0"), 2, "retries only — no top-up");
+        match ing.tx.try_send(batch(c.input_dim, 4)) {
+            Err(std::sync::mpsc::TrySendError::Full(_)) => {}
+            other => panic!("wire was drained during a retry round: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn pipelined_shard_matches_serial_and_fuses_mega_tiles() {
+        // Same deterministic streams through a serial and a pipelined
+        // shard: per-tenant trainer state must be word-for-word
+        // identical, and the pipelined run must actually fuse
+        // same-tenant runs into mega-tiles (quantum > 1, clean
+        // sessions, both numeric domains).
+        let mk = |pipeline: bool| {
+            let mut shard = Shard::new(
+                0,
+                ShardOptions {
+                    queue_depth: 16,
+                    quantum: 4,
+                    pipeline,
+                    ..Default::default()
+                },
+            );
+            let c_fxp = ExperimentConfig {
+                precision: crate::fxp::Precision::parse("q4.12").unwrap(),
+                ..cfg()
+            };
+            let c_f32 = cfg();
+            let a = shard.add_tenant("t_fxp", &c_fxp).unwrap();
+            let b = shard.add_tenant("t_f32", &c_f32).unwrap();
+            for salt in 0..8 {
+                a.send(batch(c_fxp.input_dim, salt)).unwrap();
+                b.send(batch(c_f32.input_dim, 100 + salt)).unwrap();
+            }
+            drop(a);
+            drop(b);
+            shard.run_to_completion().unwrap();
+            shard
+        };
+        let mut serial = mk(false);
+        let mut piped = mk(true);
+        assert!(
+            piped.pipeline_stats().fused_tiles > 0,
+            "mega-tiles must fuse"
+        );
+        assert_eq!(serial.pipeline_stats().staged_batches, 0);
+        let dim = cfg().input_dim;
+        let probe = Mat::from_fn(32, dim, |i, j| ((i * 13 + j * 5) % 23) as f32 / 23.0 - 0.5);
+        for tenant in ["t_fxp", "t_f32"] {
+            let samples = {
+                let s = serial.registry_mut().session_mut(tenant).unwrap();
+                (
+                    s.metrics().samples_in,
+                    s.metrics().batches,
+                    s.trainer().transform_rows(&probe),
+                    s.trainer().separation_matrix(),
+                )
+            };
+            let p = piped.registry_mut().session_mut(tenant).unwrap();
+            assert_eq!(samples.0, p.metrics().samples_in, "{tenant} samples");
+            assert_eq!(samples.1, p.metrics().batches, "{tenant} batches");
+            assert_eq!(
+                samples.2.as_slice(),
+                p.trainer().transform_rows(&probe).as_slice(),
+                "{tenant} forward transform diverged under pipelining"
+            );
+            assert_eq!(
+                samples.3.as_slice(),
+                p.trainer().separation_matrix().as_slice(),
+                "{tenant} separation matrix diverged under pipelining"
+            );
+        }
     }
 }

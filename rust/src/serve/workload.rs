@@ -8,7 +8,7 @@
 //! completion — 1.0 is perfectly fair).
 
 use super::faults::FaultPlan;
-use super::shard::{Shard, ShardOptions, TenantHealth, TenantOutcome};
+use super::shard::{PipelineStats, Shard, ShardOptions, TenantHealth, TenantOutcome};
 use crate::config::{ExperimentConfig, PipelineMode};
 use crate::coordinator::Batch;
 use crate::fxp::Precision;
@@ -82,6 +82,10 @@ pub struct ServeOptions {
     pub precision: Option<String>,
     pub telemetry: bool,
     pub evict_idle: bool,
+    /// Run each shard's two-slot stage/commit pipeline with mega-tile
+    /// fusion (see [`super::shard`] docs) instead of the serial round
+    /// loop. Bit-identical results either way.
+    pub pipeline: bool,
     pub seed: u64,
     /// Fault-injection spec (`tenant:kind[@rate],...`), `None` for a
     /// clean run. Parsed by [`FaultPlan::parse`]; injector streams are
@@ -103,6 +107,7 @@ impl Default for ServeOptions {
             precision: None,
             telemetry: false,
             evict_idle: false,
+            pipeline: false,
             seed: 2018,
             faults: None,
         }
@@ -148,6 +153,18 @@ pub struct ServeReport {
     pub injected_batches: u64,
     /// Producer-side stalls injected.
     pub injected_stalls: u64,
+    /// Whether the shards ran the pipelined scheduler.
+    pub pipeline: bool,
+    /// Per-shard pipeline counters, in shard-id order (all-zero stats
+    /// when the run was serial).
+    pub pipeline_shards: Vec<ShardPipeline>,
+}
+
+/// One shard's pipeline counters in the report.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardPipeline {
+    pub shard: usize,
+    pub stats: PipelineStats,
 }
 
 /// What one producer thread reports back: not a `Result` — a shard
@@ -211,6 +228,7 @@ pub fn run(opts: &ServeOptions) -> Result<ServeReport> {
         queue_depth: opts.queue_depth,
         quantum: opts.quantum,
         evict_idle: opts.evict_idle,
+        pipeline: opts.pipeline,
         ..Default::default()
     };
     let started = Instant::now();
@@ -279,7 +297,7 @@ pub fn run(opts: &ServeOptions) -> Result<ServeReport> {
         let seed = opts.seed;
         let handle = std::thread::Builder::new()
             .name(format!("serve-shard-{sid}"))
-            .spawn(move || -> Result<Vec<TenantOutcome>> {
+            .spawn(move || -> Result<(Vec<TenantOutcome>, PipelineStats)> {
                 let mut shard = Shard::new(sid, shard_opts);
                 if let Some(p) = shard_plan {
                     shard.set_fault_plan(p, seed);
@@ -288,7 +306,7 @@ pub fn run(opts: &ServeOptions) -> Result<ServeReport> {
                     shard.attach(&name, &cfg, rx)?;
                 }
                 shard.run_to_completion()?;
-                Ok(shard.tenant_outcomes())
+                Ok((shard.tenant_outcomes(), shard.pipeline_stats()))
             })
             .context("spawning shard worker")?;
         workers.push(handle);
@@ -308,9 +326,14 @@ pub fn run(opts: &ServeOptions) -> Result<ServeReport> {
         }
     }
     let mut outcomes: Vec<TenantOutcome> = Vec::with_capacity(opts.tenants);
-    for w in workers {
+    let mut pipeline_shards = Vec::with_capacity(opts.shards);
+    for (sid, w) in workers.into_iter().enumerate() {
         match w.join() {
-            Ok(r) => outcomes.extend(r?),
+            Ok(r) => {
+                let (tenant_outcomes, stats) = r?;
+                outcomes.extend(tenant_outcomes);
+                pipeline_shards.push(ShardPipeline { shard: sid, stats });
+            }
             Err(panic) => std::panic::resume_unwind(panic),
         }
     }
@@ -362,7 +385,76 @@ pub fn run(opts: &ServeOptions) -> Result<ServeReport> {
         producer_hangups,
         injected_batches,
         injected_stalls,
+        pipeline: opts.pipeline,
+        pipeline_shards,
     })
+}
+
+/// Bit-identity preflight for the pipelined scheduler: run the same
+/// deterministic tenant streams through a serial and a pipelined shard
+/// (single-threaded, no faults) and compare every tenant's forward
+/// transform and separation matrix word for word. The bench gates its
+/// `pipelined_over_serial` speedup claim on this returning `true` —
+/// a speedup from a scheduler that changes results is not a speedup.
+///
+/// The check is deliberately small (tenant/batch counts are capped):
+/// it exercises both numeric domains and the fusion path, not the full
+/// workload size.
+pub fn pipeline_identity_check(opts: &ServeOptions) -> Result<bool> {
+    let tenants = opts.tenants.clamp(2, 6);
+    let batches = opts.batches_per_tenant.clamp(2, 6);
+    let rows = opts.batch.clamp(8, 64);
+    let build = |pipeline: bool| -> Result<Shard> {
+        let mut shard = Shard::new(
+            0,
+            ShardOptions {
+                // Deep enough to buffer each tenant's whole stream, so
+                // the single-threaded driver never blocks on the wire.
+                queue_depth: batches,
+                quantum: opts.quantum.max(1),
+                pipeline,
+                ..Default::default()
+            },
+        );
+        for t in 0..tenants {
+            let cfg = tenant_config(t, opts)?;
+            let ing = shard.add_tenant(&format!("t{t}"), &cfg)?;
+            for i in 0..batches {
+                ing.send(synth_batch(t, i, rows, cfg.input_dim))?;
+            }
+        }
+        shard.run_to_completion()?;
+        Ok(shard)
+    };
+    let mut serial = build(false)?;
+    let mut piped = build(true)?;
+    for t in 0..tenants {
+        let name = format!("t{t}");
+        let dim = tenant_config(t, opts)?.input_dim;
+        let probe = Mat::from_fn(16, dim, |i, j| {
+            ((i * 13 + j * 5 + t) % 23) as f32 / 23.0 - 0.5
+        });
+        let (fwd, sep) = {
+            let s = serial
+                .registry_mut()
+                .session_mut(&name)
+                .context("serial preflight session")?;
+            (
+                s.trainer().transform_rows(&probe),
+                s.trainer().separation_matrix(),
+            )
+        };
+        let p = piped
+            .registry_mut()
+            .session_mut(&name)
+            .context("pipelined preflight session")?;
+        if fwd.as_slice() != p.trainer().transform_rows(&probe).as_slice()
+            || sep.as_slice() != p.trainer().separation_matrix().as_slice()
+        {
+            return Ok(false);
+        }
+    }
+    Ok(true)
 }
 
 #[cfg(test)]
@@ -435,5 +527,51 @@ mod tests {
         assert_eq!(r.tenants[0].shard, 0);
         assert_eq!(r.tenants[1].shard, 1);
         assert_eq!(r.tenants[2].shard, 0);
+        // Serial run: stats present per shard, but all zero.
+        assert!(!r.pipeline);
+        assert_eq!(r.pipeline_shards.len(), 2);
+        assert_eq!(r.pipeline_shards[1].shard, 1);
+        assert_eq!(r.pipeline_shards[0].stats.staged_batches, 0);
+    }
+
+    #[test]
+    fn pipelined_run_matches_serial_counts_and_reports_stats() {
+        let base = ServeOptions {
+            tenants: 4,
+            shards: 2,
+            batch: 16,
+            batches_per_tenant: 6,
+            ..ServeOptions::default()
+        };
+        let serial = run(&base).unwrap();
+        let piped = run(&ServeOptions {
+            pipeline: true,
+            ..base.clone()
+        })
+        .unwrap();
+        assert!(piped.pipeline);
+        assert_eq!(serial.total_samples, piped.total_samples);
+        for (s, p) in serial.tenants.iter().zip(&piped.tenants) {
+            assert_eq!(s.tenant, p.tenant);
+            assert_eq!(s.batches, p.batches, "{} batches", s.tenant);
+            assert_eq!(s.samples, p.samples, "{} samples", s.tenant);
+        }
+        let staged: u64 = piped
+            .pipeline_shards
+            .iter()
+            .map(|s| s.stats.staged_batches)
+            .sum();
+        assert_eq!(staged, 4 * 6, "every batch goes through the stager");
+    }
+
+    #[test]
+    fn pipeline_identity_preflight_passes_on_the_mixed_preset() {
+        let opts = ServeOptions {
+            tenants: 3,
+            batch: 32,
+            batches_per_tenant: 4,
+            ..ServeOptions::default()
+        };
+        assert!(pipeline_identity_check(&opts).unwrap());
     }
 }

@@ -50,6 +50,24 @@ pub enum Domain {
     Fxp { entry: FxpSpec, prescale: f32 },
 }
 
+/// Pre-staged input for [`StageGraph::step_staged`]: the entry work
+/// already ran off the compute path.
+#[derive(Debug, Clone, Copy)]
+pub enum StagedInput<'a> {
+    /// An entry-quantized raw tile (fixed-point graphs), plus the
+    /// timing/overflow deltas captured around the off-thread quantize
+    /// pass (attributed to the ingress telemetry slot at commit).
+    Raw {
+        words: &'a [i32],
+        ns: u64,
+        sat: u64,
+        wrap: u64,
+    },
+    /// Validated f32 row segments, concatenated in order into one tile
+    /// (f32 staging is validation only — there is nothing to precompute).
+    F32 { segments: &'a [&'a [f32]] },
+}
+
 /// Reusable tile workspaces for the training pass (ping-pong between
 /// consecutive stages; buffers only grow, so steady-state training is
 /// allocation-free).
@@ -311,24 +329,15 @@ impl StageGraph {
         };
         let mut cur = std::mem::take(&mut scratch.f_a);
         let mut next = std::mem::take(&mut scratch.f_b);
-        let mut have_cur = false;
-        for i in 0..=last {
-            if stages[i].bypassed() {
-                stages[i].advance(rows);
-                continue;
-            }
-            let input: &[f32] = if have_cur { &cur } else { x.as_slice() };
-            let mark = telemetry.begin();
-            if i == last {
-                stages[i].step_tile(input, rows, None);
-            } else {
-                stages[i].step_tile(input, rows, Some(&mut next));
-                std::mem::swap(&mut cur, &mut next);
-                have_cur = true;
-            }
-            telemetry.record_step(Some(i), mark, rows, None);
-        }
-        advance_adaptive(stages, last + 1, rows);
+        walk_f32_stages(
+            stages,
+            telemetry,
+            &mut cur,
+            &mut next,
+            Some(x.as_slice()),
+            rows,
+            last,
+        );
         scratch.f_a = cur;
         scratch.f_b = next;
     }
@@ -394,30 +403,92 @@ impl StageGraph {
             }
             telemetry.record_step(None, mark, rows, Some(&cur));
         }
-        let mut cur_spec = entry;
-        for i in 0..=last {
-            if stages[i].bypassed() {
-                stages[i].advance(rows);
-                continue;
-            }
-            // Begin before the boundary requantize: its cost and any
-            // overflow belong to the stage whose policy it applies.
-            let mark = telemetry.begin();
-            let want = stages[i].input_spec().expect("fixed-point graph stage");
-            want.requantize_slice_from(&mut cur, &cur_spec);
-            if i == last {
-                stages[i].step_tile_raw(&cur, rows, None);
-                telemetry.record_step(Some(i), mark, rows, None);
-            } else {
-                stages[i].step_tile_raw(&cur, rows, Some(&mut next));
-                std::mem::swap(&mut cur, &mut next);
-                cur_spec = stages[i].output_spec().expect("fixed-point graph stage");
-                telemetry.record_step(Some(i), mark, rows, Some(&cur));
-            }
-        }
-        advance_adaptive(stages, last + 1, rows);
+        walk_raw_stages(stages, telemetry, &mut cur, &mut next, entry, rows, last);
         scratch.raw_a = cur;
         scratch.raw_b = next;
+    }
+
+    /// Whether every batch stage (if any) has been fitted. Staged/fused
+    /// commits bypass [`StageGraph::step_rows`]'s streaming bootstrap,
+    /// so callers gate them on this.
+    pub fn staged_ready(&self) -> bool {
+        !self.stages.iter().any(|s| s.is_batch() && !s.batch_fitted())
+    }
+
+    /// One training pass from *pre-staged* input: the entry work
+    /// (validation and, for fixed point, entry quantization) already
+    /// happened off the compute path — typically on a serving shard's
+    /// stager thread — so this runs only the stage walk. Bit-identical
+    /// to [`StageGraph::step_rows`] on the same samples: entry
+    /// quantization is per-sample deterministic, and the walk is the
+    /// same code. Multi-batch fused tiles are bit-identical too, because
+    /// the per-row recursions inside `step_tile_raw`/`step_tile` do not
+    /// depend on tile boundaries (warm-up gates count global samples).
+    pub fn step_staged(&mut self, input: StagedInput<'_>, rows: usize) {
+        if rows == 0 {
+            return;
+        }
+        let Self {
+            stages,
+            scratch,
+            telemetry,
+            input_dim,
+            domain,
+            ..
+        } = self;
+        let last = match stages
+            .iter()
+            .rposition(|s| s.is_adaptive() && !s.bypassed())
+        {
+            Some(l) => l,
+            None => {
+                // Parity with the serial early return: no ingress record
+                // when nothing trains this pass.
+                advance_adaptive(stages, 0, rows);
+                return;
+            }
+        };
+        match (input, *domain) {
+            (
+                StagedInput::Raw {
+                    words,
+                    ns,
+                    sat,
+                    wrap,
+                },
+                Domain::Fxp { entry, .. },
+            ) => {
+                assert_eq!(words.len(), rows * *input_dim, "staged raw tile shape");
+                let mut cur = std::mem::take(&mut scratch.raw_a);
+                let mut next = std::mem::take(&mut scratch.raw_b);
+                resize_buf(&mut cur, words.len());
+                cur.copy_from_slice(words);
+                // The stager measured the quantize pass; attribute it to
+                // the ingress slot exactly as the inline path would.
+                telemetry.record_staged_ingress(ns, sat, wrap, rows, Some(&cur));
+                walk_raw_stages(stages, telemetry, &mut cur, &mut next, entry, rows, last);
+                scratch.raw_a = cur;
+                scratch.raw_b = next;
+            }
+            (StagedInput::F32 { segments }, Domain::F32) => {
+                assert!(
+                    !stages.iter().any(|s| s.is_batch() && !s.batch_fitted()),
+                    "staged f32 commits need batch stages fitted"
+                );
+                let mut cur = std::mem::take(&mut scratch.f_a);
+                let mut next = std::mem::take(&mut scratch.f_b);
+                cur.clear();
+                cur.reserve(rows * *input_dim);
+                for seg in segments {
+                    cur.extend_from_slice(seg);
+                }
+                assert_eq!(cur.len(), rows * *input_dim, "staged f32 tile shape");
+                walk_f32_stages(stages, telemetry, &mut cur, &mut next, None, rows, last);
+                scratch.f_a = cur;
+                scratch.f_b = next;
+            }
+            _ => panic!("staged input does not match the graph's domain"),
+        }
     }
 
     // -------------------------------------------------------- forward
@@ -662,4 +733,75 @@ fn advance_adaptive(stages: &mut [Box<dyn Stage>], from: usize, rows: usize) {
             s.advance(rows);
         }
     }
+}
+
+/// The f32 training walk over stages `0..=last`, ping-ponging through
+/// `cur`/`next`. With `x = Some(tile)` the first active stage reads the
+/// caller's tile; with `x = None` the tile is already in `cur` (the
+/// staged path).
+fn walk_f32_stages(
+    stages: &mut [Box<dyn Stage>],
+    telemetry: &Telemetry,
+    cur: &mut Vec<f32>,
+    next: &mut Vec<f32>,
+    x: Option<&[f32]>,
+    rows: usize,
+    last: usize,
+) {
+    let mut have_cur = x.is_none();
+    for i in 0..=last {
+        if stages[i].bypassed() {
+            stages[i].advance(rows);
+            continue;
+        }
+        let mark = telemetry.begin();
+        if i == last {
+            let input: &[f32] = if have_cur { cur } else { x.expect("input tile") };
+            stages[i].step_tile(input, rows, None);
+        } else {
+            let input: &[f32] = if have_cur { cur } else { x.expect("input tile") };
+            stages[i].step_tile(input, rows, Some(&mut *next));
+            std::mem::swap(cur, next);
+            have_cur = true;
+        }
+        telemetry.record_step(Some(i), mark, rows, None);
+    }
+    advance_adaptive(stages, last + 1, rows);
+}
+
+/// The fixed-point training walk over stages `0..=last`: `cur` holds
+/// the entry-quantized tile in format `cur_spec`; each format boundary
+/// requantizes with the destination stage's policy, then the stage
+/// consumes the tile (emitting into `next` unless it is the last
+/// trainable one).
+fn walk_raw_stages(
+    stages: &mut [Box<dyn Stage>],
+    telemetry: &Telemetry,
+    cur: &mut Vec<i32>,
+    next: &mut Vec<i32>,
+    mut cur_spec: FxpSpec,
+    rows: usize,
+    last: usize,
+) {
+    for i in 0..=last {
+        if stages[i].bypassed() {
+            stages[i].advance(rows);
+            continue;
+        }
+        // Begin before the boundary requantize: its cost and any
+        // overflow belong to the stage whose policy it applies.
+        let mark = telemetry.begin();
+        let want = stages[i].input_spec().expect("fixed-point graph stage");
+        want.requantize_slice_from(cur, &cur_spec);
+        if i == last {
+            stages[i].step_tile_raw(cur, rows, None);
+            telemetry.record_step(Some(i), mark, rows, None);
+        } else {
+            stages[i].step_tile_raw(cur, rows, Some(&mut *next));
+            std::mem::swap(cur, next);
+            cur_spec = stages[i].output_spec().expect("fixed-point graph stage");
+            telemetry.record_step(Some(i), mark, rows, Some(cur));
+        }
+    }
+    advance_adaptive(stages, last + 1, rows);
 }

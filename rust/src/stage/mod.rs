@@ -39,7 +39,7 @@ pub use adapters::{
     DctStage, EasiStage, FxpDctStage, FxpEasiStage, FxpGhaStage, FxpRpStage, GhaStage,
     IdentityStage, PcaStage, RpStage,
 };
-pub use graph::{Domain, StageGraph};
+pub use graph::{Domain, StageGraph, StagedInput};
 pub use spec::{GraphSpec, StageDecl, StageOp};
 
 use crate::fxp::FxpSpec;

@@ -154,6 +154,22 @@ impl StageStats {
     fn record(&self, kind: Kind, mark: StageMark, rows: usize, words: Option<&[i32]>) {
         let ns = mark.t0.elapsed().as_nanos() as u64;
         let (sat, wrap) = events::snapshot();
+        self.record_external(kind, ns, sat - mark.sat0, wrap - mark.wrap0, rows, words);
+    }
+
+    /// Record a call whose wall time and overflow deltas were measured
+    /// elsewhere — the staged-ingress path: the entry quantizer ran on a
+    /// stager thread (which captured its own thread-local deltas), and
+    /// the graph attributes them to the ingress slot at commit time.
+    fn record_external(
+        &self,
+        kind: Kind,
+        ns: u64,
+        sat: u64,
+        wrap: u64,
+        rows: usize,
+        words: Option<&[i32]>,
+    ) {
         let r = Ordering::Relaxed;
         self.tiles.fetch_add(1, r);
         self.samples.fetch_add(rows as u64, r);
@@ -161,8 +177,8 @@ impl StageStats {
             Kind::Step => self.step_ns.fetch_add(ns, r),
             Kind::Transform => self.transform_ns.fetch_add(ns, r),
         };
-        self.sat_events.fetch_add(sat - mark.sat0, r);
-        self.wrap_events.fetch_add(wrap - mark.wrap0, r);
+        self.sat_events.fetch_add(sat, r);
+        self.wrap_events.fetch_add(wrap, r);
         if let Some(w) = words {
             self.words.fetch_add(w.len() as u64, r);
             for &v in w {
@@ -310,6 +326,26 @@ impl Telemetry {
     ) {
         if let (Some(slot), Some(m)) = (self.slot(stage), mark) {
             slot.record(Kind::Step, m, rows, words);
+        }
+    }
+
+    /// Record a staged entry-quantize into the ingress slot from
+    /// externally measured deltas: `ns`/`sat`/`wrap` were captured on
+    /// the stager thread around the quantize pass (the thread-local
+    /// overflow counters make the deltas exact there), and `words` is
+    /// the committed raw tile, histogrammed here so occupancy stays on
+    /// the graph's own registry.
+    #[inline]
+    pub fn record_staged_ingress(
+        &self,
+        ns: u64,
+        sat: u64,
+        wrap: u64,
+        rows: usize,
+        words: Option<&[i32]>,
+    ) {
+        if let Some(slot) = self.slot(None) {
+            slot.record_external(Kind::Step, ns, sat, wrap, rows, words);
         }
     }
 

@@ -5,10 +5,11 @@
 //! allocations per sample** — including the periodic host-side cadences
 //! (whitening-coefficient refresh, rotation retraction), which reuse
 //! member buffers. This binary installs a counting global allocator and
-//! asserts the contract at three levels: the raw `FxpDrUnit` kernel loop
+//! asserts the contract at four levels: the raw `FxpDrUnit` kernel loop
 //! (bit-exact and STE), the coordinator's `NativeTrainer` consuming
-//! whole `Batch` tiles, and the batcher's producer thread once a
-//! recycling consumer has primed the buffer-return lane.
+//! whole `Batch` tiles, the batcher's producer thread once a recycling
+//! consumer has primed the buffer-return lane, and the serving shard's
+//! `poll_round` scheduler once its round scratch is warm.
 //!
 //! Kept as a single `#[test]` on purpose: the counter is global, and a
 //! sibling test running on another harness thread would pollute the
@@ -19,6 +20,7 @@ use dimred::coordinator::batcher::{spawn_producer, EpochSource};
 use dimred::coordinator::{Batch, Trainer};
 use dimred::fxp::{FxpDrUnit, FxpSpec, FxpUnitConfig, Precision, QuantMode};
 use dimred::linalg::Mat;
+use dimred::serve::{Shard, ShardOptions};
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -187,6 +189,64 @@ fn producer_recycling_is_allocation_free() {
     );
 }
 
+fn shard_poll_round_is_allocation_free() {
+    // Serial scheduler, telemetry off: once the round scratch (work
+    // list, backlog ring, per-tenant flag vectors) and the trainer's
+    // workspaces are warm, a poll_round that drains, sorts and commits
+    // a batch must not touch the heap. The ingress wire is a bounded
+    // sync channel, so receiving a batch is allocation-free too.
+    let cfg = ExperimentConfig {
+        mode: PipelineMode::RpEasi,
+        precision: Precision::parse("q4.12").unwrap(),
+        rot_warmup: 0,
+        train_classifier: false,
+        ..Default::default()
+    };
+    let mut shard = Shard::new(
+        0,
+        ShardOptions {
+            queue_depth: 16,
+            quantum: 1,
+            ..Default::default()
+        },
+    );
+    let ingress = shard.add_tenant("t0", &cfg).unwrap();
+    let batch = Batch::Full(Mat::from_fn(64, cfg.input_dim, |i, j| {
+        ((i * 31 + j * 7) % 17) as f32 / 17.0 - 0.5
+    }));
+    // All 16 batches buffered on the wire up front: every Mat clone
+    // happens here, outside the measured window.
+    for _ in 0..16 {
+        ingress.send(batch.clone()).unwrap();
+    }
+    drop(ingress);
+
+    // Warm-up: 10 rounds at quantum 1 commit batches 1..=10 — sizing
+    // the backlog/work scratch and crossing the batch-8 convergence-
+    // trace push (its Vec growth is amortized, paid once here).
+    for _ in 0..10 {
+        let stats = shard.poll_round().unwrap();
+        assert_eq!(stats.batches, 1);
+    }
+    // Measured window: batches 11..=14, clear of the %8 trace cadence.
+    let before = allocs();
+    for _ in 0..4 {
+        let stats = shard.poll_round().unwrap();
+        assert_eq!(stats.batches, 1);
+    }
+    let delta = allocs() - before;
+    assert_eq!(
+        delta, 0,
+        "shard poll_round allocated {delta} times over 4 warm rounds"
+    );
+
+    shard.run_to_completion().unwrap();
+    assert_eq!(
+        shard.registry().metrics_of("t0").unwrap().samples_in,
+        16 * 64
+    );
+}
+
 #[test]
 fn steady_state_fxp_training_is_allocation_free() {
     unit_is_allocation_free(QuantMode::BitExact);
@@ -200,4 +260,7 @@ fn steady_state_fxp_training_is_allocation_free() {
     // And the producer side of the bounded queue: once the consumer
     // returns drained buffers, batch production allocates nothing.
     producer_recycling_is_allocation_free();
+    // Finally the serving shard's scheduler: a warm poll_round (drain,
+    // shape-sort, commit) rides entirely on hoisted round scratch.
+    shard_poll_round_is_allocation_free();
 }

@@ -9,6 +9,10 @@
 //! modes (bit-exact and STE). A retried-then-recovered tenant must be
 //! bit-identical too: retries preserve per-tenant FIFO order and
 //! injected ingest faults fire before the session is touched.
+//!
+//! Every scenario runs under both schedulers — serial and the two-slot
+//! stage/commit pipeline — because fault containment must not depend on
+//! *when* an attempt happens, only on its FIFO position in the stream.
 
 use dimred::config::ExperimentConfig;
 use dimred::coordinator::{Batch, Session};
@@ -58,94 +62,110 @@ fn unaffected_tenants_stay_bit_identical_under_faults() {
         oracles.push(s);
     }
 
-    // Test path: one shard, everything in flight at once, faults armed.
-    // max_retries is generous so the ingest-faulted tenant always rides
-    // out its (seeded, deterministic) failure streaks — at rate 0.5 a
-    // 33-long streak is effectively impossible, while t_nan's rejection
-    // run is sized below to exceed any cap.
-    let mut shard = Shard::new(
-        0,
-        ShardOptions {
-            queue_depth: 64,
-            quantum: 2,
-            max_retries: 32,
-            ..Default::default()
-        },
-    );
-    let mut ingresses = Vec::new();
-    for (name, precision, _) in &tenants {
-        ingresses.push(shard.add_tenant(name, &cfg(precision)).unwrap());
-    }
-    let c_nan = cfg("q4.12");
-    let nan_ingress = shard.add_tenant("t_nan", &c_nan).unwrap();
-    shard.set_fault_plan(FaultPlan::parse("t_ing:ingest@0.5").unwrap(), 77);
-
-    for (ingress, (_, precision, base)) in ingresses.iter().zip(&tenants) {
-        let c = cfg(precision);
-        for i in 0..BATCHES {
-            ingress.send(batch(c.input_dim, base + i)).unwrap();
+    // Both schedulers must contain the blast radius the same way: the
+    // pipelined stage/commit overlap may change *when* an attempt round
+    // happens, never what it produces or how failures are charged.
+    for pipeline in [false, true] {
+        let sched = if pipeline { "pipelined" } else { "serial" };
+        // Test path: one shard, everything in flight at once, faults
+        // armed. max_retries is generous so the ingest-faulted tenant
+        // always rides out its (seeded, deterministic) failure streaks
+        // — at rate 0.5 a 33-long streak is effectively impossible,
+        // while t_nan's rejection run is sized below to exceed any cap.
+        let mut shard = Shard::new(
+            0,
+            ShardOptions {
+                queue_depth: 64,
+                quantum: 2,
+                max_retries: 32,
+                pipeline,
+                ..Default::default()
+            },
+        );
+        let mut ingresses = Vec::new();
+        for (name, precision, _) in &tenants {
+            ingresses.push(shard.add_tenant(name, &cfg(precision)).unwrap());
         }
-    }
-    // 2 clean batches then 40 NaN ones — more than max_retries
-    // *consecutive* rejections, so the breaker is guaranteed to trip
-    // (the full stream still fits the depth-64 queue: these sends are
-    // blocking, from this thread, before the shard starts draining).
-    for i in 0..42 {
-        let b = batch(c_nan.input_dim, 400 + i);
-        let b = if i < 2 { b } else { corrupt(b, FaultKind::Nan) };
-        nan_ingress.send(b).unwrap();
-    }
-    drop(ingresses);
-    drop(nan_ingress);
+        let c_nan = cfg("q4.12");
+        let nan_ingress = shard.add_tenant("t_nan", &c_nan).unwrap();
+        shard.set_fault_plan(FaultPlan::parse("t_ing:ingest@0.5").unwrap(), 77);
 
-    // The run must complete despite the faults — no abort.
-    shard.run_to_completion().unwrap();
+        for (ingress, (_, precision, base)) in ingresses.iter().zip(&tenants) {
+            let c = cfg(precision);
+            for i in 0..BATCHES {
+                ingress.send(batch(c.input_dim, base + i)).unwrap();
+            }
+        }
+        // 2 clean batches then 40 NaN ones — more than max_retries
+        // *consecutive* rejections, so the breaker is guaranteed to
+        // trip (the full stream still fits the depth-64 queue: these
+        // sends are blocking, from this thread, before the shard
+        // starts draining).
+        for i in 0..42 {
+            let b = batch(c_nan.input_dim, 400 + i);
+            let b = if i < 2 { b } else { corrupt(b, FaultKind::Nan) };
+            nan_ingress.send(b).unwrap();
+        }
+        drop(ingresses);
+        drop(nan_ingress);
 
-    let outcomes: std::collections::HashMap<String, _> = shard
-        .tenant_outcomes()
-        .into_iter()
-        .map(|o| (o.tenant.clone(), o))
-        .collect();
+        // The run must complete despite the faults — no abort.
+        shard.run_to_completion().unwrap();
 
-    // The poisoned tenant was quarantined on its last-good checkpoint:
-    // the two clean batches survive, the NaN ones never touched state.
-    let nan = &outcomes["t_nan"];
-    assert!(nan.health.quarantined, "NaN tenant must be quarantined");
-    assert!(nan.health.rejected_batches > 0);
-    assert_eq!(nan.samples, 2 * 64);
-    assert!(nan.completed_at_s.is_none());
+        let outcomes: std::collections::HashMap<String, _> = shard
+            .tenant_outcomes()
+            .into_iter()
+            .map(|o| (o.tenant.clone(), o))
+            .collect();
 
-    // The ingest-faulted tenant was retried (not quarantined) and
-    // finished its full stream.
-    let ing = &outcomes["t_ing"];
-    assert!(!ing.health.quarantined);
-    assert!(ing.health.faults > 0, "seeded plan must actually fire");
-    assert!(ing.health.retries > 0);
-    assert_eq!(ing.samples, (BATCHES * 64) as u64);
-
-    // Bit-identity: every tenant outside the blast radius — including
-    // the recovered one — matches its oracle word for word.
-    for ((name, precision, _), oracle) in tenants.iter().zip(&oracles) {
-        let c = cfg(precision);
-        let probe = Mat::from_fn(48, c.input_dim, |i, j| {
-            ((i * 13 + j * 5) % 23) as f32 / 23.0 - 0.5
-        });
-        let session = shard.registry_mut().session_mut(name).unwrap();
-        assert_eq!(
-            oracle.metrics().samples_in,
-            session.metrics().samples_in,
-            "samples diverged for {name}"
+        // The poisoned tenant was quarantined on its last-good
+        // checkpoint: the two clean batches survive, the NaN ones
+        // never touched state.
+        let nan = &outcomes["t_nan"];
+        assert!(
+            nan.health.quarantined,
+            "NaN tenant must be quarantined ({sched})"
         );
-        assert_eq!(
-            oracle.trainer().transform_rows(&probe).as_slice(),
-            session.trainer().transform_rows(&probe).as_slice(),
-            "forward transform diverged under faults for {name}"
+        assert!(nan.health.rejected_batches > 0);
+        assert_eq!(nan.samples, 2 * 64, "last-good checkpoint ({sched})");
+        assert!(nan.completed_at_s.is_none());
+
+        // The ingest-faulted tenant was retried (not quarantined) and
+        // finished its full stream.
+        let ing = &outcomes["t_ing"];
+        assert!(!ing.health.quarantined, "t_ing quarantined ({sched})");
+        assert!(
+            ing.health.faults > 0,
+            "seeded plan must actually fire ({sched})"
         );
-        assert_eq!(
-            oracle.trainer().separation_matrix().as_slice(),
-            session.trainer().separation_matrix().as_slice(),
-            "separation matrix diverged under faults for {name}"
-        );
+        assert!(ing.health.retries > 0);
+        assert_eq!(ing.samples, (BATCHES * 64) as u64, "t_ing stream ({sched})");
+
+        // Bit-identity: every tenant outside the blast radius —
+        // including the recovered one — matches its oracle word for
+        // word.
+        for ((name, precision, _), oracle) in tenants.iter().zip(&oracles) {
+            let c = cfg(precision);
+            let probe = Mat::from_fn(48, c.input_dim, |i, j| {
+                ((i * 13 + j * 5) % 23) as f32 / 23.0 - 0.5
+            });
+            let session = shard.registry_mut().session_mut(name).unwrap();
+            assert_eq!(
+                oracle.metrics().samples_in,
+                session.metrics().samples_in,
+                "samples diverged for {name} ({sched})"
+            );
+            assert_eq!(
+                oracle.trainer().transform_rows(&probe).as_slice(),
+                session.trainer().transform_rows(&probe).as_slice(),
+                "forward transform diverged under faults for {name} ({sched})"
+            );
+            assert_eq!(
+                oracle.trainer().separation_matrix().as_slice(),
+                session.trainer().separation_matrix().as_slice(),
+                "separation matrix diverged under faults for {name} ({sched})"
+            );
+        }
     }
 }
 
@@ -155,39 +175,53 @@ fn threaded_workload_survives_faults_and_reports_them() {
     // quarantines it mid-stream (16 batches through a depth-4 queue
     // cannot all be in flight when the breaker trips), so its producer
     // must observe the hang-up and exit cleanly instead of erroring the
-    // whole run.
-    let opts = ServeOptions {
-        tenants: 4,
-        shards: 2,
-        batch: 16,
-        batches_per_tenant: 16,
-        queue_depth: 4,
-        telemetry: true,
-        faults: Some("t1:nan".into()),
-        ..ServeOptions::default()
-    };
-    let r = workload::run(&opts).unwrap();
-    assert_eq!(r.producer_hangups, 1, "t1's producer observes the hang-up");
-    assert!(r.injected_batches >= 4);
+    // whole run. Run under both schedulers: quarantine, drop accounting
+    // and the golden report schema are pipeline-independent.
+    for pipeline in [false, true] {
+        let sched = if pipeline { "pipelined" } else { "serial" };
+        let opts = ServeOptions {
+            tenants: 4,
+            shards: 2,
+            batch: 16,
+            batches_per_tenant: 16,
+            queue_depth: 4,
+            telemetry: true,
+            faults: Some("t1:nan".into()),
+            pipeline,
+            ..ServeOptions::default()
+        };
+        let r = workload::run(&opts).unwrap();
+        assert_eq!(
+            r.producer_hangups, 1,
+            "t1's producer observes the hang-up ({sched})"
+        );
+        assert!(r.injected_batches >= 4);
+        assert_eq!(r.pipeline, pipeline);
 
-    for t in &r.tenants {
-        if t.tenant == "t1" {
-            assert!(t.health.quarantined);
-            assert!(t.health.rejected_batches > 0);
-            assert!(t.completed_at_s.is_none());
-        } else {
-            assert!(!t.health.quarantined, "{} caught in blast radius", t.tenant);
-            assert_eq!(t.health.faults, 0);
-            assert_eq!(t.samples, 16 * 16);
-            assert!(t.completed_at_s.is_some());
+        for t in &r.tenants {
+            if t.tenant == "t1" {
+                assert!(t.health.quarantined, "t1 not quarantined ({sched})");
+                assert!(t.health.rejected_batches > 0);
+                assert!(t.completed_at_s.is_none());
+            } else {
+                assert!(
+                    !t.health.quarantined,
+                    "{} caught in blast radius ({sched})",
+                    t.tenant
+                );
+                assert_eq!(t.health.faults, 0);
+                assert_eq!(t.samples, 16 * 16, "{} samples ({sched})", t.tenant);
+                assert!(t.completed_at_s.is_some());
+            }
         }
-    }
 
-    // The report round-trips the golden schema, faults section included.
-    let json = dimred::serve::report::to_json(&opts, &r);
-    let parsed = dimred::util::json::Json::parse(&json.to_string_pretty()).unwrap();
-    dimred::serve::report::validate(&parsed, true).unwrap();
-    let faults = parsed.field("faults").unwrap();
-    assert_eq!(faults.field("quarantined").unwrap().as_u64().unwrap(), 1);
-    assert_eq!(faults.field("spec").unwrap().as_str().unwrap(), "t1:nan@1");
+        // The report round-trips the golden schema, faults section
+        // included.
+        let json = dimred::serve::report::to_json(&opts, &r);
+        let parsed = dimred::util::json::Json::parse(&json.to_string_pretty()).unwrap();
+        dimred::serve::report::validate(&parsed, true).unwrap();
+        let faults = parsed.field("faults").unwrap();
+        assert_eq!(faults.field("quarantined").unwrap().as_u64().unwrap(), 1);
+        assert_eq!(faults.field("spec").unwrap().as_str().unwrap(), "t1:nan@1");
+    }
 }

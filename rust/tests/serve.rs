@@ -156,3 +156,119 @@ fn multi_tenant_workload_reports_and_validates() {
     let parsed = dimred::util::json::Json::parse(&json.to_string_pretty()).unwrap();
     dimred::serve::report::validate(&parsed, true).unwrap();
 }
+
+#[test]
+fn pipelined_shard_is_bit_identical_to_serial_under_faults() {
+    // The pipelined scheduler's load-bearing claim: overlapping
+    // staging with commits and fusing same-plan batches into mega-tiles
+    // must change NOTHING observable — trainer state word for word,
+    // per-tenant metrics, per-stage telemetry sample counts, and fault
+    // containment — across uniform bit-exact, uniform STE, mixed-width
+    // STE and f32 plans, with a permanently faulting tenant in the mix.
+    for precision in [
+        "f32",
+        "q4.12",
+        "rp=q4.12,whiten=q4.12,rot=q4.12,qat=ste",
+        "rp=q8.16,whiten=q4.12,rot=q4.12,qat=ste",
+    ] {
+        let mk = |pipeline: bool| {
+            let mut shard = Shard::new(
+                0,
+                ShardOptions {
+                    queue_depth: 16,
+                    quantum: 4,
+                    pipeline,
+                    ..Default::default()
+                },
+            );
+            let c_main = ExperimentConfig {
+                telemetry: true,
+                ..cfg(precision)
+            };
+            let c_f32 = ExperimentConfig {
+                telemetry: true,
+                ..cfg("f32")
+            };
+            let a = shard.add_tenant("t_main", &c_main).unwrap();
+            let b = shard.add_tenant("t_f32", &c_f32).unwrap();
+            let bad = shard.add_tenant("t_bad", &c_f32).unwrap();
+            shard.set_fault_plan(
+                dimred::serve::FaultPlan::parse("t_bad:ingest@1").unwrap(),
+                2018,
+            );
+            for salt in 0..8 {
+                a.send(batch(c_main.input_dim, salt)).unwrap();
+                b.send(batch(c_f32.input_dim, 100 + salt)).unwrap();
+                bad.send(batch(c_f32.input_dim, 200 + salt)).unwrap();
+            }
+            drop(a);
+            drop(b);
+            drop(bad);
+            shard.run_to_completion().unwrap();
+            shard
+        };
+        let mut serial = mk(false);
+        let mut piped = mk(true);
+        assert!(
+            piped.pipeline_stats().fused_tiles > 0,
+            "{precision}: pipelined run must fuse mega-tiles"
+        );
+
+        let dim = cfg("f32").input_dim;
+        let probe = Mat::from_fn(32, dim, |i, j| ((i * 13 + j * 5) % 23) as f32 / 23.0 - 0.5);
+        for tenant in ["t_main", "t_f32"] {
+            let (samples, batches, fwd, sep, tel_s) = {
+                let s = serial.registry_mut().session_mut(tenant).unwrap();
+                (
+                    s.metrics().samples_in,
+                    s.metrics().batches,
+                    s.trainer().transform_rows(&probe),
+                    s.trainer().separation_matrix(),
+                    s.trainer().telemetry_snapshot().unwrap(),
+                )
+            };
+            let p = piped.registry_mut().session_mut(tenant).unwrap();
+            assert_eq!(samples, p.metrics().samples_in, "{precision}/{tenant} samples");
+            assert_eq!(batches, p.metrics().batches, "{precision}/{tenant} batches");
+            assert_eq!(
+                fwd.as_slice(),
+                p.trainer().transform_rows(&probe).as_slice(),
+                "{precision}/{tenant}: forward transform diverged under pipelining"
+            );
+            assert_eq!(
+                sep.as_slice(),
+                p.trainer().separation_matrix().as_slice(),
+                "{precision}/{tenant}: separation matrix diverged under pipelining"
+            );
+            // Per-stage telemetry sample attribution survives fusion:
+            // a mega-tile's rows are credited exactly like the serial
+            // per-batch tiles.
+            let tel_p = p.trainer().telemetry_snapshot().unwrap();
+            let counts = |snap: &dimred::telemetry::TelemetrySnapshot| {
+                snap.all()
+                    .map(|s| (s.name.clone(), s.samples))
+                    .collect::<Vec<_>>()
+            };
+            assert_eq!(
+                counts(&tel_s),
+                counts(&tel_p),
+                "{precision}/{tenant}: telemetry sample counts diverged"
+            );
+        }
+        // Fault containment is scheduler-independent: same breaker
+        // arithmetic, same drop accounting, nothing ingested.
+        let outcome = |shard: &Shard, tenant: &str| {
+            shard
+                .tenant_outcomes()
+                .into_iter()
+                .find(|o| o.tenant == tenant)
+                .unwrap()
+        };
+        let (bs, bp) = (outcome(&serial, "t_bad"), outcome(&piped, "t_bad"));
+        assert!(bs.health.quarantined && bp.health.quarantined);
+        assert_eq!(bs.health.faults, bp.health.faults, "{precision} faults");
+        assert_eq!(bs.health.dropped_batches, bp.health.dropped_batches);
+        assert_eq!(bs.samples, 0);
+        assert_eq!(bp.samples, 0);
+    }
+}
